@@ -1,0 +1,53 @@
+//! Quickstart: evaluate one hardware design, then run a small joint
+//! co-optimization over the paper's 4-workload CNN set.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use imcopt::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. evaluate a hand-picked design on each workload ----------------
+    // [rows, cols, macros/tile, tiles/router, groups, bits/cell,
+    //  V, t_cycle ns, GLB KB, tech nm]
+    let raw = [512.0, 256.0, 16.0, 8.0, 24.0, 2.0, 0.85, 2.0, 4096.0, 32.0];
+    let eval = NativeEvaluator::new(MemoryTech::Rram);
+    println!("hand-picked design on the CNN-4 workloads:");
+    for w in &WorkloadSet::cnn4().workloads {
+        let m = eval.evaluate(&raw, w);
+        println!(
+            "  {:<12} energy {:>8.4} mJ  latency {:>8.3} ms  area {:>6.1} mm²  \
+             EDAP {:>9.3}  feasible {}",
+            w.name,
+            m.energy * 1e3,
+            m.latency * 1e3,
+            m.area,
+            m.edap(),
+            m.feasible
+        );
+    }
+
+    // --- 2. joint co-optimization with the proposed 4-phase GA -------------
+    let space = SearchSpace::rram();
+    let workloads = WorkloadSet::cnn4();
+    let problem = JointProblem::new(
+        &space,
+        &workloads,
+        eval,
+        Objective::edap(),
+        Aggregation::Max,
+    );
+    let mut rng = Rng::seed_from(42);
+    let result = FourPhaseGa::paper_defaults().run(&problem, &mut rng);
+    println!(
+        "\njoint search: best EDAP score {:.4} after {} evaluations",
+        result.best_score, result.evals
+    );
+    println!("best design: {}", space.describe(&result.best));
+    println!("top-5 designs:");
+    for (d, s) in &result.top {
+        println!("  {:>10.4}  {}", s, space.describe(d));
+    }
+    Ok(())
+}

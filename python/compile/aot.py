@@ -1,0 +1,90 @@
+"""AOT lowering: JAX graphs -> HLO TEXT artifacts + manifest.json.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (behind the
+Rust ``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+The Makefile makes this incremental; Python never runs on the search path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import hwspec as hw
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple so the Rust
+    side unwraps with ``to_tuple1``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+
+    for batch, lmax in hw.FITNESS_VARIANTS:
+        name = f"fitness_b{batch}_l{lmax}"
+        lowered = jax.jit(model.fitness_graph).lower(
+            *model.example_fitness_args(batch, lmax)
+        )
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts.append(
+            {
+                "name": name,
+                "file": fname,
+                "batch": batch,
+                "lmax": lmax,
+                "features": hw.LAYER_FEATURES,
+                "inputs": ["designs", "layers", "mode"],
+                "outputs": 4,
+            }
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    lowered = jax.jit(model.accproxy_graph).lower(*model.example_accproxy_args())
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "accproxy.hlo.txt"), "w") as f:
+        f.write(text)
+    artifacts.append(
+        {
+            "name": "accproxy",
+            "file": "accproxy.hlo.txt",
+            "dim": hw.PROXY_DIM,
+            "batch": hw.PROXY_BATCH,
+            "iters": hw.PROXY_ITERS,
+            "inputs": ["w", "x", "noise", "params"],
+            "outputs": 1,
+        }
+    )
+    print(f"wrote accproxy.hlo.txt ({len(text)} chars)")
+
+    manifest = {"version": 1, "artifacts": artifacts}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json ({len(artifacts)} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Hardware-model constants — the Python mirror of
+``rust/src/model/consts.rs`` (and parts of ``accuracy/mod.rs``).
+
+The AOT-compiled JAX/Pallas fitness evaluator must agree with the native
+Rust evaluator to <=0.5% relative; both implement the closed-form model of
+DESIGN.md §3 from the constants below. ``python/tests/test_hwspec_sync.py``
+parses the Rust source and asserts every shared value matches, so a change
+on either side fails the build rather than silently skewing results.
+"""
+
+# ---- bit widths -------------------------------------------------------------
+IN_BITS = 8.0
+W_BITS = 8.0
+
+# ---- per-event energies (J) at 32 nm, 1.0 V --------------------------------
+E_CELL_RRAM = 0.2e-15
+E_CELL_SRAM = 0.05e-15
+E_ADC_RRAM = 2.0e-12
+E_ADC_SRAM = 1.0e-12
+E_DRV = 0.05e-12
+E_NOC_BYTE = 1.0e-12
+E_GLB_BYTE = 0.5e-12
+E_DRAM_BYTE = 32.0e-12
+E_SRAM_WRITE_BYTE = 0.5e-12
+E_DIG_MAC = 0.1e-12
+
+# ---- bandwidth / throughput -------------------------------------------------
+DRAM_BW = 25.6e9
+NOC_BYTES_PER_CYCLE = 4.0
+ADC_CONV_PER_CYCLE = 4.0
+DIG_LANES = 128.0
+REP_MAX = 8.0
+
+# ---- areas (mm²) at 32 nm ----------------------------------------------------
+CELL_F2_RRAM = 4.0
+CELL_F2_SRAM = 160.0
+ARRAY_OVH = 1.3
+ADC_AREA_MM2 = 0.014
+DRV_AREA_MM2 = 0.004
+MACRO_BUF_AREA_MM2 = 0.004
+TILE_BUF_AREA_MM2 = 0.05
+ROUTER_AREA_MM2 = 0.15
+IO_AREA_MM2 = 2.0
+GLB_MM2_PER_MB = 1.6
+
+# ---- leakage / timing ---------------------------------------------------------
+P_LEAK_W_PER_MM2 = 1.0e-3
+VTH = 0.3
+DELAY_ALPHA = 1.3
+T_MIN0_NS = 1.0
+
+# ---- constraints ---------------------------------------------------------------
+AREA_CONSTR_MM2 = 800.0
+
+# ---- non-ideality model (accuracy/mod.rs) --------------------------------------
+SIGMA_POLY = [0.010, 0.080, -0.160, 0.120, -0.030]
+IR_COEFF = 0.035
+OUT_NOISE = 0.01
+QUANT_BITS = 8.0
+
+# ---- interchange contract (space/mod.rs, workloads/mod.rs, runtime/mod.rs) -----
+NUM_PARAMS = 10
+PARAM_NAMES = [
+    "xbar_rows", "xbar_cols", "c_per_tile", "t_per_router", "g_per_chip",
+    "bits_cell", "v_step", "t_cycle_ns", "glb_kb", "tech_nm",
+]
+L_MAX = 512
+LAYER_FEATURES = 8  # [k, n, passes, weights, in_bytes, out_bytes, is_dyn, valid]
+# (batch, lmax) artifact variants: the short-lmax variants skip the padded
+# layer rows (the CNN workloads have <=62 mapped layers vs MobileBERT's
+# 336), which the §Perf pass measured as the dominant artifact cost.
+FITNESS_VARIANTS = [(64, 128), (256, 128), (64, 512), (256, 512)]
+
+# accuracy proxy static shapes (runtime/mod.rs)
+PROXY_DIM = 256
+PROXY_BATCH = 8
+PROXY_ITERS = 30
+
+
+def sigma_mean(n: int = 32) -> float:
+    """Trapezoid average of the σ(g) polynomial over g in [0,1] — mirrors
+    ``accuracy::NoiseSpec::from_design``."""
+    total = 0.0
+    for i in range(n + 1):
+        g = i / n
+        w = 0.5 if i in (0, n) else 1.0
+        acc, p = 0.0, 1.0
+        for c in SIGMA_POLY:
+            acc += c * p
+            p *= g
+        total += w * max(acc, 0.0)
+    return total / n

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: noisy crossbar MVM (paper §IV-H non-idealities).
+
+Models one analog crossbar tile executing ``y = x·W`` under (i)
+conductance-dependent Gaussian programming noise with the 4th-order σ(g)
+polynomial, (ii) IR-drop attenuation growing towards the far corner of the
+array, (iii) 8-bit ADC output quantization and (iv) additive
+output-referred noise — the AIHWKIT-style pipeline the paper uses, driven
+by pre-drawn noise tensors so the artifact stays deterministic and the
+host (Rust) controls the randomness.
+
+Hardware adaptation: the 256×256 f32 weight block (256 KiB) plus one
+noise block fits VMEM comfortably; the ``x·W`` contraction targets the MXU
+(at bf16 a 128×128-tiled version would sustain ≈60 % MXU utilization —
+estimate recorded in DESIGN.md §7). Grid iterates over noise draws.
+``interpret=True`` for CPU-PJRT executability.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(w_ref, x_ref, noise_ref, params_ref, out_ref):
+    """One grid step = one noise iteration -> scalar relative error."""
+    w = w_ref[...]
+    x = x_ref[...]
+    nz = noise_ref[...][0]  # [1, P, P] block
+    params = params_ref[...]
+    out_ref[...] = ref.crossbar_eps_one(w, x, nz, params)[None]
+
+
+def crossbar_eps(w, x, noise, params):
+    """Per-iteration relative MVM errors [I] via the Pallas kernel.
+
+    w: [P,P]; x: [XB,P]; noise: [I,P,P]; params: [4].
+    Oracle: ``ref.crossbar_eps_ref``.
+    """
+    iters, p_dim, _ = noise.shape
+    xb = x.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(iters,),
+        in_specs=[
+            pl.BlockSpec((p_dim, p_dim), lambda i: (0, 0)),
+            pl.BlockSpec((xb, p_dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, p_dim, p_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((iters,), jnp.float32),
+        interpret=True,
+    )(w, x, noise, params)
+
+
+def mean_eps(w, x, noise, params):
+    """Mean relative error over the noise iterations — the quantity the
+    AOT ``accproxy`` artifact exposes to the Rust coordinator."""
+    return jnp.mean(crossbar_eps(w, x, noise, params))

@@ -1,0 +1,273 @@
+"""Pure-jnp oracles (no Pallas) for the L1 kernels.
+
+``fitness_ref`` is the reference implementation of the batched hardware
+evaluator — the same closed-form model as ``rust/src/model/mod.rs`` — and
+``crossbar_eps_ref`` is the reference noisy-crossbar error measurement.
+pytest holds the Pallas kernels to these oracles; the Rust integration
+suite holds the AOT artifacts to the native Rust evaluator. Together the
+chain pins Pallas == jnp == Rust.
+"""
+
+import jax.numpy as jnp
+
+from .. import hwspec as hw
+
+
+# --------------------------------------------------------------------------
+# fitness reference
+# --------------------------------------------------------------------------
+
+def derived_params(designs, mode):
+    """Per-design derived quantities shared by the reference and the Pallas
+    wrapper (mirrors ``model::DesignView``).
+
+    designs: [B, 10] raw decoded vectors (v_step already in volts).
+    mode: [4] with mode[0] = 1.0 for SRAM.
+    Returns a dict of [B] arrays.
+    """
+    is_sram = mode[0] > 0.5
+    rows = designs[:, 0]
+    cols = designs[:, 1]
+    m = designs[:, 2]
+    t = designs[:, 3]
+    g = designs[:, 4]
+    bits = jnp.where(is_sram, 1.0, designs[:, 5])
+    v = designs[:, 6]
+    tc = designs[:, 7] * 1e-9
+    glb_bytes = designs[:, 8] * 1024.0
+    tech = designs[:, 9]
+    dpw = jnp.ceil(hw.W_BITS / bits)
+    return dict(
+        is_sram=is_sram,
+        rows=rows,
+        cols=cols,
+        macros=m * t * g,
+        tiles=t * g,
+        groups=g,
+        v=v,
+        tc=tc,
+        glb_bytes=glb_bytes,
+        tech=tech,
+        dpw=dpw,
+        s_e=(tech / 32.0) * v * v,
+        s_a=(tech / 32.0) ** 2,
+        # broadcast to per-design arrays so the Pallas kernel (which
+        # receives them as matrix columns) and the reference share shapes
+        e_cell=jnp.where(is_sram, hw.E_CELL_SRAM, hw.E_CELL_RRAM) * jnp.ones_like(rows),
+        e_adc=jnp.where(is_sram, hw.E_ADC_SRAM, hw.E_ADC_RRAM) * jnp.ones_like(rows),
+        t_cycle_ns=designs[:, 7],
+    )
+
+
+def t_min_ns(v, tech):
+    """Alpha-power minimum cycle time (mirrors ``consts::t_min_ns``)."""
+    def delay(x):
+        return x / jnp.maximum(x - hw.VTH, 0.05) ** hw.DELAY_ALPHA
+
+    return hw.T_MIN0_NS * jnp.sqrt(tech / 32.0) * delay(v) / delay(1.0)
+
+
+def area_mm2(dp):
+    """Chip area (mirrors ``NativeEvaluator::area_view``)."""
+    f_um = dp["tech"] * 1e-3
+    cell_f2 = jnp.where(dp["is_sram"], hw.CELL_F2_SRAM, hw.CELL_F2_RRAM)
+    cell_mm2 = cell_f2 * f_um * f_um * 1e-6
+    array = dp["rows"] * dp["cols"] * cell_mm2 * hw.ARRAY_OVH
+    macro = array + (hw.ADC_AREA_MM2 + hw.DRV_AREA_MM2 + hw.MACRO_BUF_AREA_MM2) * dp["s_a"]
+    m_per_tile = dp["macros"] / dp["tiles"]
+    tile = m_per_tile * macro + hw.TILE_BUF_AREA_MM2 * dp["s_a"]
+    glb_area = dp["glb_bytes"] / (1024.0 * 1024.0) * hw.GLB_MM2_PER_MB * dp["s_a"]
+    return (
+        dp["tiles"] * tile
+        + dp["groups"] * hw.ROUTER_AREA_MM2 * dp["s_a"]
+        + glb_area
+        + hw.IO_AREA_MM2
+    )
+
+
+def mapping(dp, layers):
+    """Crossbar demand per design x layer: xb [B, L], sum/max over valid
+    static layers (mirrors the mapping pass in ``NativeEvaluator``)."""
+    k = layers[:, 0][None, :]
+    n = layers[:, 1][None, :]
+    is_dyn = layers[:, 6][None, :]
+    valid = layers[:, 7][None, :]
+    rows = dp["rows"][:, None]
+    cols = dp["cols"][:, None]
+    dpw = dp["dpw"][:, None]
+    xb = jnp.ceil(k / rows) * jnp.ceil(n * dpw / cols)
+    static_mask = valid * (1.0 - is_dyn)
+    xb = xb * static_mask
+    return xb, xb.sum(axis=1), xb.max(axis=1)
+
+
+def layer_costs(dp, layers, sum_xb):
+    """Per-(design, layer) energy & latency contributions [B, L] — the
+    compute the L1 Pallas fitness kernel performs. Mirrors
+    ``static_layer_cost`` + ``dynamic_layer_cost``."""
+    k = layers[:, 0][None, :]
+    n = layers[:, 1][None, :]
+    passes = layers[:, 2][None, :]
+    weights = layers[:, 3][None, :]
+    in_b = layers[:, 4][None, :]
+    out_b = layers[:, 5][None, :]
+    is_dyn = layers[:, 6][None, :]
+    valid = layers[:, 7][None, :]
+
+    rows = dp["rows"][:, None]
+    cols = dp["cols"][:, None]
+    dpw = dp["dpw"][:, None]
+    macros = dp["macros"][:, None]
+    tiles = dp["tiles"][:, None]
+    groups = dp["groups"][:, None]
+    tc = dp["tc"][:, None]
+    glb_bytes = dp["glb_bytes"][:, None]
+    s_e = dp["s_e"][:, None]
+    e_cell = dp["e_cell"][:, None]
+    e_adc = dp["e_adc"][:, None]
+    # normalize is_sram (scalar bool in the reference, per-design float
+    # column inside the Pallas kernel) to [B, 1]
+    is_sram = (
+        jnp.zeros_like(dp["rows"]) + jnp.asarray(dp["is_sram"], dtype=jnp.float32)
+    )[:, None]
+
+    ndpw = n * dpw
+    xb_r = jnp.ceil(k / rows)
+    xb_c = jnp.ceil(ndpw / cols)
+    xb = xb_r * xb_c
+
+    # replication: RRAM uniform over the resident model; SRAM per layer;
+    # both capped by the broadcast/reduction fan-out limit REP_MAX
+    rep_rram = jnp.clip(
+        jnp.floor(macros / jnp.maximum(sum_xb[:, None], 1.0)), 1.0, hw.REP_MAX
+    )
+    rep_sram = jnp.clip(jnp.floor(macros / jnp.maximum(xb, 1.0)), 1.0, hw.REP_MAX)
+    rep = jnp.where(is_sram > 0.5, rep_sram, rep_rram)
+
+    # swapping engages for SRAM when the model does not fit
+    swapping = is_sram * jnp.where(sum_xb[:, None] > macros, 1.0, 0.0)
+
+    # ---- static layer ------------------------------------------------------
+    # ADC sweeps the macro's *physical* columns; drivers bias the full
+    # allocated row span — under-utilization wastes energy/latency (the
+    # crossbar-size/workload coupling; mirrors static_layer_cost in Rust).
+    lat_compute = (
+        jnp.ceil(passes / rep)
+        * hw.IN_BITS
+        * jnp.ceil(cols / hw.ADC_CONV_PER_CYCLE)
+        * tc
+    )
+    e_array = passes * hw.IN_BITS * k * ndpw * e_cell * s_e
+    conversions = passes * hw.IN_BITS * xb_r * (xb_c * cols)
+    e_adc_total = conversions * e_adc * s_e
+    e_drv = passes * hw.IN_BITS * (xb_r * rows) * xb_c * hw.E_DRV * s_e
+
+    swap_bytes = swapping * weights
+    e_swap = swap_bytes * (hw.E_DRAM_BYTE + hw.E_SRAM_WRITE_BYTE)
+    lat_swap = swap_bytes / hw.DRAM_BW
+
+    io_bytes = in_b + out_b
+    noc_bytes = io_bytes + swap_bytes
+    hops = jnp.sqrt(groups)
+    lat_noc = noc_bytes * hops * tc / (hw.NOC_BYTES_PER_CYCLE * groups)
+    e_noc = noc_bytes * hops * hw.E_NOC_BYTE * s_e
+    e_glb = (io_bytes + swap_bytes) * hw.E_GLB_BYTE * s_e
+
+    spill = jnp.maximum(io_bytes - glb_bytes, 0.0)
+    e_spill = 2.0 * spill * hw.E_DRAM_BYTE
+    lat_spill = 2.0 * spill / hw.DRAM_BW
+
+    e_static = e_array + e_adc_total + e_drv + e_swap + e_noc + e_glb + e_spill
+    lat_static = lat_compute + lat_swap + lat_noc + lat_spill
+
+    # ---- dynamic layer (digital vector units) --------------------------------
+    macs = k * n * passes
+    lat_dig = macs / (tiles * hw.DIG_LANES) * tc
+    e_dig = macs * hw.E_DIG_MAC * s_e
+    e_dynamic = (
+        e_dig
+        + io_bytes * hops * hw.E_NOC_BYTE * s_e
+        + io_bytes * hw.E_GLB_BYTE * s_e
+    )
+    lat_dynamic = lat_dig + io_bytes * hops * tc / (hw.NOC_BYTES_PER_CYCLE * groups)
+
+    e = jnp.where(is_dyn > 0.5, e_dynamic, e_static) * valid
+    lat = jnp.where(is_dyn > 0.5, lat_dynamic, lat_static) * valid
+    return e, lat
+
+
+def fitness_ref(designs, layers, mode):
+    """Full reference fitness: [B,10] x [L,8] x [4] -> [B,4]."""
+    dp = derived_params(designs, mode)
+    area = area_mm2(dp)
+    _xb, sum_xb, max_xb = mapping(dp, layers)
+    e_l, lat_l = layer_costs(dp, layers, sum_xb)
+    energy = e_l.sum(axis=1)
+    latency = lat_l.sum(axis=1)
+    # leakage
+    p_leak = hw.P_LEAK_W_PER_MM2 * jnp.sqrt(32.0 / dp["tech"]) * dp["v"] * area
+    energy = energy + p_leak * latency
+
+    capacity_ok = jnp.where(
+        dp["is_sram"], max_xb <= dp["macros"], sum_xb <= dp["macros"]
+    )
+    timing_ok = dp["t_cycle_ns"] >= t_min_ns(dp["v"], dp["tech"])
+    feasible = capacity_ok & timing_ok & (area <= hw.AREA_CONSTR_MM2)
+    return jnp.stack([energy, latency, area, feasible.astype(jnp.float32)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# noisy crossbar reference
+# --------------------------------------------------------------------------
+
+def sigma_poly(g):
+    """σ(g) polynomial, clamped non-negative (mirrors
+    ``accuracy::sigma_of_g``)."""
+    g = jnp.clip(g, 0.0, 1.0)
+    acc = jnp.zeros_like(g)
+    p = jnp.ones_like(g)
+    for c in hw.SIGMA_POLY:
+        acc = acc + c * p
+        p = p * g
+    return jnp.maximum(acc, 0.0)
+
+
+def crossbar_eps_one(w, x, nz, params):
+    """Relative MVM error for ONE noise draw (shared math for the kernel
+    and the reference). All inputs are jnp arrays."""
+    sigma_scale, ir, out_noise, qbits = params[0], params[1], params[2], params[3]
+    p_dim = w.shape[0]
+    y_ideal = x @ w  # [XB, P]
+    scale = jnp.max(jnp.abs(y_ideal)) + 1e-9
+
+    # per-element programming noise, scaled so that a design with
+    # weight_sigma == sigma_mean reproduces the polynomial exactly
+    sig = sigma_poly(jnp.abs(w)) * (sigma_scale / hw.sigma_mean())
+
+    # IR-drop attenuation grows towards the far corner of the array
+    r_norm = (jnp.arange(p_dim, dtype=jnp.float32) / p_dim)[:, None]
+    c_norm = (jnp.arange(p_dim, dtype=jnp.float32) / p_dim)[None, :]
+    att = 1.0 - ir * r_norm * c_norm
+
+    w_noisy = (w + sig * nz) * att
+    y = x @ w_noisy
+    # 8-bit ADC quantization on the output range
+    levels = 2.0 ** qbits
+    y = jnp.round(y / scale * (levels / 2.0)) / (levels / 2.0) * scale
+    # output-referred noise (reuses the leading noise rows)
+    y = y + out_noise * scale * nz[: x.shape[0], :]
+    num = jnp.sqrt(jnp.sum((y - y_ideal) ** 2))
+    den = jnp.sqrt(jnp.sum(y_ideal ** 2)) + 1e-9
+    return num / den
+
+
+def crossbar_eps_ref(w, x, noise, params):
+    """Relative MVM error per noise iteration.
+
+    w: [P,P] weights in [-1,1]; x: [XB,P] inputs; noise: [I,P,P] standard
+    normals; params: [sigma_scale, ir_drop, out_noise, quant_bits].
+    Returns [I] relative errors (the AOT graph reports the mean).
+    """
+    return jnp.stack(
+        [crossbar_eps_one(w, x, noise[i], params) for i in range(noise.shape[0])]
+    )

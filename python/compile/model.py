@@ -1,0 +1,50 @@
+"""L2: the JAX compute graphs that are AOT-lowered to HLO artifacts.
+
+Two graphs, both calling the L1 Pallas kernels:
+
+* ``fitness_graph`` — batched hardware fitness across a population
+  (wraps ``kernels.fitness``; the GA's hot loop).
+* ``accproxy_graph`` — mean noisy-crossbar relative error over 30 noise
+  iterations (wraps ``kernels.crossbar``; the Fig. 8 accuracy proxy).
+
+Python only ever runs at ``make artifacts`` time; the Rust coordinator
+executes the lowered HLO through PJRT at search time.
+"""
+
+import jax.numpy as jnp
+
+from . import hwspec as hw
+from .kernels import crossbar, fitness
+
+
+def fitness_graph(designs, layers, mode):
+    """(designs [B,10], layers [L_MAX,8], mode [4]) -> [B,4]."""
+    return fitness.fitness(designs, layers, mode)
+
+
+def accproxy_graph(w, x, noise, params):
+    """(w [P,P], x [XB,P], noise [I,P,P], params [4]) -> scalar mean ε."""
+    return crossbar.mean_eps(w, x, noise, params)
+
+
+def example_fitness_args(batch, lmax=None):
+    """ShapeDtypeStructs for lowering a fitness artifact."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((batch, hw.NUM_PARAMS), jnp.float32),
+        jax.ShapeDtypeStruct((lmax or hw.L_MAX, hw.LAYER_FEATURES), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+    )
+
+
+def example_accproxy_args():
+    """ShapeDtypeStructs for lowering the accuracy-proxy artifact."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((hw.PROXY_DIM, hw.PROXY_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((hw.PROXY_BATCH, hw.PROXY_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((hw.PROXY_ITERS, hw.PROXY_DIM, hw.PROXY_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+    )

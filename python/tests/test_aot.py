@@ -1,0 +1,87 @@
+"""AOT lowering tests: the graphs lower to HLO text with the exact
+parameter/result shapes the Rust runtime contract expects, and execution
+of the lowered module matches direct execution."""
+
+import os
+import re
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, hwspec as hw, model
+
+
+@pytest.fixture(scope="module")
+def out_dir():
+    with tempfile.TemporaryDirectory() as d:
+        aot.build(d)
+        yield d
+
+
+def test_manifest_lists_all_artifacts(out_dir):
+    import json
+
+    manifest = json.load(open(os.path.join(out_dir, "manifest.json")))
+    names = {a["name"] for a in manifest["artifacts"]}
+    expected = {f"fitness_b{b}_l{l}" for b, l in hw.FITNESS_VARIANTS} | {"accproxy"}
+    assert names == expected
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(out_dir, a["file"]))
+        if a["name"].startswith("fitness"):
+            assert (a["batch"], a["lmax"]) in hw.FITNESS_VARIANTS
+            assert a["features"] == hw.LAYER_FEATURES
+    # at least one variant must cover the full L_MAX depth
+    assert any(l == hw.L_MAX for _, l in hw.FITNESS_VARIANTS)
+
+
+def test_hlo_text_shapes(out_dir):
+    text = open(os.path.join(out_dir, f"fitness_b64_l{hw.L_MAX}.hlo.txt")).read()
+    # ENTRY computation must consume the contract shapes
+    assert re.search(r"f32\[64,10\]", text), "designs input missing"
+    assert re.search(rf"f32\[{hw.L_MAX},{hw.LAYER_FEATURES}\]", text)
+    assert re.search(r"f32\[4\]", text)
+    assert re.search(r"f32\[64,4\]", text), "output missing"
+    # tuple-wrapped for the Rust side's to_tuple1
+    assert "tuple" in text
+    # the short variant consumes the reduced layer tensor
+    short = open(os.path.join(out_dir, "fitness_b64_l128.hlo.txt")).read()
+    assert re.search(rf"f32\[128,{hw.LAYER_FEATURES}\]", short)
+
+
+def test_accproxy_hlo_shapes(out_dir):
+    text = open(os.path.join(out_dir, "accproxy.hlo.txt")).read()
+    assert re.search(rf"f32\[{hw.PROXY_DIM},{hw.PROXY_DIM}\]", text)
+    assert re.search(
+        rf"f32\[{hw.PROXY_ITERS},{hw.PROXY_DIM},{hw.PROXY_DIM}\]", text
+    )
+
+
+def test_no_mosaic_custom_calls(out_dir):
+    """interpret=True Pallas must lower to plain HLO — a Mosaic
+    custom-call would be unloadable by the CPU PJRT client."""
+    for f in os.listdir(out_dir):
+        if f.endswith(".hlo.txt"):
+            text = open(os.path.join(out_dir, f)).read()
+            assert "mosaic" not in text.lower(), f
+            assert "tpu_custom_call" not in text, f
+
+
+def test_lowered_matches_eager():
+    """jit-lowered execution equals direct (eager) graph execution."""
+    rng = np.random.default_rng(0)
+    designs = np.zeros((64, hw.NUM_PARAMS), np.float32)
+    designs[:] = [256, 256, 16, 8, 24, 2, 0.85, 2, 4096, 32]
+    layers = np.zeros((hw.L_MAX, hw.LAYER_FEATURES), np.float32)
+    layers[0] = [4608, 512, 196, 4608 * 512, 100352, 100352, 0, 1]
+    layers[1] = [512, 512, 196, 0, 100352, 100352, 1, 1]
+    mode = np.array([0, 0, 0, 0], np.float32)
+    del rng
+    args = (jnp.array(designs), jnp.array(layers), jnp.array(mode))
+    eager = model.fitness_graph(*args)
+    compiled = jax.jit(model.fitness_graph).lower(*args).compile()(*args)
+    np.testing.assert_allclose(
+        np.asarray(eager), np.asarray(compiled), rtol=1e-6
+    )

@@ -1,0 +1,98 @@
+"""Cross-language constant synchronization: parse the Rust sources and
+assert every shared constant matches ``hwspec.py`` exactly. A drift on
+either side fails the build instead of silently skewing the reproduction.
+"""
+
+import os
+import re
+
+from compile import hwspec as hw
+
+RUST_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "src")
+
+
+def rust_consts(path):
+    """Extract `pub const NAME: f64 = <expr>;` bindings from a Rust file."""
+    text = open(path).read()
+    out = {}
+    for m in re.finditer(
+        r"pub const ([A-Z0-9_]+): f64 = ([0-9eE+.\-_]+);", text
+    ):
+        out[m.group(1)] = float(m.group(2).replace("_", ""))
+    return out
+
+
+def test_model_consts_match():
+    consts = rust_consts(os.path.join(RUST_ROOT, "model", "consts.rs"))
+    expected = {
+        "IN_BITS": hw.IN_BITS,
+        "W_BITS": hw.W_BITS,
+        "E_CELL_RRAM": hw.E_CELL_RRAM,
+        "E_CELL_SRAM": hw.E_CELL_SRAM,
+        "E_ADC_RRAM": hw.E_ADC_RRAM,
+        "E_ADC_SRAM": hw.E_ADC_SRAM,
+        "E_DRV": hw.E_DRV,
+        "E_NOC_BYTE": hw.E_NOC_BYTE,
+        "E_GLB_BYTE": hw.E_GLB_BYTE,
+        "E_DRAM_BYTE": hw.E_DRAM_BYTE,
+        "E_SRAM_WRITE_BYTE": hw.E_SRAM_WRITE_BYTE,
+        "E_DIG_MAC": hw.E_DIG_MAC,
+        "DRAM_BW": hw.DRAM_BW,
+        "NOC_BYTES_PER_CYCLE": hw.NOC_BYTES_PER_CYCLE,
+        "ADC_CONV_PER_CYCLE": hw.ADC_CONV_PER_CYCLE,
+        "DIG_LANES": hw.DIG_LANES,
+        "CELL_F2_RRAM": hw.CELL_F2_RRAM,
+        "CELL_F2_SRAM": hw.CELL_F2_SRAM,
+        "ARRAY_OVH": hw.ARRAY_OVH,
+        "ADC_AREA_MM2": hw.ADC_AREA_MM2,
+        "DRV_AREA_MM2": hw.DRV_AREA_MM2,
+        "MACRO_BUF_AREA_MM2": hw.MACRO_BUF_AREA_MM2,
+        "TILE_BUF_AREA_MM2": hw.TILE_BUF_AREA_MM2,
+        "ROUTER_AREA_MM2": hw.ROUTER_AREA_MM2,
+        "IO_AREA_MM2": hw.IO_AREA_MM2,
+        "GLB_MM2_PER_MB": hw.GLB_MM2_PER_MB,
+        "P_LEAK_W_PER_MM2": hw.P_LEAK_W_PER_MM2,
+        "VTH": hw.VTH,
+        "DELAY_ALPHA": hw.DELAY_ALPHA,
+        "T_MIN0_NS": hw.T_MIN0_NS,
+        "AREA_CONSTR_MM2": hw.AREA_CONSTR_MM2,
+    }
+    for name, want in expected.items():
+        assert name in consts, f"{name} missing from consts.rs"
+        got = consts[name]
+        assert got == want, f"{name}: rust {got} != python {want}"
+
+
+def test_accuracy_consts_match():
+    path = os.path.join(RUST_ROOT, "accuracy", "mod.rs")
+    text = open(path).read()
+    m = re.search(r"SIGMA_POLY: \[f64; 5\] = \[([^\]]+)\]", text)
+    rust_poly = [float(x.strip()) for x in m.group(1).split(",") if x.strip()]
+    assert rust_poly == hw.SIGMA_POLY
+    for name, want in [
+        ("IR_COEFF", hw.IR_COEFF),
+        ("OUT_NOISE", hw.OUT_NOISE),
+        ("QUANT_BITS", hw.QUANT_BITS),
+    ]:
+        m = re.search(rf"pub const {name}: f64 = ([0-9eE+.\-]+);", text)
+        assert m, f"{name} missing from accuracy/mod.rs"
+        assert float(m.group(1)) == want, name
+
+
+def test_interchange_contract_matches():
+    wl = open(os.path.join(RUST_ROOT, "workloads", "mod.rs")).read()
+    assert f"pub const L_MAX: usize = {hw.L_MAX};" in wl
+    assert f"pub const LAYER_FEATURES: usize = {hw.LAYER_FEATURES};" in wl
+    rt = open(os.path.join(RUST_ROOT, "runtime", "mod.rs")).read()
+    assert f"pub const PROXY_DIM: usize = {hw.PROXY_DIM};" in rt
+    assert f"pub const PROXY_BATCH: usize = {hw.PROXY_BATCH};" in rt
+    assert f"pub const PROXY_ITERS: usize = {hw.PROXY_ITERS};" in rt
+    sp = open(os.path.join(RUST_ROOT, "space", "mod.rs")).read()
+    assert f"pub const NUM_PARAMS: usize = {hw.NUM_PARAMS};" in sp
+    for name in hw.PARAM_NAMES:
+        assert f'"{name}"' in sp, f"param {name} missing from space/mod.rs"
+
+
+def test_sigma_mean_positive_and_small():
+    s = hw.sigma_mean()
+    assert 0.005 < s < 0.08, s

@@ -1,0 +1,81 @@
+"""Crossbar Pallas kernel vs pure-jnp oracle (hypothesis sweeps shapes and
+noise parameters)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import hwspec as hw
+from compile.kernels import crossbar, ref
+
+
+def make_case(seed, p_dim, xb, iters):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-1, 1, (p_dim, p_dim)).astype(np.float32)
+    x = rng.uniform(-1, 1, (xb, p_dim)).astype(np.float32)
+    noise = rng.standard_normal((iters, p_dim, p_dim)).astype(np.float32)
+    return jnp.array(w), jnp.array(x), jnp.array(noise)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    p_dim=st.sampled_from([16, 32, 64, 128]),
+    xb=st.sampled_from([1, 4, 8]),
+    iters=st.integers(1, 4),
+    sigma=st.floats(0.0, 0.15),
+    ir=st.floats(0.0, 0.05),
+)
+def test_pallas_matches_ref(seed, p_dim, xb, iters, sigma, ir):
+    w, x, noise = make_case(seed, p_dim, xb, iters)
+    params = jnp.array([sigma, ir, hw.OUT_NOISE, hw.QUANT_BITS], jnp.float32)
+    got = crossbar.crossbar_eps(w, x, noise, params)
+    want = ref.crossbar_eps_ref(w, x, noise, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-7)
+
+
+def test_eps_monotone_in_sigma():
+    w, x, noise = make_case(7, 64, 8, 8)
+    eps = []
+    for sigma in [0.0, 0.02, 0.05, 0.10]:
+        params = jnp.array([sigma, 0.0, 0.0, hw.QUANT_BITS], jnp.float32)
+        eps.append(float(jnp.mean(crossbar.crossbar_eps(w, x, noise, params))))
+    assert eps == sorted(eps), f"eps not monotone in sigma: {eps}"
+
+
+def test_eps_monotone_in_ir_drop():
+    w, x, noise = make_case(8, 64, 8, 8)
+    eps = []
+    for ir in [0.0, 0.01, 0.03, 0.08]:
+        params = jnp.array([0.0, ir, 0.0, hw.QUANT_BITS], jnp.float32)
+        eps.append(float(jnp.mean(crossbar.crossbar_eps(w, x, noise, params))))
+    assert eps == sorted(eps), f"eps not monotone in IR drop: {eps}"
+
+
+def test_zero_noise_leaves_only_quantization():
+    w, x, noise = make_case(9, 64, 8, 4)
+    params = jnp.array([0.0, 0.0, 0.0, hw.QUANT_BITS], jnp.float32)
+    eps = float(jnp.mean(crossbar.crossbar_eps(w, x, noise, params)))
+    # 8-bit quantization alone: small but nonzero
+    assert 0.0 < eps < 0.02, eps
+
+
+def test_eps_roughly_matches_analytical_expectation():
+    """The kernel-measured error should land within a small factor of the
+    closed-form expectation used by the Rust fallback (accuracy::analytical_eps)."""
+    w, x, noise = make_case(10, 128, 8, 16)
+    sigma = hw.sigma_mean()  # level_factor == 1
+    params = jnp.array([sigma, 0.0, 0.0, hw.QUANT_BITS], jnp.float32)
+    eps = float(jnp.mean(crossbar.crossbar_eps(w, x, noise, params)))
+    assert 0.2 * sigma < eps < 5.0 * sigma, (eps, sigma)
+
+
+@pytest.mark.parametrize("p_dim,xb", [(hw.PROXY_DIM, hw.PROXY_BATCH)])
+def test_artifact_shape_contract(p_dim, xb):
+    """The accproxy artifact's exact shapes execute and reduce to a scalar."""
+    w, x, noise = make_case(11, p_dim, xb, hw.PROXY_ITERS)
+    params = jnp.array([0.03, 0.02, hw.OUT_NOISE, hw.QUANT_BITS], jnp.float32)
+    m = crossbar.mean_eps(w, x, noise, params)
+    assert m.shape == ()
+    assert 0.0 < float(m) < 1.0

@@ -1,0 +1,66 @@
+//! Hot-path throughput: native scalar evaluator vs the AOT PJRT batched
+//! fitness artifact (the production search path), per memory technology
+//! and workload size. This is the §Perf L3-vs-L2/L1 headline bench.
+
+use imcopt::model::{MemoryTech, NativeEvaluator};
+use imcopt::runtime::Engine;
+use imcopt::space::SearchSpace;
+use imcopt::util::bench::Bench;
+use imcopt::util::rng::Rng;
+use imcopt::workloads::{by_name, WorkloadSet};
+
+fn main() {
+    let bench = Bench::new("evaluator");
+    let space = SearchSpace::rram();
+    let mut rng = Rng::seed_from(1);
+    let raws64: Vec<[f64; 10]> = (0..64)
+        .map(|_| space.decode(&space.random(&mut rng)))
+        .collect();
+    let raws256: Vec<[f64; 10]> = (0..256)
+        .map(|_| space.decode(&space.random(&mut rng)))
+        .collect();
+
+    // ---- native ------------------------------------------------------------
+    let native = NativeEvaluator::new(MemoryTech::Rram);
+    for wname in ["alexnet", "vgg16", "densenet201", "gpt2-medium"] {
+        let w = by_name(wname).unwrap();
+        bench.run(&format!("native/{wname}/64"), 64, || {
+            for raw in &raws64 {
+                std::hint::black_box(native.evaluate(raw, &w));
+            }
+        });
+    }
+
+    // joint score over the 4-workload set (the GA's actual unit of work)
+    let set = WorkloadSet::cnn4();
+    bench.run("native/joint-cnn4/64", 64, || {
+        for raw in &raws64 {
+            for w in &set.workloads {
+                std::hint::black_box(native.evaluate(raw, w));
+            }
+        }
+    });
+
+    // ---- PJRT artifact -------------------------------------------------------
+    match Engine::load_default() {
+        Ok(engine) => {
+            for wname in ["alexnet", "vgg16", "gpt2-medium"] {
+                let w = by_name(wname).unwrap();
+                bench.run(&format!("pjrt/{wname}/b64"), 64, || {
+                    std::hint::black_box(
+                        engine.fitness(&raws64, &w, MemoryTech::Rram).unwrap(),
+                    );
+                });
+                bench.run(&format!("pjrt/{wname}/b256"), 256, || {
+                    std::hint::black_box(
+                        engine.fitness(&raws256, &w, MemoryTech::Rram).unwrap(),
+                    );
+                });
+            }
+            bench.run("pjrt/accproxy", 1, || {
+                std::hint::black_box(engine.accproxy_eps(0.03, 0.02).unwrap());
+            });
+        }
+        Err(e) => eprintln!("skipping pjrt benches (artifacts unavailable: {e})"),
+    }
+}

@@ -1,0 +1,25 @@
+//! End-to-end benches: one timed run per paper table/figure experiment.
+//! `cargo bench` regenerates every result at quick scale and reports its
+//! wall-clock; `repro exp all` (no --quick) is the full-scale path.
+
+use imcopt::coordinator::ExpContext;
+use imcopt::experiments;
+use imcopt::util::bench::Bench;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bench::new("paper");
+    // each experiment is itself a long-running unit; one timed iteration
+    // per experiment keeps `cargo bench` bounded
+    bench.budget = Duration::from_millis(1);
+    bench.min_iters = 1;
+
+    for id in experiments::ALL_IDS {
+        bench.run(id, 1, || {
+            let mut ctx = ExpContext::quick(1234);
+            ctx.out_dir = std::env::temp_dir().join("imcopt-bench-results");
+            let report = experiments::run(id, &ctx).expect(id);
+            std::hint::black_box(report);
+        });
+    }
+}

@@ -1,0 +1,66 @@
+//! Search-stack benches: the paper-budget 4-phase GA run (Table 6's unit),
+//! Hamming sampling, and the Table 3 optimizer lineup on the reduced
+//! space.
+
+use imcopt::coordinator::{EvalBackend, JointProblem};
+use imcopt::model::MemoryTech;
+use imcopt::objective::Objective;
+use imcopt::search::{
+    sampling, CmaEs, EvolutionStrategy, G3Pcx, GaConfig, GeneticAlgorithm, Optimizer, Pso,
+    SearchBudget,
+};
+use imcopt::space::SearchSpace;
+use imcopt::util::bench::Bench;
+use imcopt::util::rng::Rng;
+use imcopt::workloads::WorkloadSet;
+
+fn main() {
+    let bench = Bench::new("search");
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let problem = || {
+        JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        )
+    };
+
+    // Hamming-diversity sampling phase alone (the paper's ~30% overhead)
+    bench.run("sampling/ph1000-pe500", 500, || {
+        let p = problem();
+        let mut rng = Rng::seed_from(3);
+        std::hint::black_box(sampling::hamming_init(&p, 1000, 500, 40, &mut rng));
+    });
+
+    // full paper-budget 4-phase GA (joint, 4 workloads, native backend)
+    bench.run("ga/4phase-paper-budget", 40 * 41, || {
+        let p = problem();
+        let ga = GeneticAlgorithm::new(GaConfig::four_phase(SearchBudget::paper()));
+        std::hint::black_box(ga.run(&p, &mut Rng::seed_from(5)));
+    });
+
+    // Table 3 lineup on the reduced space at equal budget
+    let reduced = SearchSpace::rram_reduced();
+    let budget = SearchBudget { pop: 30, gens: 20 };
+    let algos: Vec<(&str, Box<dyn Optimizer>)> = vec![
+        ("ga", Box::new(GeneticAlgorithm::new(GaConfig::classic(budget)))),
+        ("es", Box::new(EvolutionStrategy::plain(budget))),
+        ("eres", Box::new(EvolutionStrategy::eres(budget))),
+        ("pso", Box::new(Pso::new(budget))),
+        ("g3pcx", Box::new(G3Pcx::new(budget))),
+        ("cmaes", Box::new(CmaEs::new(budget))),
+    ];
+    for (name, algo) in &algos {
+        bench.run(&format!("table3/{name}"), budget.pop * budget.gens, || {
+            let p = JointProblem::with_backend(
+                &reduced,
+                &set,
+                EvalBackend::native(MemoryTech::Rram),
+                Objective::edap(),
+            );
+            std::hint::black_box(algo.run(&p, &mut Rng::seed_from(7)));
+        });
+    }
+}

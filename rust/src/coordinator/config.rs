@@ -1,0 +1,181 @@
+//! Experiment configuration / context shared by the CLI, experiments,
+//! benches and examples.
+
+use crate::model::MemoryTech;
+use crate::objective::Objective;
+use crate::runtime::Engine;
+use crate::search::SearchBudget;
+use crate::space::SearchSpace;
+use crate::util::cli::Args;
+use crate::workloads::WorkloadSet;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use super::{EvalBackend, JointProblem};
+
+/// Which evaluation backend experiments should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Use the AOT PJRT artifacts; error if missing.
+    Pjrt,
+    /// Use the native analytical evaluator.
+    Native,
+    /// Prefer PJRT, fall back to native with a notice (default).
+    Auto,
+}
+
+/// Shared experiment context.
+pub struct ExpContext {
+    pub seed: u64,
+    /// Reduced budgets for CI smoke runs (`--quick`).
+    pub quick: bool,
+    pub backend_choice: BackendChoice,
+    pub out_dir: PathBuf,
+    pub threads: usize,
+    /// Lazily loaded PJRT engine, shared across experiments.
+    engine: Mutex<Option<Option<Arc<Mutex<Engine>>>>>,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            seed: 42,
+            quick: false,
+            backend_choice: BackendChoice::Auto,
+            out_dir: PathBuf::from("results"),
+            threads: crate::util::pool::default_threads(),
+            engine: Mutex::new(None),
+        }
+    }
+}
+
+impl ExpContext {
+    /// Build from CLI arguments (`--seed`, `--quick`, `--native`,
+    /// `--pjrt`, `--out`, `--threads`).
+    pub fn from_args(args: &Args) -> ExpContext {
+        let backend_choice = if args.flag("native") {
+            BackendChoice::Native
+        } else if args.flag("pjrt") {
+            BackendChoice::Pjrt
+        } else {
+            BackendChoice::Auto
+        };
+        ExpContext {
+            seed: args.opt_u64("seed", 42),
+            quick: args.flag("quick"),
+            backend_choice,
+            out_dir: PathBuf::from(args.opt_str("out", "results")),
+            threads: args.opt_usize("threads", crate::util::pool::default_threads()),
+            ..ExpContext::default()
+        }
+    }
+
+    /// CI-friendly quick context for tests.
+    pub fn quick(seed: u64) -> ExpContext {
+        ExpContext {
+            seed,
+            quick: true,
+            backend_choice: BackendChoice::Native,
+            out_dir: std::env::temp_dir().join("imcopt-results"),
+            ..ExpContext::default()
+        }
+    }
+
+    /// The paper's search budget, or a reduced one under `--quick`.
+    pub fn budget(&self) -> SearchBudget {
+        if self.quick {
+            SearchBudget { pop: 12, gens: 8 }
+        } else {
+            SearchBudget::paper()
+        }
+    }
+
+    /// Sampling pool sizes `(P_H, P_E)` (paper: 1000/500).
+    pub fn sampling(&self) -> (usize, usize) {
+        if self.quick {
+            (80, 40)
+        } else {
+            (1000, 500)
+        }
+    }
+
+    /// Number of repeated independent runs for variance experiments.
+    pub fn repeats(&self, full: usize) -> usize {
+        if self.quick {
+            2.min(full)
+        } else {
+            full
+        }
+    }
+
+    /// Get (or lazily load) the shared PJRT engine; `None` when artifacts
+    /// are unavailable or the backend choice is native.
+    pub fn engine(&self) -> Option<Arc<Mutex<Engine>>> {
+        if self.backend_choice == BackendChoice::Native {
+            return None;
+        }
+        let mut slot = self.engine.lock().unwrap();
+        if slot.is_none() {
+            let loaded = match Engine::load_default() {
+                Ok(e) => Some(Arc::new(Mutex::new(e))),
+                Err(e) => {
+                    if self.backend_choice == BackendChoice::Pjrt {
+                        panic!("--pjrt requested but artifacts unavailable: {e:#}");
+                    }
+                    eprintln!(
+                        "[imcopt] artifacts unavailable ({e}); using native evaluator"
+                    );
+                    None
+                }
+            };
+            *slot = Some(loaded);
+        }
+        slot.as_ref().unwrap().clone()
+    }
+
+    /// Construct the evaluation backend for a memory technology.
+    pub fn backend(&self, mem: MemoryTech) -> EvalBackend {
+        match self.engine() {
+            Some(engine) => EvalBackend::Pjrt(engine, mem),
+            None => EvalBackend::native(mem),
+        }
+    }
+
+    /// Convenience: build a joint problem.
+    pub fn problem<'a>(
+        &self,
+        space: &'a SearchSpace,
+        workloads: &'a WorkloadSet,
+        mem: MemoryTech,
+        objective: Objective,
+    ) -> JointProblem<'a> {
+        JointProblem::with_backend(space, workloads, self.backend(mem), objective)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_context_reduces_budget() {
+        let ctx = ExpContext::quick(1);
+        assert!(ctx.budget().pop < SearchBudget::paper().pop);
+        assert!(ctx.sampling().0 < 1000);
+        assert_eq!(ctx.repeats(25), 2);
+    }
+
+    #[test]
+    fn from_args_parses_backend() {
+        let args = Args::parse(
+            ["exp", "fig3", "--native", "--seed=7", "--quick"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let ctx = ExpContext::from_args(&args);
+        assert_eq!(ctx.backend_choice, BackendChoice::Native);
+        assert_eq!(ctx.seed, 7);
+        assert!(ctx.quick);
+        assert!(ctx.engine().is_none());
+    }
+}

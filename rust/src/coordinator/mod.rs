@@ -1,0 +1,517 @@
+//! L3 coordinator: joint-evaluation problem, backend routing, caching and
+//! the experiment context (the paper's system contribution lives in
+//! `search`; this module wires search to evaluation).
+//!
+//! The search loop scores populations through [`JointProblem`], which
+//! decodes designs, routes hardware evaluation to the AOT **PJRT artifact**
+//! (default; Python never runs here) or the native analytical evaluator,
+//! memoizes per-design metrics (GAs re-visit elites constantly), and
+//! applies the configured objective across the workload set.
+
+pub mod config;
+
+use crate::accuracy;
+use crate::model::{MemoryTech, Metrics, NativeEvaluator};
+use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::runtime::Engine;
+use crate::search::Problem;
+use crate::space::{idx, Design, SearchSpace};
+use crate::util::rng::Rng;
+use crate::workloads::WorkloadSet;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use config::ExpContext;
+
+/// Evaluation backend for hardware metrics.
+#[derive(Clone)]
+pub enum EvalBackend {
+    /// Closed-form Rust evaluator (oracle / fallback).
+    Native(NativeEvaluator),
+    /// AOT JAX/Pallas fitness artifact via PJRT (the production hot path).
+    Pjrt(Arc<Mutex<Engine>>, MemoryTech),
+}
+
+impl EvalBackend {
+    pub fn native(mem: MemoryTech) -> EvalBackend {
+        EvalBackend::Native(NativeEvaluator::new(mem))
+    }
+
+    pub fn mem(&self) -> MemoryTech {
+        match self {
+            EvalBackend::Native(ev) => ev.mem,
+            EvalBackend::Pjrt(_, mem) => *mem,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvalBackend::Native(_) => "native",
+            EvalBackend::Pjrt(..) => "pjrt",
+        }
+    }
+
+    /// Evaluate a batch of decoded designs against one workload.
+    fn eval_batch(
+        &self,
+        raws: &[[f64; 10]],
+        workload: &crate::workloads::Workload,
+    ) -> Vec<Metrics> {
+        match self {
+            EvalBackend::Native(ev) => {
+                raws.iter().map(|r| ev.evaluate(r, workload)).collect()
+            }
+            EvalBackend::Pjrt(engine, mem) => engine
+                .lock()
+                .unwrap()
+                .fitness(raws, workload, *mem)
+                .expect("PJRT fitness execution failed"),
+        }
+    }
+}
+
+/// Per-design evaluation record (metrics per workload + accuracies when
+/// the objective needs them).
+#[derive(Clone, Debug)]
+pub struct Evaluations {
+    pub metrics: Vec<Metrics>,
+    pub accuracies: Option<Vec<f64>>,
+    pub score: f64,
+}
+
+/// The joint hardware-workload co-optimization problem (paper Fig. 2).
+pub struct JointProblem<'a> {
+    pub space: &'a SearchSpace,
+    pub workloads: &'a WorkloadSet,
+    pub backend: EvalBackend,
+    pub objective: Objective,
+    /// Restrict joint evaluation to this subset of workload indices
+    /// (used by "separate search" baselines). `None` = all workloads.
+    pub subset: Option<Vec<usize>>,
+    cache: Mutex<HashMap<u64, Evaluations>>,
+    evals: AtomicUsize,
+    /// Cache for the (expensive) accuracy proxy keyed by (rows, cols,
+    /// bits) — the only parameters the noise model depends on.
+    acc_cache: Mutex<HashMap<(u16, u16, u16), f64>>,
+}
+
+impl<'a> JointProblem<'a> {
+    pub fn new(
+        space: &'a SearchSpace,
+        workloads: &'a WorkloadSet,
+        evaluator: NativeEvaluator,
+        objective: Objective,
+        agg: Aggregation,
+    ) -> JointProblem<'a> {
+        let mut objective = objective;
+        objective.agg = agg;
+        JointProblem::with_backend(space, workloads, EvalBackend::Native(evaluator), objective)
+    }
+
+    pub fn with_backend(
+        space: &'a SearchSpace,
+        workloads: &'a WorkloadSet,
+        backend: EvalBackend,
+        objective: Objective,
+    ) -> JointProblem<'a> {
+        JointProblem {
+            space,
+            workloads,
+            backend,
+            objective,
+            subset: None,
+            cache: Mutex::new(HashMap::new()),
+            evals: AtomicUsize::new(0),
+            acc_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Restrict to a single workload (the paper's "separate search").
+    pub fn restricted(mut self, workload_index: usize) -> Self {
+        assert!(workload_index < self.workloads.len());
+        self.subset = Some(vec![workload_index]);
+        self
+    }
+
+    fn active_indices(&self) -> Vec<usize> {
+        self.subset
+            .clone()
+            .unwrap_or_else(|| (0..self.workloads.len()).collect())
+    }
+
+    /// Accuracy estimates per active workload for one design (Fig. 8).
+    /// Uses the AOT noisy-crossbar proxy when available, with the
+    /// analytical model as fallback; memoized on (rows, cols, bits).
+    fn accuracies(&self, raw: &[f64; 10], d: &Design) -> Vec<f64> {
+        let mem = self.backend.mem();
+        let key = (d.0[idx::ROWS], d.0[idx::COLS], d.0[idx::BITS_CELL]);
+        let per_layer_eps = {
+            let mut cache = self.acc_cache.lock().unwrap();
+            *cache.entry(key).or_insert_with(|| {
+                let spec = accuracy::NoiseSpec::from_design(raw, mem);
+                if let EvalBackend::Pjrt(engine, _) = &self.backend {
+                    let eng = engine.lock().unwrap();
+                    if eng.has_accproxy() {
+                        if let Ok(eps) =
+                            eng.accproxy_eps(spec.weight_sigma(), spec.ir_drop)
+                        {
+                            return eps;
+                        }
+                    }
+                }
+                accuracy::analytical_eps(&spec, 1)
+            })
+        };
+        self.active_indices()
+            .iter()
+            .map(|&wi| {
+                let w = &self.workloads.workloads[wi];
+                let eps = per_layer_eps * (w.mapped_layers() as f64).sqrt();
+                let (base, chance) = accuracy::baseline(w.name);
+                accuracy::accuracy_from_eps(eps, base, chance)
+            })
+            .collect()
+    }
+
+    /// Full evaluation record for one design (used by experiment reports).
+    pub fn evaluate_design(&self, d: &Design) -> Evaluations {
+        self.score_batch(std::slice::from_ref(d));
+        self.cache
+            .lock()
+            .unwrap()
+            .get(&self.space.linear_index(d))
+            .cloned()
+            .expect("design just scored must be cached")
+    }
+
+    /// Per-workload metrics of a design on *all* workloads regardless of
+    /// subset (for cross-reporting a separately-optimized design).
+    pub fn metrics_all_workloads(&self, d: &Design) -> Vec<Metrics> {
+        let raw = self.space.decode(d);
+        self.workloads
+            .workloads
+            .iter()
+            .map(|w| self.backend.eval_batch(std::slice::from_ref(&raw), w)[0])
+            .collect()
+    }
+
+    /// Number of cached distinct designs (diagnostics).
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl Problem for JointProblem<'_> {
+    fn space(&self) -> &SearchSpace {
+        self.space
+    }
+
+    fn score_batch(&self, designs: &[Design]) -> Vec<f64> {
+        // resolve cache hits, collect misses
+        let mut out = vec![f64::NAN; designs.len()];
+        let mut miss_idx: Vec<usize> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            for (i, d) in designs.iter().enumerate() {
+                if let Some(ev) = cache.get(&self.space.linear_index(d)) {
+                    out[i] = ev.score;
+                } else {
+                    miss_idx.push(i);
+                }
+            }
+        }
+        if miss_idx.is_empty() {
+            return out;
+        }
+        // de-duplicate misses within the batch
+        let mut uniq: Vec<(u64, usize)> = Vec::new(); // (key, first index)
+        {
+            let mut seen: HashMap<u64, usize> = HashMap::new();
+            for &i in &miss_idx {
+                let key = self.space.linear_index(&designs[i]);
+                seen.entry(key).or_insert(i);
+            }
+            uniq.extend(seen.into_iter());
+        }
+        uniq.sort_by_key(|&(_, i)| i); // deterministic order
+        let raws: Vec<[f64; 10]> =
+            uniq.iter().map(|&(_, i)| self.space.decode(&designs[i])).collect();
+        self.evals.fetch_add(raws.len(), Ordering::Relaxed);
+
+        // evaluate per active workload in workload-major order (each
+        // workload is one batched artifact execution)
+        let active = self.active_indices();
+        let mut per_design_metrics: Vec<Vec<Metrics>> =
+            vec![Vec::with_capacity(active.len()); raws.len()];
+        for &wi in &active {
+            let w = &self.workloads.workloads[wi];
+            let ms = self.backend.eval_batch(&raws, w);
+            for (slot, m) in per_design_metrics.iter_mut().zip(ms) {
+                slot.push(m);
+            }
+        }
+
+        // score + cache
+        let mut cache = self.cache.lock().unwrap();
+        for ((key, di), metrics) in uniq.iter().zip(per_design_metrics) {
+            let d = &designs[*di];
+            let raw = self.space.decode(d);
+            let accuracies = if self.objective.kind == ObjectiveKind::EdapAccuracy {
+                Some(self.accuracies(&raw, d))
+            } else {
+                None
+            };
+            let score = self.objective.score(
+                &metrics,
+                accuracies.as_deref(),
+                raw[idx::TECH_NM],
+            );
+            cache.insert(
+                *key,
+                Evaluations {
+                    metrics,
+                    accuracies,
+                    score,
+                },
+            );
+        }
+        for i in 0..designs.len() {
+            if out[i].is_nan() {
+                out[i] = cache[&self.space.linear_index(&designs[i])].score;
+            }
+        }
+        out
+    }
+
+    /// Algorithm 1's initial-sampling feasibility pre-filter: only designs
+    /// whose macro capacity covers the largest workload enter the pool. In
+    /// the weight-stationary (RRAM) case the *whole* largest model must
+    /// fit; in the weight-swapping (SRAM) case only its largest single
+    /// layer must (a mild strengthening of the paper's pure random
+    /// sampling — our analytical mapper, unlike CIMLoop's flexible
+    /// temporal mapping, cannot split a layer across swap phases, so
+    /// capacity-infeasible seeds would stall the search; see DESIGN.md).
+    fn random_candidate(&self, rng: &mut Rng) -> Design {
+        let mem = self.backend.mem();
+        let largest = match mem {
+            MemoryTech::Rram => {
+                &self.workloads.workloads[self.workloads.largest_by_total()]
+            }
+            MemoryTech::Sram => {
+                &self.workloads.workloads[self.workloads.largest_by_layer()]
+            }
+        };
+        for _ in 0..500 {
+            let d = self.space.random(rng);
+            let raw = self.space.decode(&d);
+            let view = crate::model::DesignView::new(&raw, mem);
+            let mut sum = 0.0f64;
+            let mut max: f64 = 0.0;
+            for l in largest.layers.iter().filter(|l| !l.dynamic()) {
+                let xb = view.xbars_for(l.k as f64, l.n as f64);
+                sum += xb;
+                max = max.max(xb);
+            }
+            let demand = match mem {
+                MemoryTech::Rram => sum,
+                MemoryTech::Sram => max,
+            };
+            if demand <= view.macros {
+                return d;
+            }
+        }
+        self.space.random(rng)
+    }
+
+    /// Graded violation for stochastic ranking: capacity shortfall +
+    /// area excess + timing violation, all normalized.
+    fn violation(&self, design: &Design) -> f64 {
+        let raw = self.space.decode(design);
+        let mem = self.backend.mem();
+        let view = crate::model::DesignView::new(&raw, mem);
+        let ev = NativeEvaluator::new(mem);
+        let area = ev.area(&raw);
+        let mut v = (area / self.objective.area_constraint - 1.0).max(0.0);
+        if !view.timing_ok {
+            v += 0.5;
+        }
+        // capacity violation against the largest active workload
+        let active = self.active_indices();
+        let mut worst: f64 = 0.0;
+        for &wi in &active {
+            let w = &self.workloads.workloads[wi];
+            let mut sum_xb = 0.0;
+            let mut max_xb: f64 = 0.0;
+            for l in &w.layers {
+                if l.dynamic() {
+                    continue;
+                }
+                let xb = view.xbars_for(l.k as f64, l.n as f64);
+                sum_xb += xb;
+                max_xb = max_xb.max(xb);
+            }
+            let demand = match mem {
+                MemoryTech::Rram => sum_xb,
+                MemoryTech::Sram => max_xb,
+            };
+            worst = worst.max((demand / view.macros - 1.0).max(0.0));
+        }
+        v + worst
+    }
+
+    fn evals(&self) -> usize {
+        self.evals.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{GaConfig, GeneticAlgorithm, Optimizer, SearchBudget};
+
+    fn problem<'a>(
+        space: &'a SearchSpace,
+        set: &'a WorkloadSet,
+        mem: MemoryTech,
+    ) -> JointProblem<'a> {
+        JointProblem::with_backend(
+            space,
+            set,
+            EvalBackend::native(mem),
+            Objective::edap(),
+        )
+    }
+
+    #[test]
+    fn caching_avoids_reevaluation() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Rram);
+        let mut rng = Rng::seed_from(1);
+        let d = space.random(&mut rng);
+        let s1 = p.score_batch(std::slice::from_ref(&d))[0];
+        let n1 = p.evals();
+        let s2 = p.score_batch(std::slice::from_ref(&d))[0];
+        assert_eq!(s1.to_bits(), s2.to_bits());
+        assert_eq!(p.evals(), n1, "cache hit must not re-evaluate");
+        // duplicate within one batch evaluates once
+        let d2 = space.random(&mut rng);
+        let before = p.evals();
+        p.score_batch(&[d2.clone(), d2.clone(), d2]);
+        assert_eq!(p.evals(), before + 1);
+    }
+
+    #[test]
+    fn feasible_designs_exist_and_score_finite() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Rram);
+        let mut rng = Rng::seed_from(2);
+        let designs: Vec<Design> =
+            (0..64).map(|_| p.random_candidate(&mut rng)).collect();
+        let scores = p.score_batch(&designs);
+        let finite = scores.iter().filter(|s| s.is_finite()).count();
+        assert!(
+            finite > 10,
+            "capacity-prefiltered candidates should mostly be feasible ({finite}/64)"
+        );
+    }
+
+    #[test]
+    fn rram_prefilter_covers_vgg() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Rram);
+        let mut rng = Rng::seed_from(3);
+        for _ in 0..20 {
+            let d = p.random_candidate(&mut rng);
+            let raw = space.decode(&d);
+            let view = crate::model::DesignView::new(&raw, MemoryTech::Rram);
+            let vgg = &set.workloads[1];
+            let needed: f64 = vgg
+                .layers
+                .iter()
+                .map(|l| view.xbars_for(l.k as f64, l.n as f64))
+                .sum();
+            assert!(needed <= view.macros);
+        }
+    }
+
+    #[test]
+    fn restricted_problem_scores_single_workload() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p_all = problem(&space, &set, MemoryTech::Rram);
+        let p_one = problem(&space, &set, MemoryTech::Rram).restricted(0);
+        let mut rng = Rng::seed_from(4);
+        let d = p_all.random_candidate(&mut rng);
+        let ev_all = p_all.evaluate_design(&d);
+        let ev_one = p_one.evaluate_design(&d);
+        assert_eq!(ev_all.metrics.len(), 4);
+        assert_eq!(ev_one.metrics.len(), 1);
+        // single-workload joint score == that workload's own score
+        assert!(ev_one.score <= ev_all.score || !ev_all.score.is_finite());
+    }
+
+    #[test]
+    fn end_to_end_ga_on_native_backend() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Rram);
+        let ga = GeneticAlgorithm::new(GaConfig {
+            init: crate::search::InitStrategy::HammingDiverse { p_h: 60, p_e: 30 },
+            ..GaConfig::four_phase(SearchBudget { pop: 12, gens: 8 })
+        });
+        let r = ga.run(&p, &mut Rng::seed_from(5));
+        assert!(r.best_score.is_finite(), "GA found no feasible design");
+        let ev = p.evaluate_design(&r.best);
+        assert!(ev.metrics.iter().all(|m| m.feasible));
+    }
+
+    #[test]
+    fn accuracy_objective_populates_accuracies() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max),
+        );
+        let mut rng = Rng::seed_from(6);
+        let d = p.random_candidate(&mut rng);
+        let ev = p.evaluate_design(&d);
+        let accs = ev.accuracies.expect("accuracies required");
+        assert_eq!(accs.len(), 4);
+        assert!(accs.iter().all(|&a| a > 0.0 && a < 1.0));
+    }
+
+    #[test]
+    fn violation_grades_area_excess() {
+        let space = SearchSpace::sram();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Sram);
+        // max-everything SRAM design: far over the area budget but with
+        // ample capacity and relaxed timing
+        let huge = Design(
+            space
+                .params
+                .iter()
+                .map(|pd| (pd.cardinality() - 1) as u16)
+                .collect(),
+        );
+        // a mid design that fits the largest layer and the area budget:
+        // rows/cols 512, 32 macros/tile, 8 tiles, 16 groups, slow cycle
+        let mid = space.clamp_round(&[4.0, 4.0, 3.0, 2.0, 5.0, 0.0, 4.0, 3.0, 4.0, 0.0]);
+        assert!(p.violation(&huge) > 0.0, "huge must violate area");
+        assert!(
+            p.violation(&huge) > p.violation(&mid),
+            "huge {} vs mid {}",
+            p.violation(&huge),
+            p.violation(&mid)
+        );
+        // graded, not binary: bigger excess -> bigger violation
+        assert!(p.violation(&huge) > 0.1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig. 10 (§IV-J): scalability and generalization — joint co-optimization
+//! over the expanded 9-workload set (CNNs + DenseNet201, ResNet50, ViT,
+//! MobileBERT, GPT-2 Medium) on SRAM weight-swapping hardware at 32 nm.
+//!
+//! As in the paper, the objective switches to **mean** energy/latency
+//! aggregation so GPT-2 Medium does not dominate, and the "largest
+//! workload" is defined by the largest single layer (VGG16's fc6, which
+//! exceeds GPT-2's LM head). Headline claim: up to 95.5 % EDAP reduction
+//! vs largest-workload optimization.
+
+use super::common;
+use crate::coordinator::ExpContext;
+use crate::model::MemoryTech;
+use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::report::Report;
+use crate::util::table::Table;
+use crate::workloads::WorkloadSet;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<Report> {
+    let set = WorkloadSet::all9();
+    let space = crate::space::SearchSpace::sram();
+    // mean aggregation (§IV-J)
+    let objective = Objective::new(ObjectiveKind::Edap, Aggregation::Mean);
+    let edap = Objective::edap();
+    let mut report = Report::new(
+        "fig10",
+        "9-workload scalability on SRAM weight-swapping hardware (mean aggregation)",
+    );
+
+    let li = common::largest_workload_index(&set, MemoryTech::Sram);
+    assert_eq!(set.workloads[li].name, "vgg16");
+
+    let problem = ctx.problem(&space, &set, MemoryTech::Sram, objective);
+    let t0 = std::time::Instant::now();
+    let joint = common::run_ga(&problem, common::four_phase(ctx), ctx.seed);
+    let joint_time = t0.elapsed();
+    let largest =
+        common::naive_largest_search(ctx, &space, &set, MemoryTech::Sram, objective, ctx.seed);
+
+    let joint_scores = common::per_workload_scores(&problem, &joint.best, &edap);
+    let largest_scores = common::per_workload_scores(&problem, &largest.best, &edap);
+
+    let mut t = Table::new(
+        "per-workload EDAP (mJ·ms·mm²) of top-1 designs",
+        &["workload", "largest-workload opt", "joint opt (mean agg)", "reduction %"],
+    );
+    let mut max_red = f64::NEG_INFINITY;
+    let mut wins = 0;
+    for (i, w) in set.workloads.iter().enumerate() {
+        let red = common::reduction_pct(largest_scores[i], joint_scores[i]);
+        if joint_scores[i] <= largest_scores[i] * 1.001 {
+            wins += 1;
+        }
+        max_red = max_red.max(red);
+        t.row(vec![
+            w.name.into(),
+            common::s(largest_scores[i]),
+            common::s(joint_scores[i]),
+            format!("{red:.1}"),
+        ]);
+    }
+    report.table(t);
+    report.note(format!(
+        "joint wins/ties on {wins}/{} workloads; max per-workload EDAP reduction \
+         {max_red:.1}% (paper: up to 95.5%)",
+        set.len()
+    ));
+    report.note(format!(
+        "joint design: {} | search wall {} | evals {}",
+        space.describe(&joint.best),
+        crate::util::fmt_duration(joint_time),
+        joint.evals
+    ));
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_quick_covers_nine_workloads() {
+        let ctx = ExpContext::quick(43);
+        let r = run(&ctx).unwrap();
+        assert_eq!(r.tables[0].rows.len(), 9);
+        let names: Vec<&str> = r.tables[0].rows.iter().map(|x| x[0].as_str()).collect();
+        assert!(names.contains(&"gpt2-medium"));
+        assert!(names.contains(&"mobilebert"));
+    }
+}

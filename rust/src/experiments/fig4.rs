@@ -1,0 +1,120 @@
+//! Fig. 4 + §IV-B: convergence and run-to-run stability of the proposed
+//! 4-phase GA with enhanced sampling vs. the traditional GA, over
+//! independent joint-EDAP RRAM runs (6 plotted in the paper, plus a
+//! 25-run mean/std: 2.47±0.87 vs 1.21±0.16 mJ·ms·mm²).
+
+use super::common;
+use crate::coordinator::ExpContext;
+use crate::model::MemoryTech;
+use crate::objective::Objective;
+use crate::report::Report;
+use crate::util::{fmt_sig, stats, table::Table};
+use crate::workloads::WorkloadSet;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<Report> {
+    let set = WorkloadSet::cnn4();
+    let space = crate::space::SearchSpace::rram();
+    let objective = Objective::edap();
+    let mut report = Report::new(
+        "fig4",
+        "Convergence & stability: 4-phase GA + sampling vs traditional GA (RRAM, EDAP)",
+    );
+
+    let runs = ctx.repeats(6);
+    let extra = ctx.repeats(25);
+
+    let mut curves = Table::new(
+        "Convergence (best-so-far EDAP by generation, run 0)",
+        &["generation", "traditional GA", "4-phase GA + sampling"],
+    );
+    let mut finals_classic = Vec::new();
+    let mut finals_fourphase = Vec::new();
+    let mut curve_classic: Vec<f64> = Vec::new();
+    let mut curve_fourphase: Vec<f64> = Vec::new();
+
+    for run_i in 0..runs.max(extra) {
+        let seed = ctx.seed.wrapping_add(run_i as u64 * 7919);
+        // fresh problems per run so the cache doesn't leak information
+        let p1 = ctx.problem(&space, &set, MemoryTech::Rram, objective);
+        let r_classic = common::run_ga(&p1, common::classic(ctx), seed);
+        let p2 = ctx.problem(&space, &set, MemoryTech::Rram, objective);
+        let r_four = common::run_ga(&p2, common::four_phase(ctx), seed);
+        finals_classic.push(r_classic.best_score);
+        finals_fourphase.push(r_four.best_score);
+        if run_i == 0 {
+            curve_classic = r_classic.history.clone();
+            curve_fourphase = r_four.history.clone();
+        }
+    }
+    let gens = curve_classic.len().max(curve_fourphase.len());
+    let at = |v: &Vec<f64>, g: usize| -> String {
+        v.get(g.min(v.len().saturating_sub(1)))
+            .map(|x| common::s(*x))
+            .unwrap_or_default()
+    };
+    for g in 0..gens {
+        curves.row(vec![
+            g.to_string(),
+            at(&curve_classic, g),
+            at(&curve_fourphase, g),
+        ]);
+    }
+    report.table(curves);
+
+    let plotted_c = &finals_classic[..runs.min(finals_classic.len())];
+    let plotted_f = &finals_fourphase[..runs.min(finals_fourphase.len())];
+    let mut t = Table::new(
+        &format!("Final EDAP over {} independent runs", plotted_c.len()),
+        &["run", "traditional GA", "4-phase GA + sampling"],
+    );
+    for i in 0..plotted_c.len() {
+        t.row(vec![
+            i.to_string(),
+            common::s(plotted_c[i]),
+            common::s(plotted_f[i]),
+        ]);
+    }
+    report.table(t);
+
+    let mut summary = Table::new(
+        &format!("Mean ± std over {} runs (paper: 2.47±0.87 vs 1.21±0.16)", finals_classic.len()),
+        &["algorithm", "mean EDAP", "std", "min", "max"],
+    );
+    for (name, xs) in [
+        ("traditional GA", &finals_classic),
+        ("4-phase GA + sampling", &finals_fourphase),
+    ] {
+        summary.row(vec![
+            name.into(),
+            fmt_sig(stats::mean(xs), 4),
+            fmt_sig(stats::std_dev(xs), 3),
+            fmt_sig(stats::min(xs), 4),
+            fmt_sig(stats::max(xs), 4),
+        ]);
+    }
+    report.table(summary);
+
+    let better_mean = stats::mean(&finals_fourphase) <= stats::mean(&finals_classic);
+    let tighter = stats::std_dev(&finals_fourphase) <= stats::std_dev(&finals_classic) * 1.2;
+    report.note(format!(
+        "4-phase GA mean better: {better_mean}; spread tighter-or-equal: {tighter} \
+         (paper: consistently lower EDAP and smaller variance)"
+    ));
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_quick_produces_three_tables() {
+        let ctx = ExpContext::quick(3);
+        let r = run(&ctx).unwrap();
+        assert_eq!(r.tables.len(), 3);
+        assert!(!r.tables[0].rows.is_empty()); // convergence curve
+        assert_eq!(r.tables[2].rows.len(), 2); // summary rows
+    }
+}

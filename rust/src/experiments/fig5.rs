@@ -1,0 +1,200 @@
+//! Fig. 5 (§IV-D): the performance gap between generalized and
+//! workload-specific designs, across RRAM (a–d) and SRAM (e–h) and four
+//! objective functions (EDAP, EDP, energy, latency).
+//!
+//! For each panel: per-workload scores of (i) separate search per workload
+//! (the baseline = 1.0 after normalization), (ii) separate search for the
+//! largest workload evaluated on all, (iii) joint search with the
+//! non-modified GA (EDAP panels), (iv) joint with enhanced sampling (EDAP
+//! panels), and (v) the proposed 4-phase GA. Top-5 designs per run; the
+//! paper's success criterion is the proposed method sitting closest to 1.0.
+
+use super::common;
+use crate::coordinator::ExpContext;
+use crate::model::MemoryTech;
+use crate::objective::Objective;
+use crate::report::Report;
+use crate::search::OptResult;
+use crate::util::table::Table;
+use crate::workloads::WorkloadSet;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<Report> {
+    let set = WorkloadSet::cnn4();
+    let mut report = Report::new(
+        "fig5",
+        "Generalized vs workload-specific designs across objectives (top-1 of top-5 shown)",
+    );
+
+    // The paper repeats Fig. 5 with five initial-population seeds and
+    // reports consistent trends; we average the normalized scores over the
+    // same number of independent runs (2 under --quick).
+    let seeds: Vec<u64> = (0..ctx.repeats(5) as u64)
+        .map(|i| ctx.seed.wrapping_add(i * 7919))
+        .collect();
+
+    let objectives = Objective::figure5_set();
+    for (mem, space) in [
+        (MemoryTech::Rram, crate::space::SearchSpace::rram()),
+        (MemoryTech::Sram, crate::space::SearchSpace::sram()),
+    ] {
+        for objective in &objectives {
+            let panel = format!("{} / {}", mem.name(), objective.name());
+
+            // (i) separate search per workload -> baseline scores
+            // (best over the seed set: the workload-specific bound)
+            let mut baseline = vec![f64::INFINITY; set.len()];
+            for wi in 0..set.len() {
+                for &seed in &seeds {
+                    let p = ctx
+                        .problem(&space, &set, mem, *objective)
+                        .restricted(wi);
+                    let r = common::run_ga(&p, common::four_phase(ctx), seed);
+                    let scores = common::per_workload_scores(&p, &r.best, objective);
+                    baseline[wi] = baseline[wi].min(scores[wi]);
+                }
+            }
+
+            // helper: normalized per-workload scores of a run's top-1
+            let joint_problem = ctx.problem(&space, &set, mem, *objective);
+            let normalized = |r: &OptResult| -> Vec<f64> {
+                let scores =
+                    common::per_workload_scores(&joint_problem, &r.best, objective);
+                scores
+                    .iter()
+                    .zip(&baseline)
+                    .map(|(s, b)| s / b)
+                    .collect()
+            };
+            let spread = |r: &OptResult| -> f64 {
+                if r.top.len() < 2 {
+                    return 0.0;
+                }
+                let best = r.top[0].1;
+                let worst = r.top.last().unwrap().1;
+                if best > 0.0 && best.is_finite() {
+                    worst / best - 1.0
+                } else {
+                    f64::NAN
+                }
+            };
+
+            // strategies (GA baselines only on the EDAP panels, as in the
+            // paper); each runs once per seed and reports seed-mean
+            // normalized scores + seed-mean top-5 spread
+            let is_edap = objective.kind == crate::objective::ObjectiveKind::Edap;
+            type Runner<'x> = Box<dyn Fn(u64) -> OptResult + 'x>;
+            let mut strategies: Vec<(&str, Runner)> = vec![(
+                "separate for largest workload",
+                Box::new(|seed| {
+                    common::naive_largest_search(ctx, &space, &set, mem, *objective, seed)
+                }),
+            )];
+            if is_edap {
+                strategies.push((
+                    "joint non-modified GA",
+                    Box::new(|seed| {
+                        let p = ctx.problem(&space, &set, mem, *objective);
+                        common::run_ga(&p, common::classic(ctx), seed)
+                    }),
+                ));
+                strategies.push((
+                    "joint GA + sampling",
+                    Box::new(|seed| {
+                        let p = ctx.problem(&space, &set, mem, *objective);
+                        common::run_ga(&p, common::classic_sampled(ctx), seed)
+                    }),
+                ));
+            }
+            strategies.push((
+                "joint 4-phase GA (proposed)",
+                Box::new(|seed| {
+                    let p = ctx.problem(&space, &set, mem, *objective);
+                    common::run_ga(&p, common::four_phase(ctx), seed)
+                }),
+            ));
+
+            let mut t = Table::new(
+                &format!(
+                    "panel {panel} — seed-mean scores normalized to separate search (=1.0)"
+                ),
+                &["strategy", "resnet18", "vgg16", "alexnet", "mobilenetv3", "top5 spread"],
+            );
+            t.row(vec![
+                "separate (baseline)".into(),
+                "1.000".into(),
+                "1.000".into(),
+                "1.000".into(),
+                "1.000".into(),
+                "-".into(),
+            ]);
+            let mut geo_means: Vec<(String, f64)> = Vec::new();
+            for (si, (name, run)) in strategies.iter().enumerate() {
+                let mut acc = vec![0.0; set.len()];
+                let mut sp = 0.0;
+                for &seed in &seeds {
+                    // salt by strategy: the VGG-restricted and joint-Max
+                    // landscapes coincide wherever the largest workload
+                    // dominates, so identical RNG streams would yield
+                    // artificially identical rows
+                    let r = run(seed.wrapping_mul(31).wrapping_add(si as u64 * 1009));
+                    for (a, n) in acc.iter_mut().zip(normalized(&r)) {
+                        *a += n / seeds.len() as f64;
+                    }
+                    sp += spread(&r) / seeds.len() as f64;
+                }
+                t.row(vec![
+                    name.to_string(),
+                    format!("{:.3}", acc[0]),
+                    format!("{:.3}", acc[1]),
+                    format!("{:.3}", acc[2]),
+                    format!("{:.3}", acc[3]),
+                    format!("{:.3}", sp),
+                ]);
+                geo_means.push((
+                    name.to_string(),
+                    crate::util::stats::geo_mean(
+                        &acc.iter()
+                            .copied()
+                            .filter(|x| x.is_finite() && *x > 0.0)
+                            .collect::<Vec<_>>(),
+                    ),
+                ));
+            }
+            report.table(t);
+            let gm_of = |name: &str| {
+                geo_means
+                    .iter()
+                    .find(|(n, _)| n.contains(name))
+                    .map(|(_, g)| *g)
+                    .unwrap_or(f64::NAN)
+            };
+            report.note(format!(
+                "{panel}: geo-mean gap to workload-specific (seed-mean) — \
+                 largest-only {:.3}, proposed {:.3} (closer to 1.0 is better)",
+                gm_of("largest"),
+                gm_of("proposed")
+            ));
+        }
+    }
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_quick_shapes() {
+        let ctx = ExpContext::quick(17);
+        let r = run(&ctx).unwrap();
+        // 2 memories x 4 objectives
+        assert_eq!(r.tables.len(), 8);
+        // EDAP panels carry 5 strategies, others 3
+        assert_eq!(r.tables[0].rows.len(), 5);
+        assert_eq!(r.tables[1].rows.len(), 3);
+        // baseline row is exactly 1.0
+        assert_eq!(r.tables[0].rows[0][1], "1.000");
+    }
+}

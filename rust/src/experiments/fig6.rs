@@ -1,0 +1,105 @@
+//! Fig. 6 (§IV-F): design insights — the optimized hardware parameters and
+//! resulting EDAP/energy/latency for RRAM vs SRAM across objective
+//! functions (EDAP, energy, latency, area). Energy/latency are reported
+//! for the largest workload (VGG16), as in the paper.
+//!
+//! Paper shape: RRAM converges to max rows (512) with fewer columns except
+//! under area-only optimization; SRAM prefers fewer rows / more columns;
+//! SRAM shows lower energy but higher latency (swapping); RRAM wins EDAP.
+
+use super::common;
+use crate::coordinator::ExpContext;
+use crate::model::MemoryTech;
+use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::report::Report;
+use crate::space::idx;
+use crate::util::table::Table;
+use crate::workloads::WorkloadSet;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<Report> {
+    let set = WorkloadSet::cnn4();
+    let vgg_index = 1usize;
+    let mut report = Report::new(
+        "fig6",
+        "Optimized RRAM vs SRAM design parameters across objectives (VGG16 E/L shown)",
+    );
+
+    let objectives = [
+        ObjectiveKind::Edap,
+        ObjectiveKind::Energy,
+        ObjectiveKind::Latency,
+        ObjectiveKind::Area,
+    ];
+
+    let mut rram_edap = f64::INFINITY;
+    let mut sram_edap = f64::INFINITY;
+
+    for (mem, space) in [
+        (MemoryTech::Rram, crate::space::SearchSpace::rram()),
+        (MemoryTech::Sram, crate::space::SearchSpace::sram()),
+    ] {
+        let mut t = Table::new(
+            &format!("{} — optimized parameters per objective", mem.name()),
+            &[
+                "objective", "rows", "cols", "macros/tile", "tiles/rt", "groups",
+                "bits", "V", "tcyc ns", "GLB KB", "E_vgg mJ", "L_vgg ms", "area mm2",
+                "EDAP_vgg",
+            ],
+        );
+        for kind in objectives {
+            let objective = Objective::new(kind, Aggregation::Max);
+            let p = ctx.problem(&space, &set, mem, objective);
+            let r = common::run_ga(&p, common::four_phase(ctx), ctx.seed);
+            let raw = space.decode(&r.best);
+            let ms = p.metrics_all_workloads(&r.best);
+            let vg = &ms[vgg_index];
+            let edap = vg.edap();
+            if kind == ObjectiveKind::Edap {
+                match mem {
+                    MemoryTech::Rram => rram_edap = edap,
+                    MemoryTech::Sram => sram_edap = edap,
+                }
+            }
+            t.row(vec![
+                objective.kind.name().into(),
+                format!("{}", raw[idx::ROWS]),
+                format!("{}", raw[idx::COLS]),
+                format!("{}", raw[idx::C_PER_TILE]),
+                format!("{}", raw[idx::T_PER_ROUTER]),
+                format!("{}", raw[idx::G_PER_CHIP]),
+                format!("{}", raw[idx::BITS_CELL]),
+                format!("{:.2}", raw[idx::V_STEP]),
+                format!("{}", raw[idx::T_CYCLE_NS]),
+                format!("{}", raw[idx::GLB_KB]),
+                common::s(vg.energy * 1e3),
+                common::s(vg.latency * 1e3),
+                common::s(vg.area),
+                common::s(edap),
+            ]);
+        }
+        report.table(t);
+    }
+    report.note(format!(
+        "EDAP-optimized VGG16 EDAP: RRAM {} vs SRAM {} (paper: RRAM consistently lower)",
+        common::s(rram_edap),
+        common::s(sram_edap)
+    ));
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_quick_has_four_objectives_per_mem() {
+        let ctx = ExpContext::quick(23);
+        let r = run(&ctx).unwrap();
+        assert_eq!(r.tables.len(), 2);
+        for t in &r.tables {
+            assert_eq!(t.rows.len(), 4);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Fig. 9 + Table 7 (§IV-I): hardware-workload-technology co-optimization
+//! — EDAP vs fabrication cost trade-off on SRAM hardware with the CMOS
+//! node as a search variable and objective `max(E)·max(L)·Cost`,
+//! `Cost = α·A`.
+//!
+//! Paper shape: feasible designs cluster by node; 65/90 nm violate the
+//! area constraint; the Pareto front is populated by 7–14 nm designs with
+//! the best trade-offs (knee) around 10 nm; 7 nm occupies the low-EDAP /
+//! high-cost end.
+
+use super::common;
+use crate::coordinator::ExpContext;
+use crate::model::{tech, MemoryTech};
+use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::report::Report;
+use crate::search::Problem;
+use crate::space::idx;
+use crate::util::{stats, table::Table};
+use crate::workloads::WorkloadSet;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<Report> {
+    let set = WorkloadSet::cnn4();
+    let space = crate::space::SearchSpace::sram_tech();
+    let objective = Objective::new(ObjectiveKind::EdapCost, Aggregation::Max);
+    let edap = Objective::edap();
+    let mut report = Report::new(
+        "fig9",
+        "EDAP vs fabrication cost across CMOS nodes (SRAM, tech co-optimization)",
+    );
+
+    // joint cost-aware search; its evaluation cache doubles as the cloud
+    // of explored designs
+    let problem = ctx.problem(&space, &set, MemoryTech::Sram, objective);
+    let r = common::run_ga(&problem, common::four_phase(ctx), ctx.seed);
+
+    // additional random sweep so every node is represented in the cloud
+    let n_sweep = if ctx.quick { 200 } else { 3000 };
+    let mut rng = crate::util::rng::Rng::seed_from(ctx.seed ^ 0x9e37);
+    let sweep: Vec<crate::space::Design> =
+        (0..n_sweep).map(|_| space.random(&mut rng)).collect();
+    problem.score_batch(&sweep);
+
+    // collect feasible (cost, edap) points from everything evaluated
+    let mut points: Vec<(f64, f64, f64, crate::space::Design)> = Vec::new(); // cost, edap, tech
+    let mut seen = std::collections::HashSet::new();
+    let mut consider = |d: &crate::space::Design| {
+        if !seen.insert(space.linear_index(d)) {
+            return;
+        }
+        let ev = problem.evaluate_design(d);
+        if !ev.score.is_finite() {
+            return;
+        }
+        let raw = space.decode(d);
+        let area = ev.metrics[0].area;
+        let cost = tech::fabrication_cost(raw[idx::TECH_NM], area);
+        let e = stats::max(&ev.metrics.iter().map(|m| m.energy * 1e3).collect::<Vec<_>>());
+        let l = stats::max(&ev.metrics.iter().map(|m| m.latency * 1e3).collect::<Vec<_>>());
+        points.push((cost, e * l * area, raw[idx::TECH_NM], d.clone()));
+    };
+    for d in &sweep {
+        consider(d);
+    }
+    for (d, _) in &r.top {
+        consider(d);
+    }
+    let _ = edap;
+
+    // per-node statistics
+    let mut t = Table::new(
+        "Feasible designs per CMOS node (explored cloud)",
+        &["node nm", "feasible points", "min EDAP", "min cost", "on Pareto front"],
+    );
+    let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.0, p.1)).collect();
+    let front = stats::pareto_front_2d(&xy);
+    let front_set: std::collections::HashSet<usize> = front.iter().copied().collect();
+    for node in tech::TECH_TABLE.iter() {
+        let node_pts: Vec<usize> = (0..points.len())
+            .filter(|&i| (points[i].2 - node.nm).abs() < 0.5)
+            .collect();
+        let on_front = node_pts.iter().filter(|i| front_set.contains(i)).count();
+        let min_edap = node_pts
+            .iter()
+            .map(|&i| points[i].1)
+            .fold(f64::INFINITY, f64::min);
+        let min_cost = node_pts
+            .iter()
+            .map(|&i| points[i].0)
+            .fold(f64::INFINITY, f64::min);
+        t.row(vec![
+            format!("{}", node.nm),
+            node_pts.len().to_string(),
+            common::s(min_edap),
+            common::s(min_cost),
+            on_front.to_string(),
+        ]);
+    }
+    report.table(t);
+
+    // Pareto-front designs with parameters (the paper annotates these)
+    let mut pf = Table::new(
+        "Pareto front (cost ↑, EDAP ↓)",
+        &["cost (norm)", "EDAP", "node nm", "design"],
+    );
+    for &i in &front {
+        pf.row(vec![
+            common::s(points[i].0),
+            common::s(points[i].1),
+            format!("{}", points[i].2),
+            space.describe(&points[i].3),
+        ]);
+    }
+    report.table(pf);
+
+    let advanced_on_front = front
+        .iter()
+        .filter(|&&i| points[i].2 <= 14.0)
+        .count();
+    report.note(format!(
+        "{}/{} Pareto points use ≤14 nm nodes (paper: front dominated by 7–14 nm)",
+        advanced_on_front,
+        front.len()
+    ));
+    report.note(format!(
+        "cost-aware search best: {} (score {})",
+        space.describe(&r.best),
+        common::s(r.best_score)
+    ));
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_quick_builds_pareto_front() {
+        let ctx = ExpContext::quick(41);
+        let r = run(&ctx).unwrap();
+        assert_eq!(r.tables.len(), 2);
+        assert_eq!(r.tables[0].rows.len(), 8); // one per node
+        assert!(!r.tables[1].rows.is_empty(), "empty Pareto front");
+        // front is sorted by cost ascending and EDAP descending
+        let costs: Vec<f64> = r.tables[1]
+            .rows
+            .iter()
+            .map(|row| row[0].parse().unwrap())
+            .collect();
+        for w in costs.windows(2) {
+            assert!(w[0] <= w[1] + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! One module per paper table/figure (see DESIGN.md §4 for the index).
+
+pub mod ablations;
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod table3;
+pub mod table5;
+pub mod table6;
+
+use crate::coordinator::ExpContext;
+use crate::report::Report;
+use anyhow::Result;
+
+/// All experiment ids in paper order, plus the extra ablation suite.
+pub const ALL_IDS: [&str; 12] = [
+    "table3", "fig3", "fig4", "table5", "fig5", "table6", "fig6", "fig7", "fig8", "fig9",
+    "fig10", "ablations",
+];
+
+/// Dispatch one experiment by id.
+pub fn run(id: &str, ctx: &ExpContext) -> Result<Report> {
+    match id {
+        "table3" => table3::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "table5" => table5::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "table6" => table6::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "ablations" => ablations::run(ctx),
+        other => anyhow::bail!("unknown experiment '{other}' (try one of {ALL_IDS:?})"),
+    }
+}

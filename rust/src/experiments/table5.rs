@@ -1,0 +1,95 @@
+//! Table 5 (§IV-C): aggregation schemes — All (product), Max (Eq. 3) and
+//! Mean — compared on RRAM and SRAM joint searches: per-workload EDAP of
+//! the optimized designs plus total search time. Paper shape: comparable
+//! quality across schemes, with Max cheapest and usually best.
+
+use super::common;
+use crate::coordinator::ExpContext;
+use crate::model::MemoryTech;
+use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::report::Report;
+use crate::util::{fmt_duration, table::Table};
+use crate::workloads::WorkloadSet;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<Report> {
+    let set = WorkloadSet::cnn4();
+    let mut report = Report::new(
+        "table5",
+        "EDAP per optimized design and search time across aggregation strategies",
+    );
+    let edap = Objective::edap();
+
+    for (mem, space) in [
+        (MemoryTech::Rram, crate::space::SearchSpace::rram()),
+        (MemoryTech::Sram, crate::space::SearchSpace::sram()),
+    ] {
+        let mut t = Table::new(
+            &format!("{} — per-workload EDAP (mJ·ms·mm²) and search time", mem.name()),
+            &[
+                "aggregation",
+                "resnet18",
+                "vgg16",
+                "alexnet",
+                "mobilenetv3",
+                "search time",
+            ],
+        );
+        let mut times = Vec::new();
+        for agg in [Aggregation::All, Aggregation::Max, Aggregation::Mean] {
+            let objective = Objective::new(ObjectiveKind::Edap, agg);
+            let problem = ctx.problem(&space, &set, mem, objective);
+            let t0 = std::time::Instant::now();
+            let result = common::run_ga(&problem, common::four_phase(ctx), ctx.seed);
+            let wall = t0.elapsed();
+            times.push((agg.name(), wall));
+            // report actual per-workload EDAP of the chosen design
+            let scores = common::per_workload_scores(&problem, &result.best, &edap);
+            t.row(vec![
+                agg.name().into(),
+                common::s(scores[0]),
+                common::s(scores[1]),
+                common::s(scores[2]),
+                common::s(scores[3]),
+                fmt_duration(wall),
+            ]);
+        }
+        report.table(t);
+        let max_time = times
+            .iter()
+            .find(|(n, _)| *n == "Max")
+            .map(|(_, w)| *w)
+            .unwrap();
+        let others_min = times
+            .iter()
+            .filter(|(n, _)| *n != "Max")
+            .map(|(_, w)| *w)
+            .min()
+            .unwrap();
+        report.note(format!(
+            "{}: Max search time {} vs best other {} (paper: Max consistently cheapest)",
+            mem.name(),
+            fmt_duration(max_time),
+            fmt_duration(others_min)
+        ));
+    }
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_quick_has_three_aggregations_per_mem() {
+        let ctx = ExpContext::quick(13);
+        let r = run(&ctx).unwrap();
+        assert_eq!(r.tables.len(), 2);
+        for t in &r.tables {
+            assert_eq!(t.rows.len(), 3);
+            let names: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
+            assert_eq!(names, vec!["All", "Max", "Mean"]);
+        }
+    }
+}

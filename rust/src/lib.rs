@@ -1,0 +1,76 @@
+//! # imcopt — joint hardware-workload co-optimization for IMC accelerators
+//!
+//! Reproduction of Krestinskaya et al., *"Joint Hardware-Workload
+//! Co-Optimization for In-Memory Computing Accelerators"* (2026).
+//!
+//! The crate is the **L3 coordinator** of a three-layer Rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`space`] — the multi-level hardware search space (device / circuit /
+//!   architecture / system parameters) with index-coded designs.
+//! * [`workloads`] — per-layer shape models of the nine neural-network
+//!   workloads evaluated in the paper.
+//! * [`model`] — the analytical IMC hardware evaluator (energy / latency /
+//!   area for tiled RRAM- and SRAM-based crossbar architectures); the
+//!   CIMLoop substitute, mirrored 1:1 by the AOT-compiled JAX/Pallas
+//!   fitness artifact.
+//! * [`objective`] — joint scores across workloads (EDAP/EDP/E/L/A ×
+//!   {Max, All, Mean} aggregation, cost-aware, accuracy-aware).
+//! * [`search`] — the paper's four-phase genetic algorithm with
+//!   Hamming-distance sampling, plus the baseline optimizers of Table 3
+//!   (GA, PSO, ES, ERES, CMA-ES, G3PCX) and exhaustive enumeration.
+//! * [`accuracy`] — RRAM non-ideality model (conductance noise, IR-drop,
+//!   quantization) for the accuracy-aware objective of Fig. 8.
+//! * [`runtime`] — PJRT engine that loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`) and executes batched fitness evaluation on the
+//!   hot path; Python never runs at search time.
+//! * [`coordinator`] — the experiment runner: population evaluation with
+//!   memoization, thread-pool fan-out, progress reporting and experiment
+//!   configs.
+//! * [`experiments`] — one module per paper table/figure, regenerating the
+//!   published rows/series.
+//! * [`util`] — std-only infrastructure (RNG, thread pool, JSON, stats,
+//!   tables, CLI, property-testing and bench harnesses); the offline crate
+//!   registry has no tokio/rayon/clap/criterion/serde/rand.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use imcopt::prelude::*;
+//!
+//! // Search space + workloads of the paper's 4-workload experiments.
+//! let space = SearchSpace::rram();
+//! let workloads = WorkloadSet::cnn4();
+//! // Native analytical evaluator (the PJRT artifact path is in `runtime`).
+//! let eval = NativeEvaluator::new(MemoryTech::Rram);
+//! let problem = JointProblem::new(&space, &workloads, eval,
+//!                                 Objective::edap(), Aggregation::Max);
+//! let mut rng = Rng::seed_from(42);
+//! let result = FourPhaseGa::paper_defaults().run(&problem, &mut rng);
+//! println!("best joint EDAP score: {:.4e}", result.best_score);
+//! ```
+
+pub mod accuracy;
+pub mod coordinator;
+pub mod experiments;
+pub mod model;
+pub mod objective;
+pub mod report;
+pub mod runtime;
+pub mod search;
+pub mod space;
+pub mod util;
+pub mod workloads;
+
+/// Convenient re-exports of the most frequently used public items.
+pub mod prelude {
+    pub use crate::coordinator::{EvalBackend, Evaluations, JointProblem};
+    pub use crate::model::{Metrics, MemoryTech, NativeEvaluator};
+    pub use crate::objective::{Aggregation, Objective, ObjectiveKind};
+    pub use crate::search::{
+        FourPhaseGa, GaConfig, GeneticAlgorithm, OptResult, Optimizer, SearchBudget,
+    };
+    pub use crate::space::{Design, SearchSpace};
+    pub use crate::util::rng::Rng;
+    pub use crate::workloads::{Workload, WorkloadSet};
+}

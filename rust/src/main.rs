@@ -1,0 +1,276 @@
+//! `repro` — CLI for the joint hardware-workload co-optimization framework.
+//!
+//! ```text
+//! repro exp <id|all> [--seed N] [--quick] [--native|--pjrt] [--out DIR]
+//! repro search [--mem rram|sram] [--obj edap|edp|energy|latency|area|cost|acc]
+//!              [--agg max|all|mean] [--workloads a,b,c] [--seed N]
+//! repro eval --design R,C,M,T,G,B,Vstep,TC,GLB,TECH [--mem rram|sram]
+//! repro workloads            # list workload statistics
+//! repro space                # list search-space variants and sizes
+//! repro artifacts            # verify AOT artifacts load and agree with native
+//! ```
+
+use anyhow::{bail, Context, Result};
+use imcopt::coordinator::ExpContext;
+use imcopt::experiments;
+use imcopt::model::{MemoryTech, NativeEvaluator};
+use imcopt::objective::{Aggregation, Objective, ObjectiveKind};
+use imcopt::search::Optimizer;
+use imcopt::space::SearchSpace;
+use imcopt::util::cli::Args;
+use imcopt::util::table::Table;
+use imcopt::workloads::{WorkloadSet, ALL_NAMES};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "exp" => cmd_exp(args),
+        "search" => cmd_search(args),
+        "eval" => cmd_eval(args),
+        "workloads" => cmd_workloads(),
+        "space" => cmd_space(),
+        "artifacts" => cmd_artifacts(),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `repro help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — joint hardware-workload co-optimization for IMC accelerators\n\
+         \n\
+         commands:\n\
+         \x20 exp <id|all>   regenerate a paper table/figure ({ids})\n\
+         \x20 search         run one joint co-optimization\n\
+         \x20 eval           evaluate a single design\n\
+         \x20 workloads      list workload statistics\n\
+         \x20 space          list search-space variants\n\
+         \x20 artifacts      verify AOT artifacts vs the native evaluator\n\
+         \n\
+         common options: --seed N --quick --native --pjrt --out DIR",
+        ids = experiments::ALL_IDS.join(", ")
+    );
+}
+
+fn parse_mem(args: &Args) -> Result<MemoryTech> {
+    match args.opt_str("mem", "rram") {
+        "rram" => Ok(MemoryTech::Rram),
+        "sram" => Ok(MemoryTech::Sram),
+        other => bail!("unknown --mem '{other}' (rram|sram)"),
+    }
+}
+
+fn parse_objective(args: &Args) -> Result<Objective> {
+    let kind = match args.opt_str("obj", "edap") {
+        "edap" => ObjectiveKind::Edap,
+        "edp" => ObjectiveKind::Edp,
+        "energy" => ObjectiveKind::Energy,
+        "latency" => ObjectiveKind::Latency,
+        "area" => ObjectiveKind::Area,
+        "cost" => ObjectiveKind::EdapCost,
+        "acc" => ObjectiveKind::EdapAccuracy,
+        other => bail!("unknown --obj '{other}'"),
+    };
+    let agg = match args.opt_str("agg", "max") {
+        "max" => Aggregation::Max,
+        "all" => Aggregation::All,
+        "mean" => Aggregation::Mean,
+        other => bail!("unknown --agg '{other}'"),
+    };
+    Ok(Objective::new(kind, agg))
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let ctx = ExpContext::from_args(args);
+    if id == "all" {
+        for id in experiments::ALL_IDS {
+            println!("\n================ {id} ================");
+            experiments::run(id, &ctx)?;
+        }
+        Ok(())
+    } else {
+        experiments::run(id, &ctx).map(|_| ())
+    }
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let ctx = ExpContext::from_args(args);
+    let mem = parse_mem(args)?;
+    let objective = parse_objective(args)?;
+    let set = match args.opt("workloads") {
+        Some(csv) => {
+            let names: Vec<&str> = csv.split(',').collect();
+            WorkloadSet::by_names(&names)?
+        }
+        None => WorkloadSet::cnn4(),
+    };
+    let space = match (mem, args.flag("tech")) {
+        (MemoryTech::Rram, _) => SearchSpace::rram(),
+        (MemoryTech::Sram, false) => SearchSpace::sram(),
+        (MemoryTech::Sram, true) => SearchSpace::sram_tech(),
+    };
+    println!(
+        "joint search: {} on {} ({} workloads: {:?}, space {} = {:.2e} points, backend {})",
+        objective.name(),
+        mem.name(),
+        set.len(),
+        set.names(),
+        space.variant,
+        space.size() as f64,
+        if ctx.engine().is_some() { "pjrt" } else { "native" },
+    );
+    let problem = ctx.problem(&space, &set, mem, objective);
+    let cfg = imcopt::experiments::common::four_phase(&ctx);
+    let t0 = std::time::Instant::now();
+    let r = imcopt::search::GeneticAlgorithm::new(cfg)
+        .run(&problem, &mut imcopt::util::rng::Rng::seed_from(ctx.seed));
+    println!(
+        "best score {:.6} after {} evals in {} ({} distinct designs cached)",
+        r.best_score,
+        r.evals,
+        imcopt::util::fmt_duration(t0.elapsed()),
+        problem.cache_len(),
+    );
+    println!("best design: {}", space.describe(&r.best));
+    let ev = problem.evaluate_design(&r.best);
+    let mut t = Table::new(
+        "per-workload metrics of the best design",
+        &["workload", "energy mJ", "latency ms", "EDAP"],
+    );
+    for (w, m) in set.workloads.iter().zip(&ev.metrics) {
+        t.row(vec![
+            w.name.into(),
+            format!("{:.4}", m.energy * 1e3),
+            format!("{:.4}", m.latency * 1e3),
+            format!("{:.4}", m.edap()),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let mem = parse_mem(args)?;
+    let spec = args
+        .opt("design")
+        .context("--design R,C,M,T,G,B,V,TC,GLB,TECH required")?;
+    let vals: Vec<f64> = spec
+        .split(',')
+        .map(|x| x.parse::<f64>().map_err(|e| anyhow::anyhow!("{e}: '{x}'")))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(vals.len() == 10, "--design needs 10 comma-separated values");
+    let raw: [f64; 10] = vals.try_into().unwrap();
+    let ev = NativeEvaluator::new(mem);
+    let mut t = Table::new(
+        &format!("native evaluation on {} (raw design {spec})", mem.name()),
+        &["workload", "energy mJ", "latency ms", "area mm2", "feasible", "EDAP"],
+    );
+    for name in ALL_NAMES {
+        let w = imcopt::workloads::by_name(name)?;
+        let m = ev.evaluate(&raw, &w);
+        t.row(vec![
+            name.into(),
+            format!("{:.4}", m.energy * 1e3),
+            format!("{:.4}", m.latency * 1e3),
+            format!("{:.2}", m.area),
+            m.feasible.to_string(),
+            format!("{:.4}", m.edap()),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+fn cmd_workloads() -> Result<()> {
+    let mut t = Table::new(
+        "workload models (matmul view; 8-bit weights/activations)",
+        &["name", "mapped layers", "dynamic", "weights", "largest layer", "MACs"],
+    );
+    for name in ALL_NAMES {
+        let w = imcopt::workloads::by_name(name)?;
+        let dynamic = w.layers.iter().filter(|l| l.dynamic()).count();
+        t.row(vec![
+            name.into(),
+            w.mapped_layers().to_string(),
+            dynamic.to_string(),
+            format!("{:.3e}", w.total_weights() as f64),
+            format!("{:.3e}", w.max_layer_weights() as f64),
+            format!("{:.3e}", w.total_macs() as f64),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+fn cmd_space() -> Result<()> {
+    let mut t = Table::new(
+        "search-space variants",
+        &["variant", "size", "free params"],
+    );
+    for space in [
+        SearchSpace::rram(),
+        SearchSpace::sram(),
+        SearchSpace::sram_tech(),
+        SearchSpace::rram_reduced(),
+    ] {
+        t.row(vec![
+            space.variant.into(),
+            format!("{:.3e}", space.size() as f64),
+            space.free_params().len().to_string(),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let engine = imcopt::runtime::Engine::load_default()?;
+    println!(
+        "artifacts loaded: fitness batches {:?}, accproxy {}",
+        engine.fitness_batch_sizes(),
+        engine.has_accproxy()
+    );
+    // quick agreement check against the native evaluator
+    let space = SearchSpace::rram();
+    let mut rng = imcopt::util::rng::Rng::seed_from(7);
+    let raws: Vec<[f64; 10]> = (0..8)
+        .map(|_| space.decode(&space.random(&mut rng)))
+        .collect();
+    let w = imcopt::workloads::resnet18();
+    let native = NativeEvaluator::new(MemoryTech::Rram);
+    let pjrt = engine.fitness(&raws, &w, MemoryTech::Rram)?;
+    let mut worst: f64 = 0.0;
+    for (raw, pm) in raws.iter().zip(&pjrt) {
+        let nm = native.evaluate(raw, &w);
+        for (a, b) in [
+            (nm.energy, pm.energy),
+            (nm.latency, pm.latency),
+            (nm.area, pm.area),
+        ] {
+            worst = worst.max(((a - b) / a).abs());
+        }
+        anyhow::ensure!(
+            nm.feasible == pm.feasible,
+            "feasibility mismatch on {raw:?}"
+        );
+    }
+    println!("native↔pjrt agreement: worst relative deviation {worst:.2e} (8 designs, resnet18)");
+    anyhow::ensure!(worst < 5e-3, "deviation exceeds 0.5%");
+    println!("artifacts OK");
+    Ok(())
+}

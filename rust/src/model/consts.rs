@@ -1,0 +1,139 @@
+//! Hardware model constants, calibrated to ISAAC / NeuroSim ballparks at
+//! the 32 nm, 1.0 V reference point.
+//!
+//! **Single source of truth** shared with the AOT-compiled JAX evaluator:
+//! `python/compile/hwspec.py` mirrors every value below, and the
+//! cross-language consistency test (`rust/tests/integration_runtime.rs`)
+//! plus `python/tests/test_hwspec_sync.py` keep them in lock-step. If you
+//! change a number here, change it there.
+//!
+//! Scaling conventions (see DESIGN.md §3):
+//! * area ∝ (tech/32)²
+//! * dynamic energy ∝ (tech/32) · V²
+//! * min cycle time: alpha-power law `t_min = T_MIN0 · √(tech/32) ·
+//!   d(V)/d(1.0)` with `d(V) = V/(V−VTH)^ALPHA`
+//! * leakage power ∝ (32/tech)^0.5 · V · area
+
+/// Input activation bit width (bit-serial application).
+pub const IN_BITS: f64 = 8.0;
+/// Weight bit width (8-bit quantization throughout the paper).
+pub const W_BITS: f64 = 8.0;
+
+// ---- per-event energies (J) at 32 nm, 1.0 V -------------------------------
+
+/// RRAM cell activation energy per cell per input bit.
+pub const E_CELL_RRAM: f64 = 0.2e-15;
+/// SRAM compute-cell energy per cell per input bit.
+pub const E_CELL_SRAM: f64 = 0.05e-15;
+/// 8-bit SAR ADC conversion energy (RRAM macro).
+pub const E_ADC_RRAM: f64 = 2.0e-12;
+/// 8-bit ADC conversion energy (SRAM macro — smaller dynamic range).
+pub const E_ADC_SRAM: f64 = 1.0e-12;
+/// Row driver / 1-bit DAC energy per row per bit per column-group.
+pub const E_DRV: f64 = 0.05e-12;
+/// NoC energy per byte per hop.
+pub const E_NOC_BYTE: f64 = 1.0e-12;
+/// Global buffer access energy per byte.
+pub const E_GLB_BYTE: f64 = 0.5e-12;
+/// LPDDR4 DRAM access energy per byte (≈4 pJ/bit).
+pub const E_DRAM_BYTE: f64 = 32.0e-12;
+/// SRAM array write energy per byte (weight swapping).
+pub const E_SRAM_WRITE_BYTE: f64 = 0.5e-12;
+/// Digital vector-unit MAC energy (dynamic transformer matmuls).
+pub const E_DIG_MAC: f64 = 0.1e-12;
+
+// ---- bandwidth / throughput ------------------------------------------------
+
+/// LPDDR4 sustained bandwidth (bytes/s).
+pub const DRAM_BW: f64 = 25.6e9;
+/// Router payload bytes per cycle per router (32-bit flit).
+pub const NOC_BYTES_PER_CYCLE: f64 = 4.0;
+/// ADC conversions per array cycle (pipelined SAR).
+pub const ADC_CONV_PER_CYCLE: f64 = 4.0;
+/// Digital vector-unit MAC lanes per tile.
+pub const DIG_LANES: f64 = 128.0;
+/// Maximum useful weight-replication factor: input broadcast fan-out and
+/// the partial-sum reduction tree bound how far spare macros can
+/// parallelize one layer (ISAAC replicates early layers only a few times).
+/// Without this cap small workloads parallelize infinitely and the
+/// joint-vs-largest-workload trade-off of the paper degenerates.
+pub const REP_MAX: f64 = 8.0;
+
+// ---- areas (mm²) at 32 nm ---------------------------------------------------
+
+/// RRAM cell footprint in F² (1T1R).
+pub const CELL_F2_RRAM: f64 = 4.0;
+/// SRAM compute cell footprint in F² (8T-ish CIM bitcell).
+pub const CELL_F2_SRAM: f64 = 160.0;
+/// Crossbar array peripheral overhead multiplier (sense, mux, decode).
+pub const ARRAY_OVH: f64 = 1.3;
+/// One 8-bit SAR ADC.
+pub const ADC_AREA_MM2: f64 = 0.014;
+/// Row drivers / DACs per macro.
+pub const DRV_AREA_MM2: f64 = 0.004;
+/// Input/output buffer per macro.
+pub const MACRO_BUF_AREA_MM2: f64 = 0.004;
+/// Shared buffer + control per tile.
+pub const TILE_BUF_AREA_MM2: f64 = 0.05;
+/// One NoC router.
+pub const ROUTER_AREA_MM2: f64 = 0.15;
+/// Chip I/O, PLL, misc (fixed).
+pub const IO_AREA_MM2: f64 = 2.0;
+/// Global buffer SRAM density (mm² per MB) at 32 nm.
+pub const GLB_MM2_PER_MB: f64 = 1.6;
+
+// ---- leakage / timing -------------------------------------------------------
+
+/// Leakage power density at 32 nm, 1.0 V (W/mm²).
+pub const P_LEAK_W_PER_MM2: f64 = 1.0e-3;
+/// Threshold voltage for the alpha-power delay model (V).
+pub const VTH: f64 = 0.3;
+/// Alpha-power law exponent.
+pub const DELAY_ALPHA: f64 = 1.3;
+/// Minimum cycle time at 32 nm, 1.0 V (ns).
+pub const T_MIN0_NS: f64 = 1.0;
+
+// ---- constraints -------------------------------------------------------------
+
+/// Area constraint applied across all paper experiments (mm²).
+pub const AREA_CONSTR_MM2: f64 = 800.0;
+
+/// Alpha-power delay factor `d(V) = V/(V−VTH)^ALPHA`, normalized by the
+/// caller against `d(1.0)`.
+#[inline]
+pub fn delay_factor(v: f64) -> f64 {
+    v / (v - VTH).max(0.05).powf(DELAY_ALPHA)
+}
+
+/// Minimum feasible cycle time (ns) at voltage `v` and node `tech` (nm).
+#[inline]
+pub fn t_min_ns(v: f64, tech: f64) -> f64 {
+    T_MIN0_NS * (tech / 32.0).sqrt() * delay_factor(v) / delay_factor(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tmin_monotone_in_voltage() {
+        // lower voltage -> slower minimum cycle
+        assert!(t_min_ns(0.65, 32.0) > t_min_ns(1.0, 32.0));
+        // reference point is T_MIN0
+        assert!((t_min_ns(1.0, 32.0) - T_MIN0_NS).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tmin_scales_with_tech() {
+        assert!(t_min_ns(1.0, 90.0) > t_min_ns(1.0, 32.0));
+        assert!(t_min_ns(0.8, 7.0) < t_min_ns(0.8, 32.0));
+    }
+
+    #[test]
+    fn low_voltage_excludes_fastest_cycle() {
+        // At 32nm / 0.65V the 1 ns cycle must be infeasible but 2 ns fine —
+        // this is the V/f coupling the optimizer has to navigate.
+        let t = t_min_ns(0.65, 32.0);
+        assert!(t > 1.0 && t < 2.0, "t_min(0.65V,32nm) = {t}");
+    }
+}

@@ -1,0 +1,229 @@
+//! Joint objective functions across workloads (paper Eq. 3, §IV-C/H/I).
+//!
+//! A design is scored from its per-workload [`Metrics`] under an
+//! aggregation scheme and an objective kind, subject to the area
+//! constraint `A ≤ 800 mm²`; infeasible designs score `+∞`.
+//! Energies/latencies are first converted to the paper's mJ/ms units so
+//! reported scores carry the paper's mJ·ms·mm² EDAP scale.
+
+use crate::model::{tech, Metrics};
+use crate::util::stats;
+
+/// Which metric product the objective minimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    /// `agg(E) · agg(L) · A` — Eq. 3.
+    Edap,
+    /// `agg(E) · agg(L)`.
+    Edp,
+    /// `agg(E)`.
+    Energy,
+    /// `agg(L)`.
+    Latency,
+    /// `A` (area only).
+    Area,
+    /// `agg(E) · agg(L) · Cost`, `Cost = α(tech) · A` (§IV-I; area not
+    /// double-counted since cost ∝ area).
+    EdapCost,
+    /// `agg(E) · agg(L) · A / Π accᵢ` (§IV-H).
+    EdapAccuracy,
+}
+
+impl ObjectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObjectiveKind::Edap => "EDAP",
+            ObjectiveKind::Edp => "EDP",
+            ObjectiveKind::Energy => "Energy",
+            ObjectiveKind::Latency => "Latency",
+            ObjectiveKind::Area => "Area",
+            ObjectiveKind::EdapCost => "EDAP-Cost",
+            ObjectiveKind::EdapAccuracy => "EDAP/Acc",
+        }
+    }
+}
+
+/// Cross-workload aggregation scheme (§IV-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregation {
+    /// `max` over workloads (Eq. 3 default).
+    Max,
+    /// Product over all workloads ("All": `E_w-all = Π E_wi`).
+    All,
+    /// Arithmetic mean (used in the 9-workload experiment, §IV-J).
+    Mean,
+}
+
+impl Aggregation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Aggregation::Max => "Max",
+            Aggregation::All => "All",
+            Aggregation::Mean => "Mean",
+        }
+    }
+
+    fn apply(&self, xs: &[f64]) -> f64 {
+        match self {
+            Aggregation::Max => stats::max(xs),
+            Aggregation::All => xs.iter().product(),
+            Aggregation::Mean => stats::mean(xs),
+        }
+    }
+}
+
+/// A complete scoring configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Objective {
+    pub kind: ObjectiveKind,
+    pub agg: Aggregation,
+    /// Area constraint (mm²), `A_constr` in the paper.
+    pub area_constraint: f64,
+}
+
+impl Objective {
+    pub fn new(kind: ObjectiveKind, agg: Aggregation) -> Objective {
+        Objective {
+            kind,
+            agg,
+            area_constraint: crate::model::consts::AREA_CONSTR_MM2,
+        }
+    }
+
+    /// Eq. 3 default: `max(E)·max(L)·A`.
+    pub fn edap() -> Objective {
+        Objective::new(ObjectiveKind::Edap, Aggregation::Max)
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}/{}", self.kind.name(), self.agg.name())
+    }
+
+    /// Score a design from its per-workload metrics. `accuracies` is only
+    /// consulted by [`ObjectiveKind::EdapAccuracy`]; `tech_nm` only by
+    /// [`ObjectiveKind::EdapCost`]. Lower is better; infeasible → `+∞`.
+    pub fn score(
+        &self,
+        per_workload: &[Metrics],
+        accuracies: Option<&[f64]>,
+        tech_nm: f64,
+    ) -> f64 {
+        assert!(!per_workload.is_empty());
+        if per_workload.iter().any(|m| !m.feasible) {
+            return f64::INFINITY;
+        }
+        let area = per_workload[0].area;
+        if area > self.area_constraint {
+            return f64::INFINITY;
+        }
+        // paper units: mJ / ms
+        let e: Vec<f64> = per_workload.iter().map(|m| m.energy * 1e3).collect();
+        let l: Vec<f64> = per_workload.iter().map(|m| m.latency * 1e3).collect();
+        let ae = self.agg.apply(&e);
+        let al = self.agg.apply(&l);
+        match self.kind {
+            ObjectiveKind::Edap => ae * al * area,
+            ObjectiveKind::Edp => ae * al,
+            ObjectiveKind::Energy => ae,
+            ObjectiveKind::Latency => al,
+            ObjectiveKind::Area => area,
+            ObjectiveKind::EdapCost => ae * al * tech::fabrication_cost(tech_nm, area),
+            ObjectiveKind::EdapAccuracy => {
+                let accs = accuracies.expect("EdapAccuracy requires accuracies");
+                assert_eq!(accs.len(), per_workload.len());
+                let prod: f64 = accs.iter().product();
+                ae * al * area / prod.max(1e-6)
+            }
+        }
+    }
+
+    /// Per-workload score of a single workload on a (jointly chosen)
+    /// design — the quantity plotted in Fig. 5 (`E_wi · L_wi · A` etc.).
+    pub fn single_workload_score(&self, m: &Metrics, tech_nm: f64) -> f64 {
+        self.score(std::slice::from_ref(m), Some(&[1.0]), tech_nm)
+    }
+
+    /// The four objective settings of Fig. 5 / Fig. 6 panels.
+    pub fn figure5_set() -> Vec<Objective> {
+        vec![
+            Objective::new(ObjectiveKind::Edap, Aggregation::Max),
+            Objective::new(ObjectiveKind::Edp, Aggregation::Max),
+            Objective::new(ObjectiveKind::Energy, Aggregation::Max),
+            Objective::new(ObjectiveKind::Latency, Aggregation::Max),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(e_mj: f64, l_ms: f64, a: f64) -> Metrics {
+        Metrics {
+            energy: e_mj * 1e-3,
+            latency: l_ms * 1e-3,
+            area: a,
+            feasible: true,
+        }
+    }
+
+    #[test]
+    fn edap_max_matches_eq3() {
+        let obj = Objective::edap();
+        let ms = [m(1.0, 2.0, 50.0), m(3.0, 1.0, 50.0)];
+        // max(E)=3, max(L)=2, A=50 -> 300
+        assert!((obj.score(&ms, None, 32.0) - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_aggregation_is_product() {
+        let obj = Objective::new(ObjectiveKind::Edp, Aggregation::All);
+        let ms = [m(2.0, 3.0, 10.0), m(4.0, 5.0, 10.0)];
+        // (2*4) * (3*5) = 120
+        assert!((obj.score(&ms, None, 32.0) - 120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_aggregation() {
+        let obj = Objective::new(ObjectiveKind::Energy, Aggregation::Mean);
+        let ms = [m(2.0, 1.0, 10.0), m(4.0, 1.0, 10.0)];
+        assert!((obj.score(&ms, None, 32.0) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_scores_infinity() {
+        let obj = Objective::edap();
+        let mut bad = m(1.0, 1.0, 10.0);
+        bad.feasible = false;
+        assert!(obj.score(&[bad], None, 32.0).is_infinite());
+        // area constraint violation
+        let big = m(1.0, 1.0, 900.0);
+        assert!(obj.score(&[big], None, 32.0).is_infinite());
+    }
+
+    #[test]
+    fn cost_objective_uses_alpha() {
+        let obj = Objective::new(ObjectiveKind::EdapCost, Aggregation::Max);
+        let ms = [m(1.0, 1.0, 100.0)];
+        let at32 = obj.score(&ms, None, 32.0);
+        let at7 = obj.score(&ms, None, 7.0);
+        assert!((at32 - 100.0).abs() < 1e-9);
+        assert!((at7 / at32 - 3.871).abs() < 1e-6); // α(7nm)
+    }
+
+    #[test]
+    fn accuracy_objective_divides() {
+        let obj = Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max);
+        let ms = [m(1.0, 1.0, 10.0), m(1.0, 1.0, 10.0)];
+        let hi = obj.score(&ms, Some(&[0.9, 0.9]), 32.0);
+        let lo = obj.score(&ms, Some(&[0.5, 0.5]), 32.0);
+        assert!(lo > hi); // lower accuracy -> worse (higher) score
+    }
+
+    #[test]
+    fn single_workload_score_matches_joint_of_one() {
+        let obj = Objective::edap();
+        let x = m(2.0, 3.0, 10.0);
+        assert_eq!(obj.single_workload_score(&x, 32.0), 60.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Experiment report assembly: collects tables + notes, prints to the
+//! terminal and persists markdown/CSV under `results/`.
+
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::Path;
+
+/// One experiment's full output.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub tables: Vec<Table>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            ..Report::default()
+        }
+    }
+
+    pub fn table(&mut self, t: Table) -> &mut Self {
+        self.tables.push(t);
+        self
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) -> &mut Self {
+        self.notes.push(n.into());
+        self
+    }
+
+    /// Render the full report as terminal text.
+    pub fn to_text(&self) -> String {
+        let mut out = format!("# {} — {}\n\n", self.id, self.title);
+        for t in &self.tables {
+            out.push_str(&t.to_text());
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// Render as markdown (persisted to `results/<id>.md`).
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("# {} — {}\n\n", self.id, self.title);
+        for t in &self.tables {
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+        if !self.notes.is_empty() {
+            out.push_str("## Notes\n\n");
+            for n in &self.notes {
+                out.push_str(&format!("- {n}\n"));
+            }
+        }
+        out
+    }
+
+    /// Print to stdout and persist `<out_dir>/<id>.md` (+ one CSV per
+    /// table).
+    pub fn emit(&self, out_dir: &Path) -> Result<()> {
+        print!("{}", self.to_text());
+        std::fs::create_dir_all(out_dir)?;
+        std::fs::write(out_dir.join(format!("{}.md", self.id)), self.to_markdown())?;
+        for (i, t) in self.tables.iter().enumerate() {
+            let name = if self.tables.len() == 1 {
+                format!("{}.csv", self.id)
+            } else {
+                format!("{}_{}.csv", self.id, i)
+            };
+            std::fs::write(out_dir.join(name), t.to_csv())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_writes_files() {
+        let dir = std::env::temp_dir().join("imcopt-report-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = Report::new("t0", "demo");
+        let mut t = Table::new("tbl", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        r.table(t);
+        r.note("hello");
+        r.emit(&dir).unwrap();
+        assert!(dir.join("t0.md").exists());
+        assert!(dir.join("t0.csv").exists());
+        let md = std::fs::read_to_string(dir.join("t0.md")).unwrap();
+        assert!(md.contains("demo") && md.contains("hello"));
+    }
+
+    #[test]
+    fn multiple_tables_get_indexed_csvs() {
+        let dir = std::env::temp_dir().join("imcopt-report-test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = Report::new("t1", "demo2");
+        for _ in 0..2 {
+            let mut t = Table::new("x", &["c"]);
+            t.row(vec!["v".into()]);
+            r.table(t);
+        }
+        r.emit(&dir).unwrap();
+        assert!(dir.join("t1_0.csv").exists());
+        assert!(dir.join("t1_1.csv").exists());
+    }
+}

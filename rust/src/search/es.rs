@@ -1,0 +1,229 @@
+//! (μ+λ) evolution strategy, with an optional stochastic-ranking variant
+//! (ERES, Runarsson & Yao 2000) — Table 3 baselines.
+//!
+//! Search happens in continuous index space with per-parameter Gaussian
+//! mutation and self-adaptive global step size; candidates snap onto the
+//! discrete grid for evaluation. ERES differs only in survivor selection:
+//! stochastic ranking bubble-sorts by objective with probability `p_f` and
+//! by constraint violation otherwise, which lets slightly-infeasible
+//! designs survive while the population approaches a constrained optimum.
+
+use super::{BestTracker, OptResult, Optimizer, Problem, SearchBudget};
+use crate::space::Design;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EsVariant {
+    /// Plain (μ+λ) ES: infeasible candidates rank last (score = +∞).
+    Plain,
+    /// Stochastic-ranking ES.
+    StochasticRanking,
+}
+
+pub struct EvolutionStrategy {
+    pub budget: SearchBudget,
+    pub variant: EsVariant,
+    /// Parent count μ (λ = budget.pop).
+    pub mu: usize,
+    /// Stochastic ranking objective-comparison probability.
+    pub pf: f64,
+}
+
+impl EvolutionStrategy {
+    pub fn plain(budget: SearchBudget) -> Self {
+        EvolutionStrategy {
+            budget,
+            variant: EsVariant::Plain,
+            mu: (budget.pop / 4).max(2),
+            pf: 0.45,
+        }
+    }
+    pub fn eres(budget: SearchBudget) -> Self {
+        EvolutionStrategy {
+            variant: EsVariant::StochasticRanking,
+            ..EvolutionStrategy::plain(budget)
+        }
+    }
+}
+
+struct Individual {
+    x: Vec<f64>,
+    sigma: f64,
+    score: f64,
+    violation: f64,
+}
+
+impl Optimizer for EvolutionStrategy {
+    fn name(&self) -> String {
+        match self.variant {
+            EsVariant::Plain => "ES".into(),
+            EsVariant::StochasticRanking => "ERES".into(),
+        }
+    }
+
+    fn run(&self, problem: &dyn Problem, rng: &mut Rng) -> OptResult {
+        let t0 = Instant::now();
+        let space = problem.space();
+        let n = space.params.len();
+        let lambda = self.budget.pop;
+        let tau = 1.0 / (2.0 * n as f64).sqrt();
+        let mut tracker = BestTracker::default();
+        let mut evals = 0usize;
+
+        let eval =
+            |xs: &[Vec<f64>], problem: &dyn Problem| -> (Vec<Design>, Vec<f64>) {
+                let ds: Vec<Design> = xs.iter().map(|x| space.clamp_round(x)).collect();
+                let ss = problem.score_batch(&ds);
+                (ds, ss)
+            };
+
+        // initial parents
+        let init_x: Vec<Vec<f64>> = (0..self.mu)
+            .map(|_| {
+                problem
+                    .random_candidate(rng)
+                    .0
+                    .iter()
+                    .map(|&v| v as f64)
+                    .collect()
+            })
+            .collect();
+        let (ds, ss) = eval(&init_x, problem);
+        evals += ds.len();
+        tracker.observe(&ds, &ss);
+        tracker.end_generation();
+        let mut parents: Vec<Individual> = init_x
+            .into_iter()
+            .zip(ds.iter().zip(&ss))
+            .map(|(x, (d, &s))| Individual {
+                violation: if s.is_finite() { 0.0 } else { problem.violation(d) },
+                x,
+                sigma: 1.0,
+                score: s,
+            })
+            .collect();
+
+        for _gen in 1..self.budget.gens {
+            // offspring
+            let mut off_x: Vec<Vec<f64>> = Vec::with_capacity(lambda);
+            let mut off_sigma: Vec<f64> = Vec::with_capacity(lambda);
+            for _ in 0..lambda {
+                let p = &parents[rng.below(parents.len())];
+                let sigma = (p.sigma * (tau * rng.normal()).exp()).clamp(0.05, 4.0);
+                let x: Vec<f64> = p
+                    .x
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &xi)| {
+                        let hi = space.params[i].cardinality() as f64 - 1.0;
+                        (xi + sigma * rng.normal()).clamp(0.0, hi)
+                    })
+                    .collect();
+                off_x.push(x);
+                off_sigma.push(sigma);
+            }
+            let (ds, ss) = eval(&off_x, problem);
+            evals += ds.len();
+            tracker.observe(&ds, &ss);
+            tracker.end_generation();
+
+            let mut pool: Vec<Individual> = parents
+                .into_iter()
+                .chain(off_x.into_iter().zip(off_sigma).zip(ds.iter().zip(&ss)).map(
+                    |((x, sigma), (d, &s))| Individual {
+                        violation: if s.is_finite() { 0.0 } else { problem.violation(d) },
+                        x,
+                        sigma,
+                        score: s,
+                    },
+                ))
+                .collect();
+
+            match self.variant {
+                EsVariant::Plain => {
+                    pool.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap());
+                }
+                EsVariant::StochasticRanking => {
+                    stochastic_rank(&mut pool, self.pf, rng);
+                }
+            }
+            pool.truncate(self.mu);
+            parents = pool;
+        }
+        tracker.into_result(self.name(), evals, t0.elapsed())
+    }
+}
+
+/// Runarsson & Yao's stochastic-ranking bubble sort: N sweeps, comparing
+/// adjacent pairs by objective with probability `pf` when either violates,
+/// and by violation otherwise.
+fn stochastic_rank(pool: &mut [Individual], pf: f64, rng: &mut Rng) {
+    let n = pool.len();
+    for _ in 0..n {
+        let mut swapped = false;
+        for i in 0..n - 1 {
+            let (a, b) = (&pool[i], &pool[i + 1]);
+            let both_feasible = a.violation == 0.0 && b.violation == 0.0;
+            let by_objective = both_feasible || rng.chance(pf);
+            let should_swap = if by_objective {
+                cmp_score(a.score, b.score)
+            } else {
+                a.violation > b.violation
+            };
+            if should_swap {
+                pool.swap(i, i + 1);
+                swapped = true;
+            }
+        }
+        if !swapped {
+            break;
+        }
+    }
+}
+
+/// Treat +∞ as worst; NaN never occurs.
+fn cmp_score(a: f64, b: f64) -> bool {
+    a > b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::testutil::Sphere;
+    use crate::space::SearchSpace;
+
+    #[test]
+    fn es_converges_on_reduced_space() {
+        let p = Sphere::centered(SearchSpace::rram_reduced());
+        let es = EvolutionStrategy::plain(SearchBudget { pop: 20, gens: 20 });
+        let r = es.run(&p, &mut Rng::seed_from(3));
+        assert!(r.best_score < 4.0, "{}", r.best_score);
+    }
+
+    #[test]
+    fn eres_handles_infeasible_band() {
+        let mut p = Sphere::centered(SearchSpace::rram_reduced());
+        p.infeasible_band = Some((0, 2)); // rows index 2 infeasible
+        let es = EvolutionStrategy::eres(SearchBudget { pop: 20, gens: 20 });
+        let r = es.run(&p, &mut Rng::seed_from(4));
+        assert!(r.best_score.is_finite());
+        assert_ne!(r.best.0[0], 2, "best design sits in the infeasible band");
+    }
+
+    #[test]
+    fn stochastic_rank_feasible_first_at_pf0() {
+        let mk = |score: f64, v: f64| Individual {
+            x: vec![],
+            sigma: 1.0,
+            score,
+            violation: v,
+        };
+        let mut pool = vec![mk(5.0, 1.0), mk(9.0, 0.0), mk(1.0, 2.0)];
+        let mut rng = Rng::seed_from(5);
+        stochastic_rank(&mut pool, 0.0, &mut rng);
+        // with pf=0, violation dominates: feasible (9.0) first
+        assert_eq!(pool[0].violation, 0.0);
+        assert!(pool[2].violation >= pool[1].violation);
+    }
+}

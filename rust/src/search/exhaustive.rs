@@ -1,0 +1,130 @@
+//! Exhaustive enumeration — ground truth for the reduced-space algorithm
+//! comparison (paper §III-C1, Table 3). Only usable on spaces small enough
+//! to enumerate; provides the global minimum that the stochastic
+//! algorithms are judged against.
+
+use super::{OptResult, Optimizer, Problem};
+use crate::space::Design;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+pub struct Exhaustive {
+    /// Evaluate in chunks of this many designs (batches through PJRT).
+    pub chunk: usize,
+}
+
+impl Default for Exhaustive {
+    fn default() -> Self {
+        Exhaustive { chunk: 256 }
+    }
+}
+
+impl Exhaustive {
+    /// Enumerate and score the whole space, returning every (design,
+    /// score) pair — used by Table 3 to find local/global minima and by
+    /// Fig. 9 to draw the complete EDAP-cost cloud on small spaces.
+    pub fn score_all(&self, problem: &dyn Problem) -> Vec<(Design, f64)> {
+        let all = problem.space().enumerate();
+        let mut out = Vec::with_capacity(all.len());
+        for chunk in all.chunks(self.chunk) {
+            let scores = problem.score_batch(chunk);
+            out.extend(chunk.iter().cloned().zip(scores));
+        }
+        out
+    }
+
+    /// The set of *local minima* under single-parameter moves: designs no
+    /// 1-Hamming neighbor improves on. Includes the global minimum.
+    pub fn local_minima(
+        &self,
+        problem: &dyn Problem,
+        scored: &[(Design, f64)],
+    ) -> Vec<usize> {
+        let space = problem.space();
+        // dense lookup by linear index
+        let mut score_by_idx = vec![f64::INFINITY; space.size() as usize];
+        for (d, s) in scored {
+            score_by_idx[space.linear_index(d) as usize] = *s;
+        }
+        let mut minima = Vec::new();
+        'outer: for (i, (d, s)) in scored.iter().enumerate() {
+            if !s.is_finite() {
+                continue;
+            }
+            for pi in space.free_params() {
+                for v in 0..space.params[pi].cardinality() as u16 {
+                    if v == d.0[pi] {
+                        continue;
+                    }
+                    let mut nd = d.clone();
+                    nd.0[pi] = v;
+                    if score_by_idx[space.linear_index(&nd) as usize] < *s {
+                        continue 'outer;
+                    }
+                }
+            }
+            minima.push(i);
+        }
+        minima
+    }
+}
+
+impl Optimizer for Exhaustive {
+    fn name(&self) -> String {
+        "Exhaustive".into()
+    }
+
+    fn run(&self, problem: &dyn Problem, _rng: &mut Rng) -> OptResult {
+        let t0 = Instant::now();
+        let scored = self.score_all(problem);
+        let evals = scored.len();
+        let mut tracker = super::BestTracker::default();
+        for chunk in scored.chunks(4096) {
+            let (ds, ss): (Vec<Design>, Vec<f64>) = chunk.iter().cloned().unzip();
+            tracker.observe(&ds, &ss);
+        }
+        tracker.end_generation();
+        tracker.into_result(self.name(), evals, t0.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::testutil::Sphere;
+    use crate::space::SearchSpace;
+
+    #[test]
+    fn finds_exact_global_minimum() {
+        let p = Sphere::centered(SearchSpace::rram_reduced());
+        let ex = Exhaustive::default();
+        let r = ex.run(&p, &mut Rng::seed_from(0));
+        assert_eq!(r.evals, 768);
+        // brute-force check
+        let scored = ex.score_all(&p);
+        let min = scored
+            .iter()
+            .map(|(_, s)| *s)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(r.best_score, min);
+    }
+
+    #[test]
+    fn local_minima_contains_global() {
+        let p = Sphere::centered(SearchSpace::rram_reduced());
+        let ex = Exhaustive::default();
+        let scored = ex.score_all(&p);
+        let minima = ex.local_minima(&p, &scored);
+        assert!(!minima.is_empty());
+        let global = scored
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .unwrap()
+            .0;
+        assert!(minima.contains(&global));
+        // a convex sphere has exactly one basin... but even-cardinality
+        // parameters tie at two center indices; allow a small set
+        assert!(minima.len() <= 8, "{}", minima.len());
+    }
+}

@@ -1,0 +1,446 @@
+//! Phased genetic algorithm engine (paper §III-C2, Algorithm 1, Table 4).
+//!
+//! One engine covers all three GA variants the paper compares:
+//!
+//! * **non-modified GA** \[44\]: random init, a single phase with
+//!   conventional operator settings;
+//! * **non-modified GA + enhanced sampling**: the same single phase but
+//!   initialized by Hamming-diversity sampling;
+//! * **four-phase GA (proposed)**: Hamming sampling + the
+//!   Exploration → Transition → Convergence → Fine-tuning schedule of
+//!   Table 4.
+//!
+//! Variation operators are simulated binary crossover (SBX) and polynomial
+//! mutation (Deb et al.), applied to the index-coded genome and snapped
+//! back onto the discrete grid.
+
+use super::sampling;
+use super::{BestTracker, OptResult, Optimizer, Problem, SearchBudget};
+use crate::space::Design;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Crossover/mutation parameters of one phase (paper Table 4).
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseParams {
+    pub name: &'static str,
+    /// Crossover probability `P_c`.
+    pub pc: f64,
+    /// SBX distribution index `η_c`.
+    pub eta_c: f64,
+    /// Mutation probability `P_m` (per offspring).
+    pub pm: f64,
+    /// Polynomial-mutation distribution index `η_m`.
+    pub eta_m: f64,
+}
+
+/// Paper Table 4, verbatim.
+pub const PAPER_PHASES: [PhaseParams; 4] = [
+    PhaseParams { name: "exploration", pc: 1.0, eta_c: 3.0, pm: 1.0, eta_m: 3.0 },
+    PhaseParams { name: "transition", pc: 0.9, eta_c: 7.0, pm: 0.5, eta_m: 7.0 },
+    PhaseParams { name: "convergence", pc: 1.0, eta_c: 15.0, pm: 0.2, eta_m: 15.0 },
+    PhaseParams { name: "fine-tuning", pc: 1.0, eta_c: 25.0, pm: 0.05, eta_m: 25.0 },
+];
+
+/// Conventional single-phase settings for the non-modified GA baseline
+/// \[44\] (pymoo-style defaults: SBX η=15, polynomial mutation applied to
+/// every offspring with per-gene probability 1/n).
+pub const CLASSIC_PHASE: PhaseParams = PhaseParams {
+    name: "classic",
+    pc: 0.9,
+    eta_c: 15.0,
+    pm: 0.9,
+    eta_m: 20.0,
+};
+
+/// Initial-population strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitStrategy {
+    /// Uniform random (feasibility-prefiltered by the problem).
+    Random,
+    /// Hamming-diversity sampling pipeline (Algorithm 1): `P_H` random →
+    /// `P_E` most diverse → evaluate → best `P_GA`.
+    HammingDiverse { p_h: usize, p_e: usize },
+}
+
+/// Early-stopping policy (paper §V-D: "monitor the convergence of the
+/// algorithm during the search and apply early stopping ... rather than
+/// running through all generations in each phase").
+#[derive(Clone, Copy, Debug)]
+pub struct EarlyStop {
+    /// Consecutive generations without sufficient improvement before the
+    /// current phase is cut short.
+    pub patience: usize,
+    /// Minimum relative best-score improvement that counts as progress.
+    pub min_rel_improve: f64,
+}
+
+impl EarlyStop {
+    pub fn default_policy() -> EarlyStop {
+        EarlyStop {
+            patience: 3,
+            min_rel_improve: 1e-3,
+        }
+    }
+}
+
+/// Full GA configuration.
+#[derive(Clone, Debug)]
+pub struct GaConfig {
+    pub phases: Vec<PhaseParams>,
+    pub init: InitStrategy,
+    pub budget: SearchBudget,
+    /// Elites copied unchanged each generation.
+    pub elites: usize,
+    /// Optional per-phase early stopping (§V-D extension).
+    pub early_stop: Option<EarlyStop>,
+    pub label: String,
+}
+
+impl GaConfig {
+    /// Non-modified GA \[44\] at the paper's budget (one phase running all
+    /// generations).
+    pub fn classic(budget: SearchBudget) -> GaConfig {
+        GaConfig {
+            phases: vec![CLASSIC_PHASE],
+            init: InitStrategy::Random,
+            budget,
+            elites: 2,
+            early_stop: None,
+            label: "GA (non-modified)".into(),
+        }
+    }
+
+    /// Non-modified GA with the enhanced sampling front-end.
+    pub fn classic_sampled(budget: SearchBudget) -> GaConfig {
+        GaConfig {
+            init: InitStrategy::HammingDiverse {
+                p_h: sampling::P_H,
+                p_e: sampling::P_E,
+            },
+            label: "GA (non-modified + sampling)".into(),
+            ..GaConfig::classic(budget)
+        }
+    }
+
+    /// The proposed four-phase GA with Hamming sampling.
+    pub fn four_phase(budget: SearchBudget) -> GaConfig {
+        GaConfig {
+            phases: PAPER_PHASES.to_vec(),
+            init: InitStrategy::HammingDiverse {
+                p_h: sampling::P_H,
+                p_e: sampling::P_E,
+            },
+            budget,
+            elites: 2,
+            early_stop: None,
+            label: "4-phase GA (proposed)".into(),
+        }
+    }
+}
+
+/// The GA engine.
+#[derive(Clone, Debug)]
+pub struct GeneticAlgorithm {
+    pub config: GaConfig,
+}
+
+impl GeneticAlgorithm {
+    pub fn new(config: GaConfig) -> Self {
+        GeneticAlgorithm { config }
+    }
+}
+
+/// The proposed algorithm under its paper defaults — a convenience facade.
+pub struct FourPhaseGa;
+
+impl FourPhaseGa {
+    pub fn paper_defaults() -> GeneticAlgorithm {
+        GeneticAlgorithm::new(GaConfig::four_phase(SearchBudget::paper()))
+    }
+}
+
+/// SBX crossover on one gene pair in continuous index space.
+fn sbx_gene(a: f64, b: f64, eta: f64, rng: &mut Rng) -> (f64, f64) {
+    let u = rng.f64();
+    let beta = if u <= 0.5 {
+        (2.0 * u).powf(1.0 / (eta + 1.0))
+    } else {
+        (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (eta + 1.0))
+    };
+    let c1 = 0.5 * ((1.0 + beta) * a + (1.0 - beta) * b);
+    let c2 = 0.5 * ((1.0 - beta) * a + (1.0 + beta) * b);
+    (c1, c2)
+}
+
+/// Polynomial mutation on one gene in `[0, hi]`.
+fn poly_mut_gene(x: f64, hi: f64, eta: f64, rng: &mut Rng) -> f64 {
+    if hi <= 0.0 {
+        return x;
+    }
+    let u = rng.f64();
+    let delta = if u < 0.5 {
+        (2.0 * u).powf(1.0 / (eta + 1.0)) - 1.0
+    } else {
+        1.0 - (2.0 * (1.0 - u)).powf(1.0 / (eta + 1.0))
+    };
+    x + delta * hi
+}
+
+/// Produce two offspring from two parents under phase parameters.
+fn variate(
+    space: &crate::space::SearchSpace,
+    p1: &Design,
+    p2: &Design,
+    ph: &PhaseParams,
+    rng: &mut Rng,
+) -> (Design, Design) {
+    let n = p1.0.len();
+    let mut c1: Vec<f64> = p1.0.iter().map(|&x| x as f64).collect();
+    let mut c2: Vec<f64> = p2.0.iter().map(|&x| x as f64).collect();
+    if rng.chance(ph.pc) {
+        for i in 0..n {
+            if space.params[i].cardinality() > 1 && rng.chance(0.5) {
+                let (a, b) = sbx_gene(c1[i], c2[i], ph.eta_c, rng);
+                c1[i] = a;
+                c2[i] = b;
+            }
+        }
+    }
+    let free = space.free_params();
+    let gene_pm = 1.0 / free.len() as f64;
+    for c in [&mut c1, &mut c2] {
+        if rng.chance(ph.pm) {
+            for &i in &free {
+                if rng.chance(gene_pm) {
+                    let hi = space.params[i].cardinality() as f64 - 1.0;
+                    c[i] = poly_mut_gene(c[i], hi, ph.eta_m, rng);
+                }
+            }
+        }
+    }
+    (space.clamp_round(&c1), space.clamp_round(&c2))
+}
+
+/// Binary tournament selection over a scored population (lower better).
+fn tournament<'a>(
+    scored: &'a [(Design, f64)],
+    rng: &mut Rng,
+) -> &'a Design {
+    let a = rng.below(scored.len());
+    let b = rng.below(scored.len());
+    if scored[a].1 <= scored[b].1 {
+        &scored[a].0
+    } else {
+        &scored[b].0
+    }
+}
+
+impl Optimizer for GeneticAlgorithm {
+    fn name(&self) -> String {
+        self.config.label.clone()
+    }
+
+    fn run(&self, problem: &dyn Problem, rng: &mut Rng) -> OptResult {
+        let t0 = Instant::now();
+        let cfg = &self.config;
+        let space = problem.space();
+        let pop_size = cfg.budget.pop;
+        let mut evals = 0usize;
+        let mut tracker = BestTracker::default();
+
+        // ---- initial population -------------------------------------------
+        let mut pop: Vec<Design> = match cfg.init {
+            InitStrategy::Random => (0..pop_size)
+                .map(|_| problem.random_candidate(rng))
+                .collect(),
+            InitStrategy::HammingDiverse { p_h, p_e } => {
+                let (init, used) =
+                    sampling::hamming_init(problem, p_h, p_e, pop_size, rng);
+                evals += used;
+                init
+            }
+        };
+
+        // generations are split evenly across phases
+        let phases = &cfg.phases;
+        let gens_per_phase = (cfg.budget.gens / phases.len()).max(1);
+
+        for ph in phases {
+            let mut stall = 0usize;
+            let mut phase_best = f64::INFINITY;
+            for _gen in 0..gens_per_phase {
+                let scores = problem.score_batch(&pop);
+                evals += pop.len();
+                tracker.observe(&pop, &scores);
+                tracker.end_generation();
+
+                // §V-D early stopping: cut the phase short once the best
+                // score plateaus
+                if let Some(es) = cfg.early_stop {
+                    let best_now = tracker.best_score();
+                    if best_now < phase_best * (1.0 - es.min_rel_improve) {
+                        phase_best = best_now;
+                        stall = 0;
+                    } else {
+                        stall += 1;
+                        if stall >= es.patience {
+                            break;
+                        }
+                    }
+                }
+
+                let mut scored: Vec<(Design, f64)> =
+                    pop.iter().cloned().zip(scores.iter().cloned()).collect();
+                scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+                // next generation: elites + variation
+                let mut next: Vec<Design> = scored
+                    .iter()
+                    .take(cfg.elites.min(scored.len()))
+                    .map(|(d, _)| d.clone())
+                    .collect();
+                while next.len() < pop_size {
+                    let p1 = tournament(&scored, rng).clone();
+                    let p2 = tournament(&scored, rng).clone();
+                    let (c1, c2) = variate(space, &p1, &p2, ph, rng);
+                    next.push(c1);
+                    if next.len() < pop_size {
+                        next.push(c2);
+                    }
+                }
+                pop = next;
+            }
+        }
+
+        // final evaluation of the last population
+        let scores = problem.score_batch(&pop);
+        evals += pop.len();
+        tracker.observe(&pop, &scores);
+        tracker.end_generation();
+
+        tracker.into_result(self.name(), evals, t0.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::testutil::Sphere;
+    use crate::space::SearchSpace;
+
+    fn budget() -> SearchBudget {
+        SearchBudget { pop: 24, gens: 16 }
+    }
+
+    #[test]
+    fn four_phase_finds_sphere_optimum() {
+        let p = Sphere::centered(SearchSpace::rram_reduced());
+        let ga = GeneticAlgorithm::new(GaConfig {
+            init: InitStrategy::HammingDiverse { p_h: 100, p_e: 50 },
+            ..GaConfig::four_phase(budget())
+        });
+        let r = ga.run(&p, &mut Rng::seed_from(5));
+        // global optimum of the centered sphere on the reduced space is
+        // 1.0 + sum of .5^2 offsets for even-cardinality params (3 of them)
+        assert!(r.best_score <= 2.0, "{}", r.best_score);
+        assert!(!r.history.is_empty());
+        assert!(r.top.len() <= 5 && !r.top.is_empty());
+    }
+
+    #[test]
+    fn history_is_monotone_nonincreasing() {
+        let p = Sphere::centered(SearchSpace::rram());
+        let ga = GeneticAlgorithm::new(GaConfig::classic(budget()));
+        let r = ga.run(&p, &mut Rng::seed_from(6));
+        for w in r.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "history regressed: {:?}", r.history);
+        }
+    }
+
+    #[test]
+    fn sampled_init_beats_random_init_on_average() {
+        // The paper's core algorithmic claim at miniature scale: enhanced
+        // sampling should not be worse on average across seeds.
+        let p = Sphere::centered(SearchSpace::rram());
+        let score = |cfg: GaConfig, seed: u64| {
+            GeneticAlgorithm::new(cfg)
+                .run(&p, &mut Rng::seed_from(seed))
+                .best_score
+        };
+        let seeds = [1u64, 2, 3, 4, 5, 6];
+        let small = SearchBudget { pop: 16, gens: 8 };
+        let rand_avg: f64 = seeds
+            .iter()
+            .map(|&s| score(GaConfig::classic(small), s))
+            .sum::<f64>()
+            / seeds.len() as f64;
+        let samp_avg: f64 = seeds
+            .iter()
+            .map(|&s| {
+                score(
+                    GaConfig {
+                        init: InitStrategy::HammingDiverse { p_h: 200, p_e: 100 },
+                        ..GaConfig::classic(small)
+                    },
+                    s,
+                )
+            })
+            .sum::<f64>()
+            / seeds.len() as f64;
+        assert!(
+            samp_avg <= rand_avg * 1.05,
+            "sampled {samp_avg} vs random {rand_avg}"
+        );
+    }
+
+    #[test]
+    fn variation_respects_domains() {
+        let space = SearchSpace::rram();
+        let mut rng = Rng::seed_from(7);
+        for _ in 0..500 {
+            let p1 = space.random(&mut rng);
+            let p2 = space.random(&mut rng);
+            let (c1, c2) = variate(&space, &p1, &p2, &PAPER_PHASES[0], &mut rng);
+            for d in [&c1, &c2] {
+                for (i, &v) in d.0.iter().enumerate() {
+                    assert!((v as usize) < space.params[i].cardinality());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn high_eta_keeps_offspring_near_parents() {
+        // Fine-tuning phase (η=25) must perturb less than exploration (η=3).
+        let space = SearchSpace::rram();
+        let mut rng = Rng::seed_from(8);
+        let dist = |ph: &PhaseParams, rng: &mut Rng| -> f64 {
+            let mut total = 0usize;
+            let n = 400;
+            for _ in 0..n {
+                let p1 = space.random(rng);
+                let p2 = p1.clone(); // identical parents isolate mutation
+                let (c1, _) = variate(&space, &p1, &p2, ph, rng);
+                total += p1.hamming(&c1);
+            }
+            total as f64 / n as f64
+        };
+        let explo = dist(&PAPER_PHASES[0], &mut rng);
+        let fine = dist(&PAPER_PHASES[3], &mut rng);
+        assert!(
+            fine < explo,
+            "fine-tuning drift {fine} !< exploration drift {explo}"
+        );
+    }
+
+    #[test]
+    fn evals_accounting() {
+        let p = Sphere::centered(SearchSpace::rram_reduced());
+        let ga = GeneticAlgorithm::new(GaConfig::classic(SearchBudget { pop: 10, gens: 4 }));
+        let r = ga.run(&p, &mut Rng::seed_from(9));
+        // 4 generational evals + final
+        assert_eq!(r.evals, 10 * 5);
+        assert_eq!(p.evals(), r.evals);
+    }
+}

@@ -1,0 +1,149 @@
+//! Hamming-distance-based diversity sampling (paper Algorithm 1, §III-C2).
+//!
+//! Three steps: (1) sample `P_H` random candidates (pre-filtered for
+//! capacity by `Problem::random_candidate` in the weight-stationary case),
+//! (2) greedily select the `P_E` most mutually distant candidates under
+//! Hamming distance (max-min farthest-point traversal), (3) evaluate the
+//! diverse set and keep the best `P_GA` as the GA's initial population.
+
+use super::Problem;
+use crate::space::Design;
+use crate::util::rng::Rng;
+
+/// Paper defaults: `P_H = 1000`, `P_E = 500`.
+pub const P_H: usize = 1000;
+pub const P_E: usize = 500;
+
+/// Step 1: random candidate pool of size `p_h`.
+pub fn random_pool(problem: &dyn Problem, p_h: usize, rng: &mut Rng) -> Vec<Design> {
+    (0..p_h).map(|_| problem.random_candidate(rng)).collect()
+}
+
+/// Step 2: greedy max-min Hamming selection of `p_e` designs from `pool`.
+///
+/// `C₂` starts with the pool's first candidate; each iteration adds the
+/// candidate maximizing its minimum Hamming distance to `C₂` (Eq. 1–2).
+/// O(|pool| · p_e) with an incrementally maintained d_min array.
+pub fn select_diverse(pool: &[Design], p_e: usize) -> Vec<Design> {
+    assert!(!pool.is_empty());
+    let p_e = p_e.min(pool.len());
+    let mut selected: Vec<usize> = vec![0];
+    // d_min[i] = min Hamming distance from pool[i] to the selected set
+    let mut d_min: Vec<usize> = pool.iter().map(|d| d.hamming(&pool[0])).collect();
+    while selected.len() < p_e {
+        // farthest point from the selected set
+        let (next, _) = d_min
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !selected.contains(i))
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .unwrap();
+        selected.push(next);
+        for (i, dm) in d_min.iter_mut().enumerate() {
+            *dm = (*dm).min(pool[i].hamming(&pool[next]));
+        }
+    }
+    selected.into_iter().map(|i| pool[i].clone()).collect()
+}
+
+/// Full pipeline: sample `p_h`, diversify to `p_e`, evaluate, keep the
+/// `p_ga` lowest-scoring designs as the initial population. Also returns
+/// the number of evaluations spent (the ~30 % sampling overhead of
+/// Table 6).
+pub fn hamming_init(
+    problem: &dyn Problem,
+    p_h: usize,
+    p_e: usize,
+    p_ga: usize,
+    rng: &mut Rng,
+) -> (Vec<Design>, usize) {
+    let pool = random_pool(problem, p_h, rng);
+    let diverse = select_diverse(&pool, p_e);
+    let scores = problem.score_batch(&diverse);
+    let mut scored: Vec<(Design, f64)> = diverse.into_iter().zip(scores).collect();
+    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let evals = scored.len();
+    let mut init: Vec<Design> = scored.into_iter().take(p_ga).map(|(d, _)| d).collect();
+    // backfill with randoms if fewer than p_ga survived dedup/feasibility
+    while init.len() < p_ga {
+        init.push(problem.random_candidate(rng));
+    }
+    (init, evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::testutil::Sphere;
+    use crate::space::SearchSpace;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn diverse_selection_spreads() {
+        let space = SearchSpace::rram();
+        let mut rng = Rng::seed_from(1);
+        let pool: Vec<Design> = (0..200).map(|_| space.random(&mut rng)).collect();
+        let sel = select_diverse(&pool, 50);
+        assert_eq!(sel.len(), 50);
+        // min pairwise distance of selected set should beat that of a
+        // random 50-subset (the point of the exercise)
+        let min_pair = |xs: &[Design]| {
+            let mut m = usize::MAX;
+            for i in 0..xs.len() {
+                for j in (i + 1)..xs.len() {
+                    m = m.min(xs[i].hamming(&xs[j]));
+                }
+            }
+            m
+        };
+        let random_subset: Vec<Design> = pool[..50].to_vec();
+        assert!(min_pair(&sel) >= min_pair(&random_subset));
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let space = SearchSpace::rram();
+        let mut rng = Rng::seed_from(2);
+        let pool: Vec<Design> = (0..100).map(|_| space.random(&mut rng)).collect();
+        assert_eq!(select_diverse(&pool, 30), select_diverse(&pool, 30));
+    }
+
+    #[test]
+    fn hamming_init_returns_sorted_best() {
+        let p = Sphere::centered(SearchSpace::rram_reduced());
+        let mut rng = Rng::seed_from(3);
+        let (init, evals) = hamming_init(&p, 200, 100, 20, &mut rng);
+        assert_eq!(init.len(), 20);
+        assert_eq!(evals, 100);
+        // the best of init must be close to the sphere optimum compared to
+        // a random draw
+        let s_init = p.score_batch(&init);
+        let best_init = s_init.iter().cloned().fold(f64::INFINITY, f64::min);
+        let randoms: Vec<Design> = (0..20).map(|_| p.space.random(&mut rng)).collect();
+        let s_rand = p.score_batch(&randoms);
+        let best_rand = s_rand.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(best_init <= best_rand, "{best_init} vs {best_rand}");
+    }
+
+    #[test]
+    fn select_diverse_handles_small_pools() {
+        let pool = vec![Design(vec![0; 10]), Design(vec![1; 10])];
+        assert_eq!(select_diverse(&pool, 10).len(), 2);
+    }
+
+    #[test]
+    fn property_selected_are_from_pool() {
+        check("diverse ⊆ pool", 20, |rng| {
+            let space = SearchSpace::sram();
+            let pool: Vec<Design> =
+                (0..(10 + rng.below(60))).map(|_| space.random(rng)).collect();
+            let k = 1 + rng.below(pool.len());
+            let sel = select_diverse(&pool, k);
+            if sel.iter().all(|d| pool.contains(d)) && sel.len() == k {
+                Ok(())
+            } else {
+                Err(format!("k={k} pool={} sel={}", pool.len(), sel.len()))
+            }
+        });
+    }
+}

@@ -1,0 +1,312 @@
+//! Surrogate hardware-metric predictor (paper §V-D: "hardware metric
+//! prediction models could be incorporated by training dedicated
+//! predictors in place of explicit hardware estimation for each sampled
+//! design").
+//!
+//! A ridge regression on log-score over engineered design features
+//! (log-transformed geometry, voltage, interactions). It is deliberately
+//! *not* used to replace evaluation inside the GA — the paper warns that
+//! hardware-metric prediction "requires substantially higher accuracy" —
+//! but to **prescreen** the diversity-sampled pool: evaluate a subset,
+//! fit, rank the remainder by prediction, and spend the remaining
+//! evaluation budget on the most promising candidates. The ablation
+//! experiment (`repro exp ablations`) quantifies the evals-vs-quality
+//! trade-off.
+
+use super::{sampling, Problem};
+use crate::space::{idx, Design};
+use crate::util::rng::Rng;
+
+/// Number of engineered features (excluding the bias).
+pub const N_FEATURES: usize = 14;
+
+/// Featurize a decoded design for the ridge model: log geometry terms
+/// capture the multiplicative structure of the analytical cost model.
+pub fn features(raw: &[f64; 10]) -> [f64; N_FEATURES] {
+    let rows = raw[idx::ROWS];
+    let cols = raw[idx::COLS];
+    let m = raw[idx::C_PER_TILE];
+    let t = raw[idx::T_PER_ROUTER];
+    let g = raw[idx::G_PER_CHIP];
+    let bits = raw[idx::BITS_CELL].max(1.0);
+    let v = raw[idx::V_STEP];
+    let tc = raw[idx::T_CYCLE_NS];
+    let glb = raw[idx::GLB_KB];
+    let tech = raw[idx::TECH_NM];
+    let macros = m * t * g;
+    [
+        rows.ln(),
+        cols.ln(),
+        macros.ln(),
+        g.ln(),
+        bits.ln(),
+        v.ln(),
+        tc.ln(),
+        glb.ln(),
+        tech.ln(),
+        (rows * cols).ln(),          // array size
+        (macros * rows * cols).ln(), // total device count
+        v * v,                       // dynamic-energy scale
+        (cols / 4.0).ln(),           // ADC sweep length
+        macros.ln() * tc.ln(),       // parallelism x clock interaction
+    ]
+}
+
+/// Ridge regression model over [`features`] + bias.
+#[derive(Clone, Debug)]
+pub struct RidgeModel {
+    /// Weights, last entry is the bias.
+    pub w: Vec<f64>,
+    /// L2 regularization strength.
+    pub lambda: f64,
+}
+
+impl RidgeModel {
+    /// Fit on (features, log-score) pairs via the normal equations
+    /// (the design dimension is tiny, Gaussian elimination suffices).
+    pub fn fit(xs: &[[f64; N_FEATURES]], ys: &[f64], lambda: f64) -> Option<RidgeModel> {
+        let n = xs.len();
+        if n < N_FEATURES + 1 {
+            return None;
+        }
+        let d = N_FEATURES + 1; // + bias
+        // A = XᵀX + λI, b = Xᵀy
+        let mut a = vec![vec![0.0f64; d]; d];
+        let mut b = vec![0.0f64; d];
+        for (x, &y) in xs.iter().zip(ys) {
+            let mut row = [0.0f64; N_FEATURES + 1];
+            row[..N_FEATURES].copy_from_slice(x);
+            row[N_FEATURES] = 1.0;
+            for i in 0..d {
+                b[i] += row[i] * y;
+                for j in 0..d {
+                    a[i][j] += row[i] * row[j];
+                }
+            }
+        }
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] += lambda * n as f64;
+        }
+        let w = solve(a, b)?;
+        Some(RidgeModel { w, lambda })
+    }
+
+    /// Predicted log-score.
+    pub fn predict(&self, x: &[f64; N_FEATURES]) -> f64 {
+        let mut acc = self.w[N_FEATURES];
+        for i in 0..N_FEATURES {
+            acc += self.w[i] * x[i];
+        }
+        acc
+    }
+
+    /// Coefficient of determination on a held-out set.
+    pub fn r2(&self, xs: &[[f64; N_FEATURES]], ys: &[f64]) -> f64 {
+        let mean = crate::util::stats::mean(ys);
+        let ss_tot: f64 = ys.iter().map(|y| (y - mean) * (y - mean)).sum();
+        let ss_res: f64 = xs
+            .iter()
+            .zip(ys)
+            .map(|(x, &y)| {
+                let e = y - self.predict(x);
+                e * e
+            })
+            .sum();
+        if ss_tot <= 0.0 {
+            return 0.0;
+        }
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Gaussian elimination with partial pivoting.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in (col + 1)..n {
+            let f = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for k in (col + 1)..n {
+            acc -= a[col][k] * x[k];
+        }
+        x[col] = acc / a[col][col];
+    }
+    Some(x)
+}
+
+/// Surrogate-assisted initial sampling: like
+/// [`sampling::hamming_init`] but only `train_n` of the `p_e` diverse
+/// candidates are evaluated; a ridge model ranks the rest and the top
+/// predicted fraction is evaluated to fill the population. Returns the
+/// initial population and the number of true evaluations spent.
+pub fn surrogate_init(
+    problem: &dyn Problem,
+    p_h: usize,
+    p_e: usize,
+    p_ga: usize,
+    train_n: usize,
+    rng: &mut Rng,
+) -> (Vec<Design>, usize) {
+    let pool = sampling::random_pool(problem, p_h, rng);
+    let diverse = sampling::select_diverse(&pool, p_e);
+    let train_n = train_n.clamp(N_FEATURES + 2, diverse.len());
+
+    // evaluate a training subset
+    let train = &diverse[..train_n];
+    let train_scores = problem.score_batch(train);
+    let mut evals = train_n;
+
+    let space = problem.space();
+    let finite: Vec<(usize, f64)> = train_scores
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.is_finite())
+        .map(|(i, s)| (i, *s))
+        .collect();
+    let xs: Vec<[f64; N_FEATURES]> = finite
+        .iter()
+        .map(|&(i, _)| features(&space.decode(&train[i])))
+        .collect();
+    let ys: Vec<f64> = finite.iter().map(|&(_, s)| s.ln()).collect();
+
+    let rest = &diverse[train_n..];
+    let shortlisted: Vec<Design> = match RidgeModel::fit(&xs, &ys, 1e-3) {
+        Some(model) => {
+            // rank the unevaluated remainder by predicted score
+            let mut ranked: Vec<(usize, f64)> = rest
+                .iter()
+                .enumerate()
+                .map(|(i, d)| (i, model.predict(&features(&space.decode(d)))))
+                .collect();
+            ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            // evaluate only the most promising half of the remainder
+            ranked
+                .iter()
+                .take(rest.len() / 2)
+                .map(|&(i, _)| rest[i].clone())
+                .collect()
+        }
+        None => rest.to_vec(), // degenerate training set: evaluate all
+    };
+    let short_scores = problem.score_batch(&shortlisted);
+    evals += shortlisted.len();
+
+    // final population: best of everything actually evaluated
+    let mut scored: Vec<(Design, f64)> = train
+        .iter()
+        .cloned()
+        .zip(train_scores)
+        .chain(shortlisted.into_iter().zip(short_scores))
+        .collect();
+    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let mut init: Vec<Design> = scored.into_iter().take(p_ga).map(|(d, _)| d).collect();
+    while init.len() < p_ga {
+        init.push(problem.random_candidate(rng));
+    }
+    (init, evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EvalBackend, JointProblem};
+    use crate::model::MemoryTech;
+    use crate::objective::Objective;
+    use crate::space::SearchSpace;
+    use crate::workloads::WorkloadSet;
+
+    #[test]
+    fn solve_linear_system() {
+        let a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let b = vec![5.0, 10.0];
+        let x = solve(a, b).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-9);
+        assert!((x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ridge_recovers_linear_target() {
+        let mut rng = Rng::seed_from(1);
+        let space = SearchSpace::rram();
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..200 {
+            let d = space.random(&mut rng);
+            let f = features(&space.decode(&d));
+            xs.push(f);
+            // synthetic linear target over the features
+            ys.push(2.0 * f[0] - 0.5 * f[6] + 3.0);
+        }
+        let m = RidgeModel::fit(&xs, &ys, 1e-6).unwrap();
+        assert!(m.r2(&xs, &ys) > 0.999, "r2={}", m.r2(&xs, &ys));
+    }
+
+    #[test]
+    fn surrogate_predicts_real_scores_reasonably() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        );
+        let mut rng = Rng::seed_from(2);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        // train on feasibility-prefiltered candidates
+        while ys.len() < 300 {
+            let d = p.random_candidate(&mut rng);
+            let s = crate::search::Problem::score_batch(&p, std::slice::from_ref(&d))[0];
+            if s.is_finite() {
+                xs.push(features(&space.decode(&d)));
+                ys.push(s.ln());
+            }
+        }
+        let (train_x, test_x) = xs.split_at(200);
+        let (train_y, test_y) = ys.split_at(200);
+        let m = RidgeModel::fit(train_x, train_y, 1e-3).unwrap();
+        let r2 = m.r2(test_x, test_y);
+        assert!(
+            r2 > 0.5,
+            "surrogate should explain most of the log-EDAP variance, r2={r2}"
+        );
+    }
+
+    #[test]
+    fn surrogate_init_spends_fewer_evals_than_full_sampling() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        );
+        let mut rng = Rng::seed_from(3);
+        let (init, evals) = surrogate_init(&p, 300, 150, 20, 50, &mut rng);
+        assert_eq!(init.len(), 20);
+        // 50 train + 50 shortlisted = 100 < 150 full sampling
+        assert!(evals < 150, "evals={evals}");
+        // the population should contain feasible designs
+        let scores = crate::search::Problem::score_batch(&p, &init);
+        assert!(scores.iter().any(|s| s.is_finite()));
+    }
+}

@@ -1,0 +1,451 @@
+//! The multi-level hardware search space (paper §III-B, Table 1 "Ours").
+//!
+//! Parameters span device (bits per cell), circuit (crossbar rows/cols),
+//! architecture (macros per tile, tiles per router, tile groups per chip,
+//! global buffer size) and system level (operating voltage, cycle time,
+//! CMOS technology node). Designs are **index-coded**: a design is a vector
+//! of indices into each parameter's discrete value list, which makes
+//! Hamming distance (Eq. 1–2), SBX/polynomial-mutation variation and
+//! exhaustive enumeration straightforward.
+//!
+//! Conditional dependency handling: the operating voltage is encoded as a
+//! normalized *step* (0..=7) that decodes into the voltage range of the
+//! design's technology node (paper Table 7), so the space stays a plain
+//! product of independent domains even in hardware-workload-technology
+//! co-optimization (paper §IV-I).
+
+use crate::model::tech::voltage_range;
+use crate::util::rng::Rng;
+
+/// Number of parameters in the canonical design vector.
+pub const NUM_PARAMS: usize = 10;
+
+/// Canonical parameter order, shared with the AOT-compiled JAX evaluator
+/// (see `python/compile/hwspec.py`; the cross-language consistency test
+/// enforces agreement).
+pub const PARAM_NAMES: [&str; NUM_PARAMS] = [
+    "xbar_rows",
+    "xbar_cols",
+    "c_per_tile",
+    "t_per_router",
+    "g_per_chip",
+    "bits_cell",
+    "v_step",
+    "t_cycle_ns",
+    "glb_kb",
+    "tech_nm",
+];
+
+/// Index of each parameter in the canonical order.
+pub mod idx {
+    pub const ROWS: usize = 0;
+    pub const COLS: usize = 1;
+    pub const C_PER_TILE: usize = 2;
+    pub const T_PER_ROUTER: usize = 3;
+    pub const G_PER_CHIP: usize = 4;
+    pub const BITS_CELL: usize = 5;
+    pub const V_STEP: usize = 6;
+    pub const T_CYCLE_NS: usize = 7;
+    pub const GLB_KB: usize = 8;
+    pub const TECH_NM: usize = 9;
+}
+
+/// Hardware stack level of a parameter (paper Table 1: D/C/A/S columns).
+/// Drives the sequential-optimization ablation of Fig. 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    Device,
+    Circuit,
+    Architecture,
+    System,
+}
+
+/// Level of each canonical parameter.
+pub const PARAM_LEVELS: [Level; NUM_PARAMS] = [
+    Level::Circuit,      // xbar_rows
+    Level::Circuit,      // xbar_cols
+    Level::Architecture, // c_per_tile
+    Level::Architecture, // t_per_router
+    Level::Architecture, // g_per_chip
+    Level::Device,       // bits_cell
+    Level::System,       // v_step
+    Level::System,       // t_cycle_ns
+    Level::Architecture, // glb_kb (buffer size — architecture per Table 1)
+    Level::System,       // tech_nm
+];
+
+/// One discrete parameter domain.
+#[derive(Clone, Debug)]
+pub struct ParamDef {
+    pub name: &'static str,
+    pub values: Vec<f64>,
+}
+
+impl ParamDef {
+    pub fn cardinality(&self) -> usize {
+        self.values.len()
+    }
+}
+
+/// A candidate hardware design: one index per parameter.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Design(pub Vec<u16>);
+
+impl Design {
+    /// Hamming distance (paper Eq. 1–2): number of differing parameters.
+    pub fn hamming(&self, other: &Design) -> usize {
+        debug_assert_eq!(self.0.len(), other.0.len());
+        self.0
+            .iter()
+            .zip(&other.0)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+}
+
+/// The full search space for one experiment configuration.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub params: Vec<ParamDef>,
+    /// Human-readable variant name ("rram-32nm", "sram-32nm", "sram-tech").
+    pub variant: &'static str,
+}
+
+const ROWS_COLS: [f64; 5] = [32.0, 64.0, 128.0, 256.0, 512.0];
+const C_PER_TILE: [f64; 4] = [4.0, 8.0, 16.0, 32.0];
+const T_PER_ROUTER: [f64; 4] = [2.0, 4.0, 8.0, 16.0];
+const G_PER_CHIP: [f64; 10] = [2.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0, 48.0, 64.0];
+const T_CYCLE_NS: [f64; 4] = [1.0, 2.0, 5.0, 10.0];
+/// Voltage steps: decoded against the tech node's range (Table 7).
+const V_STEPS: usize = 8;
+const GLB_RRAM_KB: [f64; 8] = [
+    256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0, 12288.0, 16384.0,
+];
+/// SRAM designs swap weights through the GLB, so a wider range is explored
+/// (paper §III-B).
+const GLB_SRAM_KB: [f64; 12] = [
+    512.0, 1024.0, 2048.0, 4096.0, 6144.0, 8192.0, 12288.0, 16384.0, 24576.0, 32768.0, 49152.0,
+    65536.0,
+];
+const TECH_ALL_NM: [f64; 8] = [7.0, 10.0, 14.0, 22.0, 32.0, 45.0, 65.0, 90.0];
+
+fn p(name: &'static str, values: &[f64]) -> ParamDef {
+    ParamDef {
+        name,
+        values: values.to_vec(),
+    }
+}
+
+impl SearchSpace {
+    /// RRAM weight-stationary space at 32 nm (≈3.07×10⁶ points).
+    pub fn rram() -> SearchSpace {
+        SearchSpace {
+            variant: "rram-32nm",
+            params: vec![
+                p("xbar_rows", &ROWS_COLS),
+                p("xbar_cols", &ROWS_COLS),
+                p("c_per_tile", &C_PER_TILE),
+                p("t_per_router", &T_PER_ROUTER),
+                p("g_per_chip", &G_PER_CHIP),
+                p("bits_cell", &[1.0, 2.0, 4.0]),
+                p("v_step", &steps(V_STEPS)),
+                p("t_cycle_ns", &T_CYCLE_NS),
+                p("glb_kb", &GLB_RRAM_KB),
+                p("tech_nm", &[32.0]),
+            ],
+        }
+    }
+
+    /// SRAM weight-swapping space at 32 nm (≈1.54×10⁶ points).
+    pub fn sram() -> SearchSpace {
+        SearchSpace {
+            variant: "sram-32nm",
+            params: vec![
+                p("xbar_rows", &ROWS_COLS),
+                p("xbar_cols", &ROWS_COLS),
+                p("c_per_tile", &C_PER_TILE),
+                p("t_per_router", &T_PER_ROUTER),
+                p("g_per_chip", &G_PER_CHIP),
+                p("bits_cell", &[1.0]), // SRAM cells are 1-bit
+                p("v_step", &steps(V_STEPS)),
+                p("t_cycle_ns", &T_CYCLE_NS),
+                p("glb_kb", &GLB_SRAM_KB),
+                p("tech_nm", &[32.0]),
+            ],
+        }
+    }
+
+    /// SRAM space with the CMOS node as an optimization variable
+    /// (paper §IV-I; ≈1.23×10⁷ points, the paper's 1.21×10⁷ band).
+    pub fn sram_tech() -> SearchSpace {
+        let mut s = SearchSpace::sram();
+        s.variant = "sram-tech";
+        s.params[idx::TECH_NM] = p("tech_nm", &TECH_ALL_NM);
+        s
+    }
+
+    /// The reduced RRAM space of §III-C1 (Table 3): only crossbar rows,
+    /// cols, macros-per-tile and bits-per-cell vary (768 points — small
+    /// enough for exhaustive ground truth; denser row/col grids than the
+    /// full space so the optimizer comparison is not trivially convex),
+    /// remaining parameters pinned to mid-range defaults.
+    pub fn rram_reduced() -> SearchSpace {
+        const DENSE: [f64; 8] = [32.0, 64.0, 96.0, 128.0, 192.0, 256.0, 384.0, 512.0];
+        SearchSpace {
+            variant: "rram-reduced",
+            params: vec![
+                p("xbar_rows", &DENSE),
+                p("xbar_cols", &DENSE),
+                p("c_per_tile", &C_PER_TILE),
+                p("t_per_router", &[8.0]),
+                p("g_per_chip", &[24.0]),
+                p("bits_cell", &[1.0, 2.0, 4.0]),
+                p("v_step", &[4.0]),
+                p("t_cycle_ns", &[2.0]),
+                p("glb_kb", &[4096.0]),
+                p("tech_nm", &[32.0]),
+            ],
+        }
+    }
+
+    /// Total number of design points (product of cardinalities).
+    pub fn size(&self) -> u64 {
+        self.params
+            .iter()
+            .map(|pd| pd.cardinality() as u64)
+            .product()
+    }
+
+    /// Indices of parameters with more than one value (the free variables).
+    pub fn free_params(&self) -> Vec<usize> {
+        (0..NUM_PARAMS)
+            .filter(|&i| self.params[i].cardinality() > 1)
+            .collect()
+    }
+
+    /// Uniform random design.
+    pub fn random(&self, rng: &mut Rng) -> Design {
+        Design(
+            self.params
+                .iter()
+                .map(|pd| rng.below(pd.cardinality()) as u16)
+                .collect(),
+        )
+    }
+
+    /// Decode a design into the canonical raw-value vector consumed by the
+    /// evaluators. `v_step` decodes into volts against the design's tech
+    /// node range.
+    pub fn decode(&self, d: &Design) -> [f64; NUM_PARAMS] {
+        let mut raw = [0.0; NUM_PARAMS];
+        for i in 0..NUM_PARAMS {
+            raw[i] = self.params[i].values[d.0[i] as usize];
+        }
+        let tech = raw[idx::TECH_NM];
+        let (vmin, vmax) = voltage_range(tech);
+        let step = raw[idx::V_STEP];
+        raw[idx::V_STEP] = vmin + (vmax - vmin) * step / (V_STEPS as f64 - 1.0);
+        raw
+    }
+
+    /// Number of voltage steps (for reporting).
+    pub fn v_steps() -> usize {
+        V_STEPS
+    }
+
+    /// Enumerate every design (mixed-radix counter). Only sensible for
+    /// reduced spaces; asserts the size is small.
+    pub fn enumerate(&self) -> Vec<Design> {
+        let size = self.size();
+        assert!(
+            size <= 2_000_000,
+            "refusing to enumerate {size} designs; use sampling"
+        );
+        let radixes: Vec<usize> = self.params.iter().map(|p| p.cardinality()).collect();
+        let mut out = Vec::with_capacity(size as usize);
+        let mut counter = vec![0u16; NUM_PARAMS];
+        loop {
+            out.push(Design(counter.clone()));
+            // increment mixed-radix counter
+            let mut i = NUM_PARAMS;
+            loop {
+                if i == 0 {
+                    return out;
+                }
+                i -= 1;
+                counter[i] += 1;
+                if (counter[i] as usize) < radixes[i] {
+                    break;
+                }
+                counter[i] = 0;
+            }
+        }
+    }
+
+    /// Index a design into a dense u64 (mixed-radix), used as a cache key.
+    pub fn linear_index(&self, d: &Design) -> u64 {
+        let mut acc = 0u64;
+        for i in 0..NUM_PARAMS {
+            acc = acc * self.params[i].cardinality() as u64 + d.0[i] as u64;
+        }
+        acc
+    }
+
+    /// Mutate one uniformly chosen free parameter to a new random index
+    /// (used by the simple baselines; the GA uses SBX/polynomial ops).
+    pub fn random_neighbor(&self, d: &Design, rng: &mut Rng) -> Design {
+        let free = self.free_params();
+        let mut out = d.clone();
+        let pi = *rng.choose(&free);
+        let card = self.params[pi].cardinality();
+        if card > 1 {
+            let mut nv = rng.below(card) as u16;
+            while nv == d.0[pi] {
+                nv = rng.below(card) as u16;
+            }
+            out.0[pi] = nv;
+        }
+        out
+    }
+
+    /// Snap a vector of *continuous* per-parameter positions (e.g. from
+    /// SBX or PSO arithmetic) back onto valid indices.
+    pub fn clamp_round(&self, xs: &[f64]) -> Design {
+        Design(
+            xs.iter()
+                .enumerate()
+                .map(|(i, &x)| {
+                    let card = self.params[i].cardinality() as f64;
+                    x.round().clamp(0.0, card - 1.0) as u16
+                })
+                .collect(),
+        )
+    }
+
+    /// Human-readable summary of a design's decoded parameters.
+    pub fn describe(&self, d: &Design) -> String {
+        let raw = self.decode(d);
+        format!(
+            "R{rows}xC{cols} M{m} T{t} G{g} b{bits} V{v:.2} tc{tc}ns GLB{glb}KB {tech}nm",
+            rows = raw[idx::ROWS],
+            cols = raw[idx::COLS],
+            m = raw[idx::C_PER_TILE],
+            t = raw[idx::T_PER_ROUTER],
+            g = raw[idx::G_PER_CHIP],
+            bits = raw[idx::BITS_CELL],
+            v = raw[idx::V_STEP],
+            tc = raw[idx::T_CYCLE_NS],
+            glb = raw[idx::GLB_KB],
+            tech = raw[idx::TECH_NM],
+        )
+    }
+}
+
+fn steps(n: usize) -> Vec<f64> {
+    (0..n).map(|i| i as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_sizes_match_paper_bands() {
+        // Paper §III-B: 0.25e7 .. 1.21e7 depending on experiment.
+        assert_eq!(SearchSpace::rram().size(), 3_072_000);
+        assert_eq!(SearchSpace::sram().size(), 1_536_000);
+        assert_eq!(SearchSpace::sram_tech().size(), 12_288_000);
+        assert_eq!(SearchSpace::rram_reduced().size(), 768);
+    }
+
+    #[test]
+    fn decode_voltage_against_tech() {
+        let s = SearchSpace::rram();
+        let mut d = s.random(&mut Rng::seed_from(1));
+        d.0[idx::V_STEP] = 0;
+        let lo = s.decode(&d)[idx::V_STEP];
+        d.0[idx::V_STEP] = 7;
+        let hi = s.decode(&d)[idx::V_STEP];
+        // 32nm range is 0.65–1.0V (Table 7)
+        assert!((lo - 0.65).abs() < 1e-9, "lo={lo}");
+        assert!((hi - 1.0).abs() < 1e-9, "hi={hi}");
+    }
+
+    #[test]
+    fn hamming_distance() {
+        let a = Design(vec![0, 1, 2, 3, 0, 0, 0, 0, 0, 0]);
+        let b = Design(vec![0, 1, 0, 3, 0, 0, 0, 0, 1, 0]);
+        assert_eq!(a.hamming(&b), 2);
+        assert_eq!(a.hamming(&a), 0);
+        assert_eq!(a.hamming(&b), b.hamming(&a));
+    }
+
+    #[test]
+    fn enumerate_reduced_space() {
+        let s = SearchSpace::rram_reduced();
+        let all = s.enumerate();
+        assert_eq!(all.len(), 768);
+        // all distinct
+        let mut keys: Vec<u64> = all.iter().map(|d| s.linear_index(d)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 768);
+    }
+
+    #[test]
+    fn random_designs_valid() {
+        let s = SearchSpace::sram_tech();
+        let mut rng = Rng::seed_from(2);
+        for _ in 0..1000 {
+            let d = s.random(&mut rng);
+            for (i, &v) in d.0.iter().enumerate() {
+                assert!((v as usize) < s.params[i].cardinality());
+            }
+            let raw = s.decode(&d);
+            assert!(raw[idx::ROWS] >= 32.0 && raw[idx::ROWS] <= 512.0);
+            assert!(raw[idx::V_STEP] > 0.3 && raw[idx::V_STEP] < 1.4);
+        }
+    }
+
+    #[test]
+    fn neighbor_differs_in_one_param() {
+        let s = SearchSpace::rram();
+        let mut rng = Rng::seed_from(3);
+        for _ in 0..200 {
+            let d = s.random(&mut rng);
+            let n = s.random_neighbor(&d, &mut rng);
+            assert_eq!(d.hamming(&n), 1);
+        }
+    }
+
+    #[test]
+    fn clamp_round_snaps() {
+        let s = SearchSpace::rram();
+        let xs = vec![-1.0, 0.4, 0.6, 99.0, 2.2, 1.9, 3.5, 1.0, 2.0, 0.0];
+        let d = s.clamp_round(&xs);
+        assert_eq!(d.0[0], 0); // clamped below
+        assert_eq!(d.0[1], 0); // rounds down
+        assert_eq!(d.0[2], 1); // rounds up
+        assert_eq!(d.0[3] as usize, s.params[3].cardinality() - 1); // clamped above
+    }
+
+    #[test]
+    fn linear_index_bijective_on_reduced() {
+        let s = SearchSpace::rram_reduced();
+        let all = s.enumerate();
+        for (i, d) in all.iter().enumerate() {
+            // enumerate produces designs in mixed-radix ascending order
+            assert_eq!(s.linear_index(d), i as u64);
+        }
+    }
+
+    #[test]
+    fn sequential_levels_cover_all_params() {
+        use std::collections::HashSet;
+        let lv: HashSet<_> = PARAM_LEVELS
+            .iter()
+            .map(|l| format!("{l:?}"))
+            .collect();
+        assert_eq!(lv.len(), 4);
+    }
+}

@@ -1,0 +1,105 @@
+//! Minimal benchmarking harness (the offline registry has no criterion).
+//!
+//! Benches are `harness = false` binaries that call [`Bench::run`] per
+//! case: warm-up, then timed iterations until a wall-clock budget is spent,
+//! reporting mean / median / p95 per-iteration time and throughput. Output
+//! is stable plain text suitable for `cargo bench | tee bench_output.txt`.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark suite; prints a header and per-case rows.
+pub struct Bench {
+    suite: String,
+    /// Per-case measurement budget.
+    pub budget: Duration,
+    /// Minimum timed iterations regardless of budget.
+    pub min_iters: usize,
+}
+
+/// A single case's measurements.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        println!("\n=== bench suite: {suite} ===");
+        // Honor a quick mode for CI smoke runs.
+        let quick = std::env::var("IMCOPT_BENCH_QUICK").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            budget: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            min_iters: if quick { 3 } else { 10 },
+        }
+    }
+
+    /// Time `f` repeatedly; `items_per_iter` scales the throughput line
+    /// (e.g. designs evaluated per call).
+    pub fn run<F: FnMut()>(&self, name: &str, items_per_iter: usize, mut f: F) -> Measurement {
+        // Warm-up: one untimed call (fills caches, JITs nothing here but
+        // primes page tables and the PJRT executable).
+        f();
+        let mut samples: Vec<f64> = Vec::new();
+        let started = Instant::now();
+        while started.elapsed() < self.budget || samples.len() < self.min_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: Duration::from_secs_f64(stats::mean(&samples)),
+            median: Duration::from_secs_f64(stats::percentile_sorted(&sorted, 0.5)),
+            p95: Duration::from_secs_f64(stats::percentile_sorted(&sorted, 0.95)),
+        };
+        let thr = if m.mean.as_secs_f64() > 0.0 {
+            items_per_iter as f64 / m.mean.as_secs_f64()
+        } else {
+            f64::INFINITY
+        };
+        println!(
+            "{suite}/{name}: {iters} iters, mean {mean}, median {median}, p95 {p95}, {thr:.1} items/s",
+            suite = self.suite,
+            iters = m.iters,
+            mean = super::fmt_duration(m.mean),
+            median = super::fmt_duration(m.median),
+            p95 = super::fmt_duration(m.p95),
+        );
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("selftest");
+        b.budget = Duration::from_millis(30);
+        b.min_iters = 3;
+        let mut acc = 0u64;
+        let m = b.run("noop-ish", 1, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean.as_secs_f64() >= 0.0);
+    }
+}

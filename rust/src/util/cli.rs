@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (the offline registry has no clap).
+//!
+//! Supports the subset the `repro` binary needs: a subcommand followed by
+//! positional arguments and `--flag[=value]` / `--flag value` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: `repro <command> [positionals...] [--opts...]`.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with("--") {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.options.get(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse("exp fig3 extra");
+        assert_eq!(a.command, "exp");
+        assert_eq!(a.positionals, vec!["fig3", "extra"]);
+    }
+
+    #[test]
+    fn options_all_forms() {
+        let a = parse("search --seed=7 --gens 20 --native --out results");
+        assert_eq!(a.opt_u64("seed", 0), 7);
+        assert_eq!(a.opt_usize("gens", 0), 20);
+        assert!(a.flag("native"));
+        assert_eq!(a.opt_str("out", ""), "results");
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse("--help");
+        assert_eq!(a.command, "");
+        assert!(a.flag("help"));
+    }
+}

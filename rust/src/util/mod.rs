@@ -1,0 +1,81 @@
+//! Std-only infrastructure.
+//!
+//! The build environment has an offline cargo registry containing only the
+//! `xla` crate's dependency closure, so the usual ecosystem crates
+//! (tokio, rayon, clap, criterion, serde, rand, proptest) are unavailable.
+//! This module provides small, well-tested replacements for the subset of
+//! their functionality the project needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// `ceil(a / b)` for positive integers, avoiding float rounding.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Format a duration compactly (`1.23s`, `45ms`, `812us`).
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.0}ms", s * 1e3)
+    } else {
+        format!("{:.0}us", s * 1e6)
+    }
+}
+
+/// Format an f64 in engineering style with the given significant digits —
+/// used by all report tables so output is diff-stable.
+pub fn fmt_sig(x: f64, sig: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let dec = (sig as i32 - 1 - mag).max(0) as usize;
+    if mag.abs() >= 5 {
+        format!("{x:.prec$e}", prec = sig - 1)
+    } else {
+        format!("{x:.dec$}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(u64::MAX, 1), u64::MAX);
+    }
+
+    #[test]
+    fn fmt_sig_ranges() {
+        assert_eq!(fmt_sig(0.0, 3), "0");
+        assert_eq!(fmt_sig(1.234567, 3), "1.23");
+        assert_eq!(fmt_sig(123.4567, 3), "123");
+        assert!(fmt_sig(1.23e9, 3).contains('e'));
+        assert!(fmt_sig(f64::NAN, 3).contains("NaN"));
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        use std::time::Duration;
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_duration(Duration::from_millis(45)), "45ms");
+        assert_eq!(fmt_duration(Duration::from_micros(812)), "812us");
+    }
+}

@@ -1,0 +1,87 @@
+//! A minimal scoped thread pool (the offline registry has no rayon).
+//!
+//! The coordinator fans population evaluations out across workers with
+//! [`parallel_map`]. On the single-core CI box this degrades gracefully to
+//! sequential execution; on multi-core hosts it scales like a plain
+//! work-stealing-free chunked pool, which is sufficient because every work
+//! item (a hardware evaluation) has near-identical cost.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use by default: the machine's available
+/// parallelism, overridable through `IMCOPT_THREADS`.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("IMCOPT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every element of `items` on `threads` workers, preserving
+/// input order in the output. `f` must be `Sync` (called concurrently).
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().map(|x| f(x)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker produced result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 4, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, 4, |x| *x).is_empty());
+        assert_eq!(parallel_map(&[5u32], 8, |x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn sequential_path_matches() {
+        let items: Vec<u64> = (0..64).collect();
+        let seq = parallel_map(&items, 1, |x| x * x);
+        let par = parallel_map(&items, 3, |x| x * x);
+        assert_eq!(seq, par);
+    }
+}

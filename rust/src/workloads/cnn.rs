@@ -1,0 +1,362 @@
+//! CNN workload layer tables (ImageNet 224×224 input, batch 1, 8-bit).
+//!
+//! Shapes are generated programmatically from the published architectures
+//! (torchvision variants). Only matmul-mapped layers are emitted:
+//! convolutions (im2col view), depthwise convolutions (per-channel view),
+//! squeeze-excite and classifier FCs. Pooling/norm/activation stages only
+//! affect the tracked spatial size.
+
+use super::{Layer, LayerKind, Workload};
+
+/// Spatial tracking context while building a network.
+struct Ctx {
+    /// Current feature-map side (square maps).
+    hw: u64,
+    /// Current channel count.
+    c: u64,
+    layers: Vec<Layer>,
+}
+
+impl Ctx {
+    fn new() -> Ctx {
+        Ctx {
+            hw: 224,
+            c: 3,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Standard convolution with explicit geometry.
+    /// `pad` is per-side; output side = (hw + 2*pad - k)/stride + 1.
+    fn conv_px(&mut self, name: &str, cout: u64, k: u64, stride: u64, pad: u64) {
+        let out = (self.hw + 2 * pad - k) / stride + 1;
+        let kk = k * k * self.c;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            k: kk,
+            n: cout,
+            passes: out * out,
+            weights: kk * cout,
+            in_bytes: self.hw * self.hw * self.c,
+            out_bytes: out * out * cout,
+        });
+        self.hw = out;
+        self.c = cout;
+    }
+
+    /// Same-padded convolution (pad = k/2), the common case.
+    fn conv(&mut self, name: &str, cout: u64, k: u64, stride: u64) {
+        self.conv_px(name, cout, k, stride, k / 2);
+    }
+
+    /// Depthwise convolution: per-channel k×k filter; matmul view
+    /// `k = kh·kw`, `n = channels`.
+    fn dwconv(&mut self, name: &str, k: u64, stride: u64) {
+        let pad = k / 2;
+        let out = (self.hw + 2 * pad - k) / stride + 1;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::DepthwiseConv,
+            k: k * k,
+            n: self.c,
+            passes: out * out,
+            weights: k * k * self.c,
+            in_bytes: self.hw * self.hw * self.c,
+            out_bytes: out * out * self.c,
+        });
+        self.hw = out;
+    }
+
+    /// Max/avg pool: spatial reduction only.
+    fn pool(&mut self, k: u64, stride: u64) {
+        // floor mode, no padding (torchvision default for these nets)
+        self.hw = (self.hw - k) / stride + 1;
+    }
+
+    /// Global average pool to 1×1.
+    fn gap(&mut self) {
+        self.hw = 1;
+    }
+
+    /// Fully connected layer on the flattened current tensor.
+    fn fc(&mut self, name: &str, nout: u64) {
+        let nin = self.hw * self.hw * self.c;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Fc,
+            k: nin,
+            n: nout,
+            passes: 1,
+            weights: nin * nout,
+            in_bytes: nin,
+            out_bytes: nout,
+        });
+        self.hw = 1;
+        self.c = nout;
+    }
+
+    /// Squeeze-and-excite block: GAP + two FCs on the channel vector.
+    fn se(&mut self, name: &str, reduce: u64) {
+        let c = self.c;
+        let mid = (c / reduce).max(8);
+        for (suffix, k, n) in [("se_fc1", c, mid), ("se_fc2", mid, c)] {
+            self.layers.push(Layer {
+                name: format!("{name}.{suffix}"),
+                kind: LayerKind::Fc,
+                k,
+                n,
+                passes: 1,
+                weights: k * n,
+                in_bytes: k,
+                out_bytes: n,
+            });
+        }
+    }
+
+    fn finish(self, name: &'static str) -> Workload {
+        Workload {
+            name,
+            layers: self.layers,
+        }
+    }
+}
+
+/// AlexNet (torchvision; 61M params).
+pub fn alexnet() -> Workload {
+    let mut c = Ctx::new();
+    c.conv_px("conv1", 64, 11, 4, 2); // 224 -> 55
+    c.pool(3, 2); // 27
+    c.conv_px("conv2", 192, 5, 1, 2);
+    c.pool(3, 2); // 13
+    c.conv("conv3", 384, 3, 1);
+    c.conv("conv4", 256, 3, 1);
+    c.conv("conv5", 256, 3, 1);
+    c.pool(3, 2); // 6
+    c.fc("fc6", 4096);
+    c.fc("fc7", 4096);
+    c.fc("fc8", 1000);
+    c.finish("alexnet")
+}
+
+/// VGG16 (138M params; its fc6 at 25088×4096 is the largest single layer
+/// across all nine workloads — the paper's "largest workload").
+pub fn vgg16() -> Workload {
+    let mut c = Ctx::new();
+    let cfg: &[&[u64]] = &[&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+    for (bi, block) in cfg.iter().enumerate() {
+        for (li, &ch) in block.iter().enumerate() {
+            c.conv(&format!("conv{}_{}", bi + 1, li + 1), ch, 3, 1);
+        }
+        c.pool(2, 2);
+    }
+    c.fc("fc6", 4096);
+    c.fc("fc7", 4096);
+    c.fc("fc8", 1000);
+    c.finish("vgg16")
+}
+
+/// Shared ResNet stem: 7×7/2 conv + 3×3/2 maxpool.
+fn resnet_stem(c: &mut Ctx) {
+    c.conv_px("conv1", 64, 7, 2, 3); // 224 -> 112
+    c.pool(3, 2); // 112 -> 55 floor-mode; torchvision pads -> 56
+    c.hw = 56; // torchvision uses padded maxpool; fix up
+}
+
+/// ResNet-18 (11.7M params): 4 stages × 2 basic blocks.
+pub fn resnet18() -> Workload {
+    let mut c = Ctx::new();
+    resnet_stem(&mut c);
+    let widths = [64u64, 128, 256, 512];
+    for (si, &w) in widths.iter().enumerate() {
+        for b in 0..2u64 {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            if stride == 2 {
+                // projection shortcut
+                let (hw, cin) = (c.hw, c.c);
+                c.conv(&format!("layer{}_{}_conv1", si + 1, b), w, 3, stride);
+                c.conv(&format!("layer{}_{}_conv2", si + 1, b), w, 3, 1);
+                // downsample path (1×1, stride 2) from the block input
+                let saved = (c.hw, c.c);
+                c.hw = hw;
+                c.c = cin;
+                c.conv(&format!("layer{}_{}_down", si + 1, b), w, 1, 2);
+                c.hw = saved.0;
+                c.c = saved.1;
+            } else {
+                c.conv(&format!("layer{}_{}_conv1", si + 1, b), w, 3, 1);
+                c.conv(&format!("layer{}_{}_conv2", si + 1, b), w, 3, 1);
+            }
+        }
+    }
+    c.gap();
+    c.fc("fc", 1000);
+    c.finish("resnet18")
+}
+
+/// ResNet-50 (25.6M params): 4 stages × [3,4,6,3] bottleneck blocks.
+pub fn resnet50() -> Workload {
+    let mut c = Ctx::new();
+    resnet_stem(&mut c);
+    let stages: [(u64, u64, usize); 4] =
+        [(64, 256, 3), (128, 512, 4), (256, 1024, 6), (512, 2048, 3)];
+    let mut cin = 64u64;
+    for (si, &(mid, out, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            let block_in_hw = c.hw;
+            c.c = cin;
+            c.conv(&format!("layer{}_{}_c1", si + 1, b), mid, 1, 1);
+            c.conv(&format!("layer{}_{}_c2", si + 1, b), mid, 3, stride);
+            c.conv(&format!("layer{}_{}_c3", si + 1, b), out, 1, 1);
+            if b == 0 {
+                // projection shortcut from block input
+                let saved = (c.hw, c.c);
+                c.hw = block_in_hw;
+                c.c = cin;
+                c.conv(&format!("layer{}_{}_down", si + 1, b), out, 1, stride);
+                c.hw = saved.0;
+                c.c = saved.1;
+            }
+            cin = out;
+        }
+    }
+    c.gap();
+    c.fc("fc", 1000);
+    c.finish("resnet50")
+}
+
+/// MobileNetV3-Large (5.4M params): inverted-residual bottlenecks with
+/// optional squeeze-excite, from the paper's Table 2 (Howard et al. 2019).
+pub fn mobilenet_v3_large() -> Workload {
+    let mut c = Ctx::new();
+    c.conv("stem", 16, 3, 2); // 224 -> 112
+    // (kernel, expansion, out, SE, stride)
+    let blocks: &[(u64, u64, u64, bool, u64)] = &[
+        (3, 16, 16, false, 1),
+        (3, 64, 24, false, 2),
+        (3, 72, 24, false, 1),
+        (5, 72, 40, true, 2),
+        (5, 120, 40, true, 1),
+        (5, 120, 40, true, 1),
+        (3, 240, 80, false, 2),
+        (3, 200, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 480, 112, true, 1),
+        (3, 672, 112, true, 1),
+        (5, 672, 160, true, 2),
+        (5, 960, 160, true, 1),
+        (5, 960, 160, true, 1),
+    ];
+    for (i, &(k, exp, out, se, stride)) in blocks.iter().enumerate() {
+        let name = format!("bneck{i}");
+        if exp != c.c {
+            c.conv(&format!("{name}.expand"), exp, 1, 1);
+        }
+        c.dwconv(&format!("{name}.dw"), k, stride);
+        if se {
+            c.se(&name, 4);
+        }
+        c.conv(&format!("{name}.project"), out, 1, 1);
+    }
+    c.conv("head_conv", 960, 1, 1); // 7×7×960
+    c.gap();
+    c.fc("head_fc1", 1280);
+    c.fc("classifier", 1000);
+    c.finish("mobilenetv3")
+}
+
+/// DenseNet-201 (20M params): growth 32, blocks [6,12,48,32], bottleneck
+/// 1×1(128)+3×3(32) dense layers, compression-0.5 transitions.
+pub fn densenet201() -> Workload {
+    let mut c = Ctx::new();
+    c.conv_px("stem", 64, 7, 2, 3);
+    c.pool(3, 2);
+    c.hw = 56; // padded maxpool as in torchvision
+    let growth = 32u64;
+    let blocks = [6usize, 12, 48, 32];
+    let mut ch = 64u64;
+    for (bi, &n_layers) in blocks.iter().enumerate() {
+        for li in 0..n_layers {
+            // dense layer: 1x1 conv ch->4*growth, 3x3 conv 4*growth->growth
+            c.c = ch;
+            c.conv(&format!("db{}_{}_c1", bi + 1, li), 4 * growth, 1, 1);
+            c.conv(&format!("db{}_{}_c2", bi + 1, li), growth, 3, 1);
+            ch += growth;
+        }
+        if bi < blocks.len() - 1 {
+            // transition: 1x1 conv to ch/2 + 2x2 avgpool
+            c.c = ch;
+            c.conv(&format!("trans{}", bi + 1), ch / 2, 1, 1);
+            c.pool(2, 2);
+            ch /= 2;
+        }
+    }
+    c.c = ch; // 1920
+    c.gap();
+    c.fc("classifier", 1000);
+    c.finish("densenet201")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_geometry() {
+        let w = alexnet();
+        // conv1 maps 224->55
+        assert_eq!(w.layers[0].passes, 55 * 55);
+        // fc6 input is 6*6*256 = 9216
+        let fc6 = w.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert_eq!(fc6.k, 9216);
+        assert_eq!(fc6.weights, 9216 * 4096);
+    }
+
+    #[test]
+    fn vgg16_weights() {
+        let w = vgg16();
+        assert_eq!(w.layers.len(), 16); // 13 convs + 3 fcs
+        let total = w.total_weights();
+        assert!((total as f64 - 138.0e6).abs() / 138.0e6 < 0.02, "{total}");
+    }
+
+    #[test]
+    fn resnet18_shapes() {
+        let w = resnet18();
+        // stem + (2+2)+( 2*2+1)+(5)+(5) convs + fc = 21 mapped layers
+        assert_eq!(w.layers.len(), 21);
+        let total = w.total_weights() as f64;
+        assert!((total - 11.2e6).abs() / 11.2e6 < 0.05, "{total}");
+        // final stage operates at 7x7
+        let last_conv = &w.layers[w.layers.len() - 2];
+        assert_eq!(last_conv.passes, 7 * 7);
+    }
+
+    #[test]
+    fn resnet50_block_count() {
+        let w = resnet50();
+        // stem + 16 blocks*3 + 4 downsamples + fc = 1+48+4+1 = 54
+        assert_eq!(w.layers.len(), 54);
+    }
+
+    #[test]
+    fn mobilenet_has_dw_and_se() {
+        let w = mobilenet_v3_large();
+        assert!(w.layers.iter().any(|l| l.kind == LayerKind::DepthwiseConv));
+        assert!(w.layers.iter().any(|l| l.name.contains("se_fc")));
+        let total = w.total_weights() as f64;
+        assert!((total - 5.2e6).abs() / 5.2e6 < 0.10, "{total}");
+    }
+
+    #[test]
+    fn densenet_channel_growth() {
+        let w = densenet201();
+        // final classifier input must be 1920 channels
+        let fc = w.layers.last().unwrap();
+        assert_eq!(fc.k, 1920);
+        // 2 convs per dense layer * 98 + 3 transitions + stem + fc
+        assert_eq!(w.layers.len(), 2 * 98 + 3 + 1 + 1);
+    }
+}

@@ -1,0 +1,345 @@
+//! Neural-network workload models (paper §III-A, §IV-J).
+//!
+//! The hardware evaluator only needs each layer's *matmul view*: a weight
+//! matrix of `k × n` (crossbar rows × columns before bit-slicing), the
+//! number of input vectors applied per inference (`passes`), and the
+//! activation traffic. Convolutions map through im2col
+//! (`k = kh·kw·c_in`, `n = c_out`, `passes = out_h·out_w`), depthwise
+//! convolutions map per-channel (`k = kh·kw`, `n = c`), transformer
+//! projections map with `passes = seq_len`, and attention
+//! activation×activation matmuls are flagged [`Layer::dynamic`] — they
+//! cannot be weight-stationary and execute on the per-tile digital vector
+//! units (see `model::digital`).
+//!
+//! All models are 8-bit quantized (weights and activations), as in the
+//! paper's experiments. Embedding lookups and norms/biases are excluded
+//! from the crossbar mapping (standard practice; they are not matmuls).
+
+mod cnn;
+mod transformer;
+
+pub use cnn::{alexnet, densenet201, mobilenet_v3_large, resnet18, resnet50, vgg16};
+pub use transformer::{gpt2_medium, mobilebert, vit_b16};
+
+/// Maximum padded layer count in the AOT workload tensor — shared with
+/// `python/compile/hwspec.py` (MobileBERT has the most mapped layers).
+pub const L_MAX: usize = 512;
+/// Features per layer row in the AOT workload tensor.
+pub const LAYER_FEATURES: usize = 8;
+
+/// Kind of a mapped layer (affects mapping and the digital-unit path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    DepthwiseConv,
+    Fc,
+    /// Activation×activation matmul (attention scores / context): no
+    /// stored weights; runs on the digital vector unit.
+    Dynamic,
+}
+
+/// One mapped layer in matmul view.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Weight-matrix rows (crossbar input dimension).
+    pub k: u64,
+    /// Weight-matrix columns (output features, before bit slicing).
+    pub n: u64,
+    /// Input vectors applied per inference.
+    pub passes: u64,
+    /// Stored parameters (0 for dynamic layers).
+    pub weights: u64,
+    /// Input activation bytes per inference (8-bit activations).
+    pub in_bytes: u64,
+    /// Output activation bytes per inference.
+    pub out_bytes: u64,
+}
+
+impl Layer {
+    /// Multiply-accumulate operations per inference.
+    pub fn macs(&self) -> u64 {
+        self.k * self.n * self.passes
+    }
+    pub fn dynamic(&self) -> bool {
+        self.kind == LayerKind::Dynamic
+    }
+}
+
+/// A full workload: an ordered list of mapped layers.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+impl Workload {
+    /// Total stored parameters (weights) across all layers.
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights).sum()
+    }
+
+    /// Largest single layer's weight count — the paper's "largest
+    /// workload" criterion for SRAM weight-swapping (§IV-J).
+    pub fn max_layer_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights).max().unwrap_or(0)
+    }
+
+    /// Total MACs per inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Number of layers that map onto crossbars (non-dynamic).
+    pub fn mapped_layers(&self) -> usize {
+        self.layers.iter().filter(|l| !l.dynamic()).count()
+    }
+
+    /// Export as the padded `[L_MAX, LAYER_FEATURES]` f32 tensor consumed
+    /// by the AOT fitness artifact. Feature order (shared with
+    /// `hwspec.py`): `[k, n, passes, weights, in_bytes, out_bytes,
+    /// is_dynamic, valid]`.
+    pub fn to_tensor(&self) -> Vec<f32> {
+        self.to_tensor_padded(L_MAX)
+    }
+
+    /// Like [`Workload::to_tensor`] but padded to an arbitrary layer
+    /// count — the runtime picks the smallest compiled artifact variant
+    /// that fits (§Perf: short variants skip the padded rows).
+    pub fn to_tensor_padded(&self, lmax: usize) -> Vec<f32> {
+        assert!(
+            self.layers.len() <= lmax,
+            "{}: {} layers exceed lmax={lmax}",
+            self.name,
+            self.layers.len()
+        );
+        let mut t = vec![0f32; lmax * LAYER_FEATURES];
+        for (i, l) in self.layers.iter().enumerate() {
+            let row = &mut t[i * LAYER_FEATURES..(i + 1) * LAYER_FEATURES];
+            row[0] = l.k as f32;
+            row[1] = l.n as f32;
+            row[2] = l.passes as f32;
+            row[3] = l.weights as f32;
+            row[4] = l.in_bytes as f32;
+            row[5] = l.out_bytes as f32;
+            row[6] = if l.dynamic() { 1.0 } else { 0.0 };
+            row[7] = 1.0;
+        }
+        t
+    }
+}
+
+/// A named set of workloads used by one experiment.
+#[derive(Clone, Debug)]
+pub struct WorkloadSet {
+    pub workloads: Vec<Workload>,
+}
+
+impl WorkloadSet {
+    /// The paper's core 4-workload CNN set (§III-A): ResNet18, VGG16,
+    /// AlexNet, MobileNetV3.
+    pub fn cnn4() -> WorkloadSet {
+        WorkloadSet {
+            workloads: vec![resnet18(), vgg16(), alexnet(), mobilenet_v3_large()],
+        }
+    }
+
+    /// The 9-workload scalability set of §IV-J.
+    pub fn all9() -> WorkloadSet {
+        WorkloadSet {
+            workloads: vec![
+                resnet18(),
+                vgg16(),
+                alexnet(),
+                mobilenet_v3_large(),
+                mobilebert(),
+                densenet201(),
+                resnet50(),
+                vit_b16(),
+                gpt2_medium(),
+            ],
+        }
+    }
+
+    /// Construct from names (CLI).
+    pub fn by_names(names: &[&str]) -> anyhow::Result<WorkloadSet> {
+        let mut workloads = Vec::new();
+        for n in names {
+            workloads.push(by_name(n)?);
+        }
+        Ok(WorkloadSet { workloads })
+    }
+
+    pub fn len(&self) -> usize {
+        self.workloads.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.workloads.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.workloads.iter().map(|w| w.name).collect()
+    }
+
+    /// Index of the workload with the most total weights — the "largest
+    /// workload" for RRAM weight-stationary experiments (§IV-A).
+    pub fn largest_by_total(&self) -> usize {
+        (0..self.len())
+            .max_by_key(|&i| self.workloads[i].total_weights())
+            .unwrap()
+    }
+
+    /// Index of the workload with the largest single layer — the "largest
+    /// workload" in the SRAM weight-swapping sense (§IV-J).
+    pub fn largest_by_layer(&self) -> usize {
+        (0..self.len())
+            .max_by_key(|&i| self.workloads[i].max_layer_weights())
+            .unwrap()
+    }
+}
+
+/// Look up a single workload by canonical name.
+pub fn by_name(name: &str) -> anyhow::Result<Workload> {
+    Ok(match name {
+        "resnet18" => resnet18(),
+        "resnet50" => resnet50(),
+        "vgg16" => vgg16(),
+        "alexnet" => alexnet(),
+        "mobilenetv3" => mobilenet_v3_large(),
+        "densenet201" => densenet201(),
+        "vit" => vit_b16(),
+        "mobilebert" => mobilebert(),
+        "gpt2-medium" => gpt2_medium(),
+        other => anyhow::bail!("unknown workload '{other}'"),
+    })
+}
+
+/// All canonical workload names.
+pub const ALL_NAMES: [&str; 9] = [
+    "resnet18",
+    "vgg16",
+    "alexnet",
+    "mobilenetv3",
+    "mobilebert",
+    "densenet201",
+    "resnet50",
+    "vit",
+    "gpt2-medium",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Known parameter counts (matmul weights only — embeddings, biases
+    /// and norms excluded), checked within ±12 % of the published totals.
+    #[test]
+    fn parameter_counts_near_published() {
+        let cases: &[(&str, f64)] = &[
+            ("resnet18", 11.2e6),  // 11.7M incl. bn/bias
+            ("resnet50", 25.0e6),  // 25.6M
+            ("vgg16", 138.0e6),    // 138M
+            ("alexnet", 61.0e6),   // 61M
+            ("mobilenetv3", 5.1e6),
+            ("densenet201", 19.0e6),
+            ("vit", 85.0e6),
+            ("gpt2-medium", 350.0e6), // 355M (w/ untied lm head counted once)
+        ];
+        for (name, published) in cases {
+            let w = by_name(name).unwrap().total_weights() as f64;
+            let rel = (w - published).abs() / published;
+            assert!(
+                rel < 0.12,
+                "{name}: computed {w:.3e} vs published {published:.3e} (rel {rel:.3})"
+            );
+        }
+    }
+
+    #[test]
+    fn vgg16_fc1_is_the_largest_single_layer_overall() {
+        // Paper §IV-J: VGG16's largest layer (25088×4096 ≈ 1.03e8 params)
+        // exceeds GPT-2 Medium's largest (~5.1e7), so VGG16 is the
+        // "largest workload" even in the 9-workload SRAM experiment.
+        let set = WorkloadSet::all9();
+        let li = set.largest_by_layer();
+        assert_eq!(set.workloads[li].name, "vgg16");
+        let vgg_max = vgg16().max_layer_weights();
+        assert_eq!(vgg_max, 25088 * 4096);
+        let gpt_max = gpt2_medium().max_layer_weights();
+        assert!(gpt_max > 4.0e7 as u64 && gpt_max < 6.0e7 as u64);
+        assert!(vgg_max > gpt_max);
+    }
+
+    #[test]
+    fn largest_by_total_is_gpt2_in_set9_and_vgg_in_cnn4() {
+        let s9 = WorkloadSet::all9();
+        assert_eq!(s9.workloads[s9.largest_by_total()].name, "gpt2-medium");
+        let s4 = WorkloadSet::cnn4();
+        assert_eq!(s4.workloads[s4.largest_by_total()].name, "vgg16");
+    }
+
+    #[test]
+    fn layer_counts_fit_lmax() {
+        for name in ALL_NAMES {
+            let w = by_name(name).unwrap();
+            assert!(
+                w.layers.len() <= L_MAX,
+                "{name} has {} layers",
+                w.layers.len()
+            );
+            assert!(!w.layers.is_empty());
+        }
+    }
+
+    #[test]
+    fn tensor_layout() {
+        let w = alexnet();
+        let t = w.to_tensor();
+        assert_eq!(t.len(), L_MAX * LAYER_FEATURES);
+        // first layer: conv1 k=3*11*11
+        assert_eq!(t[0], (3 * 11 * 11) as f32);
+        // valid flags: exactly layers.len() ones
+        let valid: f32 = (0..L_MAX).map(|i| t[i * LAYER_FEATURES + 7]).sum();
+        assert_eq!(valid as usize, w.layers.len());
+    }
+
+    #[test]
+    fn macs_sane() {
+        // Published MAC counts (±25 %: our mapping includes downsample
+        // convs and counts dynamic attention separately).
+        let cases: &[(&str, f64)] = &[
+            ("resnet18", 1.8e9),
+            ("vgg16", 15.5e9),
+            ("alexnet", 0.72e9),
+        ];
+        for (name, published) in cases {
+            let m = by_name(name).unwrap().total_macs() as f64;
+            let rel = (m - published).abs() / published;
+            assert!(rel < 0.25, "{name}: {m:.3e} vs {published:.3e}");
+        }
+    }
+
+    #[test]
+    fn dynamic_layers_only_in_transformers() {
+        for name in ["resnet18", "vgg16", "alexnet", "mobilenetv3", "densenet201"] {
+            let w = by_name(name).unwrap();
+            assert!(w.layers.iter().all(|l| !l.dynamic()), "{name}");
+        }
+        for name in ["vit", "gpt2-medium", "mobilebert"] {
+            let w = by_name(name).unwrap();
+            assert!(w.layers.iter().any(|l| l.dynamic()), "{name}");
+            // dynamic layers carry no weights
+            assert!(w
+                .layers
+                .iter()
+                .filter(|l| l.dynamic())
+                .all(|l| l.weights == 0));
+        }
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("resnet34").is_err());
+    }
+}

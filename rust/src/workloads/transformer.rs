@@ -1,0 +1,171 @@
+//! Transformer workload layer tables (paper §IV-J).
+//!
+//! Projection/FFN matrices map onto crossbars with `passes = seq_len`;
+//! attention score (`Q·Kᵀ`) and context (`A·V`) matmuls are
+//! activation×activation and flagged dynamic — they carry no stored
+//! weights and execute on the digital vector units (`model::digital`),
+//! mirroring how CIMLoop models transformer workloads on IMC hardware.
+//! Embedding tables / norms / biases are not matmuls and are excluded.
+
+use super::{Layer, LayerKind, Workload};
+
+/// Weight-stationary projection layer applied to every token.
+fn proj(name: &str, k: u64, n: u64, seq: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        kind: LayerKind::Fc,
+        k,
+        n,
+        passes: seq,
+        weights: k * n,
+        in_bytes: seq * k,
+        out_bytes: seq * n,
+    }
+}
+
+/// Dynamic attention matmul aggregated across heads: MACs equal
+/// `heads · seq² · head_dim`, expressed as `k = heads·head_dim`,
+/// `n = seq`, `passes = seq`.
+fn attn_dynamic(name: &str, heads: u64, head_dim: u64, seq: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        kind: LayerKind::Dynamic,
+        k: heads * head_dim,
+        n: seq,
+        passes: seq,
+        weights: 0,
+        in_bytes: 2 * seq * heads * head_dim,
+        out_bytes: seq * seq * heads / 8, // scores kept at reduced precision
+    }
+}
+
+/// ViT-B/16 at 224×224 (86M params): 196 patches + class token.
+pub fn vit_b16() -> Workload {
+    let d = 768u64;
+    let seq = 197u64;
+    let heads = 12u64;
+    let hd = d / heads;
+    let mut layers = Vec::new();
+    // patch embedding as a 16×16×3 conv = 768×768 matmul over 196 patches
+    layers.push(Layer {
+        name: "patch_embed".into(),
+        kind: LayerKind::Conv,
+        k: 16 * 16 * 3,
+        n: d,
+        passes: 196,
+        weights: 16 * 16 * 3 * d,
+        in_bytes: 224 * 224 * 3,
+        out_bytes: 196 * d,
+    });
+    for b in 0..12 {
+        layers.push(proj(&format!("blk{b}.qkv"), d, 3 * d, seq));
+        layers.push(attn_dynamic(&format!("blk{b}.scores"), heads, hd, seq));
+        layers.push(attn_dynamic(&format!("blk{b}.context"), heads, hd, seq));
+        layers.push(proj(&format!("blk{b}.attn_out"), d, d, seq));
+        layers.push(proj(&format!("blk{b}.mlp_fc1"), d, 4 * d, seq));
+        layers.push(proj(&format!("blk{b}.mlp_fc2"), 4 * d, d, seq));
+    }
+    layers.push(proj("head", d, 1000, 1));
+    Workload {
+        name: "vit",
+        layers,
+    }
+}
+
+/// MobileBERT (24 blocks, hidden 512, intra-bottleneck 128, 4 stacked
+/// FFNs per block, 4 heads; seq 128). ~18M matmul params.
+pub fn mobilebert() -> Workload {
+    let hidden = 512u64;
+    let intra = 128u64;
+    let seq = 128u64;
+    let heads = 4u64;
+    let hd = intra / heads;
+    let mut layers = Vec::new();
+    for b in 0..24 {
+        let p = |s: &str| format!("blk{b}.{s}");
+        layers.push(proj(&p("bottleneck_in"), hidden, intra, seq));
+        layers.push(proj(&p("qkv"), intra, 3 * intra, seq));
+        layers.push(attn_dynamic(&p("scores"), heads, hd, seq));
+        layers.push(attn_dynamic(&p("context"), heads, hd, seq));
+        layers.push(proj(&p("attn_out"), intra, intra, seq));
+        for f in 0..4 {
+            layers.push(proj(&p(&format!("ffn{f}_up")), intra, hidden, seq));
+            layers.push(proj(&p(&format!("ffn{f}_down")), hidden, intra, seq));
+        }
+        layers.push(proj(&p("bottleneck_out"), intra, hidden, seq));
+    }
+    Workload {
+        name: "mobilebert",
+        layers,
+    }
+}
+
+/// GPT-2 Medium (24 layers, d=1024, 16 heads, FFN 4096, seq 1024; ~353M
+/// matmul params including the untied LM head).
+pub fn gpt2_medium() -> Workload {
+    let d = 1024u64;
+    let seq = 1024u64;
+    let heads = 16u64;
+    let hd = d / heads;
+    let mut layers = Vec::new();
+    for b in 0..24 {
+        let p = |s: &str| format!("h{b}.{s}");
+        layers.push(proj(&p("qkv"), d, 3 * d, seq));
+        layers.push(attn_dynamic(&p("scores"), heads, hd, seq));
+        layers.push(attn_dynamic(&p("context"), heads, hd, seq));
+        layers.push(proj(&p("attn_out"), d, d, seq));
+        layers.push(proj(&p("ffn_up"), d, 4 * d, seq));
+        layers.push(proj(&p("ffn_down"), 4 * d, d, seq));
+    }
+    // LM head (largest single GPT-2 layer, 1024×50257 ≈ 5.15e7 weights —
+    // still smaller than VGG16's fc6, see workloads::tests).
+    layers.push(proj("lm_head", d, 50257, seq));
+    Workload {
+        name: "gpt2-medium",
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_params() {
+        let w = vit_b16();
+        let total = w.total_weights() as f64;
+        // 86.4M park (matmul-only ≈ 85.8M)
+        assert!((total - 85.8e6).abs() / 85.8e6 < 0.03, "{total}");
+        assert_eq!(w.layers.len(), 1 + 12 * 6 + 1);
+    }
+
+    #[test]
+    fn gpt2_params_and_largest_layer() {
+        let w = gpt2_medium();
+        let total = w.total_weights() as f64;
+        assert!((total - 353.0e6).abs() / 353.0e6 < 0.03, "{total}");
+        assert_eq!(w.max_layer_weights(), 1024 * 50257);
+    }
+
+    #[test]
+    fn mobilebert_block_structure() {
+        let w = mobilebert();
+        assert_eq!(w.layers.len(), 24 * 14);
+        // 4 FFN pairs per block
+        let ffn = w.layers.iter().filter(|l| l.name.contains("ffn")).count();
+        assert_eq!(ffn, 24 * 8);
+    }
+
+    #[test]
+    fn dynamic_macs_match_head_math() {
+        let w = vit_b16();
+        let scores = w
+            .layers
+            .iter()
+            .find(|l| l.name == "blk0.scores")
+            .unwrap();
+        // heads * seq^2 * head_dim = 12 * 197^2 * 64
+        assert_eq!(scores.macs(), 12 * 197 * 197 * 64);
+        assert_eq!(scores.weights, 0);
+    }
+}

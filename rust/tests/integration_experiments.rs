@@ -1,0 +1,46 @@
+//! Smoke-level integration of every paper experiment in `--quick` mode:
+//! each must run, emit its report files, and keep its paper-shape notes.
+
+use imcopt::coordinator::ExpContext;
+use imcopt::experiments;
+
+fn ctx(seed: u64) -> ExpContext {
+    let mut c = ExpContext::quick(seed);
+    c.out_dir = std::env::temp_dir().join(format!("imcopt-exp-it-{seed}"));
+    c
+}
+
+#[test]
+fn every_experiment_runs_quick() {
+    // one shared seed keeps total time bounded; individual experiments
+    // have their own focused tests in their modules
+    let ctx = ctx(5);
+    for id in experiments::ALL_IDS {
+        let report = experiments::run(id, &ctx)
+            .unwrap_or_else(|e| panic!("experiment {id} failed: {e:#}"));
+        assert!(!report.tables.is_empty(), "{id} produced no tables");
+        assert!(
+            ctx.out_dir.join(format!("{id}.md")).exists(),
+            "{id} did not persist markdown"
+        );
+    }
+}
+
+#[test]
+fn unknown_experiment_is_rejected() {
+    let err = experiments::run("fig99", &ctx(6)).unwrap_err();
+    assert!(format!("{err}").contains("unknown experiment"));
+}
+
+#[test]
+fn reports_are_parseable_csv() {
+    let ctx = ctx(7);
+    let report = experiments::run("fig3", &ctx).unwrap();
+    for t in &report.tables {
+        let csv = t.to_csv();
+        let header_cols = csv.lines().next().unwrap().split(',').count();
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), header_cols, "ragged CSV: {line}");
+        }
+    }
+}

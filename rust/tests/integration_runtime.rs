@@ -1,0 +1,211 @@
+//! Cross-language consistency: the AOT PJRT fitness artifact must agree
+//! with the native Rust evaluator on random designs across both memory
+//! technologies and all workloads, and the accproxy artifact must behave
+//! like the analytical noise model.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use imcopt::model::{MemoryTech, NativeEvaluator};
+use imcopt::runtime::Engine;
+use imcopt::space::SearchSpace;
+use imcopt::util::rng::Rng;
+use imcopt::workloads::{by_name, WorkloadSet, ALL_NAMES};
+use std::path::PathBuf;
+
+fn artifact_dir() -> PathBuf {
+    // tests run from the crate root
+    PathBuf::from("artifacts")
+}
+
+fn engine() -> Engine {
+    Engine::load(&artifact_dir()).expect("run `make artifacts` before `cargo test`")
+}
+
+/// Relative-deviation check helper; skips designs within 1% of the area
+/// constraint or the timing boundary, where f32-vs-f64 rounding may
+/// legitimately flip feasibility.
+fn check_agreement(
+    engine: &Engine,
+    space: &SearchSpace,
+    mem: MemoryTech,
+    workload_names: &[&str],
+    n_designs: usize,
+    seed: u64,
+) {
+    let native = NativeEvaluator::new(mem);
+    let mut rng = Rng::seed_from(seed);
+    let raws: Vec<[f64; 10]> = (0..n_designs)
+        .map(|_| space.decode(&space.random(&mut rng)))
+        .collect();
+    for name in workload_names {
+        let w = by_name(name).unwrap();
+        let pjrt = engine.fitness(&raws, &w, mem).unwrap();
+        for (raw, pm) in raws.iter().zip(&pjrt) {
+            let nm = native.evaluate(raw, &w);
+            let marginal = (nm.area / imcopt::model::consts::AREA_CONSTR_MM2 - 1.0)
+                .abs()
+                < 0.01;
+            if !marginal {
+                assert_eq!(
+                    nm.feasible, pm.feasible,
+                    "feasibility mismatch ({name}, {mem:?}): {raw:?}"
+                );
+            }
+            for (label, a, b) in [
+                ("energy", nm.energy, pm.energy),
+                ("latency", nm.latency, pm.latency),
+                ("area", nm.area, pm.area),
+            ] {
+                let rel = ((a - b) / a).abs();
+                assert!(
+                    rel < 5e-3,
+                    "{label} deviates {rel:.2e} on {name} ({mem:?}): native {a:.6e} vs pjrt {b:.6e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fitness_artifact_matches_native_rram() {
+    let engine = engine();
+    check_agreement(
+        &engine,
+        &SearchSpace::rram(),
+        MemoryTech::Rram,
+        &["resnet18", "vgg16", "alexnet", "mobilenetv3"],
+        24,
+        1,
+    );
+}
+
+#[test]
+fn fitness_artifact_matches_native_sram() {
+    let engine = engine();
+    check_agreement(
+        &engine,
+        &SearchSpace::sram(),
+        MemoryTech::Sram,
+        &["resnet18", "vgg16", "alexnet", "mobilenetv3"],
+        24,
+        2,
+    );
+}
+
+#[test]
+fn fitness_artifact_matches_native_all9_spot() {
+    let engine = engine();
+    check_agreement(
+        &engine,
+        &SearchSpace::sram(),
+        MemoryTech::Sram,
+        &ALL_NAMES,
+        6,
+        3,
+    );
+}
+
+#[test]
+fn fitness_artifact_matches_native_tech_variable() {
+    let engine = engine();
+    check_agreement(
+        &engine,
+        &SearchSpace::sram_tech(),
+        MemoryTech::Sram,
+        &["resnet18", "vgg16"],
+        16,
+        4,
+    );
+}
+
+#[test]
+fn batching_chunks_large_populations() {
+    let engine = engine();
+    let space = SearchSpace::rram();
+    let mut rng = Rng::seed_from(5);
+    // 300 designs forces both the b256 and b64 paths plus padding
+    let raws: Vec<[f64; 10]> = (0..300)
+        .map(|_| space.decode(&space.random(&mut rng)))
+        .collect();
+    let w = by_name("alexnet").unwrap();
+    let all = engine.fitness(&raws, &w, MemoryTech::Rram).unwrap();
+    assert_eq!(all.len(), 300);
+    // chunk-invariance: same designs in two calls give identical results
+    let head = engine.fitness(&raws[..64], &w, MemoryTech::Rram).unwrap();
+    for (a, b) in head.iter().zip(&all[..64]) {
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+        assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+    }
+}
+
+#[test]
+fn accproxy_monotone_and_near_analytical() {
+    let engine = engine();
+    assert!(engine.has_accproxy());
+    // monotone in sigma
+    let e0 = engine.accproxy_eps(0.0, 0.0).unwrap();
+    let e1 = engine.accproxy_eps(0.03, 0.0).unwrap();
+    let e2 = engine.accproxy_eps(0.08, 0.0).unwrap();
+    assert!(e0 < e1 && e1 < e2, "{e0} {e1} {e2}");
+    // monotone in IR drop
+    let i1 = engine.accproxy_eps(0.0, 0.01).unwrap();
+    let i2 = engine.accproxy_eps(0.0, 0.05).unwrap();
+    assert!(e0 < i1 && i1 < i2);
+    // same order of magnitude as the analytical fallback
+    let spec = imcopt::accuracy::NoiseSpec::from_design(
+        &[256.0, 256.0, 16.0, 8.0, 24.0, 2.0, 0.85, 2.0, 4096.0, 32.0],
+        MemoryTech::Rram,
+    );
+    let measured = engine
+        .accproxy_eps(spec.weight_sigma(), spec.ir_drop)
+        .unwrap();
+    let analytical = imcopt::accuracy::analytical_eps(&spec, 1);
+    let ratio = measured / analytical;
+    assert!(
+        (0.2..5.0).contains(&ratio),
+        "measured {measured} vs analytical {analytical}"
+    );
+}
+
+#[test]
+fn pjrt_backend_end_to_end_search() {
+    use imcopt::coordinator::{EvalBackend, JointProblem};
+    use imcopt::objective::Objective;
+    use imcopt::search::{GaConfig, GeneticAlgorithm, InitStrategy, Optimizer, SearchBudget};
+    use std::sync::{Arc, Mutex};
+
+    let engine = Arc::new(Mutex::new(engine()));
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let problem = JointProblem::with_backend(
+        &space,
+        &set,
+        EvalBackend::Pjrt(engine, MemoryTech::Rram),
+        Objective::edap(),
+    );
+    let ga = GeneticAlgorithm::new(GaConfig {
+        init: InitStrategy::HammingDiverse { p_h: 60, p_e: 30 },
+        ..GaConfig::four_phase(SearchBudget { pop: 12, gens: 8 })
+    });
+    let r = ga.run(&problem, &mut Rng::seed_from(6));
+    assert!(
+        r.best_score.is_finite(),
+        "PJRT-backed GA found no feasible design"
+    );
+
+    // the same search on the native backend must agree on the best score
+    // (same seed, deterministic evaluators that agree to <0.5%)
+    let native = JointProblem::with_backend(
+        &space,
+        &set,
+        EvalBackend::native(MemoryTech::Rram),
+        Objective::edap(),
+    );
+    let ga2 = GeneticAlgorithm::new(GaConfig {
+        init: InitStrategy::HammingDiverse { p_h: 60, p_e: 30 },
+        ..GaConfig::four_phase(SearchBudget { pop: 12, gens: 8 })
+    });
+    let r2 = ga2.run(&native, &mut Rng::seed_from(6));
+    let rel = ((r.best_score - r2.best_score) / r2.best_score).abs();
+    assert!(rel < 0.02, "pjrt {} vs native {}", r.best_score, r2.best_score);
+}

@@ -1,0 +1,195 @@
+//! Integration tests over the search stack on the real (native) hardware
+//! evaluator: the paper's algorithmic claims at reduced-but-honest scale.
+
+use imcopt::coordinator::{EvalBackend, JointProblem};
+use imcopt::model::MemoryTech;
+use imcopt::objective::{Aggregation, Objective, ObjectiveKind};
+use imcopt::search::{
+    Exhaustive, GaConfig, GeneticAlgorithm, InitStrategy, Optimizer, Problem, SearchBudget,
+};
+use imcopt::space::SearchSpace;
+use imcopt::util::rng::Rng;
+use imcopt::util::stats;
+use imcopt::workloads::WorkloadSet;
+
+fn problem<'a>(
+    space: &'a SearchSpace,
+    set: &'a WorkloadSet,
+    mem: MemoryTech,
+    objective: Objective,
+) -> JointProblem<'a> {
+    JointProblem::with_backend(space, set, EvalBackend::native(mem), objective)
+}
+
+/// The proposed 4-phase GA must find the exhaustive global minimum of the
+/// reduced space (paper Table 3's GA row).
+#[test]
+fn four_phase_ga_reaches_reduced_space_global_minimum() {
+    let space = SearchSpace::rram_reduced();
+    let set = WorkloadSet::cnn4();
+    let p = problem(&space, &set, MemoryTech::Rram, Objective::edap());
+    let scored = Exhaustive::default().score_all(&p);
+    let global = scored
+        .iter()
+        .map(|(_, s)| *s)
+        .fold(f64::INFINITY, f64::min);
+    assert!(global.is_finite());
+
+    let ga = GeneticAlgorithm::new(GaConfig {
+        init: InitStrategy::HammingDiverse { p_h: 150, p_e: 80 },
+        ..GaConfig::four_phase(SearchBudget { pop: 20, gens: 16 })
+    });
+    let mut hits = 0;
+    for seed in 0..3u64 {
+        let r = ga.run(&p, &mut Rng::seed_from(seed));
+        if r.best_score <= global * (1.0 + 1e-9) {
+            hits += 1;
+        }
+    }
+    assert!(hits >= 2, "GA hit global min only {hits}/3 times");
+}
+
+/// §IV-B at reduced scale: across seeds, the 4-phase GA's final scores
+/// should have mean no worse than the classic GA's and (paper claim)
+/// lower spread.
+#[test]
+fn four_phase_beats_classic_on_mean_across_seeds() {
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let budget = SearchBudget { pop: 16, gens: 12 };
+    let seeds: Vec<u64> = (0..4).collect();
+    let run = |cfg: GaConfig, seed: u64| {
+        // fresh problem per run: no cache leakage between algorithms
+        let p = problem(&space, &set, MemoryTech::Rram, Objective::edap());
+        GeneticAlgorithm::new(cfg)
+            .run(&p, &mut Rng::seed_from(seed))
+            .best_score
+    };
+    let classic: Vec<f64> = seeds
+        .iter()
+        .map(|&s| run(GaConfig::classic(budget), s))
+        .collect();
+    let fourphase: Vec<f64> = seeds
+        .iter()
+        .map(|&s| {
+            run(
+                GaConfig {
+                    init: InitStrategy::HammingDiverse { p_h: 200, p_e: 100 },
+                    ..GaConfig::four_phase(budget)
+                },
+                s,
+            )
+        })
+        .collect();
+    assert!(
+        stats::mean(&fourphase) <= stats::mean(&classic) * 1.02,
+        "4-phase mean {} vs classic {} ({fourphase:?} vs {classic:?})",
+        stats::mean(&fourphase),
+        stats::mean(&classic)
+    );
+}
+
+/// §IV-A at reduced scale: joint optimization must not lose to
+/// largest-workload optimization on the joint objective, and should win
+/// on at least one non-largest workload.
+#[test]
+fn joint_beats_largest_workload_on_joint_objective() {
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let objective = Objective::edap();
+    let budget = SearchBudget { pop: 16, gens: 12 };
+    let cfg = GaConfig {
+        init: InitStrategy::HammingDiverse { p_h: 200, p_e: 100 },
+        ..GaConfig::four_phase(budget)
+    };
+
+    let p_joint = problem(&space, &set, MemoryTech::Rram, objective);
+    let joint = GeneticAlgorithm::new(cfg.clone()).run(&p_joint, &mut Rng::seed_from(9));
+
+    let li = set.largest_by_total();
+    let p_largest = problem(&space, &set, MemoryTech::Rram, objective).restricted(li);
+    let largest = GeneticAlgorithm::new(cfg).run(&p_largest, &mut Rng::seed_from(9));
+
+    // evaluate the largest-only design under the joint objective
+    let joint_score_of_largest =
+        p_joint.score_batch(std::slice::from_ref(&largest.best))[0];
+    assert!(
+        joint.best_score <= joint_score_of_largest * 1.001,
+        "joint {} should beat largest-only {} on the joint objective",
+        joint.best_score,
+        joint_score_of_largest
+    );
+}
+
+/// Aggregation schemes must all produce feasible designs and comparable
+/// quality (§IV-C shape).
+#[test]
+fn aggregation_schemes_all_work() {
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let budget = SearchBudget { pop: 12, gens: 8 };
+    let mut scores = Vec::new();
+    for agg in [Aggregation::Max, Aggregation::All, Aggregation::Mean] {
+        let objective = Objective::new(ObjectiveKind::Edap, agg);
+        let p = problem(&space, &set, MemoryTech::Rram, objective);
+        let cfg = GaConfig {
+            init: InitStrategy::HammingDiverse { p_h: 100, p_e: 50 },
+            ..GaConfig::four_phase(budget)
+        };
+        let r = GeneticAlgorithm::new(cfg).run(&p, &mut Rng::seed_from(11));
+        assert!(r.best_score.is_finite(), "{agg:?} found nothing feasible");
+        // report the design under plain EDAP for comparability
+        let edap = Objective::edap();
+        let ms = p.metrics_all_workloads(&r.best);
+        scores.push(edap.score(&ms, None, 32.0));
+    }
+    let worst = stats::max(&scores);
+    let best = stats::min(&scores);
+    assert!(
+        worst / best < 10.0,
+        "aggregations should land within an order of magnitude: {scores:?}"
+    );
+}
+
+/// SRAM designs swap weights: the optimizer must still find feasible
+/// architectures for the 9-workload set (Fig. 10 substrate).
+#[test]
+fn sram_nine_workload_search_is_feasible() {
+    let space = SearchSpace::sram();
+    let set = WorkloadSet::all9();
+    let objective = Objective::new(ObjectiveKind::Edap, Aggregation::Mean);
+    let p = problem(&space, &set, MemoryTech::Sram, objective);
+    let cfg = GaConfig {
+        init: InitStrategy::HammingDiverse { p_h: 100, p_e: 50 },
+        ..GaConfig::four_phase(SearchBudget { pop: 12, gens: 8 })
+    };
+    let r = GeneticAlgorithm::new(cfg).run(&p, &mut Rng::seed_from(13));
+    assert!(r.best_score.is_finite());
+    let ev = p.evaluate_design(&r.best);
+    assert_eq!(ev.metrics.len(), 9);
+    assert!(ev.metrics.iter().all(|m| m.feasible));
+}
+
+/// Determinism: the whole pipeline is seed-reproducible.
+#[test]
+fn searches_are_seed_deterministic() {
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let run = |seed: u64| {
+        let p = problem(&space, &set, MemoryTech::Rram, Objective::edap());
+        let cfg = GaConfig {
+            init: InitStrategy::HammingDiverse { p_h: 80, p_e: 40 },
+            ..GaConfig::four_phase(SearchBudget { pop: 12, gens: 8 })
+        };
+        let r = GeneticAlgorithm::new(cfg).run(&p, &mut Rng::seed_from(seed));
+        (r.best.clone(), r.best_score)
+    };
+    let (d1, s1) = run(99);
+    let (d2, s2) = run(99);
+    assert_eq!(d1, d2);
+    assert_eq!(s1.to_bits(), s2.to_bits());
+    let (_, s3) = run(100);
+    // different seeds normally reach different (even if close) scores;
+    // equality of all three would suggest the seed is ignored
+    assert!(s1.to_bits() != s3.to_bits() || s1 == s3);
+}

@@ -1,0 +1,259 @@
+//! Property-based tests over the core invariants, via the in-crate
+//! mini-proptest harness (`util::proptest`).
+
+use imcopt::accuracy;
+use imcopt::model::{DesignView, MemoryTech, NativeEvaluator};
+use imcopt::objective::{Aggregation, Objective, ObjectiveKind};
+use imcopt::search::sampling::select_diverse;
+use imcopt::space::{idx, Design, SearchSpace};
+use imcopt::util::proptest::check;
+use imcopt::util::rng::Rng;
+use imcopt::workloads::{by_name, ALL_NAMES};
+
+fn any_space(rng: &mut Rng) -> SearchSpace {
+    match rng.below(4) {
+        0 => SearchSpace::rram(),
+        1 => SearchSpace::sram(),
+        2 => SearchSpace::sram_tech(),
+        _ => SearchSpace::rram_reduced(),
+    }
+}
+
+#[test]
+fn hamming_is_a_metric() {
+    check("hamming metric axioms", 200, |rng| {
+        let space = any_space(rng);
+        let a = space.random(rng);
+        let b = space.random(rng);
+        let c = space.random(rng);
+        let (dab, dba) = (a.hamming(&b), b.hamming(&a));
+        if dab != dba {
+            return Err(format!("asymmetric: {dab} vs {dba}"));
+        }
+        if a.hamming(&a) != 0 {
+            return Err("non-zero self distance".into());
+        }
+        if a.hamming(&c) > dab + b.hamming(&c) {
+            return Err("triangle inequality violated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decode_is_total_and_in_domain() {
+    check("decode in-domain", 300, |rng| {
+        let space = any_space(rng);
+        let d = space.random(rng);
+        let raw = space.decode(&d);
+        for (i, &v) in raw.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(format!("param {i} decoded to {v}"));
+            }
+        }
+        // voltage decodes inside the node's Table 7 range
+        let (vmin, vmax) =
+            imcopt::model::tech::voltage_range(raw[idx::TECH_NM]);
+        if raw[idx::V_STEP] < vmin - 1e-9 || raw[idx::V_STEP] > vmax + 1e-9 {
+            return Err(format!("voltage {} outside [{vmin},{vmax}]", raw[idx::V_STEP]));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn linear_index_is_injective_on_samples() {
+    check("linear index injective", 100, |rng| {
+        let space = any_space(rng);
+        let a = space.random(rng);
+        let b = space.random(rng);
+        if a != b && space.linear_index(&a) == space.linear_index(&b) {
+            return Err(format!("collision: {a:?} vs {b:?}"));
+        }
+        if space.linear_index(&a) >= space.size() {
+            return Err("index out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn evaluator_outputs_are_positive_finite_everywhere() {
+    check("evaluator totality", 60, |rng| {
+        let (space, mem) = if rng.chance(0.5) {
+            (SearchSpace::rram(), MemoryTech::Rram)
+        } else {
+            (SearchSpace::sram_tech(), MemoryTech::Sram)
+        };
+        let ev = NativeEvaluator::new(mem);
+        let d = space.random(rng);
+        let raw = space.decode(&d);
+        let w = by_name(ALL_NAMES[rng.below(ALL_NAMES.len())]).unwrap();
+        let m = ev.evaluate(&raw, &w);
+        if !(m.energy.is_finite() && m.energy > 0.0) {
+            return Err(format!("energy {}", m.energy));
+        }
+        if !(m.latency.is_finite() && m.latency > 0.0) {
+            return Err(format!("latency {}", m.latency));
+        }
+        if !(m.area.is_finite() && m.area > 0.0) {
+            return Err(format!("area {}", m.area));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn evaluator_monotone_in_workload_scale() {
+    // Duplicating every layer of a workload must not decrease energy or
+    // latency on a fixed design (mapping feasibility aside).
+    check("monotone in workload size", 40, |rng| {
+        let space = SearchSpace::sram();
+        let ev = NativeEvaluator::new(MemoryTech::Sram);
+        let d = space.random(rng);
+        let raw = space.decode(&d);
+        let base = by_name("alexnet").unwrap();
+        let mut doubled = base.clone();
+        let extra: Vec<_> = base.layers.clone();
+        doubled.layers.extend(extra);
+        let m1 = ev.evaluate(&raw, &base);
+        let m2 = ev.evaluate(&raw, &doubled);
+        if m2.energy < m1.energy {
+            return Err(format!("energy shrank: {} -> {}", m1.energy, m2.energy));
+        }
+        if m2.latency < m1.latency {
+            return Err(format!("latency shrank: {} -> {}", m1.latency, m2.latency));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn area_independent_of_workload_and_v() {
+    check("area invariants", 60, |rng| {
+        let space = SearchSpace::rram();
+        let ev = NativeEvaluator::new(MemoryTech::Rram);
+        let d = space.random(rng);
+        let mut raw = space.decode(&d);
+        let a1 = ev.area(&raw);
+        raw[idx::V_STEP] = 0.9; // voltage must not change area
+        let a2 = ev.area(&raw);
+        if (a1 - a2).abs() > 1e-12 {
+            return Err(format!("area depends on voltage: {a1} vs {a2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn objective_scores_scale_invariantly() {
+    check("objective scaling", 100, |rng| {
+        // doubling every workload's energy doubles Max- and Mean-aggregated
+        // EDAP, and multiplies All-aggregated EDAP by 2^n
+        let n = 1 + rng.below(4);
+        let ms: Vec<imcopt::model::Metrics> = (0..n)
+            .map(|_| imcopt::model::Metrics {
+                energy: rng.range_f64(1e-4, 1e-2),
+                latency: rng.range_f64(1e-4, 1e-2),
+                area: 50.0,
+                feasible: true,
+            })
+            .collect();
+        let doubled: Vec<imcopt::model::Metrics> = ms
+            .iter()
+            .map(|m| imcopt::model::Metrics {
+                energy: m.energy * 2.0,
+                ..*m
+            })
+            .collect();
+        for (agg, factor) in [
+            (Aggregation::Max, 2.0),
+            (Aggregation::Mean, 2.0),
+            (Aggregation::All, 2f64.powi(n as i32)),
+        ] {
+            let obj = Objective::new(ObjectiveKind::Edap, agg);
+            let s1 = obj.score(&ms, None, 32.0);
+            let s2 = obj.score(&doubled, None, 32.0);
+            let rel = (s2 / s1 - factor).abs() / factor;
+            if rel > 1e-9 {
+                return Err(format!("{agg:?}: {s1} -> {s2}, expected x{factor}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diverse_selection_never_shrinks_min_distance_vs_prefix() {
+    check("diversity selection", 30, |rng| {
+        let space = SearchSpace::rram();
+        let pool: Vec<Design> = (0..60).map(|_| space.random(rng)).collect();
+        let k = 5 + rng.below(20);
+        let sel = select_diverse(&pool, k);
+        if sel.len() != k.min(pool.len()) {
+            return Err("wrong selection size".into());
+        }
+        let min_pair = |xs: &[Design]| {
+            let mut m = usize::MAX;
+            for i in 0..xs.len() {
+                for j in (i + 1)..xs.len() {
+                    m = m.min(xs[i].hamming(&xs[j]));
+                }
+            }
+            m
+        };
+        if min_pair(&sel) < min_pair(&pool[..k]) {
+            return Err("diversified set less spread than arbitrary prefix".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn accuracy_estimates_bounded_and_monotone_in_depth() {
+    check("accuracy bounds", 60, |rng| {
+        let space = SearchSpace::rram();
+        let d = space.random(rng);
+        let raw = space.decode(&d);
+        let spec = accuracy::NoiseSpec::from_design(&raw, MemoryTech::Rram);
+        let e1 = accuracy::analytical_eps(&spec, 10);
+        let e2 = accuracy::analytical_eps(&spec, 40);
+        if e2 < e1 {
+            return Err("eps must grow with depth".into());
+        }
+        let (base, chance) = accuracy::baseline("resnet18");
+        let acc = accuracy::accuracy_from_eps(e1, base, chance);
+        if !(acc >= chance - 1e-9 && acc <= base + 1e-9) {
+            return Err(format!("accuracy {acc} outside [{chance},{base}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dpw_and_capacity_relations() {
+    check("bit-slicing capacity", 100, |rng| {
+        let space = SearchSpace::rram();
+        let d = space.random(rng);
+        let raw = space.decode(&d);
+        let view = DesignView::new(&raw, MemoryTech::Rram);
+        // dpw * bits >= 8 and (dpw-1) * bits < 8
+        let b = raw[idx::BITS_CELL];
+        if view.dpw * b < 8.0 || (view.dpw - 1.0) * b >= 8.0 {
+            return Err(format!("dpw {} for bits {b}", view.dpw));
+        }
+        // more bits per cell never needs more crossbars
+        let view1 = DesignView::new(
+            &{
+                let mut r = raw;
+                r[idx::BITS_CELL] = 1.0;
+                r
+            },
+            MemoryTech::Rram,
+        );
+        if view.xbars_for(512.0, 512.0) > view1.xbars_for(512.0, 512.0) {
+            return Err("multi-bit cells increased crossbar demand".into());
+        }
+        Ok(())
+    });
+}
