@@ -1,0 +1,36 @@
+# imcopt build / verify entry points.
+#
+#   make build      release build (native evaluator; no xla needed)
+#   make test       release build + full test suite
+#   make check      CI gate: build + tests + evaluator bench smoke run
+#                   (emits BENCH_eval.json with score_batch designs/sec)
+#   make bench      full evaluator bench (2s budget per case)
+#   make artifacts  export the AOT JAX/Pallas artifacts (needs python+jax)
+#   make pjrt       release build with the PJRT runtime (needs xla crate)
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test check bench artifacts pjrt clean
+
+build:
+	$(CARGO) build --release
+
+test: build
+	$(CARGO) test -q
+
+check:
+	./ci.sh
+
+bench:
+	$(CARGO) bench --bench evaluator
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+pjrt:
+	$(CARGO) build --release --features pjrt
+
+clean:
+	$(CARGO) clean
+	rm -f BENCH_eval.json

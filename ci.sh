@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI gate: release build, full test suite, and a smoke run of the
+# evaluator throughput bench. The bench writes BENCH_eval.json
+# (sequential vs parallel score_batch designs/sec + speedup) for the
+# perf trajectory; the smoke run uses the reduced IMCOPT_BENCH_QUICK
+# budget so the whole gate stays fast.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "=== cargo build --release ==="
+cargo build --release
+
+echo "=== cargo test -q ==="
+cargo test -q
+
+echo "=== bench smoke (evaluator) ==="
+IMCOPT_BENCH_QUICK=1 cargo bench --bench evaluator
+
+if [ -f BENCH_eval.json ]; then
+    echo "=== BENCH_eval.json ==="
+    cat BENCH_eval.json
+else
+    echo "warning: BENCH_eval.json was not produced" >&2
+    exit 1
+fi

@@ -1,11 +1,21 @@
 //! Hot-path throughput: native scalar evaluator vs the AOT PJRT batched
 //! fitness artifact (the production search path), per memory technology
-//! and workload size. This is the §Perf L3-vs-L2/L1 headline bench.
+//! and workload size, plus the parallel `score_batch` pipeline bench that
+//! guards the coordinator's multi-core speedup. This is the §Perf
+//! L3-vs-L2/L1 headline bench.
+//!
+//! Writes `BENCH_eval.json` (designs/sec for the sequential and parallel
+//! `score_batch` paths plus the speedup) for the perf trajectory.
 
+use imcopt::coordinator::{EvalBackend, JointProblem};
 use imcopt::model::{MemoryTech, NativeEvaluator};
+use imcopt::objective::Objective;
 use imcopt::runtime::Engine;
-use imcopt::space::SearchSpace;
+use imcopt::search::Problem;
+use imcopt::space::{Design, SearchSpace};
 use imcopt::util::bench::Bench;
+use imcopt::util::json::Json;
+use imcopt::util::pool;
 use imcopt::util::rng::Rng;
 use imcopt::workloads::{by_name, WorkloadSet};
 
@@ -40,6 +50,85 @@ fn main() {
             }
         }
     });
+
+    // design-major parallel batch (the score_batch miss path's primitive)
+    let threads = pool::default_threads();
+    {
+        let w = by_name("vgg16").unwrap();
+        bench.run(&format!("native/vgg16/batch256/t{threads}"), 256, || {
+            std::hint::black_box(native.evaluate_batch(&raws256, &w, threads));
+        });
+    }
+
+    // ---- score_batch pipeline (sequential vs parallel) ---------------------
+    // Fresh problem per iteration so every design is a cache miss; this is
+    // the coordinator hot path the search loop actually runs.
+    let designs: Vec<Design> = (0..256).map(|_| space.random(&mut rng)).collect();
+    let batch = 256usize;
+    let run_score_batch = |threads: usize, bench: &Bench| {
+        bench.run(&format!("score_batch/native-cnn4/{batch}/t{threads}"), batch, || {
+            let p = JointProblem::with_backend(
+                &space,
+                &set,
+                EvalBackend::native(MemoryTech::Rram),
+                Objective::edap(),
+            )
+            .with_threads(threads);
+            std::hint::black_box(p.score_batch(&designs));
+        })
+    };
+    let m_seq = run_score_batch(1, &bench);
+    let m_par = run_score_batch(threads, &bench);
+
+    // determinism guard: parallel scores must be bit-identical to
+    // sequential, and the caches must agree
+    let p1 = JointProblem::with_backend(
+        &space,
+        &set,
+        EvalBackend::native(MemoryTech::Rram),
+        Objective::edap(),
+    )
+    .with_threads(1);
+    let pn = JointProblem::with_backend(
+        &space,
+        &set,
+        EvalBackend::native(MemoryTech::Rram),
+        Objective::edap(),
+    )
+    .with_threads(threads);
+    let s1 = p1.score_batch(&designs);
+    let sn = pn.score_batch(&designs);
+    let identical = s1
+        .iter()
+        .zip(&sn)
+        .all(|(a, b)| a.to_bits() == b.to_bits())
+        && p1.cached_scores().len() == pn.cached_scores().len();
+    assert!(identical, "parallel score_batch diverged from sequential");
+
+    let seq_dps = batch as f64 / m_seq.mean.as_secs_f64();
+    let par_dps = batch as f64 / m_par.mean.as_secs_f64();
+    let speedup = m_seq.mean.as_secs_f64() / m_par.mean.as_secs_f64();
+    println!(
+        "score_batch speedup: {speedup:.2}x at {threads} threads \
+         ({seq_dps:.1} -> {par_dps:.1} designs/s), identical scores: {identical}"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("score_batch".into())),
+        ("space", Json::Str("rram-32nm".into())),
+        ("workload_set", Json::Str("cnn4".into())),
+        ("batch", Json::Num(batch as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("designs_per_sec_seq", Json::Num(seq_dps)),
+        ("designs_per_sec_parallel", Json::Num(par_dps)),
+        ("speedup", Json::Num(speedup)),
+        ("identical_scores", Json::Bool(identical)),
+    ]);
+    let out = "BENCH_eval.json";
+    match std::fs::write(out, report.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 
     // ---- PJRT artifact -------------------------------------------------------
     match Engine::load_default() {

@@ -31,6 +31,10 @@ pub struct ExpContext {
     pub quick: bool,
     pub backend_choice: BackendChoice,
     pub out_dir: PathBuf,
+    /// Worker threads for parallel population evaluation. Defaults to the
+    /// machine's available parallelism; override with `--threads N` or the
+    /// `IMCOPT_THREADS` environment variable (scores are identical for any
+    /// value — only throughput changes).
     pub threads: usize,
     /// Lazily loaded PJRT engine, shared across experiments.
     engine: Mutex<Option<Option<Arc<Mutex<Engine>>>>>,
@@ -141,7 +145,8 @@ impl ExpContext {
         }
     }
 
-    /// Convenience: build a joint problem.
+    /// Convenience: build a joint problem wired to this context's backend
+    /// and worker-thread count (`--threads` / `IMCOPT_THREADS`).
     pub fn problem<'a>(
         &self,
         space: &'a SearchSpace,
@@ -150,6 +155,7 @@ impl ExpContext {
         objective: Objective,
     ) -> JointProblem<'a> {
         JointProblem::with_backend(space, workloads, self.backend(mem), objective)
+            .with_threads(self.threads)
     }
 }
 

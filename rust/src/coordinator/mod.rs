@@ -3,10 +3,26 @@
 //! `search`; this module wires search to evaluation).
 //!
 //! The search loop scores populations through [`JointProblem`], which
-//! decodes designs, routes hardware evaluation to the AOT **PJRT artifact**
-//! (default; Python never runs here) or the native analytical evaluator,
-//! memoizes per-design metrics (GAs re-visit elites constantly), and
-//! applies the configured objective across the workload set.
+//! computes each design's cache key (`SearchSpace::linear_index`) exactly
+//! once per call, resolves hits against a 16-way **sharded** memo cache
+//! (`util::shards::ShardedCache`, striped locks keyed by `key % SHARDS`),
+//! and evaluates misses in parallel on `threads` workers
+//! (`util::pool::parallel_map`; configured by `--threads` /
+//! `IMCOPT_THREADS` via [`ExpContext`]).
+//!
+//! Threading model per backend:
+//!
+//! * **Native** — design-major fan-out: each worker evaluates one design
+//!   across the whole active workload set and scores it, so the batch
+//!   scales with cores and per-design results are bit-identical to the
+//!   sequential path (every design's evaluation is independent and
+//!   deterministic; the accuracy-proxy memo computes under its stripe
+//!   lock, so cache contents are thread-count-invariant too).
+//! * **PJRT** — executions stay batched per workload, chunked by
+//!   `Engine::max_fitness_batch`; the engine `Mutex` is held **per
+//!   execution only**, and a dedicated scorer thread overlaps the
+//!   native-side decode/score/accuracy work of completed chunks with the
+//!   artifact runs of later chunks.
 
 pub mod config;
 
@@ -16,7 +32,9 @@ use crate::objective::{Aggregation, Objective, ObjectiveKind};
 use crate::runtime::Engine;
 use crate::search::Problem;
 use crate::space::{idx, Design, SearchSpace};
+use crate::util::pool;
 use crate::util::rng::Rng;
+use crate::util::shards::ShardedCache;
 use crate::workloads::WorkloadSet;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -51,24 +69,6 @@ impl EvalBackend {
             EvalBackend::Pjrt(..) => "pjrt",
         }
     }
-
-    /// Evaluate a batch of decoded designs against one workload.
-    fn eval_batch(
-        &self,
-        raws: &[[f64; 10]],
-        workload: &crate::workloads::Workload,
-    ) -> Vec<Metrics> {
-        match self {
-            EvalBackend::Native(ev) => {
-                raws.iter().map(|r| ev.evaluate(r, workload)).collect()
-            }
-            EvalBackend::Pjrt(engine, mem) => engine
-                .lock()
-                .unwrap()
-                .fitness(raws, workload, *mem)
-                .expect("PJRT fitness execution failed"),
-        }
-    }
 }
 
 /// Per-design evaluation record (metrics per workload + accuracies when
@@ -89,11 +89,13 @@ pub struct JointProblem<'a> {
     /// Restrict joint evaluation to this subset of workload indices
     /// (used by "separate search" baselines). `None` = all workloads.
     pub subset: Option<Vec<usize>>,
-    cache: Mutex<HashMap<u64, Evaluations>>,
+    /// Worker threads for miss evaluation (1 = sequential).
+    threads: usize,
+    cache: ShardedCache<u64, Evaluations>,
     evals: AtomicUsize,
     /// Cache for the (expensive) accuracy proxy keyed by (rows, cols,
     /// bits) — the only parameters the noise model depends on.
-    acc_cache: Mutex<HashMap<(u16, u16, u16), f64>>,
+    acc_cache: ShardedCache<(u16, u16, u16), f64>,
 }
 
 impl<'a> JointProblem<'a> {
@@ -121,10 +123,18 @@ impl<'a> JointProblem<'a> {
             backend,
             objective,
             subset: None,
-            cache: Mutex::new(HashMap::new()),
+            threads: pool::default_threads(),
+            cache: ShardedCache::new(),
             evals: AtomicUsize::new(0),
-            acc_cache: Mutex::new(HashMap::new()),
+            acc_cache: ShardedCache::new(),
         }
+    }
+
+    /// Set the worker-thread count for miss evaluation (builder-style).
+    /// Scores and cache contents are identical for any thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Restrict to a single workload (the paper's "separate search").
@@ -142,27 +152,24 @@ impl<'a> JointProblem<'a> {
 
     /// Accuracy estimates per active workload for one design (Fig. 8).
     /// Uses the AOT noisy-crossbar proxy when available, with the
-    /// analytical model as fallback; memoized on (rows, cols, bits).
+    /// analytical model as fallback; memoized on (rows, cols, bits) in a
+    /// sharded cache whose stripe lock is held during the computation, so
+    /// concurrent workers compute each key exactly once.
     fn accuracies(&self, raw: &[f64; 10], d: &Design) -> Vec<f64> {
         let mem = self.backend.mem();
         let key = (d.0[idx::ROWS], d.0[idx::COLS], d.0[idx::BITS_CELL]);
-        let per_layer_eps = {
-            let mut cache = self.acc_cache.lock().unwrap();
-            *cache.entry(key).or_insert_with(|| {
-                let spec = accuracy::NoiseSpec::from_design(raw, mem);
-                if let EvalBackend::Pjrt(engine, _) = &self.backend {
-                    let eng = engine.lock().unwrap();
-                    if eng.has_accproxy() {
-                        if let Ok(eps) =
-                            eng.accproxy_eps(spec.weight_sigma(), spec.ir_drop)
-                        {
-                            return eps;
-                        }
+        let per_layer_eps = self.acc_cache.get_or_insert_with(key, || {
+            let spec = accuracy::NoiseSpec::from_design(raw, mem);
+            if let EvalBackend::Pjrt(engine, _) = &self.backend {
+                let eng = engine.lock().unwrap();
+                if eng.has_accproxy() {
+                    if let Ok(eps) = eng.accproxy_eps(spec.weight_sigma(), spec.ir_drop) {
+                        return eps;
                     }
                 }
-                accuracy::analytical_eps(&spec, 1)
-            })
-        };
+            }
+            accuracy::analytical_eps(&spec, 1)
+        });
         self.active_indices()
             .iter()
             .map(|&wi| {
@@ -174,31 +181,170 @@ impl<'a> JointProblem<'a> {
             .collect()
     }
 
+    /// Assemble the full evaluation record of one design from its
+    /// per-workload metrics (accuracies + objective score).
+    fn build_evaluation(
+        &self,
+        d: &Design,
+        raw: &[f64; 10],
+        metrics: Vec<Metrics>,
+    ) -> Evaluations {
+        let accuracies = if self.objective.kind == ObjectiveKind::EdapAccuracy {
+            Some(self.accuracies(raw, d))
+        } else {
+            None
+        };
+        let score = self
+            .objective
+            .score(&metrics, accuracies.as_deref(), raw[idx::TECH_NM]);
+        Evaluations {
+            metrics,
+            accuracies,
+            score,
+        }
+    }
+
+    /// Evaluate cache-missing designs (deduplicated by the caller) and
+    /// return one record per input, in order. This is the parallel hot
+    /// path; results are bit-identical for any thread count.
+    fn evaluate_misses(&self, designs: &[&Design], raws: &[[f64; 10]]) -> Vec<Evaluations> {
+        debug_assert_eq!(designs.len(), raws.len());
+        self.evals.fetch_add(raws.len(), Ordering::Relaxed);
+        let active = self.active_indices();
+        match &self.backend {
+            EvalBackend::Native(ev) => {
+                // design-major: each worker evaluates one design across the
+                // whole active workload set and scores it
+                let items: Vec<usize> = (0..raws.len()).collect();
+                pool::parallel_map(&items, self.threads, |&i| {
+                    let mut metrics = Vec::with_capacity(active.len());
+                    for &wi in &active {
+                        metrics.push(ev.evaluate(&raws[i], &self.workloads.workloads[wi]));
+                    }
+                    self.build_evaluation(designs[i], &raws[i], metrics)
+                })
+            }
+            EvalBackend::Pjrt(engine, mem) => {
+                // workload-major batched executions, chunked by the largest
+                // compiled batch; the engine lock is held per execution
+                // only, and a scorer thread overlaps the native-side
+                // scoring of finished chunks with later artifact runs
+                let maxb = engine.lock().unwrap().max_fitness_batch().max(1);
+                let results: Vec<Mutex<Option<Evaluations>>> =
+                    (0..raws.len()).map(|_| Mutex::new(None)).collect();
+                std::thread::scope(|scope| {
+                    let (tx, rx) =
+                        std::sync::mpsc::channel::<(usize, Vec<Vec<Metrics>>)>();
+                    let results_ref = &results;
+                    scope.spawn(move || {
+                        for (start, per_design) in rx {
+                            let items: Vec<usize> = (0..per_design.len()).collect();
+                            let evs = pool::parallel_map(&items, self.threads, |&j| {
+                                self.build_evaluation(
+                                    designs[start + j],
+                                    &raws[start + j],
+                                    per_design[j].clone(),
+                                )
+                            });
+                            for (j, ev) in evs.into_iter().enumerate() {
+                                *results_ref[start + j].lock().unwrap() = Some(ev);
+                            }
+                        }
+                    });
+                    let mut start = 0usize;
+                    for chunk in raws.chunks(maxb) {
+                        let mut per_design: Vec<Vec<Metrics>> =
+                            vec![Vec::with_capacity(active.len()); chunk.len()];
+                        for &wi in &active {
+                            let w = &self.workloads.workloads[wi];
+                            let ms = engine
+                                .lock()
+                                .unwrap()
+                                .fitness(chunk, w, *mem)
+                                .expect("PJRT fitness execution failed");
+                            for (slot, m) in per_design.iter_mut().zip(ms) {
+                                slot.push(m);
+                            }
+                        }
+                        tx.send((start, per_design)).expect("scorer thread alive");
+                        start += chunk.len();
+                    }
+                    drop(tx); // scorer drains and exits
+                });
+                results
+                    .into_iter()
+                    .map(|m| m.into_inner().unwrap().expect("chunk scored"))
+                    .collect()
+            }
+        }
+    }
+
     /// Full evaluation record for one design (used by experiment reports).
+    /// The cache key is computed once; a hit returns the memoized record
+    /// and a miss evaluates directly without re-entering `score_batch`.
     pub fn evaluate_design(&self, d: &Design) -> Evaluations {
-        self.score_batch(std::slice::from_ref(d));
-        self.cache
-            .lock()
-            .unwrap()
-            .get(&self.space.linear_index(d))
-            .cloned()
-            .expect("design just scored must be cached")
+        let key = self.space.linear_index(d);
+        if let Some(ev) = self.cache.get(&key) {
+            return ev;
+        }
+        let raw = self.space.decode(d);
+        let ev = self
+            .evaluate_misses(&[d], std::slice::from_ref(&raw))
+            .pop()
+            .expect("one evaluation");
+        self.cache.insert(key, ev.clone());
+        ev
     }
 
     /// Per-workload metrics of a design on *all* workloads regardless of
-    /// subset (for cross-reporting a separately-optimized design).
+    /// subset (for cross-reporting a separately-optimized design). The
+    /// design is decoded once and evaluated against the full workload set
+    /// in one pass (reusing the memo cache when it already covers it).
     pub fn metrics_all_workloads(&self, d: &Design) -> Vec<Metrics> {
+        if self.subset.is_none() {
+            if let Some(metrics) = self.cache.map_get(&self.space.linear_index(d), |ev| {
+                ev.metrics.clone()
+            }) {
+                return metrics;
+            }
+        }
         let raw = self.space.decode(d);
-        self.workloads
-            .workloads
-            .iter()
-            .map(|w| self.backend.eval_batch(std::slice::from_ref(&raw), w)[0])
-            .collect()
+        match &self.backend {
+            EvalBackend::Native(ev) => {
+                pool::parallel_map(&self.workloads.workloads, self.threads, |w| {
+                    ev.evaluate(&raw, w)
+                })
+            }
+            EvalBackend::Pjrt(engine, mem) => {
+                // the artifact shape is (designs × one workload), so this
+                // stays one execution per workload, but under a single lock
+                // hold with a single decode
+                let eng = engine.lock().unwrap();
+                self.workloads
+                    .workloads
+                    .iter()
+                    .map(|w| {
+                        eng.fitness(std::slice::from_ref(&raw), w, *mem)
+                            .expect("PJRT fitness execution failed")[0]
+                    })
+                    .collect()
+            }
+        }
     }
 
     /// Number of cached distinct designs (diagnostics).
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.len()
+    }
+
+    /// Cached (linear index, score) pairs sorted by key — used by the
+    /// thread-count-determinism tests to compare cache contents.
+    pub fn cached_scores(&self) -> Vec<(u64, f64)> {
+        self.cache
+            .sorted_entries()
+            .into_iter()
+            .map(|(k, ev)| (k, ev.score))
+            .collect()
     }
 }
 
@@ -208,78 +354,48 @@ impl Problem for JointProblem<'_> {
     }
 
     fn score_batch(&self, designs: &[Design]) -> Vec<f64> {
+        // one linear_index per design, computed exactly once
+        let keys: Vec<u64> = designs.iter().map(|d| self.space.linear_index(d)).collect();
         // resolve cache hits, collect misses
         let mut out = vec![f64::NAN; designs.len()];
         let mut miss_idx: Vec<usize> = Vec::new();
-        {
-            let cache = self.cache.lock().unwrap();
-            for (i, d) in designs.iter().enumerate() {
-                if let Some(ev) = cache.get(&self.space.linear_index(d)) {
-                    out[i] = ev.score;
-                } else {
-                    miss_idx.push(i);
-                }
+        for (i, key) in keys.iter().enumerate() {
+            match self.cache.map_get(key, |ev| ev.score) {
+                Some(s) => out[i] = s,
+                None => miss_idx.push(i),
             }
         }
         if miss_idx.is_empty() {
             return out;
         }
-        // de-duplicate misses within the batch
-        let mut uniq: Vec<(u64, usize)> = Vec::new(); // (key, first index)
+        // de-duplicate misses within the batch (first occurrence wins,
+        // deterministic order)
+        let mut uniq: Vec<(u64, usize)> = Vec::new();
         {
             let mut seen: HashMap<u64, usize> = HashMap::new();
             for &i in &miss_idx {
-                let key = self.space.linear_index(&designs[i]);
-                seen.entry(key).or_insert(i);
+                seen.entry(keys[i]).or_insert(i);
             }
             uniq.extend(seen.into_iter());
         }
-        uniq.sort_by_key(|&(_, i)| i); // deterministic order
-        let raws: Vec<[f64; 10]> =
-            uniq.iter().map(|&(_, i)| self.space.decode(&designs[i])).collect();
-        self.evals.fetch_add(raws.len(), Ordering::Relaxed);
+        uniq.sort_by_key(|&(_, i)| i);
+        let miss_designs: Vec<&Design> = uniq.iter().map(|&(_, i)| &designs[i]).collect();
+        let miss_raws: Vec<[f64; 10]> = uniq
+            .iter()
+            .map(|&(_, i)| self.space.decode(&designs[i]))
+            .collect();
 
-        // evaluate per active workload in workload-major order (each
-        // workload is one batched artifact execution)
-        let active = self.active_indices();
-        let mut per_design_metrics: Vec<Vec<Metrics>> =
-            vec![Vec::with_capacity(active.len()); raws.len()];
-        for &wi in &active {
-            let w = &self.workloads.workloads[wi];
-            let ms = self.backend.eval_batch(&raws, w);
-            for (slot, m) in per_design_metrics.iter_mut().zip(ms) {
-                slot.push(m);
-            }
-        }
+        let evaluations = self.evaluate_misses(&miss_designs, &miss_raws);
 
-        // score + cache
-        let mut cache = self.cache.lock().unwrap();
-        for ((key, di), metrics) in uniq.iter().zip(per_design_metrics) {
-            let d = &designs[*di];
-            let raw = self.space.decode(d);
-            let accuracies = if self.objective.kind == ObjectiveKind::EdapAccuracy {
-                Some(self.accuracies(&raw, d))
-            } else {
-                None
-            };
-            let score = self.objective.score(
-                &metrics,
-                accuracies.as_deref(),
-                raw[idx::TECH_NM],
-            );
-            cache.insert(
-                *key,
-                Evaluations {
-                    metrics,
-                    accuracies,
-                    score,
-                },
-            );
+        // cache + fill outputs (duplicates within the batch share the
+        // unique design's record; no cache re-read needed)
+        let mut miss_scores: HashMap<u64, f64> = HashMap::with_capacity(uniq.len());
+        for ((key, _), ev) in uniq.iter().zip(evaluations) {
+            miss_scores.insert(*key, ev.score);
+            self.cache.insert(*key, ev);
         }
-        for i in 0..designs.len() {
-            if out[i].is_nan() {
-                out[i] = cache[&self.space.linear_index(&designs[i])].score;
-            }
+        for &i in &miss_idx {
+            out[i] = miss_scores[&keys[i]];
         }
         out
     }
@@ -403,6 +519,53 @@ mod tests {
     }
 
     #[test]
+    fn evaluate_design_caches_and_reuses() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Rram);
+        let mut rng = Rng::seed_from(11);
+        let d = p.random_candidate(&mut rng);
+        let ev1 = p.evaluate_design(&d);
+        let n = p.evals();
+        // second call is a pure cache hit
+        let ev2 = p.evaluate_design(&d);
+        assert_eq!(p.evals(), n);
+        assert_eq!(ev1.score.to_bits(), ev2.score.to_bits());
+        // score_batch agrees with the record and hits the same cache
+        let s = p.score_batch(std::slice::from_ref(&d))[0];
+        assert_eq!(p.evals(), n);
+        assert_eq!(s.to_bits(), ev1.score.to_bits());
+        assert_eq!(p.cache_len(), 1);
+    }
+
+    #[test]
+    fn score_batch_thread_invariant() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let mut rng = Rng::seed_from(12);
+        let mut batch: Vec<Design> = (0..24).map(|_| space.random(&mut rng)).collect();
+        // inject duplicates
+        let dup = batch[3].clone();
+        batch.push(dup.clone());
+        batch.insert(7, dup);
+        let p1 = problem(&space, &set, MemoryTech::Rram).with_threads(1);
+        let p4 = problem(&space, &set, MemoryTech::Rram).with_threads(4);
+        let s1 = p1.score_batch(&batch);
+        let s4 = p4.score_batch(&batch);
+        for (a, b) in s1.iter().zip(&s4) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let c1 = p1.cached_scores();
+        let c4 = p4.cached_scores();
+        assert_eq!(c1.len(), c4.len());
+        for ((k1, v1), (k4, v4)) in c1.iter().zip(&c4) {
+            assert_eq!(k1, k4);
+            assert_eq!(v1.to_bits(), v4.to_bits());
+        }
+        assert_eq!(p1.evals(), p4.evals());
+    }
+
+    #[test]
     fn feasible_designs_exist_and_score_finite() {
         let space = SearchSpace::rram();
         let set = WorkloadSet::cnn4();
@@ -452,6 +615,25 @@ mod tests {
         assert_eq!(ev_one.metrics.len(), 1);
         // single-workload joint score == that workload's own score
         assert!(ev_one.score <= ev_all.score || !ev_all.score.is_finite());
+        // cross-reporting still covers the full set
+        assert_eq!(p_one.metrics_all_workloads(&d).len(), 4);
+    }
+
+    #[test]
+    fn metrics_all_workloads_reuses_cache() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Rram);
+        let mut rng = Rng::seed_from(13);
+        let d = p.random_candidate(&mut rng);
+        let ev = p.evaluate_design(&d);
+        let n = p.evals();
+        let ms = p.metrics_all_workloads(&d);
+        assert_eq!(p.evals(), n, "cached record must be reused");
+        for (a, b) in ms.iter().zip(&ev.metrics) {
+            assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        }
     }
 
     #[test]

@@ -29,9 +29,10 @@
 //!   configs.
 //! * [`experiments`] — one module per paper table/figure, regenerating the
 //!   published rows/series.
-//! * [`util`] — std-only infrastructure (RNG, thread pool, JSON, stats,
-//!   tables, CLI, property-testing and bench harnesses); the offline crate
-//!   registry has no tokio/rayon/clap/criterion/serde/rand.
+//! * [`util`] — std-only infrastructure (RNG, thread pool, sharded
+//!   striped-lock cache, JSON, stats, tables, CLI, property-testing and
+//!   bench harnesses); the offline crate registry has no
+//!   tokio/rayon/clap/criterion/serde/rand.
 //!
 //! ## Quickstart
 //!

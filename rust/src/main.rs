@@ -57,7 +57,10 @@ fn print_help() {
          \x20 space          list search-space variants\n\
          \x20 artifacts      verify AOT artifacts vs the native evaluator\n\
          \n\
-         common options: --seed N --quick --native --pjrt --out DIR",
+         common options: --seed N --quick --native --pjrt --out DIR\n\
+         \x20 --threads N    worker threads for population evaluation\n\
+         \x20                (default: IMCOPT_THREADS env var, else all cores;\n\
+         \x20                scores are identical for any thread count)",
         ids = experiments::ALL_IDS.join(", ")
     );
 }

@@ -230,6 +230,20 @@ impl NativeEvaluator {
         }
     }
 
+    /// Evaluate a batch of decoded designs on one workload, design-major
+    /// across `threads` workers. Output order matches `raws`, and every
+    /// per-design result is bit-identical to a sequential
+    /// [`NativeEvaluator::evaluate`] call (each design's evaluation is
+    /// independent and deterministic).
+    pub fn evaluate_batch(
+        &self,
+        raws: &[[f64; 10]],
+        w: &Workload,
+        threads: usize,
+    ) -> Vec<Metrics> {
+        crate::util::pool::parallel_map(raws, threads, |raw| self.evaluate(raw, w))
+    }
+
     /// Weight-stationary crossbar layer.
     fn static_layer_cost(
         &self,
@@ -469,6 +483,28 @@ mod tests {
                 assert!(m.energy.is_finite() && m.energy > 0.0);
                 assert!(m.latency.is_finite() && m.latency > 0.0);
                 assert!(m.area.is_finite() && m.area > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_batch_matches_sequential_any_thread_count() {
+        let space = SearchSpace::rram();
+        let mut rng = Rng::seed_from(23);
+        let raws: Vec<[f64; 10]> = (0..40)
+            .map(|_| space.decode(&space.random(&mut rng)))
+            .collect();
+        let ev = NativeEvaluator::new(MemoryTech::Rram);
+        let w = resnet18();
+        let seq: Vec<Metrics> = raws.iter().map(|r| ev.evaluate(r, &w)).collect();
+        for threads in [1, 2, 8] {
+            let par = ev.evaluate_batch(&raws, &w, threads);
+            assert_eq!(par.len(), seq.len());
+            for (a, b) in par.iter().zip(&seq) {
+                assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+                assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+                assert_eq!(a.area.to_bits(), b.area.to_bits());
+                assert_eq!(a.feasible, b.feasible);
             }
         }
     }

@@ -7,7 +7,6 @@
 //! reported scores carry the paper's mJ·ms·mm² EDAP scale.
 
 use crate::model::{tech, Metrics};
-use crate::util::stats;
 
 /// Which metric product the objective minimizes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,11 +62,47 @@ impl Aggregation {
         }
     }
 
-    fn apply(&self, xs: &[f64]) -> f64 {
+    /// Aggregate a slice (reporting paths); the scoring hot path streams
+    /// through `init`/`accumulate`/`finish` directly to avoid temporaries.
+    pub fn apply(&self, xs: &[f64]) -> f64 {
+        let mut acc = self.init();
+        for &x in xs {
+            acc = self.accumulate(acc, x);
+        }
+        self.finish(acc, xs.len())
+    }
+
+    /// Streaming aggregation (identity / accumulate / finalize), so the
+    /// hot scoring path folds unit conversion into one loop instead of
+    /// materializing per-workload `Vec`s. Matches the batch [`Self::apply`]
+    /// bit-for-bit: same fold order, same NaN handling as `stats::max`.
+    fn init(&self) -> f64 {
         match self {
-            Aggregation::Max => stats::max(xs),
-            Aggregation::All => xs.iter().product(),
-            Aggregation::Mean => stats::mean(xs),
+            Aggregation::Max => f64::NEG_INFINITY,
+            Aggregation::All => 1.0,
+            Aggregation::Mean => 0.0,
+        }
+    }
+
+    fn accumulate(&self, acc: f64, x: f64) -> f64 {
+        match self {
+            // f64::max ignores a NaN operand, like `stats::max`'s filter
+            Aggregation::Max => acc.max(x),
+            Aggregation::All => acc * x,
+            Aggregation::Mean => acc + x,
+        }
+    }
+
+    fn finish(&self, acc: f64, n: usize) -> f64 {
+        match self {
+            Aggregation::Max | Aggregation::All => acc,
+            Aggregation::Mean => {
+                if n == 0 {
+                    0.0
+                } else {
+                    acc / n as f64
+                }
+            }
         }
     }
 }
@@ -116,11 +151,17 @@ impl Objective {
         if area > self.area_constraint {
             return f64::INFINITY;
         }
-        // paper units: mJ / ms
-        let e: Vec<f64> = per_workload.iter().map(|m| m.energy * 1e3).collect();
-        let l: Vec<f64> = per_workload.iter().map(|m| m.latency * 1e3).collect();
-        let ae = self.agg.apply(&e);
-        let al = self.agg.apply(&l);
+        // paper units: mJ / ms — unit conversion folded into one
+        // allocation-free aggregation pass (this runs once per evaluated
+        // design on the search hot path)
+        let mut acc_e = self.agg.init();
+        let mut acc_l = self.agg.init();
+        for m in per_workload {
+            acc_e = self.agg.accumulate(acc_e, m.energy * 1e3);
+            acc_l = self.agg.accumulate(acc_l, m.latency * 1e3);
+        }
+        let ae = self.agg.finish(acc_e, per_workload.len());
+        let al = self.agg.finish(acc_l, per_workload.len());
         match self.kind {
             ObjectiveKind::Edap => ae * al * area,
             ObjectiveKind::Edp => ae * al,
@@ -218,6 +259,19 @@ mod tests {
         let hi = obj.score(&ms, Some(&[0.9, 0.9]), 32.0);
         let lo = obj.score(&ms, Some(&[0.5, 0.5]), 32.0);
         assert!(lo > hi); // lower accuracy -> worse (higher) score
+    }
+
+    #[test]
+    fn streaming_aggregation_matches_batch_semantics() {
+        let xs = [2.0, 8.0, 4.0, 1.0];
+        assert_eq!(Aggregation::Max.apply(&xs).to_bits(), 8.0f64.to_bits());
+        assert_eq!(Aggregation::All.apply(&xs).to_bits(), 64.0f64.to_bits());
+        assert_eq!(
+            Aggregation::Mean.apply(&xs).to_bits(),
+            (xs.iter().sum::<f64>() / 4.0).to_bits()
+        );
+        // NaN handling mirrors stats::max (NaN operands are ignored)
+        assert_eq!(Aggregation::Max.apply(&[f64::NAN, 3.0, 1.0]), 3.0);
     }
 
     #[test]

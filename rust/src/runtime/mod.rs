@@ -16,13 +16,19 @@
 //! * `accproxy.hlo.txt` — the noisy-crossbar accuracy proxy (L1 Pallas
 //!   crossbar kernel under an L2 error-measurement graph):
 //!   `(w[P,P], x[XB,P], noise[ITERS,P,P], params[4]) → scalar ε̄`.
+//!
+//! Threading: a PJRT execution is not re-entrant, so the `Engine` lives
+//! behind a `Mutex` (see `EvalBackend::Pjrt`). Callers on the parallel
+//! search path chunk their batches by [`Engine::max_fitness_batch`] and
+//! hold the lock **per execution only**, so native-side decode/score work
+//! on other threads overlaps with artifact runs.
+//!
+//! The whole PJRT path is compiled only with the `pjrt` cargo feature
+//! (the `xla` crate and its shared libraries). Without it a stub `Engine`
+//! with the same API reports artifacts as unavailable and every backend
+//! falls back to the native evaluator.
 
-use crate::model::{MemoryTech, Metrics};
-use crate::util::json::{self, Json};
-use crate::workloads::{Workload, LAYER_FEATURES, L_MAX};
-use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 /// Default artifacts directory (relative to the repo root / CWD).
 pub fn default_artifact_dir() -> PathBuf {
@@ -36,259 +42,337 @@ pub const PROXY_DIM: usize = 256;
 pub const PROXY_BATCH: usize = 8;
 pub const PROXY_ITERS: usize = 30;
 
-/// One compiled fitness executable for a fixed (batch, lmax) shape.
-struct FitnessExe {
-    batch: usize,
-    lmax: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod engine_impl {
+    use super::{default_artifact_dir, PROXY_BATCH, PROXY_DIM, PROXY_ITERS};
+    use crate::model::{MemoryTech, Metrics};
+    use crate::util::json::{self, Json};
+    use crate::workloads::{Workload, LAYER_FEATURES, L_MAX};
+    use anyhow::{bail, Context, Result};
+    use std::collections::BTreeMap;
+    use std::path::Path;
 
-/// The PJRT engine owning the CPU client and all compiled executables.
-pub struct Engine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    fitness: Vec<FitnessExe>,
-    accproxy: Option<xla::PjRtLoadedExecutable>,
-    /// Fixed noise draws for the accuracy proxy (generated once, shared
-    /// across designs for a fair comparison; the paper averages 30 random
-    /// iterations per design).
-    proxy_noise: Vec<f32>,
-    proxy_w: Vec<f32>,
-    proxy_x: Vec<f32>,
-    /// Manifest metadata (for diagnostics).
-    pub manifest: BTreeMap<String, Json>,
-}
+    /// One compiled fitness executable for a fixed (batch, lmax) shape.
+    struct FitnessExe {
+        batch: usize,
+        lmax: usize,
+        exe: xla::PjRtLoadedExecutable,
+    }
 
-// SAFETY: the xla crate's client/executable handles contain `Rc`s and raw
-// PJRT pointers, so `Engine` is not auto-`Send`. Every `Engine` in this
-// crate lives behind a `Mutex` (see `EvalBackend::Pjrt`) and no `Rc` clone
-// or buffer handle escapes a locked scope — all literals and result buffers
-// are created, consumed and dropped inside the method call — so moving the
-// whole engine across threads between locked accesses is sound.
-unsafe impl Send for Engine {}
+    /// The PJRT engine owning the CPU client and all compiled executables.
+    pub struct Engine {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        fitness: Vec<FitnessExe>,
+        accproxy: Option<xla::PjRtLoadedExecutable>,
+        /// Fixed noise draws for the accuracy proxy (generated once, shared
+        /// across designs for a fair comparison; the paper averages 30
+        /// random iterations per design).
+        proxy_noise: Vec<f32>,
+        proxy_w: Vec<f32>,
+        proxy_x: Vec<f32>,
+        /// Manifest metadata (for diagnostics).
+        pub manifest: BTreeMap<String, Json>,
+    }
 
-impl Engine {
-    /// Load every artifact listed in `<dir>/manifest.json` and compile on
-    /// the PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!(
-                "cannot read {} — run `make artifacts` first",
-                manifest_path.display()
-            )
-        })?;
-        let manifest = json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("bad manifest.json: {e}"))?;
-        let client = xla::PjRtClient::cpu()?;
+    // SAFETY: the xla crate's client/executable handles contain `Rc`s and
+    // raw PJRT pointers, so `Engine` is not auto-`Send`. Every `Engine` in
+    // this crate lives behind a `Mutex` (see `EvalBackend::Pjrt`) and no
+    // `Rc` clone or buffer handle escapes a locked scope — all literals and
+    // result buffers are created, consumed and dropped inside the method
+    // call — so moving the whole engine across threads between locked
+    // accesses is sound.
+    unsafe impl Send for Engine {}
 
-        let arts = manifest
-            .get("artifacts")
-            .and_then(|a| a.as_arr())
-            .context("manifest.json missing 'artifacts' array")?;
+    impl Engine {
+        /// Load every artifact listed in `<dir>/manifest.json` and compile
+        /// on the PJRT CPU client.
+        pub fn load(dir: &Path) -> Result<Engine> {
+            let manifest_path = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+                format!(
+                    "cannot read {} — run `make artifacts` first",
+                    manifest_path.display()
+                )
+            })?;
+            let manifest = json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("bad manifest.json: {e}"))?;
+            let client = xla::PjRtClient::cpu()?;
 
-        let mut fitness = Vec::new();
-        let mut accproxy = None;
-        for a in arts {
-            let name = a.get("name").and_then(|n| n.as_str()).unwrap_or("");
-            let file = a.get("file").and_then(|n| n.as_str()).unwrap_or("");
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            if name.starts_with("fitness") {
-                let batch = a
-                    .get("batch")
-                    .and_then(|b| b.as_usize())
-                    .context("fitness artifact missing batch")?;
-                let lmax = a.get("lmax").and_then(|b| b.as_usize()).unwrap_or(0);
-                if lmax > L_MAX || lmax == 0 {
-                    bail!(
-                        "artifact {name} built for lmax={lmax}, crate supports up to \
-                         {L_MAX}; rebuild artifacts"
-                    );
+            let arts = manifest
+                .get("artifacts")
+                .and_then(|a| a.as_arr())
+                .context("manifest.json missing 'artifacts' array")?;
+
+            let mut fitness = Vec::new();
+            let mut accproxy = None;
+            for a in arts {
+                let name = a.get("name").and_then(|n| n.as_str()).unwrap_or("");
+                let file = a.get("file").and_then(|n| n.as_str()).unwrap_or("");
+                let path = dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 artifact path")?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                if name.starts_with("fitness") {
+                    let batch = a
+                        .get("batch")
+                        .and_then(|b| b.as_usize())
+                        .context("fitness artifact missing batch")?;
+                    let lmax = a.get("lmax").and_then(|b| b.as_usize()).unwrap_or(0);
+                    if lmax > L_MAX || lmax == 0 {
+                        bail!(
+                            "artifact {name} built for lmax={lmax}, crate supports up to \
+                             {L_MAX}; rebuild artifacts"
+                        );
+                    }
+                    fitness.push(FitnessExe { batch, lmax, exe });
+                } else if name == "accproxy" {
+                    accproxy = Some(exe);
                 }
-                fitness.push(FitnessExe { batch, lmax, exe });
-            } else if name == "accproxy" {
-                accproxy = Some(exe);
             }
-        }
-        if fitness.is_empty() {
-            bail!("manifest lists no fitness artifacts");
-        }
-        if !fitness.iter().any(|f| f.lmax >= L_MAX) {
-            bail!("no fitness artifact covers L_MAX={L_MAX}; rebuild artifacts");
-        }
-        fitness.sort_by_key(|f| (f.lmax, f.batch));
-
-        // deterministic proxy tensors
-        let mut rng = crate::util::rng::Rng::seed_from(0xACC);
-        let proxy_noise: Vec<f32> = (0..PROXY_ITERS * PROXY_DIM * PROXY_DIM)
-            .map(|_| rng.normal() as f32)
-            .collect();
-        let proxy_w: Vec<f32> = (0..PROXY_DIM * PROXY_DIM)
-            .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
-            .collect();
-        let proxy_x: Vec<f32> = (0..PROXY_BATCH * PROXY_DIM)
-            .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
-            .collect();
-
-        let manifest_map = match manifest {
-            Json::Obj(m) => m,
-            _ => BTreeMap::new(),
-        };
-        Ok(Engine {
-            client,
-            fitness,
-            accproxy,
-            proxy_noise,
-            proxy_w,
-            proxy_x,
-            manifest: manifest_map,
-        })
-    }
-
-    /// Try to load from the default directory.
-    pub fn load_default() -> Result<Engine> {
-        Engine::load(&default_artifact_dir())
-    }
-
-    /// Pick the smallest compiled (lmax, batch) variant covering the
-    /// workload depth and chunk size (§Perf: short-lmax variants skip the
-    /// padded layer rows — ~4x cheaper for the CNN workloads).
-    fn pick_fitness(&self, n: usize, n_layers: usize) -> &FitnessExe {
-        self.fitness
-            .iter()
-            .find(|f| f.batch >= n && f.lmax >= n_layers)
-            .or_else(|| self.fitness.iter().find(|f| f.lmax >= n_layers))
-            .unwrap_or_else(|| self.fitness.last().unwrap())
-    }
-
-    /// Compiled (batch, lmax) variants, sorted.
-    pub fn fitness_batch_sizes(&self) -> Vec<(usize, usize)> {
-        self.fitness.iter().map(|f| (f.batch, f.lmax)).collect()
-    }
-
-    /// Largest compiled batch.
-    fn max_batch(&self) -> usize {
-        self.fitness.iter().map(|f| f.batch).max().unwrap()
-    }
-
-    pub fn has_accproxy(&self) -> bool {
-        self.accproxy.is_some()
-    }
-
-    /// Evaluate a batch of decoded designs on one workload through the AOT
-    /// fitness artifact. Results match `NativeEvaluator` within f32
-    /// tolerance (enforced by `rust/tests/integration_runtime.rs`).
-    pub fn fitness(
-        &self,
-        raws: &[[f64; 10]],
-        workload: &Workload,
-        mem: MemoryTech,
-    ) -> Result<Vec<Metrics>> {
-        let n_layers = workload.layers.len();
-        let mut out = Vec::with_capacity(raws.len());
-        let mut layers_cache: Option<(usize, Vec<f32>)> = None;
-        for chunk in raws.chunks(self.max_batch()) {
-            let fe = self.pick_fitness(chunk.len(), n_layers);
-            // build (and reuse) the padded layer tensor for this lmax
-            if layers_cache.as_ref().map(|(l, _)| *l) != Some(fe.lmax) {
-                layers_cache = Some((fe.lmax, workload.to_tensor_padded(fe.lmax)));
+            if fitness.is_empty() {
+                bail!("manifest lists no fitness artifacts");
             }
-            let layers = &layers_cache.as_ref().unwrap().1;
-            out.extend(self.fitness_chunk(fe, chunk, layers, mem)?);
-        }
-        Ok(out)
-    }
+            if !fitness.iter().any(|f| f.lmax >= L_MAX) {
+                bail!("no fitness artifact covers L_MAX={L_MAX}; rebuild artifacts");
+            }
+            fitness.sort_by_key(|f| (f.lmax, f.batch));
 
-    fn fitness_chunk(
-        &self,
-        fe: &FitnessExe,
-        raws: &[[f64; 10]],
-        layers: &[f32],
-        mem: MemoryTech,
-    ) -> Result<Vec<Metrics>> {
-        let b = fe.batch;
-        assert!(raws.len() <= b);
-        // pad with copies of the first row (cheap, discarded)
-        let mut designs = vec![0f32; b * 10];
-        for (i, raw) in raws.iter().enumerate() {
-            for (j, &v) in raw.iter().enumerate() {
-                designs[i * 10 + j] = v as f32;
-            }
-        }
-        for i in raws.len()..b {
-            for j in 0..10 {
-                designs[i * 10 + j] = designs[j];
-            }
-        }
-        let mode = [
-            match mem {
-                MemoryTech::Rram => 0f32,
-                MemoryTech::Sram => 1f32,
-            },
-            0.0,
-            0.0,
-            0.0,
-        ];
-        let d_lit = xla::Literal::vec1(&designs).reshape(&[b as i64, 10])?;
-        let l_lit = xla::Literal::vec1(layers)
-            .reshape(&[fe.lmax as i64, LAYER_FEATURES as i64])?;
-        let m_lit = xla::Literal::vec1(&mode);
-        let result = fe.exe.execute::<xla::Literal>(&[d_lit, l_lit, m_lit])?[0][0]
-            .to_literal_sync()?;
-        let flat = result.to_tuple1()?.to_vec::<f32>()?;
-        anyhow::ensure!(flat.len() == b * 4, "unexpected output size {}", flat.len());
-        Ok(raws
-            .iter()
-            .enumerate()
-            .map(|(i, _)| Metrics {
-                energy: flat[i * 4] as f64,
-                latency: flat[i * 4 + 1] as f64,
-                area: flat[i * 4 + 2] as f64,
-                feasible: flat[i * 4 + 3] > 0.5,
+            // deterministic proxy tensors
+            let mut rng = crate::util::rng::Rng::seed_from(0xACC);
+            let proxy_noise: Vec<f32> = (0..PROXY_ITERS * PROXY_DIM * PROXY_DIM)
+                .map(|_| rng.normal() as f32)
+                .collect();
+            let proxy_w: Vec<f32> = (0..PROXY_DIM * PROXY_DIM)
+                .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+                .collect();
+            let proxy_x: Vec<f32> = (0..PROXY_BATCH * PROXY_DIM)
+                .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+                .collect();
+
+            let manifest_map = match manifest {
+                Json::Obj(m) => m,
+                _ => BTreeMap::new(),
+            };
+            Ok(Engine {
+                client,
+                fitness,
+                accproxy,
+                proxy_noise,
+                proxy_w,
+                proxy_x,
+                manifest: manifest_map,
             })
-            .collect())
-    }
+        }
 
-    /// Measure the per-layer relative MVM error of a design's noise
-    /// configuration through the AOT noisy-crossbar proxy (30 iterations,
-    /// fixed draws). `sigma_scale` and `ir_drop` come from
-    /// `accuracy::NoiseSpec`.
-    pub fn accproxy_eps(&self, sigma_scale: f64, ir_drop: f64) -> Result<f64> {
-        let exe = self
-            .accproxy
-            .as_ref()
-            .context("accproxy artifact not loaded")?;
-        let w = xla::Literal::vec1(&self.proxy_w)
-            .reshape(&[PROXY_DIM as i64, PROXY_DIM as i64])?;
-        let x = xla::Literal::vec1(&self.proxy_x)
-            .reshape(&[PROXY_BATCH as i64, PROXY_DIM as i64])?;
-        let noise = xla::Literal::vec1(&self.proxy_noise).reshape(&[
-            PROXY_ITERS as i64,
-            PROXY_DIM as i64,
-            PROXY_DIM as i64,
-        ])?;
-        let params = xla::Literal::vec1(&[
-            sigma_scale as f32,
-            ir_drop as f32,
-            crate::accuracy::OUT_NOISE as f32,
-            crate::accuracy::QUANT_BITS as f32,
-        ]);
-        let result =
-            exe.execute::<xla::Literal>(&[w, x, noise, params])?[0][0].to_literal_sync()?;
-        let eps = result.to_tuple1()?.to_vec::<f32>()?;
-        anyhow::ensure!(!eps.is_empty(), "empty accproxy output");
-        Ok(eps[0] as f64)
+        /// Try to load from the default directory.
+        pub fn load_default() -> Result<Engine> {
+            Engine::load(&default_artifact_dir())
+        }
+
+        /// Pick the smallest compiled (lmax, batch) variant covering the
+        /// workload depth and chunk size (§Perf: short-lmax variants skip
+        /// the padded layer rows — ~4x cheaper for the CNN workloads).
+        fn pick_fitness(&self, n: usize, n_layers: usize) -> &FitnessExe {
+            self.fitness
+                .iter()
+                .find(|f| f.batch >= n && f.lmax >= n_layers)
+                .or_else(|| self.fitness.iter().find(|f| f.lmax >= n_layers))
+                .unwrap_or_else(|| self.fitness.last().unwrap())
+        }
+
+        /// Compiled (batch, lmax) variants, sorted.
+        pub fn fitness_batch_sizes(&self) -> Vec<(usize, usize)> {
+            self.fitness.iter().map(|f| (f.batch, f.lmax)).collect()
+        }
+
+        /// Largest compiled batch — callers on the parallel search path
+        /// chunk by this and lock the engine per chunk execution.
+        pub fn max_fitness_batch(&self) -> usize {
+            self.fitness.iter().map(|f| f.batch).max().unwrap_or(1)
+        }
+
+        pub fn has_accproxy(&self) -> bool {
+            self.accproxy.is_some()
+        }
+
+        /// Evaluate a batch of decoded designs on one workload through the
+        /// AOT fitness artifact. Results match `NativeEvaluator` within f32
+        /// tolerance (enforced by `rust/tests/integration_runtime.rs`).
+        pub fn fitness(
+            &self,
+            raws: &[[f64; 10]],
+            workload: &Workload,
+            mem: MemoryTech,
+        ) -> Result<Vec<Metrics>> {
+            let n_layers = workload.layers.len();
+            let mut out = Vec::with_capacity(raws.len());
+            let mut layers_cache: Option<(usize, Vec<f32>)> = None;
+            for chunk in raws.chunks(self.max_fitness_batch()) {
+                let fe = self.pick_fitness(chunk.len(), n_layers);
+                // build (and reuse) the padded layer tensor for this lmax
+                if layers_cache.as_ref().map(|(l, _)| *l) != Some(fe.lmax) {
+                    layers_cache = Some((fe.lmax, workload.to_tensor_padded(fe.lmax)));
+                }
+                let layers = &layers_cache.as_ref().unwrap().1;
+                out.extend(self.fitness_chunk(fe, chunk, layers, mem)?);
+            }
+            Ok(out)
+        }
+
+        fn fitness_chunk(
+            &self,
+            fe: &FitnessExe,
+            raws: &[[f64; 10]],
+            layers: &[f32],
+            mem: MemoryTech,
+        ) -> Result<Vec<Metrics>> {
+            let b = fe.batch;
+            assert!(raws.len() <= b);
+            // pad with copies of the first row (cheap, discarded)
+            let mut designs = vec![0f32; b * 10];
+            for (i, raw) in raws.iter().enumerate() {
+                for (j, &v) in raw.iter().enumerate() {
+                    designs[i * 10 + j] = v as f32;
+                }
+            }
+            for i in raws.len()..b {
+                for j in 0..10 {
+                    designs[i * 10 + j] = designs[j];
+                }
+            }
+            let mode = [
+                match mem {
+                    MemoryTech::Rram => 0f32,
+                    MemoryTech::Sram => 1f32,
+                },
+                0.0,
+                0.0,
+                0.0,
+            ];
+            let d_lit = xla::Literal::vec1(&designs).reshape(&[b as i64, 10])?;
+            let l_lit = xla::Literal::vec1(layers)
+                .reshape(&[fe.lmax as i64, LAYER_FEATURES as i64])?;
+            let m_lit = xla::Literal::vec1(&mode);
+            let result = fe.exe.execute::<xla::Literal>(&[d_lit, l_lit, m_lit])?[0][0]
+                .to_literal_sync()?;
+            let flat = result.to_tuple1()?.to_vec::<f32>()?;
+            anyhow::ensure!(flat.len() == b * 4, "unexpected output size {}", flat.len());
+            Ok(raws
+                .iter()
+                .enumerate()
+                .map(|(i, _)| Metrics {
+                    energy: flat[i * 4] as f64,
+                    latency: flat[i * 4 + 1] as f64,
+                    area: flat[i * 4 + 2] as f64,
+                    feasible: flat[i * 4 + 3] > 0.5,
+                })
+                .collect())
+        }
+
+        /// Measure the per-layer relative MVM error of a design's noise
+        /// configuration through the AOT noisy-crossbar proxy (30
+        /// iterations, fixed draws). `sigma_scale` and `ir_drop` come from
+        /// `accuracy::NoiseSpec`.
+        pub fn accproxy_eps(&self, sigma_scale: f64, ir_drop: f64) -> Result<f64> {
+            let exe = self
+                .accproxy
+                .as_ref()
+                .context("accproxy artifact not loaded")?;
+            let w = xla::Literal::vec1(&self.proxy_w)
+                .reshape(&[PROXY_DIM as i64, PROXY_DIM as i64])?;
+            let x = xla::Literal::vec1(&self.proxy_x)
+                .reshape(&[PROXY_BATCH as i64, PROXY_DIM as i64])?;
+            let noise = xla::Literal::vec1(&self.proxy_noise).reshape(&[
+                PROXY_ITERS as i64,
+                PROXY_DIM as i64,
+                PROXY_DIM as i64,
+            ])?;
+            let params = xla::Literal::vec1(&[
+                sigma_scale as f32,
+                ir_drop as f32,
+                crate::accuracy::OUT_NOISE as f32,
+                crate::accuracy::QUANT_BITS as f32,
+            ]);
+            let result = exe.execute::<xla::Literal>(&[w, x, noise, params])?[0][0]
+                .to_literal_sync()?;
+            let eps = result.to_tuple1()?.to_vec::<f32>()?;
+            anyhow::ensure!(!eps.is_empty(), "empty accproxy output");
+            Ok(eps[0] as f64)
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod engine_impl {
+    //! API-compatible stub used when the `pjrt` feature (and with it the
+    //! `xla` crate) is not compiled in. `load` always fails, so every
+    //! `BackendChoice::Auto` caller falls back to the native evaluator;
+    //! the remaining methods exist only so backend-generic code compiles.
+
+    use super::default_artifact_dir;
+    use crate::model::{MemoryTech, Metrics};
+    use crate::util::json::Json;
+    use crate::workloads::Workload;
+    use anyhow::{bail, Result};
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    /// Stub engine (never instantiable: [`Engine::load`] always errors).
+    pub struct Engine {
+        /// Manifest metadata (always empty in the stub).
+        pub manifest: BTreeMap<String, Json>,
+    }
+
+    impl Engine {
+        pub fn load(dir: &Path) -> Result<Engine> {
+            bail!(
+                "PJRT support not compiled in (enable the `pjrt` cargo feature); \
+                 artifacts in {} unusable — run `make artifacts` and rebuild \
+                 with `--features pjrt`",
+                dir.display()
+            )
+        }
+
+        pub fn load_default() -> Result<Engine> {
+            Engine::load(&default_artifact_dir())
+        }
+
+        pub fn fitness_batch_sizes(&self) -> Vec<(usize, usize)> {
+            Vec::new()
+        }
+
+        pub fn max_fitness_batch(&self) -> usize {
+            1
+        }
+
+        pub fn has_accproxy(&self) -> bool {
+            false
+        }
+
+        pub fn fitness(
+            &self,
+            _raws: &[[f64; 10]],
+            _workload: &Workload,
+            _mem: MemoryTech,
+        ) -> Result<Vec<Metrics>> {
+            bail!("PJRT support not compiled in")
+        }
+
+        pub fn accproxy_eps(&self, _sigma_scale: f64, _ir_drop: f64) -> Result<f64> {
+            bail!("PJRT support not compiled in")
+        }
+    }
+}
+
+pub use engine_impl::Engine;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn missing_artifacts_error_is_actionable() {

@@ -115,10 +115,23 @@ pub trait Optimizer {
     fn run(&self, problem: &dyn Problem, rng: &mut Rng) -> OptResult;
 }
 
+/// Bounded top-k capacity of [`BestTracker`]: large enough for the top-5
+/// reporting plus elite bookkeeping, small enough that membership checks
+/// are a short linear scan.
+const TRACK_CAP: usize = 64;
+
 /// Tracks the best-so-far set during a run; shared by all optimizers.
+///
+/// A bounded top-k structure: `seen` holds at most [`TRACK_CAP`] *distinct*
+/// designs, sorted ascending by score. Candidates that cannot enter the
+/// top-k are rejected without cloning (the common case once a run warms
+/// up), replacing the old unbounded push + periodic 4096-element
+/// sort/dedup/truncate which cloned every finite design it ever observed.
 #[derive(Clone, Debug, Default)]
 pub(crate) struct BestTracker {
-    pub seen: Vec<(Design, f64)>,
+    /// Distinct (design, score), sorted ascending by score; ties keep
+    /// first-seen order (stable insertion).
+    seen: Vec<(Design, f64)>,
     pub history: Vec<f64>,
 }
 
@@ -126,15 +139,30 @@ impl BestTracker {
     pub fn observe(&mut self, designs: &[Design], scores: &[f64]) {
         for (d, &s) in designs.iter().zip(scores) {
             if s.is_finite() {
-                self.seen.push((d.clone(), s));
+                self.insert(d, s);
             }
         }
-        // keep the tracker bounded
-        if self.seen.len() > 4096 {
-            self.seen.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-            self.seen.dedup_by(|a, b| a.0 == b.0);
-            self.seen.truncate(512);
+    }
+
+    fn insert(&mut self, d: &Design, s: f64) {
+        // cheap rejection first: no clone, no scan
+        if self.seen.len() == TRACK_CAP
+            && s >= self.seen.last().map(|(_, w)| *w).unwrap_or(f64::INFINITY)
+        {
+            return;
         }
+        // dedup: scores are deterministic per design, but tolerate a
+        // changed score by keeping the better one
+        if let Some(pos) = self.seen.iter().position(|(e, _)| e == d) {
+            if s >= self.seen[pos].1 {
+                return;
+            }
+            self.seen.remove(pos);
+        }
+        // stable insert after equal scores (first-seen wins on ties)
+        let at = self.seen.partition_point(|(_, e)| *e <= s);
+        self.seen.insert(at, (d.clone(), s));
+        self.seen.truncate(TRACK_CAP);
     }
 
     pub fn end_generation(&mut self) {
@@ -142,20 +170,16 @@ impl BestTracker {
     }
 
     pub fn best_score(&self) -> f64 {
-        self.seen
-            .iter()
-            .map(|(_, s)| *s)
-            .fold(f64::INFINITY, f64::min)
+        self.seen.first().map(|(_, s)| *s).unwrap_or(f64::INFINITY)
     }
 
     pub fn into_result(
-        mut self,
+        self,
         algorithm: String,
         evals: usize,
         wall: Duration,
     ) -> OptResult {
-        self.seen.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        self.seen.dedup_by(|a, b| a.0 == b.0);
+        // `seen` is already sorted and distinct
         let (best, best_score) = self
             .seen
             .first()
@@ -254,6 +278,43 @@ mod tests {
         assert_eq!(r.best_score, 1.0);
         assert_eq!(r.top.len(), 2);
         assert_eq!(r.history, vec![1.0]);
+    }
+
+    #[test]
+    fn best_tracker_is_bounded_and_keeps_global_best() {
+        let mut t = BestTracker::default();
+        // stream far more distinct designs than the cap, best arriving
+        // mid-stream; scores descend then ascend so insertion hits both
+        // ends of the sorted vec
+        for i in 0..1000u16 {
+            let d = Design(vec![i; 10]);
+            let s = (i as f64 - 500.0).abs() + 1.0;
+            t.observe(std::slice::from_ref(&d), &[s]);
+        }
+        assert!(t.seen.len() <= TRACK_CAP);
+        assert_eq!(t.best_score(), 1.0);
+        // sorted ascending, all distinct
+        for w in t.seen.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+            assert_ne!(w[0].0, w[1].0);
+        }
+        let r = t.into_result("x".into(), 1000, Duration::ZERO);
+        assert_eq!(r.best, Design(vec![500; 10]));
+        assert_eq!(r.top.len(), 5);
+        assert_eq!(r.top[0].1, 1.0);
+    }
+
+    #[test]
+    fn best_tracker_rejects_duplicates_without_growth() {
+        let mut t = BestTracker::default();
+        let d = Design(vec![7; 10]);
+        for _ in 0..100 {
+            t.observe(std::slice::from_ref(&d), &[5.0]);
+        }
+        assert_eq!(t.seen.len(), 1);
+        // infinite scores never enter
+        t.observe(&[Design(vec![9; 10])], &[f64::INFINITY]);
+        assert_eq!(t.seen.len(), 1);
     }
 
     #[test]

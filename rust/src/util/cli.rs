@@ -2,6 +2,13 @@
 //!
 //! Supports the subset the `repro` binary needs: a subcommand followed by
 //! positional arguments and `--flag[=value]` / `--flag value` options.
+//!
+//! Threading options: every subcommand that evaluates populations accepts
+//! `--threads N` (worker threads for the parallel evaluation pipeline).
+//! When omitted, the `IMCOPT_THREADS` environment variable is consulted,
+//! then the machine's available parallelism (`util::pool::default_threads`).
+//! Thread count only affects throughput — scores and cache contents are
+//! bit-identical at any setting.
 
 use std::collections::BTreeMap;
 

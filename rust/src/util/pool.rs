@@ -12,7 +12,16 @@ use std::sync::Mutex;
 /// Number of workers to use by default: the machine's available
 /// parallelism, overridable through `IMCOPT_THREADS`.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("IMCOPT_THREADS") {
+    threads_from(std::env::var("IMCOPT_THREADS").ok().as_deref())
+}
+
+/// Resolve a thread-count override (the `IMCOPT_THREADS` value):
+/// a positive integer wins, anything else falls back to the machine's
+/// available parallelism. Split out from [`default_threads`] so tests can
+/// cover the parsing without mutating the process environment (concurrent
+/// `setenv`/`getenv` is undefined behavior on glibc).
+pub fn threads_from(val: Option<&str>) -> usize {
+    if let Some(v) = val {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
         }

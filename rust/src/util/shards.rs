@@ -1,0 +1,199 @@
+//! N-way sharded (striped-lock) concurrent hash map.
+//!
+//! The joint-search hot path memoizes per-design evaluations; with a single
+//! `Mutex<HashMap>` every worker thread serializes on one lock. A
+//! [`ShardedCache`] splits the key space over [`SHARDS`] independent
+//! `Mutex<HashMap>` stripes keyed by `key % SHARDS`, so concurrent lookups
+//! and inserts on different designs proceed in parallel. Values are
+//! returned by clone; compute-on-miss ([`ShardedCache::get_or_insert_with`])
+//! holds only the owning stripe's lock while computing, which both
+//! deduplicates work and keeps results deterministic under any thread
+//! count.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Mutex;
+
+/// Default stripe count. Sixteen stripes keep contention negligible for the
+/// pool sizes we run (≤ number of cores workers) at ~1 KiB of overhead.
+pub const SHARDS: usize = 16;
+
+/// A key that can pick its stripe. For dense `u64` design indices the
+/// stripe is literally `key % SHARDS`; composite keys fold their fields
+/// into a 64-bit value first.
+pub trait ShardKey: Eq + Hash {
+    /// A 64-bit projection of the key; the stripe is `shard_key() % N`.
+    fn shard_key(&self) -> u64;
+}
+
+impl ShardKey for u64 {
+    fn shard_key(&self) -> u64 {
+        *self
+    }
+}
+
+impl ShardKey for (u16, u16, u16) {
+    fn shard_key(&self) -> u64 {
+        // spread the fields so stripes don't collapse when only one varies
+        (self.0 as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((self.1 as u64).wrapping_mul(0xD1B5_4A32_D192_ED03))
+            .wrapping_add(self.2 as u64)
+    }
+}
+
+/// Striped-lock hash map; see the module docs.
+pub struct ShardedCache<K, V> {
+    shards: Vec<Mutex<HashMap<K, V>>>,
+}
+
+impl<K: ShardKey, V: Clone> ShardedCache<K, V> {
+    pub fn new() -> Self {
+        Self::with_shards(SHARDS)
+    }
+
+    pub fn with_shards(n: usize) -> Self {
+        ShardedCache {
+            shards: (0..n.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<HashMap<K, V>> {
+        let i = (key.shard_key() % self.shards.len() as u64) as usize;
+        &self.shards[i]
+    }
+
+    /// Clone of the cached value, if present.
+    pub fn get(&self, key: &K) -> Option<V> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    /// Apply `f` to the cached value under the stripe lock (avoids cloning
+    /// large values when only a projection is needed).
+    pub fn map_get<R>(&self, key: &K, f: impl FnOnce(&V) -> R) -> Option<R> {
+        self.shard(key).lock().unwrap().get(key).map(f)
+    }
+
+    pub fn insert(&self, key: K, value: V) {
+        self.shard(&key).lock().unwrap().insert(key, value);
+    }
+
+    /// Return the cached value for `key`, computing and inserting it with
+    /// `f` on a miss. The stripe lock is held across `f`, so concurrent
+    /// callers with the same key compute exactly once.
+    pub fn get_or_insert_with(&self, key: K, f: impl FnOnce() -> V) -> V {
+        let mut m = self.shard(&key).lock().unwrap();
+        m.entry(key).or_insert_with(f).clone()
+    }
+
+    /// Total entries across all stripes.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<K: ShardKey + Ord + Clone, V: Clone> ShardedCache<K, V> {
+    /// All entries, sorted by key — deterministic regardless of stripe
+    /// layout, for diagnostics and cache-equality tests.
+    pub fn sorted_entries(&self) -> Vec<(K, V)> {
+        let mut out: Vec<(K, V)> = Vec::with_capacity(self.len());
+        for s in &self.shards {
+            let m = s.lock().unwrap();
+            out.extend(m.iter().map(|(k, v)| (k.clone(), v.clone())));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+impl<K: ShardKey, V: Clone> Default for ShardedCache<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_get_insert() {
+        let c: ShardedCache<u64, f64> = ShardedCache::new();
+        assert!(c.is_empty());
+        assert_eq!(c.get(&7), None);
+        c.insert(7, 1.5);
+        assert_eq!(c.get(&7), Some(1.5));
+        assert_eq!(c.map_get(&7, |v| v * 2.0), Some(3.0));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn get_or_insert_computes_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let c: ShardedCache<u64, u64> = ShardedCache::new();
+        let calls = AtomicUsize::new(0);
+        for _ in 0..5 {
+            let v = c.get_or_insert_with(42, || {
+                calls.fetch_add(1, Ordering::Relaxed);
+                99
+            });
+            assert_eq!(v, 99);
+        }
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn keys_spread_across_stripes() {
+        let c: ShardedCache<u64, u64> = ShardedCache::new();
+        for k in 0..(SHARDS as u64 * 4) {
+            c.insert(k, k);
+        }
+        assert_eq!(c.len(), SHARDS * 4);
+        let used = c.shards.iter().filter(|s| !s.lock().unwrap().is_empty()).count();
+        assert_eq!(used, SHARDS, "dense u64 keys must hit every stripe");
+    }
+
+    #[test]
+    fn sorted_entries_deterministic() {
+        let c: ShardedCache<u64, u64> = ShardedCache::new();
+        for k in [9u64, 3, 27, 1, 16] {
+            c.insert(k, k * 10);
+        }
+        assert_eq!(
+            c.sorted_entries(),
+            vec![(1, 10), (3, 30), (9, 90), (16, 160), (27, 270)]
+        );
+    }
+
+    #[test]
+    fn concurrent_inserts_all_land() {
+        let c: ShardedCache<u64, u64> = ShardedCache::new();
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = &c;
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        let k = t * 100 + i;
+                        c.insert(k, k + 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.len(), 800);
+        for k in 0..800u64 {
+            assert_eq!(c.get(&k), Some(k + 1));
+        }
+    }
+
+    #[test]
+    fn tuple_keys_work() {
+        let c: ShardedCache<(u16, u16, u16), f64> = ShardedCache::new();
+        c.insert((512, 256, 2), 0.25);
+        assert_eq!(c.get(&(512, 256, 2)), Some(0.25));
+        assert_eq!(c.get(&(512, 256, 4)), None);
+    }
+}

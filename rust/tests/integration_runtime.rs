@@ -3,7 +3,10 @@
 //! technologies and all workloads, and the accproxy artifact must behave
 //! like the analytical noise model.
 //!
-//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! Requires `make artifacts` and a build with the `pjrt` cargo feature;
+//! when the artifacts (or the PJRT runtime) are unavailable these tests
+//! skip with a notice instead of failing, so the default no-xla build
+//! stays green.
 
 use imcopt::model::{MemoryTech, NativeEvaluator};
 use imcopt::runtime::Engine;
@@ -17,8 +20,21 @@ fn artifact_dir() -> PathBuf {
     PathBuf::from("artifacts")
 }
 
-fn engine() -> Engine {
-    Engine::load(&artifact_dir()).expect("run `make artifacts` before `cargo test`")
+fn engine() -> Option<Engine> {
+    match Engine::load(&artifact_dir()) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            // only the *expected* unavailability skips: no pjrt feature
+            // compiled in, or no exported artifacts. A pjrt build with
+            // artifacts present that still fails to load is a real bug
+            // and must fail loudly, not silently green-light CI.
+            if cfg!(feature = "pjrt") && artifact_dir().join("manifest.json").exists() {
+                panic!("artifacts present but the PJRT engine failed to load: {e:#}");
+            }
+            eprintln!("skipping PJRT integration test (artifacts unavailable: {e:#})");
+            None
+        }
+    }
 }
 
 /// Relative-deviation check helper; skips designs within 1% of the area
@@ -68,7 +84,7 @@ fn check_agreement(
 
 #[test]
 fn fitness_artifact_matches_native_rram() {
-    let engine = engine();
+    let Some(engine) = engine() else { return };
     check_agreement(
         &engine,
         &SearchSpace::rram(),
@@ -81,7 +97,7 @@ fn fitness_artifact_matches_native_rram() {
 
 #[test]
 fn fitness_artifact_matches_native_sram() {
-    let engine = engine();
+    let Some(engine) = engine() else { return };
     check_agreement(
         &engine,
         &SearchSpace::sram(),
@@ -94,7 +110,7 @@ fn fitness_artifact_matches_native_sram() {
 
 #[test]
 fn fitness_artifact_matches_native_all9_spot() {
-    let engine = engine();
+    let Some(engine) = engine() else { return };
     check_agreement(
         &engine,
         &SearchSpace::sram(),
@@ -107,7 +123,7 @@ fn fitness_artifact_matches_native_all9_spot() {
 
 #[test]
 fn fitness_artifact_matches_native_tech_variable() {
-    let engine = engine();
+    let Some(engine) = engine() else { return };
     check_agreement(
         &engine,
         &SearchSpace::sram_tech(),
@@ -120,7 +136,7 @@ fn fitness_artifact_matches_native_tech_variable() {
 
 #[test]
 fn batching_chunks_large_populations() {
-    let engine = engine();
+    let Some(engine) = engine() else { return };
     let space = SearchSpace::rram();
     let mut rng = Rng::seed_from(5);
     // 300 designs forces both the b256 and b64 paths plus padding
@@ -140,7 +156,7 @@ fn batching_chunks_large_populations() {
 
 #[test]
 fn accproxy_monotone_and_near_analytical() {
-    let engine = engine();
+    let Some(engine) = engine() else { return };
     assert!(engine.has_accproxy());
     // monotone in sigma
     let e0 = engine.accproxy_eps(0.0, 0.0).unwrap();
@@ -174,7 +190,8 @@ fn pjrt_backend_end_to_end_search() {
     use imcopt::search::{GaConfig, GeneticAlgorithm, InitStrategy, Optimizer, SearchBudget};
     use std::sync::{Arc, Mutex};
 
-    let engine = Arc::new(Mutex::new(engine()));
+    let Some(eng) = engine() else { return };
+    let engine = Arc::new(Mutex::new(eng));
     let space = SearchSpace::rram();
     let set = WorkloadSet::cnn4();
     let problem = JointProblem::with_backend(

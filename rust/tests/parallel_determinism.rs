@@ -1,0 +1,154 @@
+//! Parallel-evaluation determinism: `score_batch` must return bit-identical
+//! scores and produce identical memo-cache contents for ANY worker-thread
+//! count (the `--threads` / `IMCOPT_THREADS` knob), including batches with
+//! duplicated and shuffled designs, on both the RRAM and SRAM spaces.
+
+use imcopt::coordinator::{EvalBackend, JointProblem};
+use imcopt::model::MemoryTech;
+use imcopt::objective::{Aggregation, Objective, ObjectiveKind};
+use imcopt::search::Problem;
+use imcopt::space::{Design, SearchSpace};
+use imcopt::util::proptest::check;
+use imcopt::util::rng::Rng;
+use imcopt::workloads::WorkloadSet;
+
+fn problem<'a>(
+    space: &'a SearchSpace,
+    set: &'a WorkloadSet,
+    mem: MemoryTech,
+    objective: Objective,
+    threads: usize,
+) -> JointProblem<'a> {
+    JointProblem::with_backend(space, set, EvalBackend::native(mem), objective)
+        .with_threads(threads)
+}
+
+/// Random batch with injected duplicates, shuffled.
+fn messy_batch(space: &SearchSpace, rng: &mut Rng) -> Vec<Design> {
+    let n = 8 + rng.below(24);
+    let mut batch: Vec<Design> = (0..n).map(|_| space.random(rng)).collect();
+    let dups = 1 + rng.below(8);
+    for _ in 0..dups {
+        let d = batch[rng.below(batch.len())].clone();
+        batch.push(d);
+    }
+    rng.shuffle(&mut batch);
+    batch
+}
+
+fn assert_same_scores_and_cache(
+    p1: &JointProblem<'_>,
+    p8: &JointProblem<'_>,
+    batch: &[Design],
+) -> Result<(), String> {
+    let s1 = p1.score_batch(batch);
+    let s8 = p8.score_batch(batch);
+    for (i, (a, b)) in s1.iter().zip(&s8).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("score[{i}] diverged: {a} (t=1) vs {b} (t=8)"));
+        }
+    }
+    let c1 = p1.cached_scores();
+    let c8 = p8.cached_scores();
+    if c1.len() != c8.len() {
+        return Err(format!("cache sizes differ: {} vs {}", c1.len(), c8.len()));
+    }
+    for ((k1, v1), (k8, v8)) in c1.iter().zip(&c8) {
+        if k1 != k8 {
+            return Err(format!("cache keys differ: {k1} vs {k8}"));
+        }
+        if v1.to_bits() != v8.to_bits() {
+            return Err(format!("cached score for key {k1} diverged: {v1} vs {v8}"));
+        }
+    }
+    if p1.evals() != p8.evals() {
+        return Err(format!(
+            "eval counts differ: {} vs {}",
+            p1.evals(),
+            p8.evals()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn score_batch_thread_count_invariant_rram_reduced() {
+    check("score_batch t1 == t8 (rram_reduced)", 12, |rng| {
+        let space = SearchSpace::rram_reduced();
+        let set = WorkloadSet::cnn4();
+        let p1 = problem(&space, &set, MemoryTech::Rram, Objective::edap(), 1);
+        let p8 = problem(&space, &set, MemoryTech::Rram, Objective::edap(), 8);
+        let batch = messy_batch(&space, rng);
+        assert_same_scores_and_cache(&p1, &p8, &batch)?;
+        // a second (partially overlapping) batch exercises warm-cache hits
+        let batch2 = messy_batch(&space, rng);
+        assert_same_scores_and_cache(&p1, &p8, &batch2)
+    });
+}
+
+#[test]
+fn score_batch_thread_count_invariant_sram() {
+    check("score_batch t1 == t8 (sram)", 10, |rng| {
+        let space = SearchSpace::sram();
+        let set = WorkloadSet::cnn4();
+        let p1 = problem(&space, &set, MemoryTech::Sram, Objective::edap(), 1);
+        let p8 = problem(&space, &set, MemoryTech::Sram, Objective::edap(), 8);
+        let batch = messy_batch(&space, rng);
+        assert_same_scores_and_cache(&p1, &p8, &batch)
+    });
+}
+
+#[test]
+fn score_batch_thread_count_invariant_accuracy_objective() {
+    // EdapAccuracy exercises the sharded accuracy-proxy cache from many
+    // workers concurrently
+    check("score_batch t1 == t8 (EDAP/Acc)", 8, |rng| {
+        let space = SearchSpace::rram_reduced();
+        let set = WorkloadSet::cnn4();
+        let obj = Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max);
+        let p1 = problem(&space, &set, MemoryTech::Rram, obj, 1);
+        let p8 = problem(&space, &set, MemoryTech::Rram, obj, 8);
+        let batch = messy_batch(&space, rng);
+        assert_same_scores_and_cache(&p1, &p8, &batch)
+    });
+}
+
+#[test]
+fn score_batch_order_invariant_under_shuffle() {
+    // scoring a shuffled copy of the batch yields the permuted scores
+    check("score_batch shuffle equivariance", 10, |rng| {
+        let space = SearchSpace::rram_reduced();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Rram, Objective::edap(), 8);
+        let batch = messy_batch(&space, rng);
+        let scores = p.score_batch(&batch);
+        let mut perm: Vec<usize> = (0..batch.len()).collect();
+        rng.shuffle(&mut perm);
+        let shuffled: Vec<Design> = perm.iter().map(|&i| batch[i].clone()).collect();
+        let shuffled_scores = p.score_batch(&shuffled);
+        for (j, &i) in perm.iter().enumerate() {
+            if scores[i].to_bits() != shuffled_scores[j].to_bits() {
+                return Err(format!(
+                    "score of design {i} changed after shuffle: {} vs {}",
+                    scores[i], shuffled_scores[j]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn imcopt_threads_override_resolution() {
+    // `IMCOPT_THREADS` drives `pool::default_threads`, which is what
+    // `ExpContext` (and so every CLI run) feeds into `with_threads`. The
+    // parsing is tested through `threads_from` rather than `set_var` —
+    // mutating the environment while sibling tests read it concurrently
+    // is undefined behavior on glibc.
+    use imcopt::util::pool::threads_from;
+    assert_eq!(threads_from(Some("1")), 1);
+    assert_eq!(threads_from(Some("8")), 8);
+    assert_eq!(threads_from(Some("0")), 1, "clamped to at least one worker");
+    assert!(threads_from(Some("not-a-number")) >= 1, "falls back to cores");
+    assert!(threads_from(None) >= 1);
+}
