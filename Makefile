@@ -2,16 +2,21 @@
 #
 #   make build      release build (native evaluator; no xla needed)
 #   make test       release build + full test suite
-#   make check      CI gate: build + tests + evaluator bench smoke run
-#                   (emits BENCH_eval.json with score_batch designs/sec)
+#   make lint       rustfmt --check + clippy -D warnings
+#   make check      full CI gate (ci.sh): lint, build, tests, golden
+#                   cross-check, evaluator bench + schema validation,
+#                   `imcopt run --all --quick` smoke + artifact validation,
+#                   and the --resume replay check
+#   make check-pjrt ci.sh against the pjrt feature (vendored xla API stub)
 #   make bench      full evaluator bench (2s budget per case)
 #   make artifacts  export the AOT JAX/Pallas artifacts (needs python+jax)
-#   make pjrt       release build with the PJRT runtime (needs xla crate)
+#   make pjrt       release build with the PJRT runtime (stub xla unless
+#                   Cargo.toml points at the real crate)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check bench artifacts pjrt clean
+.PHONY: build test lint check check-pjrt bench artifacts pjrt clean
 
 build:
 	$(CARGO) build --release
@@ -19,8 +24,15 @@ build:
 test: build
 	$(CARGO) test -q
 
+lint:
+	$(CARGO) fmt --all -- --check
+	$(CARGO) clippy --all-targets -- -D warnings
+
 check:
 	./ci.sh
+
+check-pjrt:
+	IMCOPT_FEATURES="--features pjrt" ./ci.sh
 
 bench:
 	$(CARGO) bench --bench evaluator

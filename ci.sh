@@ -1,25 +1,82 @@
 #!/usr/bin/env bash
-# CI gate: release build, full test suite, and a smoke run of the
-# evaluator throughput bench. The bench writes BENCH_eval.json
-# (sequential vs parallel score_batch designs/sec + speedup) for the
-# perf trajectory; the smoke run uses the reduced IMCOPT_BENCH_QUICK
-# budget so the whole gate stays fast.
+# CI gate, invoked by .github/workflows/ci.yml (and `make check`):
+#
+#   1. rustfmt + clippy (-D warnings) lint gates
+#   2. release build + full test suite (includes the kill/resume
+#      bit-identity test and the golden determinism tests)
+#   3. cross-process golden check: bless quick-budget report goldens into
+#      a scratch dir, then re-verify them from a second test process
+#   4. evaluator bench smoke -> BENCH_eval.json, validated against
+#      schemas/bench_eval.schema.json
+#   5. registry smoke: `imcopt run --all --quick` must emit a well-formed
+#      JSON artifact for every registered experiment (validated against
+#      schemas/experiment_report.schema.json), and a `--resume` re-run
+#      must replay everything without recomputing a single cell
+#
+# Set IMCOPT_FEATURES="--features pjrt" to run the same gate against the
+# feature-gated PJRT path (vendored API stub; see vendor/xla-stub).
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "=== cargo build --release ==="
-cargo build --release
+FEATURES="${IMCOPT_FEATURES:-}"
 
-echo "=== cargo test -q ==="
-cargo test -q
+echo "=== cargo fmt --check ==="
+cargo fmt --all -- --check
+
+echo "=== cargo clippy --all-targets $FEATURES -- -D warnings ==="
+# shellcheck disable=SC2086
+cargo clippy --all-targets $FEATURES -- -D warnings
+
+echo "=== cargo build --release $FEATURES ==="
+# shellcheck disable=SC2086
+cargo build --release $FEATURES
+
+echo "=== cargo test -q $FEATURES ==="
+# shellcheck disable=SC2086
+cargo test -q $FEATURES
+
+echo "=== cross-process golden check ==="
+GOLDEN_DIR="$(pwd)/target/ci-golden"
+rm -rf "$GOLDEN_DIR"
+# shellcheck disable=SC2086
+IMCOPT_GOLDEN_DIR="$GOLDEN_DIR" IMCOPT_BLESS=1 \
+    cargo test -q $FEATURES --test report_golden
+# shellcheck disable=SC2086
+IMCOPT_GOLDEN_DIR="$GOLDEN_DIR" \
+    cargo test -q $FEATURES --test report_golden
 
 echo "=== bench smoke (evaluator) ==="
-IMCOPT_BENCH_QUICK=1 cargo bench --bench evaluator
+# shellcheck disable=SC2086
+IMCOPT_BENCH_QUICK=1 cargo bench $FEATURES --bench evaluator
 
-if [ -f BENCH_eval.json ]; then
-    echo "=== BENCH_eval.json ==="
-    cat BENCH_eval.json
-else
-    echo "warning: BENCH_eval.json was not produced" >&2
+if [ ! -f BENCH_eval.json ]; then
+    echo "error: BENCH_eval.json was not produced" >&2
     exit 1
 fi
+
+IMCOPT_BIN=./target/release/imcopt
+
+echo "=== validate BENCH_eval.json against its schema ==="
+"$IMCOPT_BIN" validate --bench BENCH_eval.json --schema schemas/bench_eval.schema.json
+
+echo "=== registry smoke: imcopt run --all --quick ==="
+SMOKE_OUT="$(pwd)/target/ci-smoke"
+rm -rf "$SMOKE_OUT"
+"$IMCOPT_BIN" run --all --quick --stable --seed 5 --out-dir "$SMOKE_OUT"
+
+echo "=== validate experiment artifacts (all 13 required) ==="
+"$IMCOPT_BIN" validate --out-dir "$SMOKE_OUT" --require-all
+
+echo "=== resume smoke: a completed run replays without recomputation ==="
+RESUME_LINE=$("$IMCOPT_BIN" run --all --quick --stable --seed 5 \
+    --out-dir "$SMOKE_OUT" --resume | tail -n 1)
+echo "$RESUME_LINE"
+case "$RESUME_LINE" in
+    *"executed=0"*"cells_computed=0"*) ;;
+    *)
+        echo "error: --resume re-ran work on a completed out-dir" >&2
+        exit 1
+        ;;
+esac
+
+echo "=== ci.sh passed ==="

@@ -1,6 +1,6 @@
-//! End-to-end benches: one timed run per paper table/figure experiment.
+//! End-to-end benches: one timed run per registered experiment.
 //! `cargo bench` regenerates every result at quick scale and reports its
-//! wall-clock; `repro exp all` (no --quick) is the full-scale path.
+//! wall-clock; `imcopt run --all` (no --quick) is the full-scale path.
 
 use imcopt::coordinator::ExpContext;
 use imcopt::experiments;

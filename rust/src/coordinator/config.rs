@@ -36,6 +36,19 @@ pub struct ExpContext {
     /// `IMCOPT_THREADS` environment variable (scores are identical for any
     /// value — only throughput changes).
     pub threads: usize,
+    /// Replace wall-clock readings in reports with a stable placeholder
+    /// (`--stable`). Timing columns are the only nondeterministic report
+    /// content, so under this flag every report is a pure function of the
+    /// seed — the property the checkpoint/resume bit-identity test and
+    /// golden-file tests rely on.
+    pub stable: bool,
+    /// Resume from the checkpoint journals under `out_dir` (`--resume`):
+    /// completed experiments replay their stored reports, completed cells
+    /// inside partially-run experiments are not re-evaluated.
+    pub resume: bool,
+    /// Reported best-design count per search where an experiment supports
+    /// it (`--topk`; `genmatrix` emits this many designs per cell).
+    pub top_k: usize,
     /// Lazily loaded PJRT engine, shared across experiments.
     engine: Mutex<Option<Option<Arc<Mutex<Engine>>>>>,
 }
@@ -48,6 +61,9 @@ impl Default for ExpContext {
             backend_choice: BackendChoice::Auto,
             out_dir: PathBuf::from("results"),
             threads: crate::util::pool::default_threads(),
+            stable: false,
+            resume: false,
+            top_k: 5,
             engine: Mutex::new(None),
         }
     }
@@ -55,7 +71,8 @@ impl Default for ExpContext {
 
 impl ExpContext {
     /// Build from CLI arguments (`--seed`, `--quick`, `--native`,
-    /// `--pjrt`, `--out`, `--threads`).
+    /// `--pjrt`, `--out-dir`/`--out`, `--threads`, `--stable`,
+    /// `--resume`, `--topk`).
     pub fn from_args(args: &Args) -> ExpContext {
         let backend_choice = if args.flag("native") {
             BackendChoice::Native
@@ -64,12 +81,19 @@ impl ExpContext {
         } else {
             BackendChoice::Auto
         };
+        let out_dir = args
+            .opt("out-dir")
+            .or_else(|| args.opt("out"))
+            .unwrap_or("results");
         ExpContext {
             seed: args.opt_u64("seed", 42),
             quick: args.flag("quick"),
             backend_choice,
-            out_dir: PathBuf::from(args.opt_str("out", "results")),
+            out_dir: PathBuf::from(out_dir),
             threads: args.opt_usize("threads", crate::util::pool::default_threads()),
+            stable: args.flag("stable"),
+            resume: args.flag("resume"),
+            top_k: args.opt_usize("topk", 5),
             ..ExpContext::default()
         }
     }
@@ -109,6 +133,34 @@ impl ExpContext {
             2.min(full)
         } else {
             full
+        }
+    }
+
+    /// Format a wall-clock reading for a report: real time normally, a
+    /// stable placeholder under `--stable` (see [`ExpContext::stable`]).
+    pub fn fmt_wall(&self, d: std::time::Duration) -> String {
+        if self.stable {
+            "-".into()
+        } else {
+            crate::util::fmt_duration(d)
+        }
+    }
+
+    /// Format a wall-clock-derived ratio (`1.50x`), stable-aware.
+    pub fn fmt_ratio(&self, x: f64) -> String {
+        if self.stable {
+            "-".into()
+        } else {
+            format!("{x:.2}x")
+        }
+    }
+
+    /// Format a wall-clock-derived percentage (`30%`), stable-aware.
+    pub fn fmt_pct(&self, x: f64) -> String {
+        if self.stable {
+            "-".into()
+        } else {
+            format!("{x:.0}%")
         }
     }
 
@@ -183,5 +235,28 @@ mod tests {
         assert_eq!(ctx.seed, 7);
         assert!(ctx.quick);
         assert!(ctx.engine().is_none());
+    }
+
+    #[test]
+    fn from_args_parses_registry_flags() {
+        let args = Args::parse(
+            ["run", "--stable", "--resume", "--out-dir", "/tmp/x", "--topk", "8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let ctx = ExpContext::from_args(&args);
+        assert!(ctx.stable);
+        assert!(ctx.resume);
+        assert_eq!(ctx.out_dir, PathBuf::from("/tmp/x"));
+        assert_eq!(ctx.top_k, 8);
+        // stable mode hides wall-clock readings from reports
+        assert_eq!(ctx.fmt_wall(std::time::Duration::from_secs(1)), "-");
+        assert_eq!(ctx.fmt_ratio(1.5), "-");
+        let live = ExpContext::default();
+        assert_eq!(live.fmt_ratio(1.5), "1.50x");
+        assert_eq!(live.fmt_pct(30.4), "30%");
+        // --out remains a working alias
+        let args = Args::parse(["run", "--out", "r2"].iter().map(|s| s.to_string()));
+        assert_eq!(ExpContext::from_args(&args).out_dir, PathBuf::from("r2"));
     }
 }

@@ -144,6 +144,19 @@ impl<'a> JointProblem<'a> {
         self
     }
 
+    /// Restrict joint evaluation to an arbitrary workload subset (the
+    /// `genmatrix` hold-one-out experiment optimizes on N−1 workloads).
+    /// Indices are deduplicated and sorted so equal subsets produce equal
+    /// scores and memo-cache contents regardless of caller order.
+    pub fn restricted_to(mut self, mut indices: Vec<usize>) -> Self {
+        indices.sort_unstable();
+        indices.dedup();
+        assert!(!indices.is_empty(), "subset must keep at least one workload");
+        assert!(indices.iter().all(|&i| i < self.workloads.len()));
+        self.subset = Some(indices);
+        self
+    }
+
     fn active_indices(&self) -> Vec<usize> {
         self.subset
             .clone()
@@ -335,6 +348,46 @@ impl<'a> JointProblem<'a> {
     /// Number of cached distinct designs (diagnostics).
     pub fn cache_len(&self) -> usize {
         self.cache.len()
+    }
+
+    /// A string identifying everything the memo cache's contents depend
+    /// on: space variant, workload set, active subset, backend memory
+    /// technology and objective. The checkpoint subsystem keys persisted
+    /// memo snapshots by this, so a snapshot is only ever replayed into an
+    /// identically-configured problem.
+    pub fn config_key(&self) -> String {
+        let subset = match &self.subset {
+            Some(s) => s
+                .iter()
+                .map(|i| i.to_string())
+                .collect::<Vec<_>>()
+                .join("+"),
+            None => "all".to_string(),
+        };
+        format!(
+            "{}|{}|{}|{}|{}",
+            self.space.variant,
+            self.workloads.names().join(","),
+            subset,
+            self.backend.mem().name(),
+            self.objective.name(),
+        )
+    }
+
+    /// Snapshot of the evaluation memo, sorted by linear index (persisted
+    /// per experiment by `experiments::checkpoint` to make resume warm).
+    pub fn cache_snapshot(&self) -> Vec<(u64, Evaluations)> {
+        self.cache.sorted_entries()
+    }
+
+    /// Preload memoized evaluations from a checkpoint snapshot. Entries
+    /// must come from a problem with the same [`JointProblem::config_key`];
+    /// preloading changes only throughput (fewer evaluator invocations on
+    /// re-run), never scores.
+    pub fn preload_cache(&self, entries: Vec<(u64, Evaluations)>) {
+        for (k, v) in entries {
+            self.cache.insert(k, v);
+        }
     }
 
     /// Cached (linear index, score) pairs sorted by key — used by the
@@ -617,6 +670,47 @@ mod tests {
         assert!(ev_one.score <= ev_all.score || !ev_all.score.is_finite());
         // cross-reporting still covers the full set
         assert_eq!(p_one.metrics_all_workloads(&d).len(), 4);
+    }
+
+    #[test]
+    fn restricted_to_subset_is_order_insensitive() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Rram).restricted_to(vec![2, 0, 2]);
+        let mut rng = Rng::seed_from(21);
+        let d = p.random_candidate(&mut rng);
+        let ev = p.evaluate_design(&d);
+        assert_eq!(ev.metrics.len(), 2);
+        assert!(p.config_key().contains("|0+2|"), "{}", p.config_key());
+        let p2 = problem(&space, &set, MemoryTech::Rram).restricted_to(vec![0, 2]);
+        assert_eq!(p.config_key(), p2.config_key());
+        assert_eq!(
+            p2.evaluate_design(&d).score.to_bits(),
+            ev.score.to_bits()
+        );
+        // full problem has a different key
+        let p_all = problem(&space, &set, MemoryTech::Rram);
+        assert_ne!(p_all.config_key(), p.config_key());
+    }
+
+    #[test]
+    fn preload_cache_skips_reevaluation() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = problem(&space, &set, MemoryTech::Rram);
+        let mut rng = Rng::seed_from(22);
+        let designs: Vec<Design> = (0..6).map(|_| p.random_candidate(&mut rng)).collect();
+        let scores = p.score_batch(&designs);
+        let snapshot = p.cache_snapshot();
+        assert_eq!(snapshot.len(), p.cache_len());
+
+        let q = problem(&space, &set, MemoryTech::Rram);
+        q.preload_cache(snapshot);
+        let warm = q.score_batch(&designs);
+        assert_eq!(q.evals(), 0, "preloaded cache must satisfy every lookup");
+        for (a, b) in scores.iter().zip(&warm) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! 4. early stopping (§V-D): evaluations saved vs quality lost,
 //! 5. surrogate-assisted sampling (§V-D): evaluations saved vs quality.
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::MemoryTech;
@@ -25,7 +26,25 @@ use crate::util::table::Table;
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Ablations;
+
+impl super::Experiment for Ablations {
+    fn id(&self) -> &'static str {
+        "ablations"
+    }
+    fn description(&self) -> &'static str {
+        "Design-choice ablations: phases, sampling pools, early stop, surrogate"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Heavy
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let space = crate::space::SearchSpace::rram();
     let objective = Objective::edap();
@@ -181,7 +200,7 @@ mod tests {
     #[test]
     fn ablations_quick_run() {
         let ctx = ExpContext::quick(51);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         assert_eq!(r.tables.len(), 4);
         // early-stopping rows: saving percentage parses
         for row in &r.tables[2].rows {

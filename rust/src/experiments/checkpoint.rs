@@ -1,0 +1,694 @@
+//! Checkpoint/resume for registry experiments.
+//!
+//! Every experiment run through [`crate::experiments::run_selected`] gets a
+//! [`Checkpoint`] journaling its completed work units ("cells": one
+//! optimizer run, or one scenario cell) as JSON lines under
+//! `<out_dir>/checkpoints/<id>.jsonl`. A run killed mid-flight and
+//! restarted with `--resume` replays journaled cells instead of
+//! re-evaluating them, and a fully completed experiment replays its stored
+//! report byte-identically (reports are deterministic given the seed when
+//! `--stable` hides wall-clock columns — enforced by
+//! `rust/tests/checkpoint_resume.rs`).
+//!
+//! Two persistence layers:
+//!
+//! * **Cell journal** — append-only JSONL, one `{"k": key, "v": value}`
+//!   object per line, flushed per cell so a kill loses at most the cell in
+//!   flight. Unparseable trailing lines (a mid-write kill) are skipped on
+//!   load. The special `__report__` cell marks experiment completion.
+//! * **Eval memo** — the coordinator's sharded evaluation cache (PR 1)
+//!   persisted per problem configuration ([`JointProblem::config_key`])
+//!   into `<id>.memo.jsonl` (append-only, new entries only per absorb),
+//!   so re-running an *interrupted* cell on resume starts with every
+//!   previously evaluated design warm. Preloading never changes scores
+//!   (they are deterministic per design), only the number of evaluator
+//!   invocations, so experiments whose reports print eval counts simply
+//!   don't opt in.
+
+use crate::coordinator::{Evaluations, JointProblem};
+use crate::model::Metrics;
+use crate::report::Report;
+use crate::search::OptResult;
+use crate::space::Design;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Journal key marking a completed experiment (stores the full report).
+const REPORT_KEY: &str = "__report__";
+
+/// Journal key pinning the run configuration the journal was written with.
+const CONFIG_KEY: &str = "__config__";
+
+/// Remove a file, treating "not found" as success and surfacing anything
+/// else (a journal we cannot discard must not be silently appended to).
+fn remove_if_exists(path: &Path) -> Result<()> {
+    match std::fs::remove_file(path) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+        Err(e) => Err(e).with_context(|| format!("removing {}", path.display())),
+    }
+}
+
+/// Per-experiment checkpoint state. See the module docs.
+#[derive(Debug, Default)]
+pub struct Checkpoint {
+    /// Journal file; `None` = persistence disabled (unit tests, library
+    /// callers of `experiments::run`).
+    journal_path: Option<PathBuf>,
+    memo_path: Option<PathBuf>,
+    cells: BTreeMap<String, Json>,
+    /// scope (problem config key) → (linear index → decoded
+    /// [`Evaluations`]); decoded once at load/absorb time so warming a
+    /// problem is a clone, not a JSON decode.
+    memo: BTreeMap<String, BTreeMap<u64, Evaluations>>,
+    computed: usize,
+    reused: usize,
+    /// Simulated-kill hook for the resume tests: the cell *after* this
+    /// many fresh computations errors out instead of running, leaving the
+    /// journal exactly as a hard kill would.
+    pub abort_after_cells: Option<usize>,
+}
+
+impl Checkpoint {
+    /// A checkpoint that journals nothing (every cell recomputes).
+    pub fn disabled() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    /// Open (or start) the checkpoint for one experiment under
+    /// `<out_dir>/checkpoints/`. With `resume` the existing journal and
+    /// memo are loaded; without it they are discarded so the run starts
+    /// cold.
+    pub fn for_experiment(out_dir: &Path, id: &str, resume: bool) -> Result<Checkpoint> {
+        let dir = out_dir.join("checkpoints");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let journal_path = dir.join(format!("{id}.jsonl"));
+        let memo_path = dir.join(format!("{id}.memo.jsonl"));
+        let mut ckpt = Checkpoint {
+            journal_path: Some(journal_path.clone()),
+            memo_path: Some(memo_path.clone()),
+            ..Checkpoint::default()
+        };
+        if resume {
+            ckpt.load_journal(&journal_path)?;
+            ckpt.load_memo(&memo_path)?;
+        } else {
+            remove_if_exists(&journal_path)?;
+            remove_if_exists(&memo_path)?;
+        }
+        Ok(ckpt)
+    }
+
+    fn load_journal(&mut self, path: &Path) -> Result<()> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            // no journal yet — a cold resume; any other error (permissions,
+            // I/O) must surface rather than silently recomputing everything
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading journal {}", path.display()))
+            }
+        };
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            // a kill mid-append can truncate the final line; skip anything
+            // unparseable rather than poisoning the resume
+            let parsed = match json::parse(line) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!(
+                        "[checkpoint] skipping corrupt journal line in {}: {e}",
+                        path.display()
+                    );
+                    continue;
+                }
+            };
+            if let (Some(k), Some(v)) =
+                (parsed.get("k").and_then(|k| k.as_str()), parsed.get("v"))
+            {
+                self.cells.insert(k.to_string(), v.clone());
+            }
+        }
+        Ok(())
+    }
+
+    fn load_memo(&mut self, path: &Path) -> Result<()> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading memo {}", path.display()))
+            }
+        };
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            // same mid-append kill tolerance as the cell journal
+            let Ok(entry) = json::parse(line) else {
+                eprintln!(
+                    "[checkpoint] skipping corrupt memo line in {}",
+                    path.display()
+                );
+                continue;
+            };
+            if let (Some(scope), Some(key), Some(v)) = (
+                entry.get("s").and_then(|s| s.as_str()),
+                entry.get("k").and_then(|k| k.as_str()),
+                entry.get("v"),
+            ) {
+                if let (Ok(idx), Ok(ev)) = (key.parse::<u64>(), evaluation_from_json(v))
+                {
+                    self.memo
+                        .entry(scope.to_string())
+                        .or_default()
+                        .insert(idx, ev);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether cells persist across processes.
+    pub fn is_persistent(&self) -> bool {
+        self.journal_path.is_some()
+    }
+
+    /// Journaled cells replayed by this process.
+    pub fn reused(&self) -> usize {
+        self.reused
+    }
+
+    /// Cells computed fresh (and journaled) by this process.
+    pub fn computed(&self) -> usize {
+        self.computed
+    }
+
+    /// Journaled value for `key`, if any.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.cells.get(key)
+    }
+
+    fn append_journal(&self, key: &str, value: &Json) -> Result<()> {
+        let Some(path) = &self.journal_path else {
+            return Ok(());
+        };
+        let line = Json::obj(vec![
+            ("k", Json::Str(key.to_string())),
+            ("v", value.clone()),
+        ])
+        .to_string();
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        writeln!(f, "{line}").context("appending journal cell")?;
+        f.flush().context("flushing journal")?;
+        Ok(())
+    }
+
+    /// Return the journaled value for `key`, computing, journaling and
+    /// flushing it on a miss. This is the resume granularity: everything
+    /// an experiment routes through `cell` survives a kill.
+    pub fn cell(
+        &mut self,
+        key: &str,
+        compute: impl FnOnce() -> Result<Json>,
+    ) -> Result<Json> {
+        if let Some(v) = self.cells.get(key) {
+            self.reused += 1;
+            return Ok(v.clone());
+        }
+        if let Some(n) = self.abort_after_cells {
+            if self.computed >= n {
+                bail!("checkpoint: simulated kill after {n} fresh cells");
+            }
+        }
+        let value = compute().with_context(|| format!("computing cell '{key}'"))?;
+        self.append_journal(key, &value)?;
+        self.cells.insert(key.to_string(), value.clone());
+        self.computed += 1;
+        Ok(value)
+    }
+
+    /// Bind this checkpoint to the run configuration. A fresh journal
+    /// records it; a resumed journal with a *different* stored
+    /// configuration (seed, budget, topk, backend, stable mode) is an
+    /// error — replaying its cells would silently mix results from two
+    /// configurations into one report.
+    pub fn bind_config(&mut self, config: &Json) -> Result<()> {
+        if let Some(stored) = self.cells.get(CONFIG_KEY) {
+            anyhow::ensure!(
+                stored == config,
+                "checkpoint journal was written with a different configuration \
+                 ({stored}) than this run ({config}); match the original flags \
+                 or rerun without --resume"
+            );
+            return Ok(());
+        }
+        let value = config.clone();
+        self.append_journal(CONFIG_KEY, &value)?;
+        self.cells.insert(CONFIG_KEY.to_string(), value);
+        Ok(())
+    }
+
+    /// Journal the finished experiment's report (completion marker).
+    pub fn store_report(&mut self, report: &Report) -> Result<()> {
+        let value = report.to_json();
+        self.append_journal(REPORT_KEY, &value)?;
+        self.cells.insert(REPORT_KEY.to_string(), value);
+        Ok(())
+    }
+
+    /// The stored report of a completed experiment, if present.
+    pub fn stored_report(&self) -> Result<Option<Report>> {
+        self.cells
+            .get(REPORT_KEY)
+            .map(Report::from_json)
+            .transpose()
+    }
+
+    /// Preload `problem`'s evaluation memo from the persisted snapshot for
+    /// its configuration; returns the number of evaluations imported.
+    pub fn warm_problem(&self, problem: &JointProblem<'_>) -> usize {
+        let Some(entries) = self.memo.get(&problem.config_key()) else {
+            return 0;
+        };
+        let n = entries.len();
+        problem.preload_cache(entries.iter().map(|(&k, ev)| (k, ev.clone())).collect());
+        n
+    }
+
+    /// Snapshot `problem`'s evaluation memo into this checkpoint (keyed by
+    /// the problem's configuration), appending only the *new* entries to
+    /// the memo file (JSONL, like the cell journal) — O(new entries), not
+    /// O(total memo), per absorb. Call [`Checkpoint::warm_problem`] on the
+    /// problem first (as every call site does): a problem whose cache is
+    /// no larger than the stored scope is assumed already absorbed and
+    /// skipped without snapshotting.
+    pub fn absorb_problem(&mut self, problem: &JointProblem<'_>) -> Result<()> {
+        let scope = problem.config_key();
+        let known = self.memo.get(&scope).map(|m| m.len()).unwrap_or(0);
+        if problem.cache_len() <= known {
+            return Ok(());
+        }
+        let snapshot = problem.cache_snapshot();
+        let map = self.memo.entry(scope.clone()).or_default();
+        let mut fresh: Vec<u64> = Vec::new();
+        for (k, ev) in snapshot {
+            if !map.contains_key(&k) {
+                map.insert(k, ev);
+                fresh.push(k);
+            }
+        }
+        if fresh.is_empty() {
+            return Ok(());
+        }
+        let Some(path) = &self.memo_path else {
+            return Ok(());
+        };
+        let map = &self.memo[&scope];
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening memo {}", path.display()))?;
+        for k in &fresh {
+            let line = Json::obj(vec![
+                ("s", Json::Str(scope.clone())),
+                ("k", Json::Str(k.to_string())),
+                ("v", evaluation_to_json(&map[k])),
+            ])
+            .to_string();
+            writeln!(f, "{line}").context("appending memo entry")?;
+        }
+        f.flush().context("flushing memo")?;
+        Ok(())
+    }
+}
+
+// ---- JSON codecs -----------------------------------------------------------
+//
+// Finite floats round-trip bit-exactly through `Json::f64`; designs are
+// index vectors. These are the primitives `common::ga_cell` and the
+// experiment modules journal.
+
+/// Serialize a design (its index vector).
+pub fn design_to_json(d: &Design) -> Json {
+    Json::Arr(d.0.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+/// Deserialize a design.
+pub fn design_from_json(v: &Json) -> Result<Design> {
+    let arr = v.as_arr().context("design: expected an array")?;
+    let idx: Vec<u16> = arr
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as u16)
+                .context("design: expected a number")
+        })
+        .collect::<Result<_>>()?;
+    Ok(Design(idx))
+}
+
+/// Serialize a full optimizer result (journal cell payload).
+pub fn opt_result_to_json(r: &OptResult) -> Json {
+    Json::obj(vec![
+        ("algorithm", Json::Str(r.algorithm.clone())),
+        ("best", design_to_json(&r.best)),
+        ("best_score", Json::f64(r.best_score)),
+        (
+            "history",
+            Json::Arr(r.history.iter().map(|&x| Json::f64(x)).collect()),
+        ),
+        (
+            "top",
+            Json::Arr(
+                r.top
+                    .iter()
+                    .map(|(d, s)| Json::Arr(vec![design_to_json(d), Json::f64(*s)]))
+                    .collect(),
+            ),
+        ),
+        ("evals", Json::Num(r.evals as f64)),
+        ("wall_us", Json::Num(r.wall.as_micros() as f64)),
+    ])
+}
+
+/// Deserialize an optimizer result journaled by [`opt_result_to_json`].
+pub fn opt_result_from_json(v: &Json) -> Result<OptResult> {
+    let f64_field = |key: &str| -> Result<f64> {
+        v.get(key)
+            .and_then(|x| x.as_f64_lenient())
+            .with_context(|| format!("opt result: missing '{key}'"))
+    };
+    let history = v
+        .get("history")
+        .and_then(|h| h.as_arr())
+        .context("opt result: missing 'history'")?
+        .iter()
+        .map(|x| x.as_f64_lenient().context("history: expected a number"))
+        .collect::<Result<Vec<f64>>>()?;
+    let top = v
+        .get("top")
+        .and_then(|t| t.as_arr())
+        .context("opt result: missing 'top'")?
+        .iter()
+        .map(|pair| -> Result<(Design, f64)> {
+            let pair = pair.as_arr().context("top entry: expected a pair")?;
+            anyhow::ensure!(pair.len() == 2, "top entry: expected [design, score]");
+            Ok((
+                design_from_json(&pair[0])?,
+                pair[1].as_f64_lenient().context("top score")?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(OptResult {
+        algorithm: v
+            .get("algorithm")
+            .and_then(|a| a.as_str())
+            .context("opt result: missing 'algorithm'")?
+            .to_string(),
+        best: design_from_json(v.get("best").context("opt result: missing 'best'")?)?,
+        best_score: f64_field("best_score")?,
+        history,
+        top,
+        evals: f64_field("evals")? as usize,
+        wall: Duration::from_micros(f64_field("wall_us")? as u64),
+    })
+}
+
+/// Serialize one memoized evaluation record (compact keys: the memo holds
+/// thousands of these).
+pub fn evaluation_to_json(ev: &Evaluations) -> Json {
+    Json::obj(vec![
+        (
+            "m",
+            Json::Arr(
+                ev.metrics
+                    .iter()
+                    .map(|m| {
+                        Json::Arr(vec![
+                            Json::f64(m.energy),
+                            Json::f64(m.latency),
+                            Json::f64(m.area),
+                            Json::Bool(m.feasible),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "a",
+            match &ev.accuracies {
+                Some(accs) => {
+                    Json::Arr(accs.iter().map(|&x| Json::f64(x)).collect())
+                }
+                None => Json::Null,
+            },
+        ),
+        ("s", Json::f64(ev.score)),
+    ])
+}
+
+/// Deserialize a memoized evaluation record.
+pub fn evaluation_from_json(v: &Json) -> Result<Evaluations> {
+    let metrics = v
+        .get("m")
+        .and_then(|m| m.as_arr())
+        .context("evaluation: missing 'm'")?
+        .iter()
+        .map(|m| -> Result<Metrics> {
+            let m = m.as_arr().context("metrics: expected an array")?;
+            anyhow::ensure!(m.len() == 4, "metrics: expected 4 fields");
+            Ok(Metrics {
+                energy: m[0].as_f64_lenient().context("energy")?,
+                latency: m[1].as_f64_lenient().context("latency")?,
+                area: m[2].as_f64_lenient().context("area")?,
+                feasible: matches!(m[3], Json::Bool(true)),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let accuracies = match v.get("a") {
+        Some(Json::Arr(accs)) => Some(
+            accs.iter()
+                .map(|x| x.as_f64_lenient().context("accuracy"))
+                .collect::<Result<Vec<f64>>>()?,
+        ),
+        _ => None,
+    };
+    Ok(Evaluations {
+        metrics,
+        accuracies,
+        score: v
+            .get("s")
+            .and_then(|s| s.as_f64_lenient())
+            .context("evaluation: missing 's'")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EvalBackend;
+    use crate::model::MemoryTech;
+    use crate::objective::Objective;
+    use crate::space::SearchSpace;
+    use crate::util::rng::Rng;
+    use crate::workloads::WorkloadSet;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("imcopt-ckpt-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn cells_journal_and_reload() {
+        let dir = tmp("cells");
+        let mut calls = 0usize;
+        {
+            let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+            assert!(ck.is_persistent());
+            let v = ck
+                .cell("a", || {
+                    calls += 1;
+                    Ok(Json::Num(1.5))
+                })
+                .unwrap();
+            assert_eq!(v, Json::Num(1.5));
+            // same-process hit
+            ck.cell("a", || panic!("must not recompute")).unwrap();
+            assert_eq!(ck.computed(), 1);
+            assert_eq!(ck.reused(), 1);
+        }
+        assert_eq!(calls, 1);
+        // resumed process replays the journaled value
+        let mut ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        let v = ck.cell("a", || panic!("must not recompute")).unwrap();
+        assert_eq!(v, Json::Num(1.5));
+        assert_eq!(ck.reused(), 1);
+        // non-resume opens discard the journal
+        let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+        let v = ck.cell("a", || Ok(Json::Num(2.5))).unwrap();
+        assert_eq!(v, Json::Num(2.5));
+    }
+
+    #[test]
+    fn corrupt_trailing_line_is_skipped() {
+        let dir = tmp("corrupt");
+        {
+            let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+            ck.cell("good", || Ok(Json::Bool(true))).unwrap();
+        }
+        // simulate a kill mid-append
+        let journal = dir.join("checkpoints/demo.jsonl");
+        let mut text = std::fs::read_to_string(&journal).unwrap();
+        text.push_str("{\"k\": \"bad\", \"v\": [1, 2");
+        std::fs::write(&journal, text).unwrap();
+        let mut ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        assert_eq!(ck.get("good"), Some(&Json::Bool(true)));
+        assert!(ck.get("bad").is_none());
+        // the damaged key recomputes cleanly
+        ck.cell("bad", || Ok(Json::Num(3.0))).unwrap();
+    }
+
+    #[test]
+    fn simulated_kill_stops_fresh_cells_only() {
+        let dir = tmp("kill");
+        {
+            let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+            ck.abort_after_cells = Some(1);
+            ck.cell("one", || Ok(Json::Num(1.0))).unwrap();
+            let err = ck.cell("two", || Ok(Json::Num(2.0))).unwrap_err();
+            assert!(format!("{err}").contains("simulated kill"));
+        }
+        let mut ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        // the journaled cell replays even with the hook armed
+        ck.abort_after_cells = Some(0);
+        assert_eq!(
+            ck.cell("one", || panic!("journaled")).unwrap(),
+            Json::Num(1.0)
+        );
+        assert!(ck.cell("two", || Ok(Json::Num(2.0))).is_err());
+    }
+
+    #[test]
+    fn config_binding_rejects_mismatched_resume() {
+        let dir = tmp("config");
+        let cfg_a = Json::obj(vec![("seed", Json::Str("5".into()))]);
+        let cfg_b = Json::obj(vec![("seed", Json::Str("6".into()))]);
+        {
+            let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+            ck.bind_config(&cfg_a).unwrap();
+            ck.cell("one", || Ok(Json::Num(1.0))).unwrap();
+        }
+        // same config resumes fine and replays the cell
+        let mut ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        ck.bind_config(&cfg_a).unwrap();
+        assert_eq!(
+            ck.cell("one", || panic!("journaled")).unwrap(),
+            Json::Num(1.0)
+        );
+        // a different config must refuse to reuse the journal
+        let mut ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        let err = ck.bind_config(&cfg_b).unwrap_err();
+        assert!(format!("{err}").contains("different configuration"), "{err}");
+        // a cold (non-resume) open discards the journal, so any config binds
+        let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+        ck.bind_config(&cfg_b).unwrap();
+    }
+
+    #[test]
+    fn report_completion_marker_roundtrips() {
+        let dir = tmp("report");
+        let mut r = Report::new("demo", "title");
+        let mut t = crate::util::table::Table::new("t", &["c"]);
+        t.row(vec!["v".into()]);
+        r.table(t);
+        {
+            let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+            assert!(ck.stored_report().unwrap().is_none());
+            ck.store_report(&r).unwrap();
+        }
+        let ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        let back = ck.stored_report().unwrap().expect("report stored");
+        assert_eq!(back.to_json().to_string(), r.to_json().to_string());
+    }
+
+    #[test]
+    fn opt_result_codec_roundtrips_bit_exact() {
+        let r = OptResult {
+            algorithm: "4-phase GA (proposed)".into(),
+            best: Design(vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 0]),
+            best_score: 1.0 / 3.0,
+            history: vec![f64::INFINITY, 2.5, 1.0 / 3.0],
+            top: vec![
+                (Design(vec![1; 10]), 1.0 / 3.0),
+                (Design(vec![2; 10]), 0.7),
+            ],
+            evals: 480,
+            wall: Duration::from_micros(123_456),
+        };
+        let j = opt_result_to_json(&r);
+        let back = opt_result_from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.algorithm, r.algorithm);
+        assert_eq!(back.best, r.best);
+        assert_eq!(back.best_score.to_bits(), r.best_score.to_bits());
+        assert_eq!(back.history.len(), r.history.len());
+        for (a, b) in back.history.iter().zip(&r.history) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.top, r.top);
+        assert_eq!(back.evals, r.evals);
+        assert_eq!(back.wall, r.wall);
+    }
+
+    fn problem<'a>(space: &'a SearchSpace, set: &'a WorkloadSet) -> JointProblem<'a> {
+        JointProblem::with_backend(
+            space,
+            set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        )
+    }
+
+    #[test]
+    fn memo_persists_and_warms_identical_configs() {
+        let dir = tmp("memo");
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let mut rng = Rng::seed_from(33);
+        let p = problem(&space, &set);
+        let designs: Vec<Design> =
+            (0..5).map(|_| p.random_candidate(&mut rng)).collect();
+        let scores = p.score_batch(&designs);
+        {
+            let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+            ck.absorb_problem(&p).unwrap();
+        }
+        let ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        let q = problem(&space, &set);
+        let imported = ck.warm_problem(&q);
+        assert_eq!(imported, p.cache_len());
+        let warm = q.score_batch(&designs);
+        assert_eq!(q.evals(), 0, "memo must satisfy every lookup");
+        for (a, b) in scores.iter().zip(&warm) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // a differently-configured problem must not be warmed
+        let r = problem(&space, &set).restricted(1);
+        assert_eq!(ck.warm_problem(&r), 0);
+    }
+}

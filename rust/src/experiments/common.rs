@@ -1,6 +1,8 @@
 //! Shared experiment plumbing: GA configurations scaled by the context,
-//! joint / separate / largest-workload search runners, and formatting.
+//! joint / separate / largest-workload search runners, checkpoint-aware
+//! cell wrappers, and formatting.
 
+use super::checkpoint::{self, Checkpoint};
 use crate::coordinator::{ExpContext, JointProblem};
 use crate::model::MemoryTech;
 use crate::objective::Objective;
@@ -9,6 +11,7 @@ use crate::space::SearchSpace;
 use crate::util::fmt_sig;
 use crate::util::rng::Rng;
 use crate::workloads::WorkloadSet;
+use anyhow::Result;
 
 /// The proposed 4-phase GA sized by the context (paper budget unless
 /// `--quick`).
@@ -39,22 +42,52 @@ pub fn run_ga(problem: &JointProblem<'_>, cfg: GaConfig, seed: u64) -> OptResult
     GeneticAlgorithm::new(cfg).run(problem, &mut Rng::seed_from(seed))
 }
 
-/// Paper baseline: optimize for a single workload only ("separate
-/// search") with the proposed algorithm — the workload-specific quality
-/// bound of Fig. 5.
-pub fn separate_search(
+/// Journal any optimizer run as a checkpoint cell: a journaled key replays
+/// the stored [`OptResult`] without touching the evaluator; a miss runs
+/// `compute`, journals and flushes. Keys must be unique within one
+/// experiment (convention: `<id>:<scenario>:<unit>[:<seed>]`).
+pub fn opt_cell(
+    ckpt: &mut Checkpoint,
+    key: &str,
+    compute: impl FnOnce() -> OptResult,
+) -> Result<OptResult> {
+    let v = ckpt.cell(key, || Ok(checkpoint::opt_result_to_json(&compute())))?;
+    checkpoint::opt_result_from_json(&v)
+}
+
+/// [`opt_cell`] specialized to [`run_ga`], the unit of work most
+/// experiments journal.
+pub fn ga_cell(
+    ckpt: &mut Checkpoint,
+    key: &str,
+    problem: &JointProblem<'_>,
+    cfg: GaConfig,
+    seed: u64,
+) -> Result<OptResult> {
+    opt_cell(ckpt, key, || run_ga(problem, cfg, seed))
+}
+
+/// [`naive_largest_search`] as a checkpoint cell (the §IV-A baseline used
+/// by fig3/fig5/fig10): largest workload + conventional random-init GA,
+/// with the per-config eval memo persisted for warm resume. One
+/// definition so the baseline cannot silently diverge between figures.
+#[allow(clippy::too_many_arguments)]
+pub fn naive_largest_cell(
+    ckpt: &mut Checkpoint,
+    key: &str,
     ctx: &ExpContext,
     space: &SearchSpace,
     set: &WorkloadSet,
     mem: MemoryTech,
     objective: Objective,
-    workload_index: usize,
     seed: u64,
-) -> OptResult {
-    let problem = ctx
-        .problem(space, set, mem, objective)
-        .restricted(workload_index);
-    run_ga(&problem, four_phase(ctx), seed)
+) -> Result<OptResult> {
+    let li = largest_workload_index(set, mem);
+    let problem = ctx.problem(space, set, mem, objective).restricted(li);
+    ckpt.warm_problem(&problem);
+    let r = ga_cell(ckpt, key, &problem, classic(ctx), seed)?;
+    ckpt.absorb_problem(&problem)?;
+    Ok(r)
 }
 
 /// The §IV-A baseline: "optimization for the maximum workload ... a naive

@@ -8,6 +8,7 @@
 //! exceeds GPT-2's LM head). Headline claim: up to 95.5 % EDAP reduction
 //! vs largest-workload optimization.
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::MemoryTech;
@@ -17,7 +18,25 @@ use crate::util::table::Table;
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Fig10;
+
+impl super::Experiment for Fig10 {
+    fn id(&self) -> &'static str {
+        "fig10"
+    }
+    fn description(&self) -> &'static str {
+        "9-workload scalability on SRAM weight-swapping hardware"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Medium
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::all9();
     let space = crate::space::SearchSpace::sram();
     // mean aggregation (§IV-J)
@@ -32,11 +51,24 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
     assert_eq!(set.workloads[li].name, "vgg16");
 
     let problem = ctx.problem(&space, &set, MemoryTech::Sram, objective);
-    let t0 = std::time::Instant::now();
-    let joint = common::run_ga(&problem, common::four_phase(ctx), ctx.seed);
-    let joint_time = t0.elapsed();
-    let largest =
-        common::naive_largest_search(ctx, &space, &set, MemoryTech::Sram, objective, ctx.seed);
+    let joint = common::ga_cell(
+        ckpt,
+        "fig10:joint",
+        &problem,
+        common::four_phase(ctx),
+        ctx.seed,
+    )?;
+    let joint_time = joint.wall;
+    let largest = common::naive_largest_cell(
+        ckpt,
+        "fig10:largest",
+        ctx,
+        &space,
+        &set,
+        MemoryTech::Sram,
+        objective,
+        ctx.seed,
+    )?;
 
     let joint_scores = common::per_workload_scores(&problem, &joint.best, &edap);
     let largest_scores = common::per_workload_scores(&problem, &largest.best, &edap);
@@ -69,7 +101,7 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
     report.note(format!(
         "joint design: {} | search wall {} | evals {}",
         space.describe(&joint.best),
-        crate::util::fmt_duration(joint_time),
+        ctx.fmt_wall(joint_time),
         joint.evals
     ));
     report.emit(&ctx.out_dir)?;
@@ -83,7 +115,7 @@ mod tests {
     #[test]
     fn fig10_quick_covers_nine_workloads() {
         let ctx = ExpContext::quick(43);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         assert_eq!(r.tables[0].rows.len(), 9);
         let names: Vec<&str> = r.tables[0].rows.iter().map(|x| x[0].as_str()).collect();
         assert!(names.contains(&"gpt2-medium"));

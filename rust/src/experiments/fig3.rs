@@ -3,6 +3,7 @@
 //! hardware across the four CNN workloads. Headline claim: joint search
 //! reduces EDAP by up to 76.2 % on the 4-workload set (§V-A).
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::MemoryTech;
@@ -12,7 +13,25 @@ use crate::util::table::Table;
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Fig3;
+
+impl super::Experiment for Fig3 {
+    fn id(&self) -> &'static str {
+        "fig3"
+    }
+    fn description(&self) -> &'static str {
+        "EDAP of joint vs largest-workload optimization (RRAM & SRAM, 4 CNNs)"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Light
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let objective = Objective::edap();
     let mut report = Report::new(
@@ -26,12 +45,26 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
     ] {
         // joint search with the proposed 4-phase GA
         let joint_problem = ctx.problem(&space, &set, mem, objective);
-        let joint = common::run_ga(&joint_problem, common::four_phase(ctx), ctx.seed);
+        let joint = common::ga_cell(
+            ckpt,
+            &format!("fig3:{}:joint", mem.name()),
+            &joint_problem,
+            common::four_phase(ctx),
+            ctx.seed,
+        )?;
 
         // the naive baseline of §IV-A: largest workload (VGG16 here) with
         // the conventional random-init GA
-        let largest =
-            common::naive_largest_search(ctx, &space, &set, mem, objective, ctx.seed);
+        let largest = common::naive_largest_cell(
+            ckpt,
+            &format!("fig3:{}:largest", mem.name()),
+            ctx,
+            &space,
+            &set,
+            mem,
+            objective,
+            ctx.seed,
+        )?;
 
         let joint_scores =
             common::per_workload_scores(&joint_problem, &joint.best, &objective);
@@ -83,7 +116,7 @@ mod tests {
     #[test]
     fn fig3_quick_runs_and_produces_shape() {
         let ctx = ExpContext::quick(7);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         assert_eq!(r.tables.len(), 2);
         assert_eq!(r.tables[0].rows.len(), 4);
         // every score parses

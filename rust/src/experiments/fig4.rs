@@ -3,6 +3,7 @@
 //! independent joint-EDAP RRAM runs (6 plotted in the paper, plus a
 //! 25-run mean/std: 2.47±0.87 vs 1.21±0.16 mJ·ms·mm²).
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::MemoryTech;
@@ -12,7 +13,25 @@ use crate::util::{fmt_sig, stats, table::Table};
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Fig4;
+
+impl super::Experiment for Fig4 {
+    fn id(&self) -> &'static str {
+        "fig4"
+    }
+    fn description(&self) -> &'static str {
+        "Convergence & run-to-run stability of the 4-phase GA vs traditional GA"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Heavy
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let space = crate::space::SearchSpace::rram();
     let objective = Objective::edap();
@@ -37,9 +56,21 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
         let seed = ctx.seed.wrapping_add(run_i as u64 * 7919);
         // fresh problems per run so the cache doesn't leak information
         let p1 = ctx.problem(&space, &set, MemoryTech::Rram, objective);
-        let r_classic = common::run_ga(&p1, common::classic(ctx), seed);
+        let r_classic = common::ga_cell(
+            ckpt,
+            &format!("fig4:classic:{run_i}"),
+            &p1,
+            common::classic(ctx),
+            seed,
+        )?;
         let p2 = ctx.problem(&space, &set, MemoryTech::Rram, objective);
-        let r_four = common::run_ga(&p2, common::four_phase(ctx), seed);
+        let r_four = common::ga_cell(
+            ckpt,
+            &format!("fig4:4phase:{run_i}"),
+            &p2,
+            common::four_phase(ctx),
+            seed,
+        )?;
         finals_classic.push(r_classic.best_score);
         finals_fourphase.push(r_four.best_score);
         if run_i == 0 {
@@ -112,7 +143,7 @@ mod tests {
     #[test]
     fn fig4_quick_produces_three_tables() {
         let ctx = ExpContext::quick(3);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         assert_eq!(r.tables.len(), 3);
         assert!(!r.tables[0].rows.is_empty()); // convergence curve
         assert_eq!(r.tables[2].rows.len(), 2); // summary rows

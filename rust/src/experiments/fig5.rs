@@ -9,6 +9,7 @@
 //! panels), and (v) the proposed 4-phase GA. Top-5 designs per run; the
 //! paper's success criterion is the proposed method sitting closest to 1.0.
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::MemoryTech;
@@ -19,7 +20,25 @@ use crate::util::table::Table;
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Fig5;
+
+impl super::Experiment for Fig5 {
+    fn id(&self) -> &'static str {
+        "fig5"
+    }
+    fn description(&self) -> &'static str {
+        "Generalized vs workload-specific designs across objectives (8 panels)"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Heavy
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let mut report = Report::new(
         "fig5",
@@ -40,16 +59,28 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
     ] {
         for objective in &objectives {
             let panel = format!("{} / {}", mem.name(), objective.name());
+            let key_base = format!("fig5:{}:{}", mem.name(), objective.name());
 
             // (i) separate search per workload -> baseline scores
-            // (best over the seed set: the workload-specific bound)
+            // (best over the seed set: the workload-specific bound).
+            // Each run is a checkpoint cell; the per-config eval memo is
+            // persisted so a resumed in-flight run starts warm with every
+            // design the earlier seeds already evaluated.
             let mut baseline = vec![f64::INFINITY; set.len()];
             for wi in 0..set.len() {
                 for &seed in &seeds {
                     let p = ctx
                         .problem(&space, &set, mem, *objective)
                         .restricted(wi);
-                    let r = common::run_ga(&p, common::four_phase(ctx), seed);
+                    ckpt.warm_problem(&p);
+                    let r = common::ga_cell(
+                        ckpt,
+                        &format!("{key_base}:base:{wi}:{seed}"),
+                        &p,
+                        common::four_phase(ctx),
+                        seed,
+                    )?;
+                    ckpt.absorb_problem(&p)?;
                     let scores = common::per_workload_scores(&p, &r.best, objective);
                     baseline[wi] = baseline[wi].min(scores[wi]);
                 }
@@ -81,38 +112,49 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
 
             // strategies (GA baselines only on the EDAP panels, as in the
             // paper); each runs once per seed and reports seed-mean
-            // normalized scores + seed-mean top-5 spread
+            // normalized scores + seed-mean top-5 spread. Runners journal
+            // through the caller-supplied cell key and share the
+            // persisted per-config eval memo.
             let is_edap = objective.kind == crate::objective::ObjectiveKind::Edap;
-            type Runner<'x> = Box<dyn Fn(u64) -> OptResult + 'x>;
+            type Runner<'x> =
+                Box<dyn Fn(&mut Checkpoint, &str, u64) -> Result<OptResult> + 'x>;
+            // joint-search runners differ only in GA configuration; fn
+            // pointers keep the closures borrow-only (no captured state
+            // beyond the panel context)
+            let joint_cfgs: Vec<(&str, fn(&ExpContext) -> crate::search::GaConfig)> =
+                if is_edap {
+                    vec![
+                        ("joint non-modified GA", common::classic),
+                        ("joint GA + sampling", common::classic_sampled),
+                        ("joint 4-phase GA (proposed)", common::four_phase),
+                    ]
+                } else {
+                    vec![("joint 4-phase GA (proposed)", common::four_phase)]
+                };
             let mut strategies: Vec<(&str, Runner)> = vec![(
                 "separate for largest workload",
-                Box::new(|seed| {
-                    common::naive_largest_search(ctx, &space, &set, mem, *objective, seed)
+                Box::new(|ckpt: &mut Checkpoint, key: &str, seed: u64| {
+                    // §IV-A naive flow: largest workload + conventional GA
+                    common::naive_largest_cell(
+                        ckpt, key, ctx, &space, &set, mem, *objective, seed,
+                    )
                 }),
             )];
-            if is_edap {
+            // plain `Copy` references so the `move` closures below don't
+            // take the owned space/set out of the panel scope
+            let (space_ref, set_ref) = (&space, &set);
+            for (name, cfg) in joint_cfgs {
                 strategies.push((
-                    "joint non-modified GA",
-                    Box::new(|seed| {
-                        let p = ctx.problem(&space, &set, mem, *objective);
-                        common::run_ga(&p, common::classic(ctx), seed)
-                    }),
-                ));
-                strategies.push((
-                    "joint GA + sampling",
-                    Box::new(|seed| {
-                        let p = ctx.problem(&space, &set, mem, *objective);
-                        common::run_ga(&p, common::classic_sampled(ctx), seed)
+                    name,
+                    Box::new(move |ckpt: &mut Checkpoint, key: &str, seed: u64| {
+                        let p = ctx.problem(space_ref, set_ref, mem, *objective);
+                        ckpt.warm_problem(&p);
+                        let r = common::ga_cell(ckpt, key, &p, cfg(ctx), seed)?;
+                        ckpt.absorb_problem(&p)?;
+                        Ok(r)
                     }),
                 ));
             }
-            strategies.push((
-                "joint 4-phase GA (proposed)",
-                Box::new(|seed| {
-                    let p = ctx.problem(&space, &set, mem, *objective);
-                    common::run_ga(&p, common::four_phase(ctx), seed)
-                }),
-            ));
 
             let mut t = Table::new(
                 &format!(
@@ -137,7 +179,8 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
                     // landscapes coincide wherever the largest workload
                     // dominates, so identical RNG streams would yield
                     // artificially identical rows
-                    let r = run(seed.wrapping_mul(31).wrapping_add(si as u64 * 1009));
+                    let salted = seed.wrapping_mul(31).wrapping_add(si as u64 * 1009);
+                    let r = run(ckpt, &format!("{key_base}:s{si}:{seed}"), salted)?;
                     for (a, n) in acc.iter_mut().zip(normalized(&r)) {
                         *a += n / seeds.len() as f64;
                     }
@@ -188,7 +231,7 @@ mod tests {
     #[test]
     fn fig5_quick_shapes() {
         let ctx = ExpContext::quick(17);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         // 2 memories x 4 objectives
         assert_eq!(r.tables.len(), 8);
         // EDAP panels carry 5 strategies, others 3

@@ -7,6 +7,7 @@
 //! under area-only optimization; SRAM prefers fewer rows / more columns;
 //! SRAM shows lower energy but higher latency (swapping); RRAM wins EDAP.
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::MemoryTech;
@@ -17,7 +18,25 @@ use crate::util::table::Table;
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Fig6;
+
+impl super::Experiment for Fig6 {
+    fn id(&self) -> &'static str {
+        "fig6"
+    }
+    fn description(&self) -> &'static str {
+        "Optimized RRAM vs SRAM design parameters across objectives"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Light
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let vgg_index = 1usize;
     let mut report = Report::new(
@@ -96,7 +115,7 @@ mod tests {
     #[test]
     fn fig6_quick_has_four_objectives_per_mem() {
         let ctx = ExpContext::quick(23);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         assert_eq!(r.tables.len(), 2);
         for t in &r.tables {
             assert_eq!(t.rows.len(), 4);

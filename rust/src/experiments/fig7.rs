@@ -8,6 +8,7 @@
 //! the RRAM area constraint; sequential-from-median gets stuck in early
 //! circuit-level choices (the MobileNetV3 lock-in story for SRAM).
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::{ExpContext, JointProblem};
 use crate::model::MemoryTech;
@@ -113,7 +114,25 @@ fn median_design(space: &SearchSpace) -> Design {
     )
 }
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Fig7;
+
+impl super::Experiment for Fig7 {
+    fn id(&self) -> &'static str {
+        "fig7"
+    }
+    fn description(&self) -> &'static str {
+        "Joint vs sequential level-by-level optimization of the stack"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Medium
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let objective = Objective::edap();
     let mut report = Report::new(
@@ -191,7 +210,7 @@ mod tests {
         // the full-budget run (`repro exp fig7`) carries the paper claim
         // and is asserted in the integration suite.
         let ctx = ExpContext::quick(29);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         assert_eq!(r.tables.len(), 2);
         for t in &r.tables {
             assert_eq!(t.rows.len(), 3);

@@ -7,6 +7,7 @@
 //! EDAP-only joint searches converge to (nearly) the same architecture
 //! because cycle-to-cycle noise — set by bits/cell — dominates IR-drop.
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::MemoryTech;
@@ -16,7 +17,25 @@ use crate::util::table::Table;
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Fig8;
+
+impl super::Experiment for Fig8 {
+    fn id(&self) -> &'static str {
+        "fig8"
+    }
+    fn description(&self) -> &'static str {
+        "RRAM non-idealities: accuracy-aware joint optimization"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Light
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let space = crate::space::SearchSpace::rram();
     let acc_obj = Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max);
@@ -89,7 +108,7 @@ mod tests {
     #[test]
     fn fig8_quick_reports_accuracy_below_baseline() {
         let ctx = ExpContext::quick(37);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         let t = &r.tables[0];
         assert_eq!(t.rows.len(), 12); // 3 strategies x 4 workloads
         for row in &t.rows {

@@ -8,6 +8,7 @@
 //! the best trade-offs (knee) around 10 nm; 7 nm occupies the low-EDAP /
 //! high-cost end.
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::{tech, MemoryTech};
@@ -19,7 +20,25 @@ use crate::util::{stats, table::Table};
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Fig9;
+
+impl super::Experiment for Fig9 {
+    fn id(&self) -> &'static str {
+        "fig9"
+    }
+    fn description(&self) -> &'static str {
+        "EDAP vs fabrication cost across CMOS nodes (tech co-optimization)"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Medium
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let space = crate::space::SearchSpace::sram_tech();
     let objective = Objective::new(ObjectiveKind::EdapCost, Aggregation::Max);
@@ -138,7 +157,7 @@ mod tests {
     #[test]
     fn fig9_quick_builds_pareto_front() {
         let ctx = ExpContext::quick(41);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         assert_eq!(r.tables.len(), 2);
         assert_eq!(r.tables[0].rows.len(), 8); // one per node
         assert!(!r.tables[1].rows.is_empty(), "empty Pareto front");

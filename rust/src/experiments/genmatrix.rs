@@ -1,0 +1,270 @@
+//! Hold-one-out generalization matrix — the paper's core claim (a single
+//! jointly-optimized IMC design serves many networks with
+//! near-specialized EDAP) as an explicit scenario sweep.
+//!
+//! For each workload `w` of a set, a design is jointly optimized on the
+//! other N−1 workloads and deployed on `w`; its EDAP on `w` is compared
+//! against the separate-search bound (a design optimized for `w` alone,
+//! the Fig. 5 baseline). The ratio — the *generalization gap* — is 1.0
+//! when the joint design matches the specialist on a network it never saw
+//! during the search.
+//!
+//! Sets follow the paper's setups: `cnn4` on weight-stationary RRAM
+//! (Max-aggregated EDAP) and `all9` on weight-swapping SRAM with Mean
+//! aggregation (§IV-J, as in Fig. 10, so GPT-2 Medium does not dominate).
+//!
+//! Every (set, held-out) cell journals its two searches through the
+//! checkpoint (resume skips completed cells; the per-config eval memo is
+//! persisted for warm re-runs) and emits a standalone JSON artifact under
+//! `<out_dir>/genmatrix_cells/<set>-<workload>.json` with the top-k
+//! designs (`--topk`, default 5).
+
+use super::checkpoint::{self, Checkpoint};
+use super::common;
+use crate::coordinator::ExpContext;
+use crate::model::MemoryTech;
+use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::report::Report;
+use crate::search::GaConfig;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::Table;
+use crate::workloads::WorkloadSet;
+use anyhow::{Context, Result};
+
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct GenMatrix;
+
+impl super::Experiment for GenMatrix {
+    fn id(&self) -> &'static str {
+        "genmatrix"
+    }
+    fn description(&self) -> &'static str {
+        "Hold-one-out generalization matrix: EDAP gap vs separate-search bound"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Heavy
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+    let edap = Objective::edap();
+    let mut report = Report::new(
+        "genmatrix",
+        "Hold-one-out generalization: joint-on-rest vs separate-search EDAP",
+    );
+    let cells_dir = ctx.out_dir.join("genmatrix_cells");
+    std::fs::create_dir_all(&cells_dir)
+        .with_context(|| format!("creating {}", cells_dir.display()))?;
+
+    for (set_name, set, mem, space, agg) in [
+        (
+            "cnn4",
+            WorkloadSet::cnn4(),
+            MemoryTech::Rram,
+            crate::space::SearchSpace::rram(),
+            Aggregation::Max,
+        ),
+        (
+            "all9",
+            WorkloadSet::all9(),
+            MemoryTech::Sram,
+            crate::space::SearchSpace::sram(),
+            Aggregation::Mean,
+        ),
+    ] {
+        let objective = Objective::new(ObjectiveKind::Edap, agg);
+        let mut t = Table::new(
+            &format!(
+                "{set_name} on {} — EDAP on the held-out workload (mJ·ms·mm²)",
+                mem.name()
+            ),
+            &[
+                "held-out",
+                "joint on rest",
+                "separate bound",
+                "gap x",
+                "topk spread",
+            ],
+        );
+        let mut gaps: Vec<f64> = Vec::new();
+        for wi in 0..set.len() {
+            let held = set.workloads[wi].name;
+            let train: Vec<usize> = (0..set.len()).filter(|&j| j != wi).collect();
+
+            // joint search on the N−1 training workloads
+            let joint_problem = ctx
+                .problem(&space, &set, mem, objective)
+                .restricted_to(train.clone());
+            ckpt.warm_problem(&joint_problem);
+            let cfg = GaConfig {
+                top_k: ctx.top_k,
+                ..common::four_phase(ctx)
+            };
+            let joint = common::ga_cell(
+                ckpt,
+                &format!("genmatrix:{set_name}:{wi}:joint"),
+                &joint_problem,
+                cfg,
+                ctx.seed.wrapping_add(wi as u64 * 7919),
+            )?;
+            ckpt.absorb_problem(&joint_problem)?;
+
+            // the specialist bound: separate search on the held-out
+            // workload (salted seed so the RNG streams differ, as in
+            // fig5's strategy runs)
+            let sep_problem = ctx.problem(&space, &set, mem, objective).restricted(wi);
+            ckpt.warm_problem(&sep_problem);
+            let sep = common::ga_cell(
+                ckpt,
+                &format!("genmatrix:{set_name}:{wi}:sep"),
+                &sep_problem,
+                common::four_phase(ctx),
+                ctx.seed.wrapping_mul(31).wrapping_add(wi as u64 * 1009),
+            )?;
+            ckpt.absorb_problem(&sep_problem)?;
+
+            // per-workload EDAP of both designs on the *held-out* workload
+            let joint_scores =
+                common::per_workload_scores(&joint_problem, &joint.best, &edap);
+            let sep_scores = common::per_workload_scores(&sep_problem, &sep.best, &edap);
+            let joint_held = joint_scores[wi];
+            let bound = sep_scores[wi];
+            let gap = if bound > 0.0 && bound.is_finite() {
+                joint_held / bound
+            } else {
+                f64::NAN
+            };
+            if gap.is_finite() {
+                gaps.push(gap);
+            }
+            let spread = match (joint.top.first(), joint.top.last()) {
+                (Some((_, best)), Some((_, worst)))
+                    if joint.top.len() > 1 && *best > 0.0 && best.is_finite() =>
+                {
+                    worst / best - 1.0
+                }
+                _ => 0.0,
+            };
+
+            t.row(vec![
+                held.into(),
+                common::s(joint_held),
+                common::s(bound),
+                common::s(gap),
+                format!("{spread:.3}"),
+            ]);
+
+            // standalone machine-readable cell artifact (rewritten even on
+            // resume so the directory is complete after any run)
+            let cell = Json::obj(vec![
+                ("experiment", Json::Str("genmatrix".into())),
+                ("set", Json::Str(set_name.into())),
+                ("mem", Json::Str(mem.name().into())),
+                ("aggregation", Json::Str(agg.name().into())),
+                ("held_out", Json::Str(held.into())),
+                (
+                    "train",
+                    Json::Arr(
+                        train
+                            .iter()
+                            .map(|&j| Json::Str(set.workloads[j].name.into()))
+                            .collect(),
+                    ),
+                ),
+                ("seed", Json::Num(ctx.seed as f64)),
+                (
+                    "joint",
+                    Json::obj(vec![
+                        ("design", checkpoint::design_to_json(&joint.best)),
+                        ("described", Json::Str(space.describe(&joint.best))),
+                        ("edap_heldout", Json::f64(joint_held)),
+                        ("joint_score", Json::f64(joint.best_score)),
+                    ]),
+                ),
+                (
+                    "separate_bound",
+                    Json::obj(vec![
+                        ("design", checkpoint::design_to_json(&sep.best)),
+                        ("edap", Json::f64(bound)),
+                    ]),
+                ),
+                ("gap", Json::f64(gap)),
+                (
+                    "top",
+                    Json::Arr(
+                        joint
+                            .top
+                            .iter()
+                            .map(|(d, s)| {
+                                Json::obj(vec![
+                                    ("design", checkpoint::design_to_json(d)),
+                                    ("score", Json::f64(*s)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]);
+            std::fs::write(
+                cells_dir.join(format!("{set_name}-{held}.json")),
+                cell.to_string() + "\n",
+            )
+            .with_context(|| format!("writing genmatrix cell {set_name}-{held}"))?;
+        }
+        report.table(t);
+        report.note(format!(
+            "{set_name}/{}: geo-mean hold-one-out gap {:.3}x over {} workloads \
+             (1.0 = generalizes as well as the specialist; paper: near-specialized \
+             EDAP from one shared design)",
+            mem.name(),
+            stats::geo_mean(&gaps),
+            set.len()
+        ));
+    }
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn genmatrix_quick_emits_cells_for_both_sets() {
+        let mut ctx = ExpContext::quick(47);
+        ctx.out_dir = std::env::temp_dir().join("imcopt-genmatrix-test");
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
+        assert_eq!(r.tables.len(), 2);
+        assert_eq!(r.tables[0].rows.len(), 4);
+        assert_eq!(r.tables[1].rows.len(), 9);
+        // every cell artifact exists, parses, and carries the gap
+        for (set_name, set) in [
+            ("cnn4", WorkloadSet::cnn4()),
+            ("all9", WorkloadSet::all9()),
+        ] {
+            for w in &set.workloads {
+                let path = ctx
+                    .out_dir
+                    .join("genmatrix_cells")
+                    .join(format!("{set_name}-{}.json", w.name));
+                let text = std::fs::read_to_string(&path)
+                    .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                let v = json::parse(&text).unwrap();
+                assert_eq!(v.get("held_out").unwrap().as_str(), Some(w.name));
+                assert!(v.get("gap").unwrap().as_f64_lenient().is_some());
+                let top = v.get("top").unwrap().as_arr().unwrap();
+                assert!(!top.is_empty() && top.len() <= ctx.top_k);
+                assert_eq!(
+                    v.get("train").unwrap().as_arr().unwrap().len(),
+                    set.len() - 1
+                );
+            }
+        }
+    }
+}

@@ -1,6 +1,15 @@
-//! One module per paper table/figure (see DESIGN.md §4 for the index).
+//! Experiment registry: one module per paper table/figure (see DESIGN.md
+//! §4 for the index) plus the `genmatrix` generalization sweep.
+//!
+//! Every experiment is a unit struct implementing [`Experiment`] and
+//! listed in [`REGISTRY`] (paper order). The registry replaces the old
+//! string `match` dispatch: the CLI, benches, CI validation and the
+//! checkpoint/resume runner all iterate the same list, so adding a
+//! scenario is one module + one registry entry — see README.md
+//! ("Adding an experiment").
 
 pub mod ablations;
+pub mod checkpoint;
 pub mod common;
 pub mod fig3;
 pub mod fig4;
@@ -10,35 +19,189 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod fig10;
+pub mod genmatrix;
 pub mod table3;
 pub mod table5;
 pub mod table6;
 
 use crate::coordinator::ExpContext;
 use crate::report::Report;
-use anyhow::Result;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use checkpoint::Checkpoint;
 
-/// All experiment ids in paper order, plus the extra ablation suite.
-pub const ALL_IDS: [&str; 12] = [
-    "table3", "fig3", "fig4", "table5", "fig5", "table6", "fig6", "fig7", "fig8", "fig9",
-    "fig10", "ablations",
+/// Coarse run-cost class under the paper budget (the `--quick` budget
+/// shrinks everything to CI scale). Shown by `imcopt list`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cost {
+    /// Seconds: a handful of searches on the 4-workload set.
+    Light,
+    /// Minutes: repeated searches or a scenario sweep.
+    Medium,
+    /// Tens of minutes: many repeats, large workload sets, or panels.
+    Heavy,
+}
+
+impl Cost {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Cost::Light => "light",
+            Cost::Medium => "medium",
+            Cost::Heavy => "heavy",
+        }
+    }
+}
+
+/// A registered experiment. Implementations are stateless unit structs;
+/// all run state lives in the [`ExpContext`] and the [`Checkpoint`].
+pub trait Experiment: Sync {
+    /// Stable id (CLI argument, artifact file stem, checkpoint name).
+    fn id(&self) -> &'static str;
+    /// One-line description for `imcopt list`.
+    fn description(&self) -> &'static str;
+    /// Estimated cost class under the paper budget.
+    fn cost(&self) -> Cost;
+    /// Produce the report, journaling resumable work units through the
+    /// checkpoint. Must emit its artifacts under `ctx.out_dir`.
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report>;
+}
+
+/// All experiments in paper order (the `genmatrix` scenario sweep sits
+/// with the other generalization results, before the ablation suite).
+pub static REGISTRY: [&dyn Experiment; 13] = [
+    &table3::Table3,
+    &fig3::Fig3,
+    &fig4::Fig4,
+    &table5::Table5,
+    &fig5::Fig5,
+    &table6::Table6,
+    &fig6::Fig6,
+    &fig7::Fig7,
+    &fig8::Fig8,
+    &fig9::Fig9,
+    &fig10::Fig10,
+    &genmatrix::GenMatrix,
+    &ablations::Ablations,
 ];
 
-/// Dispatch one experiment by id.
+/// All experiment ids in registry order (kept as a const array for
+/// callers that want a compile-time list; `registry_matches_all_ids`
+/// pins it to [`REGISTRY`]).
+pub const ALL_IDS: [&str; 13] = [
+    "table3", "fig3", "fig4", "table5", "fig5", "table6", "fig6", "fig7", "fig8", "fig9",
+    "fig10", "genmatrix", "ablations",
+];
+
+/// Look up a registered experiment.
+pub fn by_id(id: &str) -> Option<&'static dyn Experiment> {
+    REGISTRY.iter().copied().find(|e| e.id() == id)
+}
+
+/// Run one experiment without persistence (library/test entry point).
 pub fn run(id: &str, ctx: &ExpContext) -> Result<Report> {
-    match id {
-        "table3" => table3::run(ctx),
-        "fig3" => fig3::run(ctx),
-        "fig4" => fig4::run(ctx),
-        "table5" => table5::run(ctx),
-        "fig5" => fig5::run(ctx),
-        "table6" => table6::run(ctx),
-        "fig6" => fig6::run(ctx),
-        "fig7" => fig7::run(ctx),
-        "fig8" => fig8::run(ctx),
-        "fig9" => fig9::run(ctx),
-        "fig10" => fig10::run(ctx),
-        "ablations" => ablations::run(ctx),
-        other => anyhow::bail!("unknown experiment '{other}' (try one of {ALL_IDS:?})"),
+    run_with(id, ctx, &mut Checkpoint::disabled())
+}
+
+/// Run one experiment against an explicit checkpoint.
+pub fn run_with(id: &str, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+    let exp = by_id(id).with_context(|| {
+        format!("unknown experiment '{id}' (try one of {ALL_IDS:?})")
+    })?;
+    exp.run(ctx, ckpt)
+}
+
+/// Outcome of a [`run_selected`] sweep.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunSummary {
+    /// Experiments executed (fully or partially fresh).
+    pub executed: usize,
+    /// Experiments whose completed report was replayed from the journal.
+    pub replayed: usize,
+    /// Journaled cells reused across all experiments.
+    pub cells_reused: usize,
+    /// Cells computed fresh across all experiments.
+    pub cells_computed: usize,
+}
+
+impl RunSummary {
+    /// Stable one-line form printed by the CLI and grepped by `ci.sh`'s
+    /// resume smoke check.
+    pub fn to_line(&self) -> String {
+        format!(
+            "run summary: executed={} replayed={} cells_reused={} cells_computed={}",
+            self.executed, self.replayed, self.cells_reused, self.cells_computed
+        )
+    }
+}
+
+/// The configuration fields a checkpoint journal's cells depend on
+/// (thread count deliberately excluded: scores are thread-invariant).
+/// Journals refuse to resume under a different fingerprint.
+fn config_fingerprint(ctx: &ExpContext) -> Json {
+    Json::obj(vec![
+        ("seed", Json::Str(ctx.seed.to_string())),
+        ("quick", Json::Bool(ctx.quick)),
+        ("stable", Json::Bool(ctx.stable)),
+        ("topk", Json::Num(ctx.top_k as f64)),
+        ("backend", Json::Str(format!("{:?}", ctx.backend_choice))),
+    ])
+}
+
+/// Run a list of experiments with per-experiment checkpoints under
+/// `ctx.out_dir`. With `ctx.resume`, completed experiments replay their
+/// journaled reports byte-identically and partially-complete ones skip
+/// their journaled cells; without it every checkpoint starts cold.
+/// Resuming with a different seed/budget/topk/backend/stable mode is
+/// rejected (the journal pins its configuration).
+pub fn run_selected(ids: &[&str], ctx: &ExpContext) -> Result<RunSummary> {
+    let mut summary = RunSummary::default();
+    let config = config_fingerprint(ctx);
+    for &id in ids {
+        // resolve before spending any work so typos fail fast
+        by_id(id).with_context(|| {
+            format!("unknown experiment '{id}' (try one of {ALL_IDS:?})")
+        })?;
+        println!("\n================ {id} ================");
+        let mut ckpt = Checkpoint::for_experiment(&ctx.out_dir, id, ctx.resume)?;
+        ckpt.bind_config(&config)
+            .with_context(|| format!("cannot resume '{id}'"))?;
+        if let Some(report) = ckpt.stored_report()? {
+            println!("[resume] {id}: replaying completed report");
+            report.emit(&ctx.out_dir)?;
+            summary.replayed += 1;
+        } else {
+            let report = run_with(id, ctx, &mut ckpt)?;
+            ckpt.store_report(&report)?;
+            summary.executed += 1;
+        }
+        summary.cells_reused += ckpt.reused();
+        summary.cells_computed += ckpt.computed();
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod registry_tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_all_ids() {
+        let ids: Vec<&str> = REGISTRY.iter().map(|e| e.id()).collect();
+        assert_eq!(ids, ALL_IDS);
+    }
+
+    #[test]
+    fn registry_metadata_is_populated() {
+        for exp in REGISTRY {
+            assert!(!exp.description().is_empty(), "{}", exp.id());
+            assert!(!exp.cost().name().is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_id_fails_fast_in_run_selected() {
+        let ctx = ExpContext::quick(1);
+        let err = run_selected(&["nope"], &ctx).unwrap_err();
+        assert!(format!("{err}").contains("unknown experiment"));
     }
 }

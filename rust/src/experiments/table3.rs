@@ -5,6 +5,8 @@
 //! (GA fastest, ≈1.5× over ES/ERES); PSO and G3PCX stall in local minima;
 //! CMA-ES fails to converge.
 
+use super::checkpoint::Checkpoint;
+use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::MemoryTech;
 use crate::objective::Objective;
@@ -13,12 +15,30 @@ use crate::search::{
     Exhaustive, EvolutionStrategy, G3Pcx, GaConfig, GeneticAlgorithm, Optimizer, Pso,
     SearchBudget, CmaEs,
 };
-use crate::util::{fmt_duration, table::Table};
+use crate::util::table::Table;
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 use std::time::Duration;
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Table3;
+
+impl super::Experiment for Table3 {
+    fn id(&self) -> &'static str {
+        "table3"
+    }
+    fn description(&self) -> &'static str {
+        "Optimizer comparison on the exhaustively-scored reduced RRAM space"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Medium
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let space = crate::space::SearchSpace::rram_reduced();
     let objective = Objective::edap();
@@ -76,14 +96,17 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
     );
     let tol = 1.0 + 1e-6;
     let mut rows: Vec<(String, f64, f64, Duration)> = Vec::new();
-    for algo in &algos {
+    for (ai, algo) in algos.iter().enumerate() {
         let mut hits = 0usize;
         let mut bests = Vec::new();
         let mut wall = Duration::ZERO;
         for &seed in &seeds {
             // fresh problem per run: timing must include evaluation work
+            // (journaled runs replay their recorded wall time)
             let p = ctx.problem(&space, &set, MemoryTech::Rram, objective);
-            let r = algo.run(&p, &mut crate::util::rng::Rng::seed_from(seed));
+            let r = common::opt_cell(ckpt, &format!("table3:a{ai}:{seed}"), || {
+                algo.run(&p, &mut crate::util::rng::Rng::seed_from(seed))
+            })?;
             if r.best_score <= global_min * tol {
                 hits += 1;
             }
@@ -108,11 +131,8 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
             name.clone(),
             format!("{:.0}%", hit * 100.0),
             crate::util::fmt_sig(*mean_best, 5),
-            fmt_duration(*wall),
-            format!(
-                "{:.2}x",
-                wall.as_secs_f64() / fastest.as_secs_f64().max(1e-9)
-            ),
+            ctx.fmt_wall(*wall),
+            ctx.fmt_ratio(wall.as_secs_f64() / fastest.as_secs_f64().max(1e-9)),
         ]);
     }
     report.table(t);
@@ -139,7 +159,7 @@ mod tests {
     #[test]
     fn table3_quick_ranks_ga_at_global_min() {
         let ctx = ExpContext::quick(11);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         let t = &r.tables[0];
         assert_eq!(t.rows.len(), 6);
         // GA row present and with a finite mean best; the densified

@@ -3,17 +3,40 @@
 //! the proposed joint search whose Hamming-sampling phase adds ≈30 % of
 //! total search time (repeated hardware estimation of the diverse pool).
 
+use super::checkpoint::Checkpoint;
 use super::common;
 use crate::coordinator::ExpContext;
 use crate::model::MemoryTech;
 use crate::objective::Objective;
 use crate::report::Report;
-use crate::util::{fmt_duration, table::Table};
+use crate::util::table::Table;
 use crate::workloads::WorkloadSet;
 use anyhow::Result;
 use std::time::{Duration, Instant};
 
-pub fn run(ctx: &ExpContext) -> Result<Report> {
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Table6;
+
+impl super::Experiment for Table6 {
+    fn id(&self) -> &'static str {
+        "table6"
+    }
+    fn description(&self) -> &'static str {
+        "Runtime comparison at equal budget (wall-clock; resumes whole)"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Light
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+// This experiment *measures* end-to-end wall-clock, so it deliberately
+// journals no cells (replayed timings would defeat its purpose); a resumed
+// partial run starts over, and only the completed-report marker is
+// replayed. Under `--stable` its timing cells render as "-".
+pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let objective = Objective::edap();
     let mut report = Report::new(
@@ -41,7 +64,7 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
             "separate (all workloads)".into(),
             mem.name().into(),
             "-".into(),
-            fmt_duration(sep_total),
+            ctx.fmt_wall(sep_total),
             "-".into(),
         ]);
 
@@ -54,7 +77,7 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
             "joint (non-modified)".into(),
             mem.name().into(),
             "-".into(),
-            fmt_duration(nonmod_total),
+            ctx.fmt_wall(nonmod_total),
             "-".into(),
         ]);
 
@@ -79,9 +102,9 @@ pub fn run(ctx: &ExpContext) -> Result<Report> {
         t.row(vec![
             "joint (proposed)".into(),
             mem.name().into(),
-            fmt_duration(sampling_time),
-            fmt_duration(total),
-            format!("{frac:.0}%"),
+            ctx.fmt_wall(sampling_time),
+            ctx.fmt_wall(total),
+            ctx.fmt_pct(frac),
         ]);
         report.note(format!(
             "{}: proposed joint search evals={} best={:.4}",
@@ -106,7 +129,7 @@ mod tests {
     #[test]
     fn table6_quick_rows() {
         let ctx = ExpContext::quick(19);
-        let r = run(&ctx).unwrap();
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         assert_eq!(r.tables[0].rows.len(), 6); // 3 methods x 2 memories
         // proposed rows report a sampling percentage
         for row in r.tables[0].rows.iter().filter(|r| r[0].contains("proposed")) {

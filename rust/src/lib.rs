@@ -27,8 +27,10 @@
 //! * [`coordinator`] — the experiment runner: population evaluation with
 //!   memoization, thread-pool fan-out, progress reporting and experiment
 //!   configs.
-//! * [`experiments`] — one module per paper table/figure, regenerating the
-//!   published rows/series.
+//! * [`experiments`] — the experiment registry: one module per paper
+//!   table/figure (plus the `genmatrix` generalization sweep), each a
+//!   [`experiments::Experiment`] entry with checkpoint/resume support
+//!   (`experiments::checkpoint`) and machine-readable JSON artifacts.
 //! * [`util`] — std-only infrastructure (RNG, thread pool, sharded
 //!   striped-lock cache, JSON, stats, tables, CLI, property-testing and
 //!   bench harnesses); the offline crate registry has no

@@ -1,14 +1,22 @@
-//! `repro` — CLI for the joint hardware-workload co-optimization framework.
+//! `imcopt` — CLI for the joint hardware-workload co-optimization
+//! framework.
 //!
 //! ```text
-//! repro exp <id|all> [--seed N] [--quick] [--native|--pjrt] [--out DIR]
-//! repro search [--mem rram|sram] [--obj edap|edp|energy|latency|area|cost|acc]
-//!              [--agg max|all|mean] [--workloads a,b,c] [--seed N]
-//! repro eval --design R,C,M,T,G,B,Vstep,TC,GLB,TECH [--mem rram|sram]
-//! repro workloads            # list workload statistics
-//! repro space                # list search-space variants and sizes
-//! repro artifacts            # verify AOT artifacts load and agree with native
+//! imcopt run [ids...|--all] [--seed N] [--quick] [--out-dir DIR]
+//!            [--resume] [--stable] [--topk K] [--native|--pjrt]
+//! imcopt list                # registered experiments (id, cost, description)
+//! imcopt validate [--out-dir DIR [--require-all]] [--bench FILE] [--schema FILE]
+//! imcopt search [--mem rram|sram] [--obj edap|edp|energy|latency|area|cost|acc]
+//!               [--agg max|all|mean] [--workloads a,b,c] [--seed N]
+//! imcopt eval --design R,C,M,T,G,B,Vstep,TC,GLB,TECH [--mem rram|sram]
+//! imcopt workloads           # list workload statistics
+//! imcopt space               # list search-space variants and sizes
+//! imcopt artifacts           # verify AOT artifacts load and agree with native
 //! ```
+//!
+//! `run` drives the experiment registry with per-experiment checkpoints
+//! under `--out-dir`; a run killed mid-flight resumes with `--resume`
+//! without re-evaluating completed cells (`exp` is a legacy alias).
 
 use anyhow::{bail, Context, Result};
 use imcopt::coordinator::ExpContext;
@@ -18,8 +26,11 @@ use imcopt::objective::{Aggregation, Objective, ObjectiveKind};
 use imcopt::search::Optimizer;
 use imcopt::space::SearchSpace;
 use imcopt::util::cli::Args;
+use imcopt::util::json;
+use imcopt::util::schema;
 use imcopt::util::table::Table;
 use imcopt::workloads::{WorkloadSet, ALL_NAMES};
+use std::path::Path;
 
 fn main() {
     let args = Args::from_env();
@@ -31,7 +42,9 @@ fn main() {
 
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
-        "exp" => cmd_exp(args),
+        "run" | "exp" => cmd_run(args),
+        "list" => cmd_list(),
+        "validate" => cmd_validate(args),
         "search" => cmd_search(args),
         "eval" => cmd_eval(args),
         "workloads" => cmd_workloads(),
@@ -41,28 +54,199 @@ fn dispatch(args: &Args) -> Result<()> {
             print_help();
             Ok(())
         }
-        other => bail!("unknown command '{other}' (try `repro help`)"),
+        other => bail!("unknown command '{other}' (try `imcopt help`)"),
     }
 }
 
 fn print_help() {
     println!(
-        "repro — joint hardware-workload co-optimization for IMC accelerators\n\
+        "imcopt — joint hardware-workload co-optimization for IMC accelerators\n\
          \n\
          commands:\n\
-         \x20 exp <id|all>   regenerate a paper table/figure ({ids})\n\
+         \x20 run [ids|--all] run registered experiments with checkpointing\n\
+         \x20                 ({ids})\n\
+         \x20 list           show the experiment registry\n\
+         \x20 validate       check experiment/bench JSON artifacts against schemas\n\
          \x20 search         run one joint co-optimization\n\
          \x20 eval           evaluate a single design\n\
          \x20 workloads      list workload statistics\n\
          \x20 space          list search-space variants\n\
          \x20 artifacts      verify AOT artifacts vs the native evaluator\n\
          \n\
-         common options: --seed N --quick --native --pjrt --out DIR\n\
+         common options: --seed N --quick --native --pjrt --out-dir DIR\n\
+         \x20 --resume       resume a killed run from its checkpoint journals\n\
+         \x20 --stable       deterministic reports (wall-clock columns -> '-')\n\
+         \x20 --topk K       best designs reported per genmatrix cell\n\
          \x20 --threads N    worker threads for population evaluation\n\
          \x20                (default: IMCOPT_THREADS env var, else all cores;\n\
          \x20                scores are identical for any thread count)",
         ids = experiments::ALL_IDS.join(", ")
     );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    // the tiny parser cannot know `--resume fig3` means "flag, then
+    // positional" — it would swallow the id as the flag's value and this
+    // command would silently sweep all 13 experiments. Reject boolean
+    // flags carrying unexpected values instead.
+    for flag in ["all", "quick", "stable", "resume", "native", "pjrt"] {
+        if let Some(v) = args.opt(flag) {
+            anyhow::ensure!(
+                v == "true" || v == "false",
+                "--{flag} is a boolean flag but got value '{v}'; put experiment \
+                 ids before the flags (e.g. `imcopt run {v} --{flag}`)"
+            );
+        }
+    }
+    let ctx = ExpContext::from_args(args);
+    let positional_all =
+        args.positionals.is_empty() || args.positionals.iter().any(|s| s == "all");
+    let ids: Vec<&str> = if args.flag("all") || positional_all {
+        experiments::ALL_IDS.to_vec()
+    } else {
+        args.positionals.iter().map(|s| s.as_str()).collect()
+    };
+    let summary = experiments::run_selected(&ids, &ctx)?;
+    println!("\n{}", summary.to_line());
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let mut t = Table::new(
+        "experiment registry (imcopt run <id>)",
+        &["id", "cost", "description"],
+    );
+    for exp in experiments::REGISTRY {
+        t.row(vec![
+            exp.id().into(),
+            exp.cost().name().into(),
+            exp.description().into(),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+/// Validate a single JSON file against a schema file, returning the
+/// parsed document for any further checks.
+fn validate_file(doc_path: &Path, schema_path: &Path) -> Result<json::Json> {
+    let doc_text = std::fs::read_to_string(doc_path)
+        .with_context(|| format!("reading {}", doc_path.display()))?;
+    let doc = json::parse(&doc_text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", doc_path.display()))?;
+    let schema_text = std::fs::read_to_string(schema_path)
+        .with_context(|| format!("reading {}", schema_path.display()))?;
+    let schema_doc = json::parse(&schema_text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", schema_path.display()))?;
+    let errs = schema::validate(&schema_doc, &doc);
+    if !errs.is_empty() {
+        bail!(
+            "{} violates {}:\n  {}",
+            doc_path.display(),
+            schema_path.display(),
+            errs.join("\n  ")
+        );
+    }
+    Ok(doc)
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let mut checked = false;
+    if let Some(bench) = args.opt("bench") {
+        let schema = args.opt_str("schema", "schemas/bench_eval.schema.json");
+        validate_file(Path::new(bench), Path::new(schema))?;
+        println!("ok: {bench} conforms to {schema}");
+        checked = true;
+    }
+    if let Some(dir) = args.opt("out-dir") {
+        let dir = Path::new(dir);
+        let schema = Path::new(args.opt_str(
+            "report-schema",
+            "schemas/experiment_report.schema.json",
+        ));
+        // by default a partial out-dir (from `imcopt run fig3 ...`) is
+        // fine — absent artifacts are reported, present ones must
+        // conform. `--require-all` (the ci.sh smoke) demands every
+        // registered experiment.
+        let require_all = args.flag("require-all");
+        let mut t = Table::new("experiment artifacts", &["id", "artifact", "status"]);
+        let mut present = 0usize;
+        let mut genmatrix_present = false;
+        for exp in experiments::REGISTRY {
+            let path = dir.join(format!("{}.json", exp.id()));
+            if !path.exists() {
+                anyhow::ensure!(
+                    !require_all,
+                    "{}: missing artifact for registered experiment '{}'",
+                    path.display(),
+                    exp.id()
+                );
+                t.row(vec![
+                    exp.id().into(),
+                    path.display().to_string(),
+                    "absent".into(),
+                ]);
+                continue;
+            }
+            let doc = validate_file(&path, schema)?;
+            // the artifact must belong to the experiment it is named after
+            anyhow::ensure!(
+                doc.get("id").and_then(|v| v.as_str()) == Some(exp.id()),
+                "{}: id mismatch",
+                path.display()
+            );
+            present += 1;
+            genmatrix_present |= exp.id() == "genmatrix";
+            t.row(vec![
+                exp.id().into(),
+                path.display().to_string(),
+                "ok".into(),
+            ]);
+        }
+        anyhow::ensure!(
+            present > 0,
+            "no experiment artifacts found under {}",
+            dir.display()
+        );
+        // a genmatrix run additionally emits one standalone JSON cell per
+        // held-out workload of each set
+        if genmatrix_present {
+            let mut cells = 0usize;
+            for (set_name, set) in
+                [("cnn4", WorkloadSet::cnn4()), ("all9", WorkloadSet::all9())]
+            {
+                for w in &set.workloads {
+                    let path = dir
+                        .join("genmatrix_cells")
+                        .join(format!("{set_name}-{}.json", w.name));
+                    let text = std::fs::read_to_string(&path).with_context(|| {
+                        format!("missing genmatrix cell {}", path.display())
+                    })?;
+                    let doc = json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                    for key in ["held_out", "gap", "joint", "separate_bound", "top"] {
+                        anyhow::ensure!(
+                            doc.get(key).is_some(),
+                            "{}: missing '{key}'",
+                            path.display()
+                        );
+                    }
+                    cells += 1;
+                }
+            }
+            t.row(vec![
+                "genmatrix cells".into(),
+                dir.join("genmatrix_cells").display().to_string(),
+                format!("ok ({cells} cells)"),
+            ]);
+        }
+        print!("{}", t.to_text());
+        checked = true;
+    }
+    if !checked {
+        bail!("nothing to validate: pass --out-dir DIR and/or --bench FILE");
+    }
+    Ok(())
 }
 
 fn parse_mem(args: &Args) -> Result<MemoryTech> {
@@ -91,24 +275,6 @@ fn parse_objective(args: &Args) -> Result<Objective> {
         other => bail!("unknown --agg '{other}'"),
     };
     Ok(Objective::new(kind, agg))
-}
-
-fn cmd_exp(args: &Args) -> Result<()> {
-    let id = args
-        .positionals
-        .first()
-        .map(|s| s.as_str())
-        .unwrap_or("all");
-    let ctx = ExpContext::from_args(args);
-    if id == "all" {
-        for id in experiments::ALL_IDS {
-            println!("\n================ {id} ================");
-            experiments::run(id, &ctx)?;
-        }
-        Ok(())
-    } else {
-        experiments::run(id, &ctx).map(|_| ())
-    }
 }
 
 fn cmd_search(args: &Args) -> Result<()> {

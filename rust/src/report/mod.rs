@@ -1,8 +1,14 @@
 //! Experiment report assembly: collects tables + notes, prints to the
-//! terminal and persists markdown/CSV under `results/`.
+//! terminal and persists markdown/CSV/JSON under `--out-dir` (default
+//! `results/`). The JSON artifact (`<id>.json`) is the machine-readable
+//! form consumed by `imcopt validate` (checked against
+//! `schemas/experiment_report.schema.json`) and by the checkpoint
+//! subsystem, which journals a completed experiment's report and replays
+//! it byte-identically on `--resume`.
 
+use crate::util::json::Json;
 use crate::util::table::Table;
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::path::Path;
 
 /// One experiment's full output.
@@ -62,12 +68,104 @@ impl Report {
         out
     }
 
-    /// Print to stdout and persist `<out_dir>/<id>.md` (+ one CSV per
-    /// table).
+    /// Machine-readable form (persisted as `<id>.json` and journaled by
+    /// the checkpoint subsystem). Round-trips exactly through
+    /// [`Report::from_json`].
+    pub fn to_json(&self) -> Json {
+        let table_json = |t: &Table| {
+            Json::obj(vec![
+                ("title", Json::Str(t.title.clone())),
+                (
+                    "headers",
+                    Json::Arr(t.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+                ),
+                (
+                    "rows",
+                    Json::Arr(
+                        t.rows
+                            .iter()
+                            .map(|r| {
+                                Json::Arr(
+                                    r.iter().map(|c| Json::Str(c.clone())).collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        };
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("title", Json::Str(self.title.clone())),
+            ("tables", Json::Arr(self.tables.iter().map(table_json).collect())),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+            ),
+        ])
+    }
+
+    /// Reconstruct a report from its JSON artifact.
+    pub fn from_json(v: &Json) -> Result<Report> {
+        let get_str = |v: &Json, key: &str| -> Result<String> {
+            Ok(v.get(key)
+                .and_then(|s| s.as_str())
+                .with_context(|| format!("report json missing string '{key}'"))?
+                .to_string())
+        };
+        let mut report = Report::new(&get_str(v, "id")?, &get_str(v, "title")?);
+        for t in v
+            .get("tables")
+            .and_then(|t| t.as_arr())
+            .context("report json missing 'tables'")?
+        {
+            let headers: Vec<String> = t
+                .get("headers")
+                .and_then(|h| h.as_arr())
+                .context("table json missing 'headers'")?
+                .iter()
+                .filter_map(|h| h.as_str().map(String::from))
+                .collect();
+            let mut table = Table {
+                title: get_str(t, "title")?,
+                headers,
+                rows: Vec::new(),
+            };
+            for row in t
+                .get("rows")
+                .and_then(|r| r.as_arr())
+                .context("table json missing 'rows'")?
+            {
+                let cells: Vec<String> = row
+                    .as_arr()
+                    .context("table row is not an array")?
+                    .iter()
+                    .filter_map(|c| c.as_str().map(String::from))
+                    .collect();
+                table.row(cells);
+            }
+            report.table(table);
+        }
+        for n in v
+            .get("notes")
+            .and_then(|n| n.as_arr())
+            .context("report json missing 'notes'")?
+        {
+            report.note(n.as_str().context("note is not a string")?);
+        }
+        Ok(report)
+    }
+
+    /// Print to stdout and persist `<out_dir>/<id>.md`, `<id>.json` and
+    /// one CSV per table.
     pub fn emit(&self, out_dir: &Path) -> Result<()> {
         print!("{}", self.to_text());
         std::fs::create_dir_all(out_dir)?;
         std::fs::write(out_dir.join(format!("{}.md", self.id)), self.to_markdown())?;
+        std::fs::write(
+            out_dir.join(format!("{}.json", self.id)),
+            self.to_json().to_string() + "\n",
+        )?;
         for (i, t) in self.tables.iter().enumerate() {
             let name = if self.tables.len() == 1 {
                 format!("{}.csv", self.id)
@@ -96,8 +194,35 @@ mod tests {
         r.emit(&dir).unwrap();
         assert!(dir.join("t0.md").exists());
         assert!(dir.join("t0.csv").exists());
+        assert!(dir.join("t0.json").exists());
         let md = std::fs::read_to_string(dir.join("t0.md")).unwrap();
         assert!(md.contains("demo") && md.contains("hello"));
+        let parsed = crate::util::json::parse(
+            &std::fs::read_to_string(dir.join("t0.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_str(), Some("t0"));
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut r = Report::new("rt", "round trip");
+        let mut t = Table::new("tbl", &["a", "b"]);
+        t.row(vec!["x, quoted \"v\"".into(), "1.25".into()]);
+        r.table(t);
+        r.note("α note with unicode");
+        let j = r.to_json();
+        let back = Report::from_json(&crate::util::json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.id, r.id);
+        assert_eq!(back.title, r.title);
+        assert_eq!(back.notes, r.notes);
+        assert_eq!(back.tables.len(), 1);
+        assert_eq!(back.tables[0].headers, r.tables[0].headers);
+        assert_eq!(back.tables[0].rows, r.tables[0].rows);
+        // serialized forms agree byte-for-byte (resume replay relies on it)
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        assert_eq!(back.to_markdown(), r.to_markdown());
     }
 
     #[test]

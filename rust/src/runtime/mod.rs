@@ -5,7 +5,7 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids and
 //! round-trips cleanly (see `/opt/xla-example/README.md`). Python runs
-//! only at `make artifacts` time; after that the `repro` binary is
+//! only at `make artifacts` time; after that the `imcopt` binary is
 //! self-contained.
 //!
 //! Artifacts (described by `artifacts/manifest.json`):

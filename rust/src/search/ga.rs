@@ -94,6 +94,9 @@ pub struct GaConfig {
     pub elites: usize,
     /// Optional per-phase early stopping (§V-D extension).
     pub early_stop: Option<EarlyStop>,
+    /// Distinct best designs reported in `OptResult::top` (the tracker
+    /// keeps at least this many; `genmatrix` raises it via `--topk`).
+    pub top_k: usize,
     pub label: String,
 }
 
@@ -107,6 +110,7 @@ impl GaConfig {
             budget,
             elites: 2,
             early_stop: None,
+            top_k: 5,
             label: "GA (non-modified)".into(),
         }
     }
@@ -134,6 +138,7 @@ impl GaConfig {
             budget,
             elites: 2,
             early_stop: None,
+            top_k: 5,
             label: "4-phase GA (proposed)".into(),
         }
     }
@@ -247,7 +252,7 @@ impl Optimizer for GeneticAlgorithm {
         let space = problem.space();
         let pop_size = cfg.budget.pop;
         let mut evals = 0usize;
-        let mut tracker = BestTracker::default();
+        let mut tracker = BestTracker::with_cap(cfg.top_k.max(super::TRACK_CAP));
 
         // ---- initial population -------------------------------------------
         let mut pop: Vec<Design> = match cfg.init {
@@ -319,7 +324,7 @@ impl Optimizer for GeneticAlgorithm {
         tracker.observe(&pop, &scores);
         tracker.end_generation();
 
-        tracker.into_result(self.name(), evals, t0.elapsed())
+        tracker.into_result_k(self.name(), evals, t0.elapsed(), cfg.top_k)
     }
 }
 
@@ -432,6 +437,24 @@ mod tests {
             fine < explo,
             "fine-tuning drift {fine} !< exploration drift {explo}"
         );
+    }
+
+    #[test]
+    fn top_k_is_configurable() {
+        let p = Sphere::centered(SearchSpace::rram_reduced());
+        let ga = GeneticAlgorithm::new(GaConfig {
+            top_k: 12,
+            ..GaConfig::classic(budget())
+        });
+        let r = ga.run(&p, &mut Rng::seed_from(10));
+        assert!(
+            r.top.len() > 5 && r.top.len() <= 12,
+            "top len {}",
+            r.top.len()
+        );
+        for w in r.top.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
     }
 
     #[test]

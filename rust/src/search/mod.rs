@@ -115,27 +115,83 @@ pub trait Optimizer {
     fn run(&self, problem: &dyn Problem, rng: &mut Rng) -> OptResult;
 }
 
-/// Bounded top-k capacity of [`BestTracker`]: large enough for the top-5
-/// reporting plus elite bookkeeping, small enough that membership checks
-/// are a short linear scan.
-const TRACK_CAP: usize = 64;
+/// Default bounded capacity of [`BestTracker`]: large enough for top-5
+/// reporting plus elite bookkeeping. Callers that report a deeper top-k
+/// (e.g. `genmatrix` via `GaConfig::top_k`) construct the tracker with
+/// [`BestTracker::with_cap`].
+pub(crate) const TRACK_CAP: usize = 64;
 
 /// Tracks the best-so-far set during a run; shared by all optimizers.
 ///
-/// A bounded top-k structure: `seen` holds at most [`TRACK_CAP`] *distinct*
-/// designs, sorted ascending by score. Candidates that cannot enter the
-/// top-k are rejected without cloning (the common case once a run warms
-/// up), replacing the old unbounded push + periodic 4096-element
-/// sort/dedup/truncate which cloned every finite design it ever observed.
-#[derive(Clone, Debug, Default)]
+/// A bounded top-k structure over *distinct* designs with configurable
+/// capacity. The worst live entry sits on top of a max-[`BinaryHeap`]
+/// (score, then insertion order), so admission checks and evictions are
+/// O(log k) instead of the previous sorted-vec linear scans; a `live` map
+/// keyed by design deduplicates and marks superseded heap entries stale
+/// (lazy deletion). Candidates that cannot enter the top-k are rejected
+/// without cloning — the common case once a run warms up.
+#[derive(Clone, Debug)]
 pub(crate) struct BestTracker {
-    /// Distinct (design, score), sorted ascending by score; ties keep
-    /// first-seen order (stable insertion).
-    seen: Vec<(Design, f64)>,
+    cap: usize,
+    /// Live (design → (score, insertion seq)); at most `cap` entries.
+    live: std::collections::HashMap<Design, (f64, u64)>,
+    /// Max-heap of (score, seq, design); an entry is live iff `live`
+    /// still maps its design to the same seq.
+    heap: std::collections::BinaryHeap<WorstEntry>,
+    seq: u64,
+    /// First-seen minimum, tracked separately so `best_score` is O(1).
+    best: Option<(Design, f64)>,
     pub history: Vec<f64>,
 }
 
+/// Heap entry ordered worst-first: higher score is greater; among equal
+/// scores the later insertion is greater, so evictions drop the
+/// latest-seen duplicate score and ties keep first-seen order.
+#[derive(Clone, Debug)]
+struct WorstEntry {
+    score: f64,
+    seq: u64,
+    design: Design,
+}
+
+impl PartialEq for WorstEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.score.to_bits() == other.score.to_bits() && self.seq == other.seq
+    }
+}
+impl Eq for WorstEntry {}
+impl PartialOrd for WorstEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for WorstEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.score
+            .total_cmp(&other.score)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl Default for BestTracker {
+    fn default() -> Self {
+        BestTracker::with_cap(TRACK_CAP)
+    }
+}
+
 impl BestTracker {
+    /// A tracker holding at most `cap` distinct designs.
+    pub fn with_cap(cap: usize) -> BestTracker {
+        BestTracker {
+            cap: cap.max(1),
+            live: std::collections::HashMap::new(),
+            heap: std::collections::BinaryHeap::new(),
+            seq: 0,
+            best: None,
+            history: Vec::new(),
+        }
+    }
+
     pub fn observe(&mut self, designs: &[Design], scores: &[f64]) {
         for (d, &s) in designs.iter().zip(scores) {
             if s.is_finite() {
@@ -144,25 +200,70 @@ impl BestTracker {
         }
     }
 
-    fn insert(&mut self, d: &Design, s: f64) {
-        // cheap rejection first: no clone, no scan
-        if self.seen.len() == TRACK_CAP
-            && s >= self.seen.last().map(|(_, w)| *w).unwrap_or(f64::INFINITY)
-        {
-            return;
-        }
-        // dedup: scores are deterministic per design, but tolerate a
-        // changed score by keeping the better one
-        if let Some(pos) = self.seen.iter().position(|(e, _)| e == d) {
-            if s >= self.seen[pos].1 {
+    /// Distinct designs currently tracked (test diagnostics).
+    #[cfg(test)]
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Drop stale heap entries (superseded by a better score for the same
+    /// design) so `peek` is the worst *live* entry.
+    fn prune_top(&mut self) {
+        loop {
+            // decide from `peek` in its own statement so the borrow ends
+            // before the `pop`
+            let stale = match self.heap.peek() {
+                Some(top) => !matches!(
+                    self.live.get(&top.design),
+                    Some(&(_, seq)) if seq == top.seq
+                ),
+                None => return,
+            };
+            if !stale {
                 return;
             }
-            self.seen.remove(pos);
+            self.heap.pop();
         }
-        // stable insert after equal scores (first-seen wins on ties)
-        let at = self.seen.partition_point(|(_, e)| *e <= s);
-        self.seen.insert(at, (d.clone(), s));
-        self.seen.truncate(TRACK_CAP);
+    }
+
+    fn push_live(&mut self, d: &Design, s: f64) {
+        self.seq += 1;
+        self.live.insert(d.clone(), (s, self.seq));
+        self.heap.push(WorstEntry {
+            score: s,
+            seq: self.seq,
+            design: d.clone(),
+        });
+    }
+
+    fn insert(&mut self, d: &Design, s: f64) {
+        if let Some(&(old, _)) = self.live.get(d) {
+            // scores are deterministic per design, so this re-observation
+            // path normally rejects; tolerate a changed score by keeping
+            // the better one (the old heap entry goes stale)
+            if s >= old {
+                return;
+            }
+            self.push_live(d, s);
+        } else {
+            if self.live.len() >= self.cap {
+                self.prune_top();
+                // cheap rejection: not better than the current worst
+                // (equal scores keep the earlier-seen entry)
+                let worst = self.heap.peek().map(|e| e.score).unwrap_or(f64::INFINITY);
+                if s >= worst {
+                    return;
+                }
+                if let Some(evicted) = self.heap.pop() {
+                    self.live.remove(&evicted.design);
+                }
+            }
+            self.push_live(d, s);
+        }
+        match &self.best {
+            Some((_, bs)) if s >= *bs => {}
+            _ => self.best = Some((d.clone(), s)),
+        }
     }
 
     pub fn end_generation(&mut self) {
@@ -170,22 +271,33 @@ impl BestTracker {
     }
 
     pub fn best_score(&self) -> f64 {
-        self.seen.first().map(|(_, s)| *s).unwrap_or(f64::INFINITY)
+        self.best.as_ref().map(|(_, s)| *s).unwrap_or(f64::INFINITY)
     }
 
-    pub fn into_result(
+    /// Finish the run, reporting the best `k` distinct designs
+    /// (ascending score; ties in first-seen order).
+    pub fn into_result_k(
         self,
         algorithm: String,
         evals: usize,
         wall: Duration,
+        k: usize,
     ) -> OptResult {
-        // `seen` is already sorted and distinct
-        let (best, best_score) = self
-            .seen
+        let mut entries: Vec<(Design, f64, u64)> = self
+            .live
+            .into_iter()
+            .map(|(d, (s, seq))| (d, s, seq))
+            .collect();
+        entries.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.2.cmp(&b.2)));
+        let top: Vec<(Design, f64)> = entries
+            .into_iter()
+            .take(k.max(1))
+            .map(|(d, s, _)| (d, s))
+            .collect();
+        let (best, best_score) = top
             .first()
             .cloned()
             .unwrap_or_else(|| (Design(vec![0; crate::space::NUM_PARAMS]), f64::INFINITY));
-        let top = OptResult::top_k(self.seen, 5);
         OptResult {
             algorithm,
             best,
@@ -195,6 +307,16 @@ impl BestTracker {
             evals,
             wall,
         }
+    }
+
+    /// Finish with the default top-5 reporting depth.
+    pub fn into_result(
+        self,
+        algorithm: String,
+        evals: usize,
+        wall: Duration,
+    ) -> OptResult {
+        self.into_result_k(algorithm, evals, wall, 5)
     }
 }
 
@@ -284,24 +406,24 @@ mod tests {
     fn best_tracker_is_bounded_and_keeps_global_best() {
         let mut t = BestTracker::default();
         // stream far more distinct designs than the cap, best arriving
-        // mid-stream; scores descend then ascend so insertion hits both
-        // ends of the sorted vec
+        // mid-stream; scores descend then ascend so admission hits both
+        // the accept and reject paths
         for i in 0..1000u16 {
             let d = Design(vec![i; 10]);
             let s = (i as f64 - 500.0).abs() + 1.0;
             t.observe(std::slice::from_ref(&d), &[s]);
         }
-        assert!(t.seen.len() <= TRACK_CAP);
+        assert!(t.len() <= TRACK_CAP);
         assert_eq!(t.best_score(), 1.0);
+        let r = t.into_result_k("x".into(), 1000, Duration::ZERO, TRACK_CAP);
+        assert_eq!(r.best, Design(vec![500; 10]));
+        assert_eq!(r.top.len(), TRACK_CAP);
+        assert_eq!(r.top[0].1, 1.0);
         // sorted ascending, all distinct
-        for w in t.seen.windows(2) {
+        for w in r.top.windows(2) {
             assert!(w[0].1 <= w[1].1);
             assert_ne!(w[0].0, w[1].0);
         }
-        let r = t.into_result("x".into(), 1000, Duration::ZERO);
-        assert_eq!(r.best, Design(vec![500; 10]));
-        assert_eq!(r.top.len(), 5);
-        assert_eq!(r.top[0].1, 1.0);
     }
 
     #[test]
@@ -311,10 +433,39 @@ mod tests {
         for _ in 0..100 {
             t.observe(std::slice::from_ref(&d), &[5.0]);
         }
-        assert_eq!(t.seen.len(), 1);
+        assert_eq!(t.len(), 1);
         // infinite scores never enter
         t.observe(&[Design(vec![9; 10])], &[f64::INFINITY]);
-        assert_eq!(t.seen.len(), 1);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn best_tracker_configurable_cap_and_tie_order() {
+        // cap 3; four distinct designs, two sharing the middle score —
+        // the later-seen equal score is the one evicted
+        let mut t = BestTracker::with_cap(3);
+        let mk = |i: u16| Design(vec![i; 10]);
+        t.observe(&[mk(0), mk(1), mk(2), mk(3)], &[2.0, 1.0, 2.0, 3.0]);
+        assert_eq!(t.len(), 3);
+        let r = t.into_result_k("x".into(), 4, Duration::ZERO, 3);
+        assert_eq!(r.top.len(), 3);
+        assert_eq!(r.best, mk(1));
+        // ties keep first-seen order: design 0 (score 2.0) precedes 2
+        assert_eq!(r.top[1].0, mk(0));
+        assert_eq!(r.top[2].0, mk(2));
+    }
+
+    #[test]
+    fn best_tracker_eviction_never_drops_the_minimum() {
+        let mut t = BestTracker::with_cap(1);
+        t.observe(&[Design(vec![1; 10])], &[5.0]);
+        t.observe(&[Design(vec![2; 10])], &[3.0]);
+        t.observe(&[Design(vec![3; 10])], &[9.0]); // rejected
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.best_score(), 3.0);
+        let r = t.into_result("x".into(), 3, Duration::ZERO);
+        assert_eq!(r.best, Design(vec![2; 10]));
+        assert_eq!(r.top.len(), 1);
     }
 
     #[test]

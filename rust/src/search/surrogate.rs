@@ -10,7 +10,7 @@
 //! but to **prescreen** the diversity-sampled pool: evaluate a subset,
 //! fit, rank the remainder by prediction, and spend the remaining
 //! evaluation budget on the most promising candidates. The ablation
-//! experiment (`repro exp ablations`) quantifies the evals-vs-quality
+//! experiment (`imcopt run ablations`) quantifies the evals-vs-quality
 //! trade-off.
 
 use super::{sampling, Problem};

@@ -1,6 +1,6 @@
 //! Tiny CLI argument parser (the offline registry has no clap).
 //!
-//! Supports the subset the `repro` binary needs: a subcommand followed by
+//! Supports the subset the `imcopt` binary needs: a subcommand followed by
 //! positional arguments and `--flag[=value]` / `--flag value` options.
 //!
 //! Threading options: every subcommand that evaluates populations accepts
@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 
-/// Parsed command line: `repro <command> [positionals...] [--opts...]`.
+/// Parsed command line: `imcopt <command> [positionals...] [--opts...]`.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: String,

@@ -50,11 +50,34 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
-    /// Serialize to a compact JSON string.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
+    /// Encode an `f64`, spelling non-finite values as strings (JSON has no
+    /// `inf`/`nan` literals). The inverse is [`Json::as_f64_lenient`];
+    /// finite values round-trip bit-exactly (shortest-representation
+    /// `Display` plus exact integers below 1e15).
+    pub fn f64(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else if x.is_nan() {
+            Json::Str("nan".into())
+        } else if x > 0.0 {
+            Json::Str("inf".into())
+        } else {
+            Json::Str("-inf".into())
+        }
+    }
+
+    /// Decode a value written by [`Json::f64`].
+    pub fn as_f64_lenient(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Str(s) => match s.as_str() {
+                "inf" => Some(f64::INFINITY),
+                "-inf" => Some(f64::NEG_INFINITY),
+                "nan" => Some(f64::NAN),
+                _ => None,
+            },
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -92,6 +115,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (`value.to_string()` comes from this impl; the
+/// inherent method it replaces tripped `clippy::inherent_to_string`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -320,6 +353,24 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("tru").is_err());
         assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn f64_codec_roundtrips_including_nonfinite() {
+        for x in [0.0, -1.5, 1.0 / 3.0, 6.02e23, 1e-300, 123456789.0] {
+            let v = parse(&Json::f64(x).to_string()).unwrap();
+            assert_eq!(v.as_f64_lenient().unwrap().to_bits(), x.to_bits());
+        }
+        assert_eq!(
+            Json::f64(f64::INFINITY).as_f64_lenient(),
+            Some(f64::INFINITY)
+        );
+        assert_eq!(
+            Json::f64(f64::NEG_INFINITY).as_f64_lenient(),
+            Some(f64::NEG_INFINITY)
+        );
+        assert!(Json::f64(f64::NAN).as_f64_lenient().unwrap().is_nan());
+        assert_eq!(Json::Str("bogus".into()).as_f64_lenient(), None);
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod json;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod schema;
 pub mod shards;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,149 @@
+//! Minimal JSON-Schema subset validator (the offline registry has no
+//! jsonschema crate).
+//!
+//! Supports the keywords the CI gate needs to pin artifact shapes:
+//! `type` (a string or an array of strings), `required`, `properties`,
+//! `items`, `enum`, `minimum` and `minItems`. Unknown keywords are
+//! ignored, as in real JSON Schema. Checked-in schemas live under
+//! `schemas/` and are enforced by `imcopt validate` (see `ci.sh`).
+
+use super::json::Json;
+
+/// Validate `value` against `schema`; returns every violation found (empty
+/// = valid), each prefixed with a `$`-rooted path.
+pub fn validate(schema: &Json, value: &Json) -> Vec<String> {
+    let mut errs = Vec::new();
+    check(schema, value, "$", &mut errs);
+    errs
+}
+
+fn type_name(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "boolean",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+fn check(schema: &Json, value: &Json, path: &str, errs: &mut Vec<String>) {
+    // type: "object" | ["number", "string"] | ...
+    if let Some(ty) = schema.get("type") {
+        let actual = type_name(value);
+        let allowed: Vec<&str> = match ty {
+            Json::Str(s) => vec![s.as_str()],
+            Json::Arr(v) => v.iter().filter_map(|t| t.as_str()).collect(),
+            _ => Vec::new(),
+        };
+        if !allowed.is_empty() && !allowed.contains(&actual) {
+            errs.push(format!("{path}: expected type {allowed:?}, got {actual}"));
+            return; // further keyword checks would only cascade
+        }
+    }
+    if let Some(Json::Arr(options)) = schema.get("enum") {
+        if !options.contains(value) {
+            errs.push(format!("{path}: value not in enum"));
+        }
+    }
+    if let Some(min) = schema.get("minimum").and_then(|m| m.as_f64()) {
+        if let Json::Num(x) = value {
+            if *x < min {
+                errs.push(format!("{path}: {x} below minimum {min}"));
+            }
+        }
+    }
+    if let Json::Obj(obj) = value {
+        if let Some(Json::Arr(req)) = schema.get("required") {
+            for key in req.iter().filter_map(|k| k.as_str()) {
+                if !obj.contains_key(key) {
+                    errs.push(format!("{path}: missing required key '{key}'"));
+                }
+            }
+        }
+        if let Some(Json::Obj(props)) = schema.get("properties") {
+            for (key, sub) in props {
+                if let Some(v) = obj.get(key) {
+                    check(sub, v, &format!("{path}.{key}"), errs);
+                }
+            }
+        }
+    }
+    if let Json::Arr(items) = value {
+        if let Some(min) = schema.get("minItems").and_then(|m| m.as_f64()) {
+            if (items.len() as f64) < min {
+                errs.push(format!(
+                    "{path}: {} items below minItems {min}",
+                    items.len()
+                ));
+            }
+        }
+        if let Some(item_schema) = schema.get("items") {
+            for (i, v) in items.iter().enumerate() {
+                check(item_schema, v, &format!("{path}[{i}]"), errs);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn schema() -> Json {
+        parse(
+            r#"{
+                "type": "object",
+                "required": ["name", "speedup", "rows"],
+                "properties": {
+                    "name": {"type": "string"},
+                    "speedup": {"type": "number", "minimum": 0},
+                    "rows": {
+                        "type": "array",
+                        "minItems": 1,
+                        "items": {"type": "array", "items": {"type": "string"}}
+                    },
+                    "ok": {"type": "boolean"}
+                }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn accepts_conforming_document() {
+        let doc = parse(
+            r#"{"name": "bench", "speedup": 3.5, "rows": [["a", "b"]], "ok": true}"#,
+        )
+        .unwrap();
+        assert!(validate(&schema(), &doc).is_empty());
+    }
+
+    #[test]
+    fn reports_missing_required_and_bad_types() {
+        let doc = parse(r#"{"name": 7, "rows": []}"#).unwrap();
+        let errs = validate(&schema(), &doc);
+        assert!(errs.iter().any(|e| e.contains("missing required key 'speedup'")));
+        assert!(errs.iter().any(|e| e.contains("$.name")));
+        assert!(errs.iter().any(|e| e.contains("minItems")));
+    }
+
+    #[test]
+    fn checks_minimum_and_nested_items() {
+        let doc = parse(r#"{"name": "x", "speedup": -1, "rows": [["a"], [3]]}"#).unwrap();
+        let errs = validate(&schema(), &doc);
+        assert!(errs.iter().any(|e| e.contains("below minimum")));
+        assert!(errs.iter().any(|e| e.contains("$.rows[1][0]")));
+    }
+
+    #[test]
+    fn type_unions_and_enums() {
+        let s = parse(r#"{"type": ["string", "number"], "enum": ["inf", 1]}"#).unwrap();
+        assert!(validate(&s, &Json::Num(1.0)).is_empty());
+        assert!(validate(&s, &Json::Str("inf".into())).is_empty());
+        assert!(!validate(&s, &Json::Bool(true)).is_empty());
+        assert!(!validate(&s, &Json::Str("other".into())).is_empty());
+    }
+}

@@ -1,0 +1,134 @@
+//! Kill/resume integration: a checkpointed run interrupted mid-experiment
+//! and resumed with `--resume` must complete with reports byte-identical
+//! to an uninterrupted run, reusing journaled cells instead of
+//! re-evaluating them.
+//!
+//! Uses `--stable` report mode (wall-clock columns render as `-`), which
+//! makes every report a pure function of the seed — the property the
+//! byte-comparison relies on.
+
+use imcopt::coordinator::ExpContext;
+use imcopt::experiments::{self, checkpoint::Checkpoint};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// fig3 journals GA cells; table3 journals non-GA optimizer cells and has
+/// (stable-masked) timing columns — together they cover both cell kinds.
+const IDS: [&str; 2] = ["fig3", "table3"];
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imcopt-resume-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn ctx_at(seed: u64, dir: &Path, resume: bool) -> ExpContext {
+    let mut c = ExpContext::quick(seed);
+    c.out_dir = dir.to_path_buf();
+    c.stable = true;
+    c.resume = resume;
+    c
+}
+
+/// Every emitted artifact (md/json/csv) below `dir`, keyed by relative
+/// path — checkpoint internals are excluded (journal layouts may differ
+/// between an interrupted and a straight run; artifacts must not).
+fn artifacts(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).expect("readable dir") {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().to_string();
+            if path.is_dir() {
+                if name == "checkpoints" {
+                    continue;
+                }
+                walk(root, &path, out);
+            } else {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+#[test]
+fn interrupted_run_resumes_bit_identical() {
+    let dir_a = tmp("straight");
+    let dir_b = tmp("killed");
+
+    // reference: uninterrupted checkpointed run
+    let summary_a = experiments::run_selected(&IDS, &ctx_at(29, &dir_a, false)).unwrap();
+    assert_eq!(summary_a.executed, IDS.len());
+    assert_eq!(summary_a.replayed, 0);
+
+    // interrupted run: the simulated-kill hook stops fig3 after its first
+    // fresh cell, leaving a partial journal exactly like a hard kill
+    {
+        let ctx = ctx_at(29, &dir_b, false);
+        let mut ckpt = Checkpoint::for_experiment(&ctx.out_dir, "fig3", false).unwrap();
+        ckpt.abort_after_cells = Some(1);
+        let err = experiments::run_with("fig3", &ctx, &mut ckpt).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("simulated kill"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(ckpt.computed(), 1);
+    }
+
+    // resume completes the partial experiment and runs the rest
+    let summary_b = experiments::run_selected(&IDS, &ctx_at(29, &dir_b, true)).unwrap();
+    assert_eq!(summary_b.executed, IDS.len(), "nothing was complete yet");
+    assert!(
+        summary_b.cells_reused >= 1,
+        "the journaled fig3 cell must be reused, not re-run"
+    );
+    assert_eq!(
+        summary_b.cells_computed + summary_b.cells_reused,
+        summary_a.cells_computed,
+        "resume must account for every cell of a straight run"
+    );
+
+    // reports are byte-identical to the uninterrupted run
+    let a = artifacts(&dir_a);
+    let b = artifacts(&dir_b);
+    let names_a: Vec<&String> = a.keys().collect();
+    let names_b: Vec<&String> = b.keys().collect();
+    assert_eq!(names_a, names_b, "artifact sets differ");
+    assert!(
+        a.keys().any(|k| k.ends_with("fig3.json")),
+        "expected fig3 artifacts, got {names_a:?}"
+    );
+    for (name, bytes_a) in &a {
+        assert_eq!(
+            bytes_a, &b[name],
+            "artifact {name} differs between straight and resumed runs"
+        );
+    }
+}
+
+#[test]
+fn completed_experiments_replay_without_recomputation() {
+    let dir = tmp("replay");
+    let first = experiments::run_selected(&IDS, &ctx_at(31, &dir, false)).unwrap();
+    assert_eq!(first.executed, IDS.len());
+    let before = artifacts(&dir);
+
+    let again = experiments::run_selected(&IDS, &ctx_at(31, &dir, true)).unwrap();
+    assert_eq!(again.replayed, IDS.len(), "all experiments were complete");
+    assert_eq!(again.executed, 0);
+    assert_eq!(again.cells_computed, 0, "replay must not recompute cells");
+
+    let after = artifacts(&dir);
+    assert_eq!(before.len(), after.len());
+    for (name, bytes) in &before {
+        assert_eq!(bytes, &after[name], "replayed artifact {name} changed");
+    }
+}

@@ -1,8 +1,10 @@
-//! Smoke-level integration of every paper experiment in `--quick` mode:
-//! each must run, emit its report files, and keep its paper-shape notes.
+//! Smoke-level integration of every registered experiment in `--quick`
+//! mode: each must run, emit its report files, and produce a JSON
+//! artifact conforming to `schemas/experiment_report.schema.json`.
 
 use imcopt::coordinator::ExpContext;
 use imcopt::experiments;
+use imcopt::util::{json, schema};
 
 fn ctx(seed: u64) -> ExpContext {
     let mut c = ExpContext::quick(seed);
@@ -15,6 +17,10 @@ fn every_experiment_runs_quick() {
     // one shared seed keeps total time bounded; individual experiments
     // have their own focused tests in their modules
     let ctx = ctx(5);
+    let schema_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("schemas/experiment_report.schema.json");
+    let report_schema =
+        json::parse(&std::fs::read_to_string(&schema_path).unwrap()).unwrap();
     for id in experiments::ALL_IDS {
         let report = experiments::run(id, &ctx)
             .unwrap_or_else(|e| panic!("experiment {id} failed: {e:#}"));
@@ -23,7 +29,31 @@ fn every_experiment_runs_quick() {
             ctx.out_dir.join(format!("{id}.md")).exists(),
             "{id} did not persist markdown"
         );
+        // machine-readable artifact: present, parseable, schema-conforming
+        let artifact_path = ctx.out_dir.join(format!("{id}.json"));
+        let text = std::fs::read_to_string(&artifact_path)
+            .unwrap_or_else(|e| panic!("{id} did not persist JSON: {e}"));
+        let doc = json::parse(&text).unwrap_or_else(|e| panic!("{id}.json: {e}"));
+        let errs = schema::validate(&report_schema, &doc);
+        assert!(errs.is_empty(), "{id}.json violates schema: {errs:?}");
+        assert_eq!(doc.get("id").and_then(|v| v.as_str()), Some(id));
     }
+    // the genmatrix sweep additionally emits one JSON cell per held-out
+    // workload of each set (4 + 9)
+    let cells: Vec<_> = std::fs::read_dir(ctx.out_dir.join("genmatrix_cells"))
+        .expect("genmatrix_cells dir")
+        .collect();
+    assert_eq!(cells.len(), 13, "expected 13 hold-one-out cells");
+}
+
+#[test]
+fn registry_ids_are_unique_and_resolvable() {
+    let mut seen = std::collections::BTreeSet::new();
+    for exp in experiments::REGISTRY {
+        assert!(seen.insert(exp.id()), "duplicate id {}", exp.id());
+        assert!(experiments::by_id(exp.id()).is_some());
+    }
+    assert!(experiments::by_id("fig99").is_none());
 }
 
 #[test]

@@ -1,0 +1,78 @@
+//! Golden-file tests for quick-budget JSON report artifacts.
+//!
+//! Two layers:
+//!
+//! 1. **Determinism** (always enforced): running an experiment twice with
+//!    the same seed in fresh contexts must produce byte-identical
+//!    `<id>.json` artifacts — the property checkpoint replay and the
+//!    golden comparison both rest on.
+//! 2. **Golden comparison**: when `rust/tests/golden/<id>.quick.json`
+//!    exists (or `IMCOPT_GOLDEN_DIR` points elsewhere), the artifact must
+//!    match it byte-for-byte. Bless goldens with `IMCOPT_BLESS=1`;
+//!    `ci.sh` blesses into a scratch dir and re-verifies in a second
+//!    process, catching any cross-process nondeterminism (hash ordering,
+//!    ASLR-dependent iteration, ...).
+
+use imcopt::coordinator::ExpContext;
+use imcopt::experiments;
+use std::path::PathBuf;
+
+const GOLDEN_SEED: u64 = 5;
+
+fn quick_artifact(id: &str, tag: &str) -> String {
+    let mut ctx = ExpContext::quick(GOLDEN_SEED);
+    ctx.stable = true;
+    ctx.out_dir = std::env::temp_dir().join(format!("imcopt-golden-{id}-{tag}"));
+    let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    experiments::run(id, &ctx).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+    std::fs::read_to_string(ctx.out_dir.join(format!("{id}.json")))
+        .unwrap_or_else(|e| panic!("{id}.json missing: {e}"))
+}
+
+fn golden_dir() -> PathBuf {
+    std::env::var("IMCOPT_GOLDEN_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+        })
+}
+
+fn check_golden(id: &str) {
+    let artifact = quick_artifact(id, "a");
+    let again = quick_artifact(id, "b");
+    assert_eq!(
+        artifact, again,
+        "{id}: quick JSON artifact must be deterministic for a fixed seed"
+    );
+
+    let golden_path = golden_dir().join(format!("{id}.quick.json"));
+    if golden_path.exists() {
+        let want = std::fs::read_to_string(&golden_path).unwrap();
+        assert_eq!(
+            artifact,
+            want,
+            "{id}: artifact diverged from {} (re-bless with IMCOPT_BLESS=1 \
+             if the change is intended)",
+            golden_path.display()
+        );
+    } else if std::env::var("IMCOPT_BLESS").is_ok() {
+        std::fs::create_dir_all(golden_path.parent().unwrap()).unwrap();
+        std::fs::write(&golden_path, &artifact).unwrap();
+        eprintln!("blessed {}", golden_path.display());
+    } else {
+        eprintln!(
+            "note: no golden at {} — run with IMCOPT_BLESS=1 to create it",
+            golden_path.display()
+        );
+    }
+}
+
+#[test]
+fn fig3_quick_json_deterministic_and_golden() {
+    check_golden("fig3");
+}
+
+#[test]
+fn table5_quick_json_deterministic_and_golden() {
+    check_golden("table5");
+}
