@@ -6,8 +6,10 @@
 #      bit-identity test and the golden determinism tests)
 #   3. cross-process golden check: bless quick-budget report goldens into
 #      a scratch dir, then re-verify them from a second test process
-#   4. evaluator bench smoke -> BENCH_eval.json, validated against
-#      schemas/bench_eval.schema.json
+#   4. evaluator bench smoke -> BENCH_eval.json + BENCH_model.json,
+#      validated against schemas/bench_{eval,model}.schema.json (the
+#      model schema gates the compiled evaluator's >= 3x speedup over
+#      the naive layer loop and its <= 1e-9 oracle agreement)
 #   5. registry smoke: `imcopt run --all --quick` must emit a well-formed
 #      JSON artifact for every registered experiment (validated against
 #      schemas/experiment_report.schema.json), and a `--resume` re-run
@@ -53,11 +55,18 @@ if [ ! -f BENCH_eval.json ]; then
     echo "error: BENCH_eval.json was not produced" >&2
     exit 1
 fi
+if [ ! -f BENCH_model.json ]; then
+    echo "error: BENCH_model.json was not produced" >&2
+    exit 1
+fi
 
 IMCOPT_BIN=./target/release/imcopt
 
 echo "=== validate BENCH_eval.json against its schema ==="
 "$IMCOPT_BIN" validate --bench BENCH_eval.json --schema schemas/bench_eval.schema.json
+
+echo "=== validate BENCH_model.json (compiled model >= 3x, <= 1e-9 agreement) ==="
+"$IMCOPT_BIN" validate --bench BENCH_model.json --schema schemas/bench_model.schema.json
 
 echo "=== registry smoke: imcopt run --all --quick ==="
 SMOKE_OUT="$(pwd)/target/ci-smoke"

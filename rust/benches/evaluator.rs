@@ -5,7 +5,9 @@
 //! L3-vs-L2/L1 headline bench.
 //!
 //! Writes `BENCH_eval.json` (designs/sec for the sequential and parallel
-//! `score_batch` paths plus the speedup) for the perf trajectory.
+//! `score_batch` paths plus the speedup) and `BENCH_model.json` (compiled
+//! O(1) model vs the naive layer loop on the all9 set; the schema gates
+//! speedup ≥ 3× and ≤1e-9 agreement) for the perf trajectory.
 
 use imcopt::coordinator::{EvalBackend, JointProblem};
 use imcopt::model::{MemoryTech, NativeEvaluator};
@@ -50,6 +52,71 @@ fn main() {
             }
         }
     });
+
+    // ---- compiled vs naive closed-form model (BENCH_model.json) ------------
+    // The canonical `evaluate` reads the per-workload aggregate tables
+    // (model::compiled); `evaluate_naive` is the O(layers) oracle it
+    // replaced. Same designs, all 9 workloads — the all9 scenarios are
+    // where the layer loop hurt most (MobileBERT has the most layers).
+    let all9 = WorkloadSet::all9();
+    let n_model = 32usize;
+    let model_raws = &raws64[..n_model];
+    let model_evals = n_model * all9.len();
+    // agreement guard at the property-test bound (also builds the tables
+    // before any timing starts)
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(f64::MIN_POSITIVE);
+    let mut agreement = true;
+    for raw in model_raws {
+        for w in &all9.workloads {
+            let c = native.evaluate(raw, w);
+            let o = native.evaluate_naive(raw, w);
+            if rel(c.energy, o.energy) > 1e-9
+                || rel(c.latency, o.latency) > 1e-9
+                || c.area.to_bits() != o.area.to_bits()
+                || c.feasible != o.feasible
+            {
+                agreement = false;
+            }
+        }
+    }
+    assert!(agreement, "compiled model diverged from the naive oracle");
+    let m_model_naive = bench.run(&format!("model/all9/naive/{n_model}"), model_evals, || {
+        for raw in model_raws {
+            for w in &all9.workloads {
+                std::hint::black_box(native.evaluate_naive(raw, w));
+            }
+        }
+    });
+    let m_model_comp = bench.run(&format!("model/all9/compiled/{n_model}"), model_evals, || {
+        for raw in model_raws {
+            for w in &all9.workloads {
+                std::hint::black_box(native.evaluate(raw, w));
+            }
+        }
+    });
+    let model_speedup = m_model_naive.mean.as_secs_f64() / m_model_comp.mean.as_secs_f64();
+    let naive_eps = model_evals as f64 / m_model_naive.mean.as_secs_f64();
+    let comp_eps = model_evals as f64 / m_model_comp.mean.as_secs_f64();
+    println!(
+        "compiled model speedup: {model_speedup:.2}x on all9 \
+         ({naive_eps:.0} -> {comp_eps:.0} evals/s), agreement: {agreement}"
+    );
+    let model_report = Json::obj(vec![
+        ("bench", Json::Str("model_eval".into())),
+        ("space", Json::Str("rram-32nm".into())),
+        ("workload_set", Json::Str("all9".into())),
+        ("designs", Json::Num(n_model as f64)),
+        ("evals_per_iter", Json::Num(model_evals as f64)),
+        ("evals_per_sec_naive", Json::Num(naive_eps)),
+        ("evals_per_sec_compiled", Json::Num(comp_eps)),
+        ("speedup", Json::Num(model_speedup)),
+        ("agreement", Json::Bool(agreement)),
+    ]);
+    let model_out = "BENCH_model.json";
+    match std::fs::write(model_out, model_report.to_string() + "\n") {
+        Ok(()) => println!("wrote {model_out}"),
+        Err(e) => eprintln!("could not write {model_out}: {e}"),
+    }
 
     // design-major parallel batch (the score_batch miss path's primitive)
     let threads = pool::default_threads();

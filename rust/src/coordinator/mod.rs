@@ -17,7 +17,10 @@
 //!   scales with cores and per-design results are bit-identical to the
 //!   sequential path (every design's evaluation is independent and
 //!   deterministic; the accuracy-proxy memo computes under its stripe
-//!   lock, so cache contents are thread-count-invariant too).
+//!   lock, so cache contents are thread-count-invariant too). Each
+//!   (design, workload) evaluation is itself O(1): `NativeEvaluator`
+//!   reads the workload's compiled aggregate tables
+//!   (`model::compiled::CompiledWorkload`) instead of walking layers.
 //! * **PJRT** — executions stay batched per workload, chunked by
 //!   `Engine::max_fitness_batch`; the engine `Mutex` is held **per
 //!   execution only**, and a dedicated scorer thread overlaps the
@@ -390,6 +393,54 @@ impl<'a> JointProblem<'a> {
         }
     }
 
+    /// A string identifying everything the accuracy-proxy memo's contents
+    /// depend on: the space variant (index → `(rows, cols, bits)` decode),
+    /// memory technology (noise spec) and the eps *source* — a PJRT
+    /// engine with the accproxy artifact produces different eps than the
+    /// analytical fallback, and the two must never mix across a resume,
+    /// so artifact availability is part of the scope. The checkpoint
+    /// subsystem keys persisted accuracy snapshots by this, independent of
+    /// workload set/subset — the proxy is purely design-keyed, so it is
+    /// shared across problems that agree on this scope.
+    pub fn acc_scope(&self) -> String {
+        let source = match &self.backend {
+            EvalBackend::Native(_) => "analytical",
+            EvalBackend::Pjrt(engine, _) => {
+                if engine.lock().unwrap().has_accproxy() {
+                    "accproxy"
+                } else {
+                    "analytical"
+                }
+            }
+        };
+        format!(
+            "{}|{}|{source}",
+            self.space.variant,
+            self.backend.mem().name(),
+        )
+    }
+
+    /// Number of memoized accuracy-proxy entries (diagnostics).
+    pub fn acc_cache_len(&self) -> usize {
+        self.acc_cache.len()
+    }
+
+    /// Snapshot of the accuracy-proxy memo (per-layer eps keyed by the
+    /// `(rows, cols, bits)` design indices), sorted by key.
+    pub fn acc_snapshot(&self) -> Vec<((u16, u16, u16), f64)> {
+        self.acc_cache.sorted_entries()
+    }
+
+    /// Preload accuracy-proxy memo entries from a checkpoint snapshot.
+    /// Entries must come from a problem with the same
+    /// [`JointProblem::acc_scope`]; like the evaluation memo, preloading
+    /// changes only throughput, never scores.
+    pub fn preload_acc_cache(&self, entries: Vec<((u16, u16, u16), f64)>) {
+        for (k, v) in entries {
+            self.acc_cache.insert(k, v);
+        }
+    }
+
     /// Cached (linear index, score) pairs sorted by key — used by the
     /// thread-count-determinism tests to compare cache contents.
     pub fn cached_scores(&self) -> Vec<(u64, f64)> {
@@ -475,13 +526,7 @@ impl Problem for JointProblem<'_> {
             let d = self.space.random(rng);
             let raw = self.space.decode(&d);
             let view = crate::model::DesignView::new(&raw, mem);
-            let mut sum = 0.0f64;
-            let mut max: f64 = 0.0;
-            for l in largest.layers.iter().filter(|l| !l.dynamic()) {
-                let xb = view.xbars_for(l.k as f64, l.n as f64);
-                sum += xb;
-                max = max.max(xb);
-            }
+            let (sum, max) = crate::model::xbar_demand(&view, largest);
             let demand = match mem {
                 MemoryTech::Rram => sum,
                 MemoryTech::Sram => max,
@@ -494,32 +539,27 @@ impl Problem for JointProblem<'_> {
     }
 
     /// Graded violation for stochastic ranking: capacity shortfall +
-    /// area excess + timing violation, all normalized.
+    /// area excess + timing violation, all normalized. O(1) per design:
+    /// the area is the closed-form native model (~a dozen float ops,
+    /// and the *same* model for every design — a cached PJRT metric
+    /// would grade cached vs uncached designs with two different area
+    /// models), and the capacity margins come from the compiled
+    /// per-workload aggregate tables (`model::xbar_demand`) — never a
+    /// full `score_batch` or layer walk.
     fn violation(&self, design: &Design) -> f64 {
         let raw = self.space.decode(design);
         let mem = self.backend.mem();
         let view = crate::model::DesignView::new(&raw, mem);
-        let ev = NativeEvaluator::new(mem);
-        let area = ev.area(&raw);
+        let area = NativeEvaluator::new(mem).area(&raw);
         let mut v = (area / self.objective.area_constraint - 1.0).max(0.0);
         if !view.timing_ok {
             v += 0.5;
         }
         // capacity violation against the largest active workload
-        let active = self.active_indices();
         let mut worst: f64 = 0.0;
-        for &wi in &active {
+        for &wi in &self.active_indices() {
             let w = &self.workloads.workloads[wi];
-            let mut sum_xb = 0.0;
-            let mut max_xb: f64 = 0.0;
-            for l in &w.layers {
-                if l.dynamic() {
-                    continue;
-                }
-                let xb = view.xbars_for(l.k as f64, l.n as f64);
-                sum_xb += xb;
-                max_xb = max_xb.max(xb);
-            }
+            let (sum_xb, max_xb) = crate::model::xbar_demand(&view, w);
             let demand = match mem {
                 MemoryTech::Rram => sum_xb,
                 MemoryTech::Sram => max_xb,
@@ -761,6 +801,54 @@ mod tests {
         let accs = ev.accuracies.expect("accuracies required");
         assert_eq!(accs.len(), 4);
         assert!(accs.iter().all(|&a| a > 0.0 && a < 1.0));
+    }
+
+    #[test]
+    fn acc_snapshot_roundtrips_and_scopes() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let acc_obj =
+            Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max);
+        let p = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            acc_obj,
+        );
+        let mut rng = Rng::seed_from(31);
+        let designs: Vec<Design> =
+            (0..6).map(|_| p.random_candidate(&mut rng)).collect();
+        p.score_batch(&designs);
+        assert!(p.acc_cache_len() > 0, "accuracy objective must memoize eps");
+        let snap = p.acc_snapshot();
+        assert_eq!(snap.len(), p.acc_cache_len());
+        // keys sorted, values finite
+        for pair in snap.windows(2) {
+            assert!(pair[0].0 < pair[1].0);
+        }
+        let q = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            acc_obj,
+        );
+        assert_eq!(p.acc_scope(), q.acc_scope());
+        q.preload_acc_cache(snap);
+        assert_eq!(q.acc_cache_len(), p.acc_cache_len());
+        // preloading never changes scores
+        let warm = q.score_batch(&designs);
+        for (a, b) in p.score_batch(&designs).iter().zip(&warm) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // a different memory tech / space is a different scope
+        let sspace = SearchSpace::sram();
+        let r = JointProblem::with_backend(
+            &sspace,
+            &set,
+            EvalBackend::native(MemoryTech::Sram),
+            acc_obj,
+        );
+        assert_ne!(p.acc_scope(), r.acc_scope());
     }
 
     #[test]

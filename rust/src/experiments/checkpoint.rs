@@ -20,10 +20,13 @@
 //!   persisted per problem configuration ([`JointProblem::config_key`])
 //!   into `<id>.memo.jsonl` (append-only, new entries only per absorb),
 //!   so re-running an *interrupted* cell on resume starts with every
-//!   previously evaluated design warm. Preloading never changes scores
-//!   (they are deterministic per design), only the number of evaluator
-//!   invocations, so experiments whose reports print eval counts simply
-//!   don't opt in.
+//!   previously evaluated design warm. The accuracy-proxy memo rides
+//!   along in `<id>.acc.jsonl`, keyed by [`JointProblem::acc_scope`]
+//!   (space variant + memory tech + backend — the proxy is purely
+//!   design-keyed, so it is shared across workload subsets). Preloading
+//!   never changes scores (they are deterministic per design), only the
+//!   number of evaluator invocations, so experiments whose reports print
+//!   eval counts simply don't opt in.
 
 use crate::coordinator::{Evaluations, JointProblem};
 use crate::model::Metrics;
@@ -60,11 +63,15 @@ pub struct Checkpoint {
     /// callers of `experiments::run`).
     journal_path: Option<PathBuf>,
     memo_path: Option<PathBuf>,
+    acc_path: Option<PathBuf>,
     cells: BTreeMap<String, Json>,
     /// scope (problem config key) → (linear index → decoded
     /// [`Evaluations`]); decoded once at load/absorb time so warming a
     /// problem is a clone, not a JSON decode.
     memo: BTreeMap<String, BTreeMap<u64, Evaluations>>,
+    /// scope ([`JointProblem::acc_scope`]) → ((rows, cols, bits) design
+    /// indices → memoized per-layer eps of the accuracy proxy).
+    acc: BTreeMap<String, BTreeMap<(u16, u16, u16), f64>>,
     computed: usize,
     reused: usize,
     /// Simulated-kill hook for the resume tests: the cell *after* this
@@ -89,17 +96,21 @@ impl Checkpoint {
             .with_context(|| format!("creating {}", dir.display()))?;
         let journal_path = dir.join(format!("{id}.jsonl"));
         let memo_path = dir.join(format!("{id}.memo.jsonl"));
+        let acc_path = dir.join(format!("{id}.acc.jsonl"));
         let mut ckpt = Checkpoint {
             journal_path: Some(journal_path.clone()),
             memo_path: Some(memo_path.clone()),
+            acc_path: Some(acc_path.clone()),
             ..Checkpoint::default()
         };
         if resume {
             ckpt.load_journal(&journal_path)?;
             ckpt.load_memo(&memo_path)?;
+            ckpt.load_acc(&acc_path)?;
         } else {
             remove_if_exists(&journal_path)?;
             remove_if_exists(&memo_path)?;
+            remove_if_exists(&acc_path)?;
         }
         Ok(ckpt)
     }
@@ -172,6 +183,40 @@ impl Checkpoint {
                         .entry(scope.to_string())
                         .or_default()
                         .insert(idx, ev);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn load_acc(&mut self, path: &Path) -> Result<()> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading acc memo {}", path.display()))
+            }
+        };
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            // same mid-append kill tolerance as the cell journal
+            let Ok(entry) = json::parse(line) else {
+                eprintln!(
+                    "[checkpoint] skipping corrupt acc memo line in {}",
+                    path.display()
+                );
+                continue;
+            };
+            if let (Some(scope), Some(key), Some(v)) = (
+                entry.get("s").and_then(|s| s.as_str()),
+                entry.get("k").and_then(|k| k.as_str()),
+                entry.get("v").and_then(|v| v.as_f64_lenient()),
+            ) {
+                if let Some(k) = parse_acc_key(key) {
+                    self.acc.entry(scope.to_string()).or_default().insert(k, v);
                 }
             }
         }
@@ -278,9 +323,13 @@ impl Checkpoint {
             .transpose()
     }
 
-    /// Preload `problem`'s evaluation memo from the persisted snapshot for
-    /// its configuration; returns the number of evaluations imported.
+    /// Preload `problem`'s evaluation and accuracy-proxy memos from the
+    /// persisted snapshots for its configuration; returns the number of
+    /// evaluations imported.
     pub fn warm_problem(&self, problem: &JointProblem<'_>) -> usize {
+        if let Some(entries) = self.acc.get(&problem.acc_scope()) {
+            problem.preload_acc_cache(entries.iter().map(|(&k, &v)| (k, v)).collect());
+        }
         let Some(entries) = self.memo.get(&problem.config_key()) else {
             return 0;
         };
@@ -289,14 +338,20 @@ impl Checkpoint {
         n
     }
 
-    /// Snapshot `problem`'s evaluation memo into this checkpoint (keyed by
-    /// the problem's configuration), appending only the *new* entries to
-    /// the memo file (JSONL, like the cell journal) — O(new entries), not
-    /// O(total memo), per absorb. Call [`Checkpoint::warm_problem`] on the
-    /// problem first (as every call site does): a problem whose cache is
-    /// no larger than the stored scope is assumed already absorbed and
-    /// skipped without snapshotting.
+    /// Snapshot `problem`'s evaluation and accuracy-proxy memos into this
+    /// checkpoint (keyed by the problem's configuration / acc scope),
+    /// appending only the *new* entries to the memo files (JSONL, like
+    /// the cell journal) — O(new entries), not O(total memo), per absorb.
+    /// Call [`Checkpoint::warm_problem`] on the problem first (as every
+    /// call site does): a problem whose cache is no larger than the
+    /// stored scope is assumed already absorbed and skipped without
+    /// snapshotting.
     pub fn absorb_problem(&mut self, problem: &JointProblem<'_>) -> Result<()> {
+        self.absorb_eval_memo(problem)?;
+        self.absorb_acc_memo(problem)
+    }
+
+    fn absorb_eval_memo(&mut self, problem: &JointProblem<'_>) -> Result<()> {
         let scope = problem.config_key();
         let known = self.memo.get(&scope).map(|m| m.len()).unwrap_or(0);
         if problem.cache_len() <= known {
@@ -334,6 +389,58 @@ impl Checkpoint {
         }
         f.flush().context("flushing memo")?;
         Ok(())
+    }
+
+    fn absorb_acc_memo(&mut self, problem: &JointProblem<'_>) -> Result<()> {
+        let scope = problem.acc_scope();
+        let known = self.acc.get(&scope).map(|m| m.len()).unwrap_or(0);
+        if problem.acc_cache_len() <= known {
+            return Ok(());
+        }
+        let snapshot = problem.acc_snapshot();
+        let map = self.acc.entry(scope.clone()).or_default();
+        let mut fresh: Vec<((u16, u16, u16), f64)> = Vec::new();
+        for (k, v) in snapshot {
+            if !map.contains_key(&k) {
+                map.insert(k, v);
+                fresh.push((k, v));
+            }
+        }
+        if fresh.is_empty() {
+            return Ok(());
+        }
+        let Some(path) = &self.acc_path else {
+            return Ok(());
+        };
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening acc memo {}", path.display()))?;
+        for (k, v) in &fresh {
+            let line = Json::obj(vec![
+                ("s", Json::Str(scope.clone())),
+                ("k", Json::Str(acc_key_to_string(*k))),
+                ("v", Json::f64(*v)),
+            ])
+            .to_string();
+            writeln!(f, "{line}").context("appending acc memo entry")?;
+        }
+        f.flush().context("flushing acc memo")?;
+        Ok(())
+    }
+}
+
+/// `(rows, cols, bits)` design-index key ↔ "r,c,b" string (acc memo file).
+fn acc_key_to_string(k: (u16, u16, u16)) -> String {
+    format!("{},{},{}", k.0, k.1, k.2)
+}
+
+fn parse_acc_key(s: &str) -> Option<(u16, u16, u16)> {
+    let mut it = s.split(',').map(|p| p.parse::<u16>().ok());
+    match (it.next(), it.next(), it.next(), it.next()) {
+        (Some(Some(r)), Some(Some(c)), Some(Some(b)), None) => Some((r, c, b)),
+        _ => None,
     }
 }
 
@@ -503,7 +610,7 @@ mod tests {
     use super::*;
     use crate::coordinator::EvalBackend;
     use crate::model::MemoryTech;
-    use crate::objective::Objective;
+    use crate::objective::{Aggregation, Objective, ObjectiveKind};
     use crate::space::SearchSpace;
     use crate::util::rng::Rng;
     use crate::workloads::WorkloadSet;
@@ -690,5 +797,79 @@ mod tests {
         // a differently-configured problem must not be warmed
         let r = problem(&space, &set).restricted(1);
         assert_eq!(ck.warm_problem(&r), 0);
+    }
+
+    fn acc_problem<'a>(
+        space: &'a SearchSpace,
+        set: &'a WorkloadSet,
+    ) -> JointProblem<'a> {
+        JointProblem::with_backend(
+            space,
+            set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max),
+        )
+    }
+
+    #[test]
+    fn acc_memo_persists_and_warms_matching_scopes() {
+        let dir = tmp("accmemo");
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let mut rng = Rng::seed_from(44);
+        let p = acc_problem(&space, &set);
+        let designs: Vec<crate::space::Design> =
+            (0..6).map(|_| p.random_candidate(&mut rng)).collect();
+        let scores = p.score_batch(&designs);
+        assert!(p.acc_cache_len() > 0);
+        {
+            let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+            ck.absorb_problem(&p).unwrap();
+        }
+        assert!(
+            dir.join("checkpoints/demo.acc.jsonl").exists(),
+            "acc memo file must be written"
+        );
+        // a resumed checkpoint warms the acc cache alongside the eval memo
+        let ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        let q = acc_problem(&space, &set);
+        assert_eq!(ck.warm_problem(&q), p.cache_len());
+        assert_eq!(q.acc_cache_len(), p.acc_cache_len());
+        let warm = q.score_batch(&designs);
+        assert_eq!(q.evals(), 0);
+        for (a, b) in scores.iter().zip(&warm) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // a problem with a different acc scope (SRAM) imports nothing
+        let sspace = SearchSpace::sram();
+        let r = JointProblem::with_backend(
+            &sspace,
+            &set,
+            EvalBackend::native(MemoryTech::Sram),
+            Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max),
+        );
+        ck.warm_problem(&r);
+        assert_eq!(r.acc_cache_len(), 0);
+        // absorbing an unchanged problem appends nothing new
+        let mut ck2 = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        let before = std::fs::metadata(dir.join("checkpoints/demo.acc.jsonl"))
+            .unwrap()
+            .len();
+        ck2.warm_problem(&q);
+        ck2.absorb_problem(&q).unwrap();
+        let after = std::fs::metadata(dir.join("checkpoints/demo.acc.jsonl"))
+            .unwrap()
+            .len();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn acc_key_codec_roundtrips() {
+        for k in [(0u16, 0u16, 0u16), (4, 7, 2), (512, 256, 4)] {
+            assert_eq!(parse_acc_key(&acc_key_to_string(k)), Some(k));
+        }
+        assert_eq!(parse_acc_key("1,2"), None);
+        assert_eq!(parse_acc_key("1,2,3,4"), None);
+        assert_eq!(parse_acc_key("a,b,c"), None);
     }
 }

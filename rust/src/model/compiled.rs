@@ -1,0 +1,541 @@
+//! Compiled-workload evaluator: the O(layers) closed-form model collapsed
+//! into O(1) table lookups (ROADMAP "make a hot path measurably faster").
+//!
+//! Every per-layer formula in [`super::NativeEvaluator`] decomposes into a
+//! *workload-constant aggregate* × a *design-dependent factor*, because the
+//! only design-dependent quantities inside a `ceil()` come from tiny
+//! discrete sets:
+//!
+//! * crossbar geometry `(rows, cols, dpw)` — drawn from the union of every
+//!   `SearchSpace` variant's grids ([`GRID_ROWS_COLS`], [`GRID_DPW`]), so
+//!   `Σ ceil(k/rows)·ceil(n·dpw/cols)`, its max, and the
+//!   conversion/driver sum `Σ passes·xb_r·xb_c` are precomputed per
+//!   **shape bucket**;
+//! * the RRAM replication factor `rep ∈ 1..=REP_MAX` — an 8-entry table of
+//!   `Σ ceil(passes/rep)` covers it;
+//! * the SRAM per-layer replication `clamp(⌊macros/xb_l⌋, 1, REP_MAX)` —
+//!   layers sorted by `xb` with per-`rep` prefix sums turn the sum into
+//!   [`REP_MAX`] binary searches (`⌊macros/xb⌋ ≥ r ⇔ r·xb ≤ macros`,
+//!   exact for the integer-valued `f64`s involved);
+//! * the GLB spill `Σ max(io_l − glb, 0)` — sorted prefix sums over
+//!   `io_bytes` plus one binary search on `glb`;
+//! * everything else is a flat sum (`Σ passes·k·n`, `Σ weights`,
+//!   `Σ io_bytes`, `Σ macs`).
+//!
+//! All aggregates are sums/maxima of integer-valued `f64`s below 2⁵³, so
+//! they are **exact** regardless of summation order — in particular
+//! `sum_xb`/`max_xb` (and therefore capacity feasibility, swapping mode and
+//! every replication factor) are bit-identical to the naive layer walk.
+//! Energy/latency recombine the aggregates in a different floating-point
+//! order than the per-layer loop, so those agree to ~1e-15 relative (the
+//! property test `rust/tests/compiled_vs_naive.rs` enforces ≤1e-9); the
+//! compiled path itself is a pure function of (design, workload) and stays
+//! bit-identical across thread counts and resume replays.
+//!
+//! Designs whose geometry is off-grid (hand-written raw vectors in tests,
+//! future space variants) return `None` from [`CompiledWorkload::metrics`]
+//! and fall back to the naive oracle in `NativeEvaluator::evaluate`.
+
+use super::consts::*;
+use super::{DesignView, MemoryTech, Metrics};
+use crate::workloads::Layer;
+
+/// Crossbar row/column grid covered by the shape buckets — aliased from
+/// the search space's single source of truth
+/// ([`crate::space::ALL_ROWS_COLS`]), so a new space value automatically
+/// gets buckets instead of silently dropping to the naive walk.
+pub const GRID_ROWS_COLS: [f64; 8] = crate::space::ALL_ROWS_COLS;
+
+/// Devices-per-weight values reachable from the spaces' bits/cell domains:
+/// `dpw = ceil(W_BITS/bits)` with `bits ∈` [`crate::space::ALL_BITS_CELL`]
+/// (SRAM pins bits = 1). A test pins this to the bits domain.
+pub const GRID_DPW: [f64; 3] = [2.0, 4.0, 8.0];
+
+/// `REP_MAX` as a table size (the replication factor is integer-valued;
+/// a test pins this to `consts::REP_MAX`).
+const REP_MAX_I: usize = 8;
+
+/// Per-(rows, cols, dpw) aggregates over a workload's static layers.
+#[derive(Clone, Debug, Default)]
+struct ShapeBucket {
+    /// `Σ xb_r·xb_c` — RRAM capacity demand and replication denominator.
+    sum_xb: f64,
+    /// `max xb_r·xb_c` — SRAM (largest-resident-layer) capacity demand.
+    max_xb: f64,
+    /// `Σ passes·xb_r·xb_c` — ADC conversion and row-driver sums.
+    sum_pxb: f64,
+    /// Distinct per-layer crossbar counts, ascending.
+    xb_distinct: Vec<f64>,
+    /// `rep_prefix[i][r-1]` = Σ over the first `i` distinct-xb groups of
+    /// `Σ_{layer in group} ceil(passes/r)`; length `xb_distinct.len()+1`.
+    rep_prefix: Vec<[f64; REP_MAX_I]>,
+}
+
+impl ShapeBucket {
+    /// `Σ_l ceil(passes_l / rep_l)` with the SRAM per-layer replication
+    /// `rep_l = clamp(⌊macros/xb_l⌋, 1, REP_MAX)`, via one binary search
+    /// per replication class (`⌊macros/xb⌋ ≥ r ⇔ r·xb ≤ macros`; both
+    /// sides are exact integer-valued `f64`s, so the class boundaries
+    /// match the naive float `floor` bit-for-bit).
+    fn sram_rep_sum(&self, macros: f64) -> f64 {
+        let ng = self.xb_distinct.len();
+        if ng == 0 {
+            return 0.0;
+        }
+        // c[r] = #groups with rep ≥ r (i.e. r·xb ≤ macros); c is
+        // non-increasing in r, and the rep-r class is c[r+1]..c[r]
+        let mut c = [0usize; REP_MAX_I + 1];
+        for (r, slot) in c.iter_mut().enumerate().skip(1) {
+            *slot = self
+                .xb_distinct
+                .partition_point(|&xb| (r as f64) * xb <= macros);
+        }
+        let pref = |i: usize, r: usize| self.rep_prefix[i][r - 1];
+        // rep = REP_MAX absorbs every ⌊macros/xb⌋ ≥ REP_MAX (the clamp)
+        let mut sum = pref(c[REP_MAX_I], REP_MAX_I);
+        for r in 2..REP_MAX_I {
+            sum += pref(c[r], r) - pref(c[r + 1], r);
+        }
+        // rep = 1 absorbs ⌊macros/xb⌋ ≤ 1, i.e. everything above c[2]
+        sum + pref(ng, 1) - pref(c[2], 1)
+    }
+}
+
+/// Precomputed aggregate tables for one workload; built once per
+/// [`crate::workloads::Workload`] instance (lazily, via
+/// `Workload::compiled`) and shared by every evaluation of it.
+#[derive(Clone, Debug)]
+pub struct CompiledWorkload {
+    /// Layer count at build time — `NativeEvaluator` falls back to the
+    /// naive walk if the workload was mutated after compilation.
+    n_layers: usize,
+    /// O(1) staleness fingerprint: shape signatures of the first and
+    /// last layers at build time. Together with `n_layers` this catches
+    /// the common in-place edits (`w.layers[0].k *= 2`, push/pop) that
+    /// the count alone cannot; mutating only interior layers of an
+    /// already-evaluated instance remains unsupported (see
+    /// `Workload::compiled` — clone first, clones recompile).
+    first_sig: Option<u64>,
+    last_sig: Option<u64>,
+    // ---- flat sums over static (weight-stationary) layers ----------------
+    /// `Σ passes·k·n` (crossbar MACs; `e_array` up to constant factors).
+    s_pkn: f64,
+    /// `Σ weights` (SRAM swap traffic when swapping engages).
+    s_weights: f64,
+    /// `Σ (in_bytes + out_bytes)` (NoC/GLB traffic).
+    s_io_static: f64,
+    // ---- flat sums over dynamic (digital vector-unit) layers -------------
+    /// `Σ k·n·passes`.
+    s_macs: f64,
+    /// `Σ (in_bytes + out_bytes)`.
+    s_io_dyn: f64,
+    /// `rep_sums[rep-1] = Σ_static ceil(passes/rep)` — RRAM's uniform
+    /// replication factor indexes straight into this.
+    rep_sums: [f64; REP_MAX_I],
+    /// Static-layer `io_bytes`, ascending, plus prefix sums (the GLB
+    /// spill term `Σ max(io − glb, 0)`).
+    io_sorted: Vec<f64>,
+    io_prefix: Vec<f64>,
+    /// One bucket per grid point, indexed by [`Self::bucket_index`].
+    buckets: Vec<ShapeBucket>,
+}
+
+/// Position of `x` in a small exact-valued grid.
+fn grid_pos(grid: &[f64], x: f64) -> Option<usize> {
+    grid.iter().position(|&v| v == x)
+}
+
+/// Shape signature of one layer (staleness fingerprint component) —
+/// covers every field the aggregate tables read.
+fn layer_sig(l: &Layer) -> u64 {
+    l.k ^ l.n.rotate_left(11)
+        ^ l.passes.rotate_left(22)
+        ^ l.weights.rotate_left(33)
+        ^ l.in_bytes.rotate_left(44)
+        ^ l.out_bytes.rotate_left(55)
+        ^ ((l.dynamic() as u64) << 63)
+}
+
+impl CompiledWorkload {
+    /// Precompute every aggregate table for `layers`. O(grid × layers)
+    /// once, amortized over the millions of evaluations of a search run.
+    pub fn build(layers: &[Layer]) -> CompiledWorkload {
+        let mut cw = CompiledWorkload {
+            n_layers: layers.len(),
+            first_sig: layers.first().map(layer_sig),
+            last_sig: layers.last().map(layer_sig),
+            s_pkn: 0.0,
+            s_weights: 0.0,
+            s_io_static: 0.0,
+            s_macs: 0.0,
+            s_io_dyn: 0.0,
+            rep_sums: [0.0; REP_MAX_I],
+            io_sorted: Vec::new(),
+            io_prefix: Vec::new(),
+            buckets: Vec::new(),
+        };
+        for l in layers {
+            let io = (l.in_bytes + l.out_bytes) as f64;
+            if l.dynamic() {
+                cw.s_macs += l.macs() as f64;
+                cw.s_io_dyn += io;
+            } else {
+                let passes = l.passes as f64;
+                cw.s_pkn += passes * l.k as f64 * l.n as f64;
+                cw.s_weights += l.weights as f64;
+                cw.s_io_static += io;
+                cw.io_sorted.push(io);
+                for rep in 1..=REP_MAX_I {
+                    cw.rep_sums[rep - 1] += (passes / rep as f64).ceil();
+                }
+            }
+        }
+        cw.io_sorted.sort_by(f64::total_cmp);
+        cw.io_prefix = Vec::with_capacity(cw.io_sorted.len() + 1);
+        let mut acc = 0.0;
+        cw.io_prefix.push(acc);
+        for &io in &cw.io_sorted {
+            acc += io;
+            cw.io_prefix.push(acc);
+        }
+
+        let statics: Vec<&Layer> = layers.iter().filter(|l| !l.dynamic()).collect();
+        cw.buckets = Vec::with_capacity(GRID_ROWS_COLS.len().pow(2) * GRID_DPW.len());
+        for &rows in &GRID_ROWS_COLS {
+            for &cols in &GRID_ROWS_COLS {
+                for &dpw in &GRID_DPW {
+                    cw.buckets.push(Self::build_bucket(&statics, rows, cols, dpw));
+                }
+            }
+        }
+        cw
+    }
+
+    fn build_bucket(statics: &[&Layer], rows: f64, cols: f64, dpw: f64) -> ShapeBucket {
+        let mut b = ShapeBucket::default();
+        // (xb, passes) per layer, mirroring DesignView::xbars_for exactly
+        let mut per_layer: Vec<(f64, f64)> = Vec::with_capacity(statics.len());
+        for l in statics {
+            let xb = (l.k as f64 / rows).ceil() * (l.n as f64 * dpw / cols).ceil();
+            let passes = l.passes as f64;
+            b.sum_xb += xb;
+            b.max_xb = b.max_xb.max(xb);
+            b.sum_pxb += passes * xb;
+            per_layer.push((xb, passes));
+        }
+        per_layer.sort_by(|a, b| a.0.total_cmp(&b.0));
+        b.rep_prefix.push([0.0; REP_MAX_I]);
+        for (xb, passes) in per_layer {
+            if b.xb_distinct.last() != Some(&xb) {
+                b.xb_distinct.push(xb);
+                let last = *b.rep_prefix.last().unwrap();
+                b.rep_prefix.push(last);
+            }
+            let acc = b.rep_prefix.last_mut().unwrap();
+            for rep in 1..=REP_MAX_I {
+                acc[rep - 1] += (passes / rep as f64).ceil();
+            }
+        }
+        b
+    }
+
+    /// Layer count the tables were built from.
+    pub fn layer_count(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Whether these tables were built from `layers` — the O(1)
+    /// staleness check `NativeEvaluator` runs before trusting the
+    /// compiled path (count plus first/last-layer signatures).
+    pub fn matches(&self, layers: &[Layer]) -> bool {
+        self.n_layers == layers.len()
+            && self.first_sig == layers.first().map(layer_sig)
+            && self.last_sig == layers.last().map(layer_sig)
+    }
+
+    fn bucket_index(&self, rows: f64, cols: f64, dpw: f64) -> Option<usize> {
+        let ri = grid_pos(&GRID_ROWS_COLS, rows)?;
+        let ci = grid_pos(&GRID_ROWS_COLS, cols)?;
+        let di = grid_pos(&GRID_DPW, dpw)?;
+        Some((ri * GRID_ROWS_COLS.len() + ci) * GRID_DPW.len() + di)
+    }
+
+    /// Whether the design's crossbar geometry has a precomputed bucket.
+    pub fn covers(&self, d: &DesignView) -> bool {
+        self.bucket_index(d.rows, d.cols, d.dpw).is_some()
+    }
+
+    /// Crossbar demand `(Σ xbars, max xbars)` of the static layers on
+    /// `d`'s geometry — the capacity terms of the mapping pass. `None`
+    /// when the geometry is off-grid.
+    pub fn xbar_demand(&self, d: &DesignView) -> Option<(f64, f64)> {
+        let b = &self.buckets[self.bucket_index(d.rows, d.cols, d.dpw)?];
+        Some((b.sum_xb, b.max_xb))
+    }
+
+    /// `Σ max(io_bytes − glb, 0)` over static layers (GLB spill to DRAM).
+    fn spill_sum(&self, glb: f64) -> f64 {
+        let i = self.io_sorted.partition_point(|&io| io <= glb);
+        let n = self.io_sorted.len();
+        (self.io_prefix[n] - self.io_prefix[i]) - (n - i) as f64 * glb
+    }
+
+    /// Evaluate one design on this workload from the aggregate tables —
+    /// the O(1) equivalent of `NativeEvaluator::evaluate_naive`'s layer
+    /// loop. `area` is the (workload-independent) chip area the caller
+    /// already computed. `None` when the geometry is off-grid.
+    pub fn metrics(&self, mem: MemoryTech, d: &DesignView, area: f64) -> Option<Metrics> {
+        let b = &self.buckets[self.bucket_index(d.rows, d.cols, d.dpw)?];
+
+        // ---- mapping pass (exact: integer-valued sums) --------------------
+        let capacity_ok = match mem {
+            MemoryTech::Rram => b.sum_xb <= d.macros,
+            MemoryTech::Sram => b.max_xb <= d.macros,
+        };
+        let swapping = mem == MemoryTech::Sram && b.sum_xb > d.macros;
+
+        // ---- static compute ----------------------------------------------
+        let (e_cell, e_adc) = match mem {
+            MemoryTech::Rram => (E_CELL_RRAM, E_ADC_RRAM),
+            MemoryTech::Sram => (E_CELL_SRAM, E_ADC_SRAM),
+        };
+        let sum_ceil = match mem {
+            MemoryTech::Rram => {
+                let rep = (d.macros / b.sum_xb.max(1.0)).floor().clamp(1.0, REP_MAX);
+                self.rep_sums[rep as usize - 1]
+            }
+            MemoryTech::Sram => b.sram_rep_sum(d.macros),
+        };
+        let lat_compute = sum_ceil * IN_BITS * (d.cols / ADC_CONV_PER_CYCLE).ceil() * d.t_cycle_s;
+        let e_array = self.s_pkn * d.dpw * IN_BITS * e_cell * d.s_e;
+        let e_adc_total = b.sum_pxb * IN_BITS * d.cols * e_adc * d.s_e;
+        let e_drv = b.sum_pxb * IN_BITS * d.rows * E_DRV * d.s_e;
+
+        // ---- weight swapping (SRAM only) ----------------------------------
+        let swap_bytes = if swapping { self.s_weights } else { 0.0 };
+        let e_swap = swap_bytes * (E_DRAM_BYTE + E_SRAM_WRITE_BYTE);
+        let lat_swap = swap_bytes / DRAM_BW;
+
+        // ---- on-chip traffic (static + dynamic) ---------------------------
+        let hops = d.groups.sqrt();
+        let noc_static = self.s_io_static + swap_bytes;
+        let lat_noc = (noc_static + self.s_io_dyn) * hops * d.t_cycle_s
+            / (NOC_BYTES_PER_CYCLE * d.groups);
+        let e_noc = (noc_static + self.s_io_dyn) * hops * E_NOC_BYTE * d.s_e;
+        let e_glb = (noc_static + self.s_io_dyn) * E_GLB_BYTE * d.s_e;
+
+        // activation working sets beyond the GLB spill to DRAM
+        let spill = self.spill_sum(d.glb_bytes);
+        let e_spill = 2.0 * spill * E_DRAM_BYTE;
+        let lat_spill = 2.0 * spill / DRAM_BW;
+
+        // ---- dynamic layers (digital vector units) ------------------------
+        let lat_dig = self.s_macs / (d.tiles * DIG_LANES) * d.t_cycle_s;
+        let e_dig = self.s_macs * E_DIG_MAC * d.s_e;
+
+        let latency = lat_compute + lat_swap + lat_noc + lat_spill + lat_dig;
+        let mut energy = e_array + e_adc_total + e_drv + e_swap + e_noc + e_glb + e_spill + e_dig;
+
+        // leakage over the whole inference
+        let p_leak = P_LEAK_W_PER_MM2 * (32.0 / d.tech).sqrt() * d.v * area;
+        energy += p_leak * latency;
+
+        Some(Metrics {
+            energy,
+            latency,
+            area,
+            feasible: capacity_ok && d.timing_ok && area <= AREA_CONSTR_MM2,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{idx, SearchSpace};
+    use crate::util::rng::Rng;
+    use crate::workloads::{by_name, Workload, ALL_NAMES};
+
+    fn rel(a: f64, b: f64) -> f64 {
+        if a == b {
+            0.0
+        } else {
+            (a - b).abs() / b.abs().max(f64::MIN_POSITIVE)
+        }
+    }
+
+    #[test]
+    fn rep_table_size_matches_rep_max() {
+        assert_eq!(REP_MAX_I as f64, REP_MAX);
+    }
+
+    #[test]
+    fn grid_dpw_covers_every_bits_cell_value() {
+        for bits in crate::space::ALL_BITS_CELL {
+            let dpw = (W_BITS / bits).ceil();
+            assert!(
+                grid_pos(&GRID_DPW, dpw).is_some(),
+                "bits {bits} -> dpw {dpw} missing from GRID_DPW"
+            );
+        }
+    }
+
+    /// Bucket keys cover every (rows, cols, bits) combination of every
+    /// space variant — the compiled path must never fall back on-grid.
+    #[test]
+    fn buckets_cover_every_space_combination() {
+        let spaces = [
+            (SearchSpace::rram(), MemoryTech::Rram),
+            (SearchSpace::rram_reduced(), MemoryTech::Rram),
+            (SearchSpace::sram(), MemoryTech::Sram),
+            (SearchSpace::sram_tech(), MemoryTech::Sram),
+        ];
+        let cw = by_name("resnet18").unwrap().compiled().clone();
+        for (space, mem) in spaces {
+            for &rows in &space.params[idx::ROWS].values {
+                assert!(grid_pos(&GRID_ROWS_COLS, rows).is_some(), "rows {rows}");
+            }
+            for &cols in &space.params[idx::COLS].values {
+                assert!(grid_pos(&GRID_ROWS_COLS, cols).is_some(), "cols {cols}");
+            }
+            // every decoded design's geometry lands in a bucket
+            let mut rng = Rng::seed_from(7);
+            for _ in 0..50 {
+                let raw = space.decode(&space.random(&mut rng));
+                let view = DesignView::new(&raw, mem);
+                assert!(cw.covers(&view), "{} off-grid: {raw:?}", space.variant);
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_sums_are_monotone() {
+        for name in ALL_NAMES {
+            let w = by_name(name).unwrap();
+            let cw = w.compiled();
+            // io prefix sums non-decreasing, io sorted ascending
+            for pair in cw.io_prefix.windows(2) {
+                assert!(pair[0] <= pair[1], "{name}: io_prefix decreased");
+            }
+            for pair in cw.io_sorted.windows(2) {
+                assert!(pair[0] <= pair[1], "{name}: io_sorted unsorted");
+            }
+            // rep table non-increasing in rep; rep=1 recovers Σ passes
+            for r in 1..REP_MAX_I {
+                assert!(cw.rep_sums[r - 1] >= cw.rep_sums[r], "{name}: rep_sums");
+            }
+            let sum_passes: f64 = w
+                .layers
+                .iter()
+                .filter(|l| !l.dynamic())
+                .map(|l| l.passes as f64)
+                .sum();
+            assert_eq!(cw.rep_sums[0], sum_passes, "{name}");
+            // per-bucket prefix sums monotone in both index and rep
+            for b in &cw.buckets {
+                assert_eq!(b.rep_prefix.len(), b.xb_distinct.len() + 1);
+                for pair in b.xb_distinct.windows(2) {
+                    assert!(pair[0] < pair[1], "{name}: xb_distinct unsorted");
+                }
+                for r in 1..=REP_MAX_I {
+                    for pair in b.rep_prefix.windows(2) {
+                        assert!(pair[0][r - 1] <= pair[1][r - 1], "{name}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_workload_compiles_to_zero_cost() {
+        let w = Workload::new("empty", Vec::new());
+        let raw = [512.0, 256.0, 16.0, 8.0, 24.0, 2.0, 0.85, 2.0, 4096.0, 32.0];
+        let view = DesignView::new(&raw, MemoryTech::Rram);
+        let cw = w.compiled();
+        let m = cw.metrics(MemoryTech::Rram, &view, 100.0).unwrap();
+        assert_eq!(m.energy, 0.0);
+        assert_eq!(m.latency, 0.0);
+        assert!(m.feasible);
+        assert_eq!(cw.xbar_demand(&view), Some((0.0, 0.0)));
+    }
+
+    #[test]
+    fn all_dynamic_workload_matches_naive() {
+        let gpt2 = by_name("gpt2-medium").unwrap();
+        let dynamic: Vec<_> = gpt2
+            .layers
+            .iter()
+            .filter(|l| l.dynamic())
+            .cloned()
+            .collect();
+        assert!(!dynamic.is_empty());
+        let w = Workload::new("attn-only", dynamic);
+        let ev = super::super::NativeEvaluator::new(MemoryTech::Rram);
+        let raw = [512.0, 256.0, 16.0, 8.0, 24.0, 2.0, 0.85, 2.0, 4096.0, 32.0];
+        let a = ev.evaluate(&raw, &w);
+        let b = ev.evaluate_naive(&raw, &w);
+        assert!(rel(a.energy, b.energy) <= 1e-9);
+        assert!(rel(a.latency, b.latency) <= 1e-9);
+        assert_eq!(a.feasible, b.feasible);
+        // no static layers: zero crossbar demand, swapping never engages
+        let view = DesignView::new(&raw, MemoryTech::Sram);
+        assert_eq!(w.compiled().xbar_demand(&view), Some((0.0, 0.0)));
+    }
+
+    #[test]
+    fn sram_rep_sum_matches_per_layer_definition() {
+        let w = by_name("vgg16").unwrap();
+        let cw = w.compiled();
+        let mut rng = Rng::seed_from(11);
+        for _ in 0..200 {
+            // macros from the SRAM space's (c_per_tile × t_per_router ×
+            // g_per_chip) products, plus adversarial small values
+            let macros = match rng.below(4) {
+                0 => 4.0 * 2.0 * 2.0,
+                1 => (1 + rng.below(40)) as f64,
+                2 => 32.0 * 16.0 * 64.0,
+                _ => (1 + rng.below(4000)) as f64,
+            };
+            let (rows, cols, dpw) = (512.0, 512.0, 8.0);
+            let b = &cw.buckets[cw.bucket_index(rows, cols, dpw).unwrap()];
+            let expect: f64 = w
+                .layers
+                .iter()
+                .filter(|l| !l.dynamic())
+                .map(|l| {
+                    let xb = (l.k as f64 / rows).ceil() * (l.n as f64 * dpw / cols).ceil();
+                    let rep = (macros / xb.max(1.0)).floor().clamp(1.0, REP_MAX);
+                    (l.passes as f64 / rep).ceil()
+                })
+                .sum();
+            assert_eq!(b.sram_rep_sum(macros), expect, "macros={macros}");
+        }
+    }
+
+    #[test]
+    fn spill_sum_matches_per_layer_definition() {
+        let w = by_name("mobilebert").unwrap();
+        let cw = w.compiled();
+        for glb_kb in [0.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0, 1e9] {
+            let glb = glb_kb * 1024.0;
+            let expect: f64 = w
+                .layers
+                .iter()
+                .filter(|l| !l.dynamic())
+                .map(|l| ((l.in_bytes + l.out_bytes) as f64 - glb).max(0.0))
+                .sum();
+            assert_eq!(cw.spill_sum(glb), expect, "glb={glb}");
+        }
+    }
+
+    #[test]
+    fn off_grid_geometry_returns_none() {
+        let w = by_name("alexnet").unwrap();
+        let raw = [100.0, 256.0, 16.0, 8.0, 24.0, 2.0, 0.85, 2.0, 4096.0, 32.0];
+        let view = DesignView::new(&raw, MemoryTech::Rram);
+        let cw = w.compiled();
+        assert!(!cw.covers(&view));
+        assert!(cw.metrics(MemoryTech::Rram, &view, 100.0).is_none());
+        assert!(cw.xbar_demand(&view).is_none());
+    }
+}

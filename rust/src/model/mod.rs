@@ -14,9 +14,21 @@
 //! fitness.py`); the cross-language consistency test holds both to ≤0.5 %.
 //! Absolute numbers are ballpark-calibrated (ISAAC/NeuroSim); the paper's
 //! conclusions only require faithful *relative* ordering (§III-A).
+//!
+//! The canonical native hot path no longer walks layers at all: the
+//! per-layer formulas are compiled once per workload into aggregate tables
+//! ([`compiled::CompiledWorkload`]) and each (design, workload) evaluation
+//! becomes a handful of table lookups. The layer-loop implementation
+//! survives as [`NativeEvaluator::evaluate_naive`] — the test oracle the
+//! compiled path is property-tested against (≤1e-9 relative agreement,
+//! `rust/tests/compiled_vs_naive.rs`) and the fallback for off-grid
+//! geometries.
 
+pub mod compiled;
 pub mod consts;
 pub mod tech;
+
+pub use compiled::CompiledWorkload;
 
 use crate::space::idx;
 use crate::workloads::Workload;
@@ -170,10 +182,40 @@ impl NativeEvaluator {
     }
 
     /// Evaluate one design on one workload.
+    ///
+    /// Routes through the O(1) compiled aggregate tables
+    /// ([`CompiledWorkload`], built lazily per workload instance), falling
+    /// back to the naive layer loop when the crossbar geometry is off the
+    /// precomputed grid or the workload's layers were mutated after
+    /// compilation ([`CompiledWorkload::matches`] — count plus first/last
+    /// layer signatures). Both paths are deterministic pure functions of
+    /// (design, workload), so results are bit-identical across thread
+    /// counts and resume replays.
     pub fn evaluate(&self, raw: &[f64; 10], w: &Workload) -> Metrics {
         let d = DesignView::new(raw, self.mem);
         let area = self.area_view(&d);
+        let cw = w.compiled();
+        if cw.matches(&w.layers) {
+            if let Some(m) = cw.metrics(self.mem, &d, area) {
+                return m;
+            }
+        }
+        self.naive_with_view(&d, area, w)
+    }
 
+    /// The original O(layers) closed-form walk — kept as the test oracle
+    /// for the compiled path and as the fallback for geometries outside
+    /// the precomputed [`compiled::GRID_ROWS_COLS`]/[`compiled::GRID_DPW`]
+    /// grid. Semantics are identical to [`NativeEvaluator::evaluate`] up
+    /// to float summation order (≤1e-9 relative; capacity/feasibility are
+    /// bit-identical).
+    pub fn evaluate_naive(&self, raw: &[f64; 10], w: &Workload) -> Metrics {
+        let d = DesignView::new(raw, self.mem);
+        let area = self.area_view(&d);
+        self.naive_with_view(&d, area, w)
+    }
+
+    fn naive_with_view(&self, d: &DesignView, area: f64, w: &Workload) -> Metrics {
         // ---- mapping pass: crossbar demand --------------------------------
         let mut sum_xb = 0.0f64;
         let mut max_xb = 0.0f64;
@@ -202,7 +244,7 @@ impl NativeEvaluator {
         let mut total = LayerCost::default();
         for l in &w.layers {
             let c = if l.dynamic() {
-                self.dynamic_layer_cost(&d, l)
+                self.dynamic_layer_cost(d, l)
             } else {
                 let rep = match self.mem {
                     MemoryTech::Rram => rep_rram,
@@ -211,7 +253,7 @@ impl NativeEvaluator {
                         (d.macros / xb.max(1.0)).floor().clamp(1.0, REP_MAX)
                     }
                 };
-                self.static_layer_cost(&d, l, rep, swapping)
+                self.static_layer_cost(d, l, rep, swapping)
             };
             total.energy += c.energy;
             total.latency += c.latency;
@@ -325,6 +367,27 @@ impl NativeEvaluator {
             latency: lat + lat_noc,
         }
     }
+}
+
+/// Crossbar demand `(Σ xbars, max xbars)` of `w`'s static layers on `d` —
+/// the capacity terms of the mapping pass. Uses the compiled aggregate
+/// tables when the geometry is on-grid (O(1)), and walks the layers
+/// otherwise. Exact either way: the sums are integer-valued `f64`s.
+pub fn xbar_demand(d: &DesignView, w: &Workload) -> (f64, f64) {
+    let cw = w.compiled();
+    if cw.matches(&w.layers) {
+        if let Some(demand) = cw.xbar_demand(d) {
+            return demand;
+        }
+    }
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    for l in w.layers.iter().filter(|l| !l.dynamic()) {
+        let xb = d.xbars_for(l.k as f64, l.n as f64);
+        sum += xb;
+        max = max.max(xb);
+    }
+    (sum, max)
 }
 
 #[cfg(test)]
@@ -507,6 +570,90 @@ mod tests {
                 assert_eq!(a.feasible, b.feasible);
             }
         }
+    }
+
+    #[test]
+    fn compiled_path_agrees_with_naive_oracle_on_mid_design() {
+        // the exhaustive ≤1e-9 sweep lives in tests/compiled_vs_naive.rs;
+        // this is the in-module smoke for both memory technologies
+        let raw = mid_raw();
+        for mem in [MemoryTech::Rram, MemoryTech::Sram] {
+            let ev = NativeEvaluator::new(mem);
+            for w in &WorkloadSet::all9().workloads {
+                let d = DesignView::new(&raw, mem);
+                assert!(w.compiled().covers(&d), "{} off grid", w.name);
+                let c = ev.evaluate(&raw, w);
+                let o = ev.evaluate_naive(&raw, w);
+                assert!(
+                    (c.energy - o.energy).abs() <= 1e-9 * o.energy.abs(),
+                    "{}: E {} vs {}",
+                    w.name,
+                    c.energy,
+                    o.energy
+                );
+                assert!(
+                    (c.latency - o.latency).abs() <= 1e-9 * o.latency.abs(),
+                    "{}: L {} vs {}",
+                    w.name,
+                    c.latency,
+                    o.latency
+                );
+                assert_eq!(c.area.to_bits(), o.area.to_bits());
+                assert_eq!(c.feasible, o.feasible);
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_layer_edit_falls_back_to_naive() {
+        // same-length mutation of an end layer after first evaluation:
+        // the staleness fingerprint must reject the compiled table, so
+        // the result is bit-identical to the naive walk of the *edited*
+        // layers rather than silently stale
+        let raw = mid_raw();
+        let ev = NativeEvaluator::new(MemoryTech::Rram);
+        let mut w = resnet18();
+        let before = ev.evaluate(&raw, &w); // builds the tables
+        w.layers[0].k *= 2;
+        let after = ev.evaluate(&raw, &w);
+        let oracle = ev.evaluate_naive(&raw, &w);
+        assert_eq!(after.energy.to_bits(), oracle.energy.to_bits());
+        assert_eq!(after.latency.to_bits(), oracle.latency.to_bits());
+        assert_ne!(after.energy.to_bits(), before.energy.to_bits());
+        assert!(!w.compiled().matches(&w.layers));
+        // io-only edits are part of the fingerprint too (they feed the
+        // NoC/GLB/spill aggregates)
+        let mut w2 = resnet18();
+        let _ = ev.evaluate(&raw, &w2);
+        w2.layers[0].in_bytes *= 2;
+        assert!(!w2.compiled().matches(&w2.layers));
+        let m = ev.evaluate(&raw, &w2);
+        let o = ev.evaluate_naive(&raw, &w2);
+        assert_eq!(m.energy.to_bits(), o.energy.to_bits());
+    }
+
+    #[test]
+    fn xbar_demand_matches_layer_walk() {
+        let raw = mid_raw();
+        let w = vgg16();
+        for mem in [MemoryTech::Rram, MemoryTech::Sram] {
+            let d = DesignView::new(&raw, mem);
+            let (sum, max) = xbar_demand(&d, &w);
+            let mut esum = 0.0f64;
+            let mut emax = 0.0f64;
+            for l in w.layers.iter().filter(|l| !l.dynamic()) {
+                let xb = d.xbars_for(l.k as f64, l.n as f64);
+                esum += xb;
+                emax = emax.max(xb);
+            }
+            assert_eq!(sum.to_bits(), esum.to_bits());
+            assert_eq!(max.to_bits(), emax.to_bits());
+        }
+        // off-grid geometry takes the walking fallback
+        let odd = [100.0, 256.0, 16.0, 8.0, 24.0, 2.0, 0.85, 2.0, 4096.0, 32.0];
+        let d = DesignView::new(&odd, MemoryTech::Rram);
+        let (sum, _) = xbar_demand(&d, &w);
+        assert!(sum > 0.0);
     }
 
     #[test]

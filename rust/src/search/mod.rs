@@ -101,9 +101,14 @@ pub struct OptResult {
 
 impl OptResult {
     /// Collect the best `k` distinct designs from a scored population.
+    /// NaN-safe: `total_cmp` (as in [`BestTracker`]) orders NaNs last
+    /// instead of panicking mid-run. Deduplication is global, not
+    /// adjacent-only — duplicate designs with tied scores (e.g. several
+    /// `+∞`-scored infeasibles) cannot reappear in the top-k.
     pub fn top_k(mut scored: Vec<(Design, f64)>, k: usize) -> Vec<(Design, f64)> {
-        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        scored.dedup_by(|a, b| a.0 == b.0);
+        scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let mut seen = std::collections::HashSet::new();
+        scored.retain(|(d, _)| seen.insert(d.clone()));
         scored.truncate(k);
         scored
     }
@@ -466,6 +471,42 @@ mod tests {
         let r = t.into_result("x".into(), 3, Duration::ZERO);
         assert_eq!(r.best, Design(vec![2; 10]));
         assert_eq!(r.top.len(), 1);
+    }
+
+    #[test]
+    fn top_k_is_nan_safe_and_orders_ascending() {
+        let mk = |i: u16| Design(vec![i; 10]);
+        let scored = vec![
+            (mk(0), f64::NAN),
+            (mk(1), 2.0),
+            (mk(2), 1.0),
+            (mk(2), 1.0),
+            (mk(3), f64::INFINITY),
+        ];
+        let top = OptResult::top_k(scored, 3);
+        assert_eq!(top.len(), 3);
+        assert_eq!(top[0].0, mk(2));
+        assert_eq!(top[0].1, 1.0);
+        assert_eq!(top[1].1, 2.0);
+        assert!(top[2].1.is_infinite());
+    }
+
+    #[test]
+    fn top_k_dedups_non_adjacent_score_ties() {
+        // stable sort keeps A, B, A adjacent-distinct on tied scores;
+        // dedup must still be global
+        let mk = |i: u16| Design(vec![i; 10]);
+        let scored = vec![
+            (mk(0), f64::INFINITY),
+            (mk(1), f64::INFINITY),
+            (mk(0), f64::INFINITY),
+            (mk(2), 1.0),
+        ];
+        let top = OptResult::top_k(scored, 4);
+        assert_eq!(top.len(), 3);
+        assert_eq!(top[0].0, mk(2));
+        assert_eq!(top[1].0, mk(0));
+        assert_eq!(top[2].0, mk(1));
     }
 
     #[test]

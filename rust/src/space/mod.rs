@@ -111,6 +111,18 @@ pub struct SearchSpace {
     pub variant: &'static str,
 }
 
+/// Union of every variant's crossbar row/col grid (the dense
+/// reduced-space grid is a superset of the full-space [`ROWS_COLS`]).
+/// The compiled evaluator (`model::compiled`) precomputes one shape
+/// bucket per (rows, cols, dpw) drawn from this — extend it here, and
+/// the buckets follow; a value used by a space but missing here would
+/// silently drop that space to the naive layer walk.
+pub const ALL_ROWS_COLS: [f64; 8] = [32.0, 64.0, 96.0, 128.0, 192.0, 256.0, 384.0, 512.0];
+
+/// Union of every variant's bits-per-cell domain (SRAM uses the `1.0`
+/// subset). Shared with `model::compiled` like [`ALL_ROWS_COLS`].
+pub const ALL_BITS_CELL: [f64; 3] = [1.0, 2.0, 4.0];
+
 const ROWS_COLS: [f64; 5] = [32.0, 64.0, 128.0, 256.0, 512.0];
 const C_PER_TILE: [f64; 4] = [4.0, 8.0, 16.0, 32.0];
 const T_PER_ROUTER: [f64; 4] = [2.0, 4.0, 8.0, 16.0];
@@ -147,7 +159,7 @@ impl SearchSpace {
                 p("c_per_tile", &C_PER_TILE),
                 p("t_per_router", &T_PER_ROUTER),
                 p("g_per_chip", &G_PER_CHIP),
-                p("bits_cell", &[1.0, 2.0, 4.0]),
+                p("bits_cell", &ALL_BITS_CELL),
                 p("v_step", &steps(V_STEPS)),
                 p("t_cycle_ns", &T_CYCLE_NS),
                 p("glb_kb", &GLB_RRAM_KB),
@@ -190,16 +202,15 @@ impl SearchSpace {
     /// full space so the optimizer comparison is not trivially convex),
     /// remaining parameters pinned to mid-range defaults.
     pub fn rram_reduced() -> SearchSpace {
-        const DENSE: [f64; 8] = [32.0, 64.0, 96.0, 128.0, 192.0, 256.0, 384.0, 512.0];
         SearchSpace {
             variant: "rram-reduced",
             params: vec![
-                p("xbar_rows", &DENSE),
-                p("xbar_cols", &DENSE),
+                p("xbar_rows", &ALL_ROWS_COLS),
+                p("xbar_cols", &ALL_ROWS_COLS),
                 p("c_per_tile", &C_PER_TILE),
                 p("t_per_router", &[8.0]),
                 p("g_per_chip", &[24.0]),
-                p("bits_cell", &[1.0, 2.0, 4.0]),
+                p("bits_cell", &ALL_BITS_CELL),
                 p("v_step", &[4.0]),
                 p("t_cycle_ns", &[2.0]),
                 p("glb_kb", &[4096.0]),

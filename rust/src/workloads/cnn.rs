@@ -115,10 +115,7 @@ impl Ctx {
     }
 
     fn finish(self, name: &'static str) -> Workload {
-        Workload {
-            name,
-            layers: self.layers,
-        }
+        Workload::new(name, self.layers)
     }
 }
 

@@ -21,6 +21,9 @@ mod transformer;
 pub use cnn::{alexnet, densenet201, mobilenet_v3_large, resnet18, resnet50, vgg16};
 pub use transformer::{gpt2_medium, mobilebert, vit_b16};
 
+use crate::model::compiled::CompiledWorkload;
+use std::sync::OnceLock;
+
 /// Maximum padded layer count in the AOT workload tensor — shared with
 /// `python/compile/hwspec.py` (MobileBERT has the most mapped layers).
 pub const L_MAX: usize = 512;
@@ -68,13 +71,48 @@ impl Layer {
 }
 
 /// A full workload: an ordered list of mapped layers.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Workload {
     pub name: &'static str,
     pub layers: Vec<Layer>,
+    /// Lazily-built aggregate tables for the O(1) compiled evaluator
+    /// (`model::compiled`); every evaluation of this instance reads the
+    /// one table built on first use.
+    compiled: OnceLock<CompiledWorkload>,
+}
+
+/// Cloning resets the compiled-table cache, so the common
+/// clone-then-edit-layers pattern (tests, synthetic workloads) can never
+/// observe a table compiled from the pre-edit layers.
+impl Clone for Workload {
+    fn clone(&self) -> Workload {
+        Workload::new(self.name, self.layers.clone())
+    }
 }
 
 impl Workload {
+    /// Construct a workload (compiled tables build lazily on first
+    /// evaluation).
+    pub fn new(name: &'static str, layers: Vec<Layer>) -> Workload {
+        Workload {
+            name,
+            layers,
+            compiled: OnceLock::new(),
+        }
+    }
+
+    /// The precomputed aggregate tables of `model::compiled`, built on
+    /// first use. Mutating `layers` on an instance that has already been
+    /// evaluated is not supported (the evaluator's O(1) staleness
+    /// fingerprint — layer count plus first/last-layer signatures — makes
+    /// it fall back to the naive path for the common edits, but interior
+    /// same-length edits can evade it); clone first — clones start with
+    /// an empty cache and recompile.
+    pub fn compiled(&self) -> &CompiledWorkload {
+        self.compiled
+            .get_or_init(|| CompiledWorkload::build(&self.layers))
+    }
+
     /// Total stored parameters (weights) across all layers.
     pub fn total_weights(&self) -> u64 {
         self.layers.iter().map(|l| l.weights).sum()
@@ -341,5 +379,20 @@ mod tests {
     #[test]
     fn by_name_rejects_unknown() {
         assert!(by_name("resnet34").is_err());
+    }
+
+    #[test]
+    fn compiled_tables_cached_per_instance_and_reset_on_clone() {
+        let w = alexnet();
+        assert!(
+            std::ptr::eq(w.compiled(), w.compiled()),
+            "same instance must reuse one table"
+        );
+        assert_eq!(w.compiled().layer_count(), w.layers.len());
+        // clone-then-edit sees a freshly built table, never a stale one
+        let mut doubled = w.clone();
+        let extra = doubled.layers.clone();
+        doubled.layers.extend(extra);
+        assert_eq!(doubled.compiled().layer_count(), doubled.layers.len());
     }
 }

@@ -66,10 +66,7 @@ pub fn vit_b16() -> Workload {
         layers.push(proj(&format!("blk{b}.mlp_fc2"), 4 * d, d, seq));
     }
     layers.push(proj("head", d, 1000, 1));
-    Workload {
-        name: "vit",
-        layers,
-    }
+    Workload::new("vit", layers)
 }
 
 /// MobileBERT (24 blocks, hidden 512, intra-bottleneck 128, 4 stacked
@@ -94,10 +91,7 @@ pub fn mobilebert() -> Workload {
         }
         layers.push(proj(&p("bottleneck_out"), intra, hidden, seq));
     }
-    Workload {
-        name: "mobilebert",
-        layers,
-    }
+    Workload::new("mobilebert", layers)
 }
 
 /// GPT-2 Medium (24 layers, d=1024, 16 heads, FFN 4096, seq 1024; ~353M
@@ -120,10 +114,7 @@ pub fn gpt2_medium() -> Workload {
     // LM head (largest single GPT-2 layer, 1024×50257 ≈ 5.15e7 weights —
     // still smaller than VGG16's fc6, see workloads::tests).
     layers.push(proj("lm_head", d, 50257, seq));
-    Workload {
-        name: "gpt2-medium",
-        layers,
-    }
+    Workload::new("gpt2-medium", layers)
 }
 
 #[cfg(test)]

@@ -1,0 +1,121 @@
+//! Property test pinning the compiled O(1) evaluator to the naive
+//! layer-loop oracle: ≥200 random designs per memory technology × all 9
+//! workloads × {RRAM, SRAM}, energy/latency within 1e-9 relative, area
+//! bit-identical, feasibility (capacity/timing/area) exactly equal.
+//!
+//! The compiled path reorders float summations (aggregates first, factors
+//! second), so bit-identity with the naive walk is *not* expected for
+//! energy/latency; bit-identity of the compiled path with itself across
+//! thread counts and resume replays is covered by
+//! `tests/parallel_determinism.rs` and `tests/checkpoint_resume.rs`,
+//! which now run against the compiled backend.
+
+use imcopt::model::{DesignView, MemoryTech, NativeEvaluator};
+use imcopt::space::SearchSpace;
+use imcopt::util::rng::Rng;
+use imcopt::workloads::WorkloadSet;
+
+fn rel(a: f64, b: f64) -> f64 {
+    if a == b {
+        0.0
+    } else {
+        (a - b).abs() / b.abs().max(f64::MIN_POSITIVE)
+    }
+}
+
+#[test]
+fn compiled_matches_naive_oracle_within_1e9() {
+    let set = WorkloadSet::all9();
+    let cases = [
+        (
+            MemoryTech::Rram,
+            [SearchSpace::rram(), SearchSpace::rram_reduced()],
+        ),
+        (
+            MemoryTech::Sram,
+            [SearchSpace::sram(), SearchSpace::sram_tech()],
+        ),
+    ];
+    for (mem, spaces) in cases {
+        let ev = NativeEvaluator::new(mem);
+        let mut rng = Rng::seed_from(0xC0DE);
+        let mut designs = 0usize;
+        for space in &spaces {
+            for _ in 0..110 {
+                let raw = space.decode(&space.random(&mut rng));
+                let view = DesignView::new(&raw, mem);
+                for w in &set.workloads {
+                    assert!(
+                        w.compiled().covers(&view),
+                        "{}: {:?} must be on-grid",
+                        space.variant,
+                        raw
+                    );
+                    let c = ev.evaluate(&raw, w);
+                    let o = ev.evaluate_naive(&raw, w);
+                    assert!(
+                        rel(c.energy, o.energy) <= 1e-9,
+                        "{}/{}/{}: energy {} vs {} (rel {})",
+                        space.variant,
+                        mem.name(),
+                        w.name,
+                        c.energy,
+                        o.energy,
+                        rel(c.energy, o.energy)
+                    );
+                    assert!(
+                        rel(c.latency, o.latency) <= 1e-9,
+                        "{}/{}/{}: latency {} vs {} (rel {})",
+                        space.variant,
+                        mem.name(),
+                        w.name,
+                        c.latency,
+                        o.latency,
+                        rel(c.latency, o.latency)
+                    );
+                    assert_eq!(
+                        c.area.to_bits(),
+                        o.area.to_bits(),
+                        "{}: area must be the identical computation",
+                        w.name
+                    );
+                    assert_eq!(
+                        c.feasible, o.feasible,
+                        "{}/{}/{}: feasibility must match exactly \
+                         (capacity sums are integer-exact)",
+                        space.variant,
+                        mem.name(),
+                        w.name
+                    );
+                }
+                designs += 1;
+            }
+        }
+        assert!(designs >= 200, "per-tech design budget");
+    }
+}
+
+/// The compiled path is a pure function of (design, workload): repeated
+/// evaluation — including through a freshly cloned workload set, as a
+/// resume replay constructs — is bit-identical.
+#[test]
+fn compiled_path_is_bit_stable_across_instances() {
+    let set_a = WorkloadSet::all9();
+    let set_b = WorkloadSet::all9(); // fresh instances, fresh tables
+    let ev = NativeEvaluator::new(MemoryTech::Rram);
+    let space = SearchSpace::rram();
+    let mut rng = Rng::seed_from(5);
+    for _ in 0..25 {
+        let raw = space.decode(&space.random(&mut rng));
+        for (wa, wb) in set_a.workloads.iter().zip(&set_b.workloads) {
+            let a = ev.evaluate(&raw, wa);
+            let b = ev.evaluate(&raw, wb);
+            let c = ev.evaluate(&raw, &wa.clone());
+            assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+            assert_eq!(a.energy.to_bits(), c.energy.to_bits());
+            assert_eq!(a.latency.to_bits(), c.latency.to_bits());
+            assert_eq!(a.feasible, b.feasible);
+        }
+    }
+}
