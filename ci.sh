@@ -1,9 +1,14 @@
 #!/usr/bin/env bash
 # CI gate, invoked by .github/workflows/ci.yml (and `make check`):
 #
-#   1. rustfmt + clippy (-D warnings) lint gates
+#   1. rustfmt + clippy (-D warnings) lint gates, plus `cargo doc
+#      --no-deps` under RUSTDOCFLAGS=-D warnings (broken intra-doc links
+#      fail the gate)
 #   2. release build + full test suite (includes the kill/resume
-#      bit-identity test and the golden determinism tests)
+#      bit-identity test, the golden determinism tests and the
+#      docs/experiments.md catalog drift test; `imcopt list --markdown`
+#      is additionally diffed against the checked-in catalog and `list
+#      --json` validated against schemas/registry.schema.json)
 #   3. cross-process golden check: bless quick-budget report goldens into
 #      a scratch dir, then re-verify them from a second test process
 #   4. evaluator bench smoke -> BENCH_eval.json + BENCH_model.json,
@@ -28,6 +33,12 @@ cargo fmt --all -- --check
 echo "=== cargo clippy --all-targets $FEATURES -- -D warnings ==="
 # shellcheck disable=SC2086
 cargo clippy --all-targets $FEATURES -- -D warnings
+
+echo "=== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) ==="
+# broken intra-doc links, unclosed HTML-looking tags and bare URLs in the
+# public docs fail the gate; doctest examples run under `cargo test` below
+# shellcheck disable=SC2086
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps $FEATURES
 
 echo "=== cargo build --release $FEATURES ==="
 # shellcheck disable=SC2086
@@ -68,12 +79,19 @@ echo "=== validate BENCH_eval.json against its schema ==="
 echo "=== validate BENCH_model.json (compiled model >= 3x, <= 1e-9 agreement) ==="
 "$IMCOPT_BIN" validate --bench BENCH_model.json --schema schemas/bench_model.schema.json
 
+echo "=== experiment catalog: registry JSON schema + docs drift ==="
+"$IMCOPT_BIN" list --json > target/registry.json
+"$IMCOPT_BIN" validate --bench target/registry.json --schema schemas/registry.schema.json
+# the checked-in catalog must match the registry byte for byte
+# (regenerate with: imcopt list --markdown > docs/experiments.md)
+"$IMCOPT_BIN" list --markdown | diff - docs/experiments.md
+
 echo "=== registry smoke: imcopt run --all --quick ==="
 SMOKE_OUT="$(pwd)/target/ci-smoke"
 rm -rf "$SMOKE_OUT"
 "$IMCOPT_BIN" run --all --quick --stable --seed 5 --out-dir "$SMOKE_OUT"
 
-echo "=== validate experiment artifacts (all 13 required) ==="
+echo "=== validate experiment artifacts (all 15 required) ==="
 "$IMCOPT_BIN" validate --out-dir "$SMOKE_OUT" --require-all
 
 echo "=== resume smoke: a completed run replays without recomputation ==="

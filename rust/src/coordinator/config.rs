@@ -49,6 +49,14 @@ pub struct ExpContext {
     /// Reported best-design count per search where an experiment supports
     /// it (`--topk`; `genmatrix` emits this many designs per cell).
     pub top_k: usize,
+    /// Largest hold-out size swept by the `genmatrix_k` experiment
+    /// (`--hold-k K`: every k in `1..=K` runs, clamped per set to
+    /// `len − 1`). Defaults to 2; the paper-breadth sweep is `--hold-k 3`.
+    pub hold_k: usize,
+    /// Restrict the `transfer` experiment to a comma-separated list of
+    /// portfolio ids (`--portfolio a,b`); `None` runs every registered
+    /// transfer portfolio (see `scenarios::transfer_portfolios`).
+    pub portfolio: Option<String>,
     /// Lazily loaded PJRT engine, shared across experiments.
     engine: Mutex<Option<Option<Arc<Mutex<Engine>>>>>,
 }
@@ -64,6 +72,8 @@ impl Default for ExpContext {
             stable: false,
             resume: false,
             top_k: 5,
+            hold_k: 2,
+            portfolio: None,
             engine: Mutex::new(None),
         }
     }
@@ -72,7 +82,7 @@ impl Default for ExpContext {
 impl ExpContext {
     /// Build from CLI arguments (`--seed`, `--quick`, `--native`,
     /// `--pjrt`, `--out-dir`/`--out`, `--threads`, `--stable`,
-    /// `--resume`, `--topk`).
+    /// `--resume`, `--topk`, `--hold-k`, `--portfolio`).
     pub fn from_args(args: &Args) -> ExpContext {
         let backend_choice = if args.flag("native") {
             BackendChoice::Native
@@ -94,6 +104,8 @@ impl ExpContext {
             stable: args.flag("stable"),
             resume: args.flag("resume"),
             top_k: args.opt_usize("topk", 5),
+            hold_k: args.opt_usize("hold-k", 2).max(1),
+            portfolio: args.opt("portfolio").map(String::from),
             ..ExpContext::default()
         }
     }
@@ -258,5 +270,23 @@ mod tests {
         // --out remains a working alias
         let args = Args::parse(["run", "--out", "r2"].iter().map(|s| s.to_string()));
         assert_eq!(ExpContext::from_args(&args).out_dir, PathBuf::from("r2"));
+    }
+
+    #[test]
+    fn from_args_parses_portfolio_flags() {
+        let args = Args::parse(
+            ["run", "genmatrix_k", "--hold-k", "3", "--portfolio", "cnn4-to-extras"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let ctx = ExpContext::from_args(&args);
+        assert_eq!(ctx.hold_k, 3);
+        assert_eq!(ctx.portfolio.as_deref(), Some("cnn4-to-extras"));
+        // defaults: hold-k 2, every portfolio; 0 clamps to 1
+        let ctx = ExpContext::from_args(&Args::parse(["run"].iter().map(|s| s.to_string())));
+        assert_eq!(ctx.hold_k, 2);
+        assert!(ctx.portfolio.is_none());
+        let args = Args::parse(["run", "--hold-k", "0"].iter().map(|s| s.to_string()));
+        assert_eq!(ExpContext::from_args(&args).hold_k, 1);
     }
 }

@@ -147,10 +147,32 @@ impl<'a> JointProblem<'a> {
         self
     }
 
-    /// Restrict joint evaluation to an arbitrary workload subset (the
-    /// `genmatrix` hold-one-out experiment optimizes on N−1 workloads).
-    /// Indices are deduplicated and sorted so equal subsets produce equal
-    /// scores and memo-cache contents regardless of caller order.
+    /// Restrict joint evaluation to an arbitrary workload subset — the
+    /// training side of a [`crate::scenarios::Portfolio`] (`genmatrix`
+    /// optimizes on N−1 workloads, `genmatrix_k`/`transfer` on any train
+    /// set). Indices are deduplicated and sorted so equal subsets produce
+    /// equal scores and memo-cache contents regardless of caller order.
+    ///
+    /// ```
+    /// use imcopt::prelude::*;
+    ///
+    /// let space = SearchSpace::rram();
+    /// let set = WorkloadSet::cnn4();
+    /// let problem = JointProblem::with_backend(
+    ///     &space,
+    ///     &set,
+    ///     EvalBackend::native(MemoryTech::Rram),
+    ///     Objective::edap(),
+    /// )
+    /// .restricted_to(vec![2, 0, 2]); // normalized to {0, 2}
+    ///
+    /// let mut rng = Rng::seed_from(1);
+    /// let d = space.random(&mut rng);
+    /// // the joint score sees only the two active workloads ...
+    /// assert_eq!(problem.evaluate_design(&d).metrics.len(), 2);
+    /// // ... but cross-reporting still covers the full set
+    /// assert_eq!(problem.metrics_all_workloads(&d).len(), set.len());
+    /// ```
     pub fn restricted_to(mut self, mut indices: Vec<usize>) -> Self {
         indices.sort_unstable();
         indices.dedup();

@@ -39,6 +39,9 @@ impl super::Experiment for Ablations {
     fn cost(&self) -> super::Cost {
         super::Cost::Heavy
     }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Experiment
+    }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
     }

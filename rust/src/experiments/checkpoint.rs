@@ -264,7 +264,22 @@ impl Checkpoint {
 
     /// Return the journaled value for `key`, computing, journaling and
     /// flushing it on a miss. This is the resume granularity: everything
-    /// an experiment routes through `cell` survives a kill.
+    /// an experiment routes through `cell` survives a kill (experiments
+    /// that do are marked `cell` in the catalog — see
+    /// [`crate::experiments::Granularity`]).
+    ///
+    /// ```
+    /// use imcopt::experiments::checkpoint::Checkpoint;
+    /// use imcopt::util::json::Json;
+    ///
+    /// let mut ckpt = Checkpoint::disabled(); // in-memory only
+    /// let v = ckpt.cell("demo", || Ok(Json::Num(1.5))).unwrap();
+    /// assert_eq!(v, Json::Num(1.5));
+    /// // a journaled key replays without recomputing
+    /// let v = ckpt.cell("demo", || unreachable!()).unwrap();
+    /// assert_eq!(v, Json::Num(1.5));
+    /// assert_eq!((ckpt.computed(), ckpt.reused()), (1, 1));
+    /// ```
     pub fn cell(
         &mut self,
         key: &str,

@@ -6,12 +6,15 @@ use super::checkpoint::{self, Checkpoint};
 use crate::coordinator::{ExpContext, JointProblem};
 use crate::model::MemoryTech;
 use crate::objective::Objective;
+use crate::scenarios::{self, Portfolio, ScenarioSpec};
 use crate::search::{GaConfig, GeneticAlgorithm, InitStrategy, OptResult, Optimizer};
 use crate::space::SearchSpace;
 use crate::util::fmt_sig;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workloads::WorkloadSet;
-use anyhow::Result;
+use anyhow::{Context, Result};
+use std::path::Path;
 
 /// The proposed 4-phase GA sized by the context (paper budget unless
 /// `--quick`).
@@ -121,6 +124,203 @@ pub fn largest_workload_index(set: &WorkloadSet, mem: MemoryTech) -> usize {
     }
 }
 
+/// One deployed workload inside a [`PortfolioOutcome`]: the joint
+/// design's EDAP on it, the specialist bound, and their ratio (the
+/// generalization gap, `scenarios::gap`).
+#[derive(Clone, Copy, Debug)]
+pub struct DeployGap {
+    /// Workload index into the scenario's set.
+    pub workload: usize,
+    /// EDAP of the jointly-optimized design on this workload.
+    pub joint_edap: f64,
+    /// EDAP of the separate-search specialist for this workload.
+    pub bound_edap: f64,
+    /// `joint_edap / bound_edap` (NaN when the bound is unusable).
+    pub gap: f64,
+}
+
+/// Result of running one [`Portfolio`]: the joint search outcome plus
+/// deploy-side gap scoring against the per-workload specialist bounds.
+pub struct PortfolioOutcome {
+    /// The joint search on the portfolio's train set.
+    pub joint: OptResult,
+    /// The joint design's per-workload EDAP across the *full* set.
+    pub joint_scores: Vec<f64>,
+    /// One gap record per deploy workload (portfolio order).
+    pub deploy: Vec<DeployGap>,
+    /// Aggregates over the deploy gaps.
+    pub summary: scenarios::GapSummary,
+}
+
+/// Run one portfolio through the checkpoint: a journaled joint search on
+/// the train subset (key `<exp>:<set>:<portfolio>:joint`, seeded by
+/// [`Portfolio::joint_seed`]), then dense deploy-side scoring of the
+/// chosen design against the memoized per-workload bounds
+/// ([`separate_bound_cell`]). The gap arithmetic matches `genmatrix`
+/// exactly, so a `k = 1` hold-out portfolio reproduces the `genmatrix`
+/// cell for that workload bit for bit.
+pub fn portfolio_cell(
+    ckpt: &mut Checkpoint,
+    exp_id: &str,
+    ctx: &ExpContext,
+    spec: &ScenarioSpec,
+    p: &Portfolio,
+) -> Result<PortfolioOutcome> {
+    let joint_problem = ctx
+        .problem(&spec.space, &spec.set, spec.mem, spec.objective())
+        .restricted_to(p.train.clone());
+    ckpt.warm_problem(&joint_problem);
+    let cfg = GaConfig {
+        top_k: ctx.top_k,
+        ..four_phase(ctx)
+    };
+    let joint = ga_cell(
+        ckpt,
+        &format!("{exp_id}:{}:{}:joint", spec.name, p.id),
+        &joint_problem,
+        cfg,
+        p.joint_seed(ctx.seed),
+    )?;
+    ckpt.absorb_problem(&joint_problem)?;
+    let joint_scores = per_workload_scores(&joint_problem, &joint.best, &Objective::edap());
+    let mut deploy = Vec::with_capacity(p.deploy.len());
+    for &wi in &p.deploy {
+        let bound = separate_bound_cell(ckpt, exp_id, ctx, spec, wi)?;
+        deploy.push(DeployGap {
+            workload: wi,
+            joint_edap: joint_scores[wi],
+            bound_edap: bound,
+            gap: scenarios::gap(joint_scores[wi], bound),
+        });
+    }
+    let gaps: Vec<f64> = deploy.iter().map(|d| d.gap).collect();
+    Ok(PortfolioOutcome {
+        joint,
+        joint_scores,
+        deploy,
+        summary: scenarios::summarize_gaps(&gaps),
+    })
+}
+
+/// The separate-search (specialist) EDAP bound for one workload,
+/// journaled once per experiment under `<exp>:<set>:bound:<wi>` and
+/// replayed for every portfolio that deploys on `wi` — the bounds are
+/// computed once and memoized through the checkpoint layer, whatever the
+/// number of portfolios sharing them. Seeds, GA configuration and gap
+/// arithmetic mirror `genmatrix`'s specialist runs.
+pub fn separate_bound_cell(
+    ckpt: &mut Checkpoint,
+    exp_id: &str,
+    ctx: &ExpContext,
+    spec: &ScenarioSpec,
+    wi: usize,
+) -> Result<f64> {
+    let sep_problem = ctx
+        .problem(&spec.space, &spec.set, spec.mem, spec.objective())
+        .restricted(wi);
+    ckpt.warm_problem(&sep_problem);
+    let sep = ga_cell(
+        ckpt,
+        &format!("{exp_id}:{}:bound:{wi}", spec.name),
+        &sep_problem,
+        four_phase(ctx),
+        scenarios::bound_seed(ctx.seed, wi),
+    )?;
+    ckpt.absorb_problem(&sep_problem)?;
+    Ok(per_workload_scores(&sep_problem, &sep.best, &Objective::edap())[wi])
+}
+
+/// Write one portfolio's standalone JSON cell artifact (shape pinned by
+/// `schemas/portfolio_cell.schema.json`; rewritten even on resume so the
+/// cell directory is complete after any run).
+pub fn write_portfolio_cell(
+    path: &Path,
+    exp_id: &str,
+    spec: &ScenarioSpec,
+    p: &Portfolio,
+    seed: u64,
+    out: &PortfolioOutcome,
+) -> Result<()> {
+    let names = |indices: &[usize]| {
+        Json::Arr(
+            Portfolio::names(indices, &spec.set)
+                .into_iter()
+                .map(|n| Json::Str(n.to_string()))
+                .collect(),
+        )
+    };
+    let cell = Json::obj(vec![
+        ("experiment", Json::Str(exp_id.to_string())),
+        (
+            "portfolio",
+            Json::obj(vec![
+                ("id", Json::Str(p.id.clone())),
+                ("set", Json::Str(spec.name.to_string())),
+                ("mem", Json::Str(spec.mem.name().to_string())),
+                ("aggregation", Json::Str(spec.agg.name().to_string())),
+                ("k", Json::Num(p.k() as f64)),
+                ("train", names(&p.train)),
+                ("deploy", names(&p.deploy)),
+            ]),
+        ),
+        ("seed", Json::Num(seed as f64)),
+        (
+            "joint",
+            Json::obj(vec![
+                ("design", checkpoint::design_to_json(&out.joint.best)),
+                ("described", Json::Str(spec.space.describe(&out.joint.best))),
+                ("joint_score", Json::f64(out.joint.best_score)),
+            ]),
+        ),
+        (
+            "deploy_gaps",
+            Json::Arr(
+                out.deploy
+                    .iter()
+                    .map(|d| {
+                        Json::obj(vec![
+                            (
+                                "workload",
+                                Json::Str(spec.set.workloads[d.workload].name.to_string()),
+                            ),
+                            ("in_train", Json::Bool(p.train.contains(&d.workload))),
+                            ("edap_joint", Json::f64(d.joint_edap)),
+                            ("edap_bound", Json::f64(d.bound_edap)),
+                            ("gap", Json::f64(d.gap)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "summary",
+            Json::obj(vec![
+                ("mean_gap", Json::f64(out.summary.mean)),
+                ("geo_mean_gap", Json::f64(out.summary.geo_mean)),
+                ("worst_gap", Json::f64(out.summary.worst)),
+                ("finite_gaps", Json::Num(out.summary.finite as f64)),
+            ]),
+        ),
+        (
+            "top",
+            Json::Arr(
+                out.joint
+                    .top
+                    .iter()
+                    .map(|(d, s)| {
+                        Json::obj(vec![
+                            ("design", checkpoint::design_to_json(d)),
+                            ("score", Json::f64(*s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(path, cell.to_string() + "\n")
+        .with_context(|| format!("writing portfolio cell {}", path.display()))
+}
+
 /// Per-workload single-workload scores of a chosen design (Fig. 3/5
 /// reporting): `E_wi · L_wi · A`-style under the given objective.
 pub fn per_workload_scores(
@@ -136,12 +336,19 @@ pub fn per_workload_scores(
         .collect()
 }
 
-/// Format a score column.
+/// Format a score/gap column. Non-finite values keep their meaning:
+/// `inf` = infeasible deployment, `nan` = no usable bound to compare
+/// against, `-inf` = an empty aggregate (e.g. a worst-gap over zero
+/// finite gaps) — docs/scenarios.md documents the reading.
 pub fn s(x: f64) -> String {
     if x.is_finite() {
         fmt_sig(x, 4)
-    } else {
+    } else if x.is_nan() {
+        "nan".into()
+    } else if x > 0.0 {
         "inf".into()
+    } else {
+        "-inf".into()
     }
 }
 

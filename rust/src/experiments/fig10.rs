@@ -31,6 +31,9 @@ impl super::Experiment for Fig10 {
     fn cost(&self) -> super::Cost {
         super::Cost::Medium
     }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Cell
+    }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
     }

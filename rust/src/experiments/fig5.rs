@@ -33,6 +33,9 @@ impl super::Experiment for Fig5 {
     fn cost(&self) -> super::Cost {
         super::Cost::Heavy
     }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Cell
+    }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
     }

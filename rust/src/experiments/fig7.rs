@@ -127,6 +127,9 @@ impl super::Experiment for Fig7 {
     fn cost(&self) -> super::Cost {
         super::Cost::Medium
     }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Experiment
+    }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
     }

@@ -30,6 +30,9 @@ impl super::Experiment for Fig8 {
     fn cost(&self) -> super::Cost {
         super::Cost::Light
     }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Experiment
+    }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
     }

@@ -22,14 +22,13 @@
 use super::checkpoint::{self, Checkpoint};
 use super::common;
 use crate::coordinator::ExpContext;
-use crate::model::MemoryTech;
-use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::objective::Objective;
 use crate::report::Report;
+use crate::scenarios;
 use crate::search::GaConfig;
 use crate::util::json::Json;
 use crate::util::stats;
 use crate::util::table::Table;
-use crate::workloads::WorkloadSet;
 use anyhow::{Context, Result};
 
 /// Registry entry (see `experiments::REGISTRY`).
@@ -44,6 +43,9 @@ impl super::Experiment for GenMatrix {
     }
     fn cost(&self) -> super::Cost {
         super::Cost::Heavy
+    }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Cell
     }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
@@ -60,23 +62,12 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     std::fs::create_dir_all(&cells_dir)
         .with_context(|| format!("creating {}", cells_dir.display()))?;
 
-    for (set_name, set, mem, space, agg) in [
-        (
-            "cnn4",
-            WorkloadSet::cnn4(),
-            MemoryTech::Rram,
-            crate::space::SearchSpace::rram(),
-            Aggregation::Max,
-        ),
-        (
-            "all9",
-            WorkloadSet::all9(),
-            MemoryTech::Sram,
-            crate::space::SearchSpace::sram(),
-            Aggregation::Mean,
-        ),
-    ] {
-        let objective = Objective::new(ObjectiveKind::Edap, agg);
+    // the two scenario families are single-sourced with genmatrix_k and
+    // transfer (scenarios::paper_specs) so the sweeps cannot drift apart
+    for spec in scenarios::paper_specs() {
+        let (set_name, set, mem, space, agg) =
+            (spec.name, &spec.set, spec.mem, &spec.space, spec.agg);
+        let objective = spec.objective();
         let mut t = Table::new(
             &format!(
                 "{set_name} on {} — EDAP on the held-out workload (mJ·ms·mm²)",
@@ -97,7 +88,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
 
             // joint search on the N−1 training workloads
             let joint_problem = ctx
-                .problem(&space, &set, mem, objective)
+                .problem(space, set, mem, objective)
                 .restricted_to(train.clone());
             ckpt.warm_problem(&joint_problem);
             let cfg = GaConfig {
@@ -116,7 +107,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
             // the specialist bound: separate search on the held-out
             // workload (salted seed so the RNG streams differ, as in
             // fig5's strategy runs)
-            let sep_problem = ctx.problem(&space, &set, mem, objective).restricted(wi);
+            let sep_problem = ctx.problem(space, set, mem, objective).restricted(wi);
             ckpt.warm_problem(&sep_problem);
             let sep = common::ga_cell(
                 ckpt,
@@ -133,22 +124,11 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
             let sep_scores = common::per_workload_scores(&sep_problem, &sep.best, &edap);
             let joint_held = joint_scores[wi];
             let bound = sep_scores[wi];
-            let gap = if bound > 0.0 && bound.is_finite() {
-                joint_held / bound
-            } else {
-                f64::NAN
-            };
+            let gap = scenarios::gap(joint_held, bound);
             if gap.is_finite() {
                 gaps.push(gap);
             }
-            let spread = match (joint.top.first(), joint.top.last()) {
-                (Some((_, best)), Some((_, worst)))
-                    if joint.top.len() > 1 && *best > 0.0 && best.is_finite() =>
-                {
-                    worst / best - 1.0
-                }
-                _ => 0.0,
-            };
+            let spread = joint.spread();
 
             t.row(vec![
                 held.into(),
@@ -233,6 +213,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
 mod tests {
     use super::*;
     use crate::util::json;
+    use crate::workloads::WorkloadSet;
 
     #[test]
     fn genmatrix_quick_emits_cells_for_both_sets() {

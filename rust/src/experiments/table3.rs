@@ -33,6 +33,9 @@ impl super::Experiment for Table3 {
     fn cost(&self) -> super::Cost {
         super::Cost::Medium
     }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Cell
+    }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
     }

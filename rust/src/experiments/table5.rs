@@ -26,6 +26,9 @@ impl super::Experiment for Table5 {
     fn cost(&self) -> super::Cost {
         super::Cost::Light
     }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Cell
+    }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
     }

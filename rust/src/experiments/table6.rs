@@ -27,6 +27,9 @@ impl super::Experiment for Table6 {
     fn cost(&self) -> super::Cost {
         super::Cost::Light
     }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Experiment
+    }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
     }

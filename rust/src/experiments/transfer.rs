@@ -1,0 +1,198 @@
+//! Cross-set transfer portfolios — "train on cnn4, deploy on the all9
+//! extras" and friends, over the 9-workload set on weight-swapping SRAM
+//! (§IV-J, Mean aggregation).
+//!
+//! Where `genmatrix`/`genmatrix_k` hold workloads out of one set, this
+//! experiment poses asymmetric train/deploy scenarios
+//! (`scenarios::transfer_portfolios`):
+//!
+//! * `cnn4-to-extras` — the paper's 4-workload joint design deployed on
+//!   the five workloads it never saw (MobileBERT, DenseNet-201,
+//!   ResNet-50, ViT-B/16, GPT-2 Medium): pure transfer.
+//! * `cnn4-to-all9` — the same design scored on the full set, showing
+//!   how much headroom it keeps on its own training set vs the extras.
+//! * `all9-joint` — the all-9 joint reference deployed per workload.
+//!
+//! Every deploy-side EDAP is compared against that workload's
+//! separate-search specialist bound; the bounds are journaled once and
+//! shared across portfolios (`common::separate_bound_cell`). Restrict
+//! the run with `--portfolio <id>[,<id>...]`. Per-portfolio JSON cells
+//! land in `<out_dir>/transfer_cells/<portfolio>.json`
+//! (`schemas/portfolio_cell.schema.json`).
+
+use super::checkpoint::Checkpoint;
+use super::common;
+use crate::coordinator::ExpContext;
+use crate::report::Report;
+use crate::scenarios::{self, Portfolio};
+use crate::util::table::Table;
+use anyhow::{bail, Context, Result};
+
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Transfer;
+
+impl super::Experiment for Transfer {
+    fn id(&self) -> &'static str {
+        "transfer"
+    }
+    fn description(&self) -> &'static str {
+        "Cross-set transfer: cnn4-trained designs deployed on the all9 extras"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Medium
+    }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Cell
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+/// Resolve `--portfolio` against the registered transfer portfolios
+/// (unknown ids fail fast with the available list).
+fn selected_portfolios(ctx: &ExpContext) -> Result<Vec<Portfolio>> {
+    let all = scenarios::transfer_portfolios();
+    let Some(csv) = &ctx.portfolio else {
+        return Ok(all);
+    };
+    let mut out = Vec::new();
+    for id in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match all.iter().find(|p| p.id == id) {
+            Some(p) => out.push(p.clone()),
+            None => {
+                let ids: Vec<&str> = all.iter().map(|p| p.id.as_str()).collect();
+                bail!("unknown portfolio '{id}' (available: {ids:?})");
+            }
+        }
+    }
+    if out.is_empty() {
+        bail!("--portfolio selected nothing (empty list)");
+    }
+    Ok(out)
+}
+
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+    let spec = scenarios::ScenarioSpec::all9();
+    let names = spec.set.names();
+    let ports = selected_portfolios(ctx)?;
+    let mut report = Report::new(
+        "transfer",
+        "Cross-set transfer: train/deploy portfolios vs per-workload bounds",
+    );
+    let cells_dir = ctx.out_dir.join("transfer_cells");
+    std::fs::create_dir_all(&cells_dir)
+        .with_context(|| format!("creating {}", cells_dir.display()))?;
+
+    let mut summary = Table::new(
+        &format!(
+            "transfer portfolios on {} ({} workloads) — deploy-side EDAP gap vs \
+             specialist bound",
+            spec.mem.name(),
+            spec.set.len()
+        ),
+        &["portfolio", "train", "deploy", "mean gap", "geo-mean gap", "worst gap", "worst workload"],
+    );
+    let mut detail = Table::new(
+        "per-workload deploy gaps (trained? = workload was in the train set)",
+        &["portfolio", "workload", "trained?", "EDAP joint", "EDAP bound", "gap x"],
+    );
+    for p in &ports {
+        let out = common::portfolio_cell(ckpt, "transfer", ctx, &spec, p)?;
+        let worst_label = out
+            .summary
+            .worst_at
+            .map(|i| names[out.deploy[i].workload].to_string())
+            .unwrap_or_else(|| "-".into());
+        summary.row(vec![
+            p.id.clone(),
+            p.train.len().to_string(),
+            p.deploy.len().to_string(),
+            common::s(out.summary.mean),
+            common::s(out.summary.geo_mean),
+            common::s(out.summary.worst),
+            worst_label,
+        ]);
+        for d in &out.deploy {
+            detail.row(vec![
+                p.id.clone(),
+                names[d.workload].to_string(),
+                String::from(if p.train.contains(&d.workload) { "yes" } else { "no" }),
+                common::s(d.joint_edap),
+                common::s(d.bound_edap),
+                common::s(d.gap),
+            ]);
+        }
+        common::write_portfolio_cell(
+            &cells_dir.join(format!("{}.json", p.id)),
+            "transfer",
+            &spec,
+            p,
+            ctx.seed,
+            &out,
+        )?;
+    }
+    report.table(summary);
+    report.table(detail);
+    report.note(
+        "gap = joint design's EDAP on a deployed workload / that workload's \
+         separate-search bound (1.0 = transfers as well as a specialist). \
+         cnn4-to-extras is the paper's headline generalization claim posed as \
+         pure transfer: nothing deployed was seen during the search."
+            .to_string(),
+    );
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn transfer_quick_emits_summary_and_cells() {
+        let mut ctx = ExpContext::quick(59);
+        ctx.out_dir = std::env::temp_dir().join("imcopt-transfer-test");
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
+        assert_eq!(r.tables.len(), 2);
+        assert_eq!(r.tables[0].rows.len(), 3, "three portfolios");
+        // detail rows: 5 extras + 9 + 9
+        assert_eq!(r.tables[1].rows.len(), 23);
+        for p in scenarios::transfer_portfolios() {
+            let path = ctx.out_dir.join("transfer_cells").join(format!("{}.json", p.id));
+            let text = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            let v = json::parse(&text).unwrap();
+            assert_eq!(v.get("experiment").and_then(|e| e.as_str()), Some("transfer"));
+            let gaps = v.get("deploy_gaps").and_then(|g| g.as_arr()).unwrap();
+            assert_eq!(gaps.len(), p.deploy.len());
+        }
+        // the pure-transfer portfolio never deploys on a trained workload
+        let text = std::fs::read_to_string(
+            ctx.out_dir.join("transfer_cells/cnn4-to-extras.json"),
+        )
+        .unwrap();
+        let v = json::parse(&text).unwrap();
+        for g in v.get("deploy_gaps").and_then(|g| g.as_arr()).unwrap() {
+            assert_eq!(g.get("in_train"), Some(&json::Json::Bool(false)));
+        }
+    }
+
+    #[test]
+    fn portfolio_filter_selects_and_rejects() {
+        let mut ctx = ExpContext::quick(61);
+        ctx.portfolio = Some("cnn4-to-extras".into());
+        assert_eq!(selected_portfolios(&ctx).unwrap().len(), 1);
+        ctx.portfolio = Some("cnn4-to-extras, all9-joint".into());
+        assert_eq!(selected_portfolios(&ctx).unwrap().len(), 2);
+        ctx.portfolio = Some("nope".into());
+        let err = selected_portfolios(&ctx).unwrap_err();
+        assert!(format!("{err}").contains("unknown portfolio"), "{err}");
+        ctx.portfolio = Some(" , ".into());
+        assert!(selected_portfolios(&ctx).is_err());
+        ctx.portfolio = None;
+        assert_eq!(selected_portfolios(&ctx).unwrap().len(), 3);
+    }
+}

@@ -27,10 +27,18 @@
 //! * [`coordinator`] — the experiment runner: population evaluation with
 //!   memoization, thread-pool fan-out, progress reporting and experiment
 //!   configs.
+//! * [`scenarios`] — scenario portfolios: [`scenarios::Portfolio`]
+//!   describes a (train set, deploy set) generalization study, with
+//!   combinatorial generators for hold-k-out and cross-set transfer
+//!   (the `genmatrix_k` / `transfer` experiments; see
+//!   `docs/scenarios.md`).
 //! * [`experiments`] — the experiment registry: one module per paper
-//!   table/figure (plus the `genmatrix` generalization sweep), each a
+//!   table/figure (plus the portfolio sweeps), each a
 //!   [`experiments::Experiment`] entry with checkpoint/resume support
 //!   (`experiments::checkpoint`) and machine-readable JSON artifacts.
+//!   The registry is self-describing: `imcopt list --markdown`
+//!   regenerates the catalog in `docs/experiments.md`, and a drift test
+//!   pins the checked-in file to [`experiments::REGISTRY`].
 //! * [`util`] — std-only infrastructure (RNG, thread pool, sharded
 //!   striped-lock cache, JSON, stats, tables, CLI, property-testing and
 //!   bench harnesses); the offline crate registry has no
@@ -60,6 +68,7 @@ pub mod model;
 pub mod objective;
 pub mod report;
 pub mod runtime;
+pub mod scenarios;
 pub mod search;
 pub mod space;
 pub mod util;
@@ -70,6 +79,7 @@ pub mod prelude {
     pub use crate::coordinator::{EvalBackend, Evaluations, JointProblem};
     pub use crate::model::{Metrics, MemoryTech, NativeEvaluator};
     pub use crate::objective::{Aggregation, Objective, ObjectiveKind};
+    pub use crate::scenarios::{Portfolio, ScenarioSpec};
     pub use crate::search::{
         FourPhaseGa, GaConfig, GeneticAlgorithm, OptResult, Optimizer, SearchBudget,
     };

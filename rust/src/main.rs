@@ -3,8 +3,9 @@
 //!
 //! ```text
 //! imcopt run [ids...|--all] [--seed N] [--quick] [--out-dir DIR]
-//!            [--resume] [--stable] [--topk K] [--native|--pjrt]
-//! imcopt list                # registered experiments (id, cost, description)
+//!            [--resume] [--stable] [--topk K] [--hold-k K]
+//!            [--portfolio IDS] [--native|--pjrt]
+//! imcopt list [--markdown|--json]   # the experiment catalog
 //! imcopt validate [--out-dir DIR [--require-all]] [--bench FILE] [--schema FILE]
 //! imcopt search [--mem rram|sram] [--obj edap|edp|energy|latency|area|cost|acc]
 //!               [--agg max|all|mean] [--workloads a,b,c] [--seed N]
@@ -43,7 +44,7 @@ fn main() {
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "run" | "exp" => cmd_run(args),
-        "list" => cmd_list(),
+        "list" => cmd_list(args),
         "validate" => cmd_validate(args),
         "search" => cmd_search(args),
         "eval" => cmd_eval(args),
@@ -65,7 +66,8 @@ fn print_help() {
          commands:\n\
          \x20 run [ids|--all] run registered experiments with checkpointing\n\
          \x20                 ({ids})\n\
-         \x20 list           show the experiment registry\n\
+         \x20 list           show the experiment registry (--markdown regenerates\n\
+         \x20                docs/experiments.md, --json the validated listing)\n\
          \x20 validate       check experiment/bench JSON artifacts against schemas\n\
          \x20 search         run one joint co-optimization\n\
          \x20 eval           evaluate a single design\n\
@@ -76,7 +78,9 @@ fn print_help() {
          common options: --seed N --quick --native --pjrt --out-dir DIR\n\
          \x20 --resume       resume a killed run from its checkpoint journals\n\
          \x20 --stable       deterministic reports (wall-clock columns -> '-')\n\
-         \x20 --topk K       best designs reported per genmatrix cell\n\
+         \x20 --topk K       best designs reported per genmatrix/portfolio cell\n\
+         \x20 --hold-k K     genmatrix_k sweeps hold-k-out for k in 1..=K (default 2)\n\
+         \x20 --portfolio P  restrict `transfer` to portfolio ids (comma-separated)\n\
          \x20 --threads N    worker threads for population evaluation\n\
          \x20                (default: IMCOPT_THREADS env var, else all cores;\n\
          \x20                scores are identical for any thread count)",
@@ -87,8 +91,8 @@ fn print_help() {
 fn cmd_run(args: &Args) -> Result<()> {
     // the tiny parser cannot know `--resume fig3` means "flag, then
     // positional" — it would swallow the id as the flag's value and this
-    // command would silently sweep all 13 experiments. Reject boolean
-    // flags carrying unexpected values instead.
+    // command would silently sweep every registered experiment. Reject
+    // boolean flags carrying unexpected values instead.
     for flag in ["all", "quick", "stable", "resume", "native", "pjrt"] {
         if let Some(v) = args.opt(flag) {
             anyhow::ensure!(
@@ -111,15 +115,27 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_list() -> Result<()> {
+fn cmd_list(args: &Args) -> Result<()> {
+    // self-describing registry: --markdown regenerates the checked-in
+    // catalog (docs/experiments.md, drift-tested), --json the
+    // machine-readable listing (schemas/registry.schema.json)
+    if args.flag("markdown") {
+        print!("{}", experiments::catalog_markdown());
+        return Ok(());
+    }
+    if args.flag("json") {
+        println!("{}", experiments::catalog_json());
+        return Ok(());
+    }
     let mut t = Table::new(
         "experiment registry (imcopt run <id>)",
-        &["id", "cost", "description"],
+        &["id", "cost", "resume", "description"],
     );
     for exp in experiments::REGISTRY {
         t.row(vec![
             exp.id().into(),
             exp.cost().name().into(),
+            exp.granularity().name().into(),
             exp.description().into(),
         ]);
     }
@@ -172,6 +188,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         let mut t = Table::new("experiment artifacts", &["id", "artifact", "status"]);
         let mut present = 0usize;
         let mut genmatrix_present = false;
+        let mut cell_dirs: Vec<(&str, &str)> = Vec::new();
         for exp in experiments::REGISTRY {
             let path = dir.join(format!("{}.json", exp.id()));
             if !path.exists() {
@@ -197,6 +214,11 @@ fn cmd_validate(args: &Args) -> Result<()> {
             );
             present += 1;
             genmatrix_present |= exp.id() == "genmatrix";
+            match exp.id() {
+                "genmatrix_k" => cell_dirs.push(("genmatrix_k", "genmatrix_k_cells")),
+                "transfer" => cell_dirs.push(("transfer", "transfer_cells")),
+                _ => {}
+            }
             t.row(vec![
                 exp.id().into(),
                 path.display().to_string(),
@@ -239,6 +261,42 @@ fn cmd_validate(args: &Args) -> Result<()> {
                 dir.join("genmatrix_cells").display().to_string(),
                 format!("ok ({cells} cells)"),
             ]);
+        }
+        // portfolio experiments (genmatrix_k / transfer) emit one JSON
+        // cell per portfolio, shape-pinned by the portfolio-cell schema
+        if !cell_dirs.is_empty() {
+            let cell_schema_path =
+                Path::new(args.opt_str("cell-schema", "schemas/portfolio_cell.schema.json"));
+            for (id, sub) in cell_dirs {
+                let cells_dir = dir.join(sub);
+                let mut cells = 0usize;
+                let entries = std::fs::read_dir(&cells_dir)
+                    .with_context(|| format!("missing cell dir {}", cells_dir.display()))?;
+                let mut paths: Vec<_> = entries
+                    .filter_map(|e| e.ok().map(|e| e.path()))
+                    .filter(|p| p.extension().is_some_and(|x| x == "json"))
+                    .collect();
+                paths.sort();
+                for path in paths {
+                    let doc = validate_file(&path, cell_schema_path)?;
+                    anyhow::ensure!(
+                        doc.get("experiment").and_then(|v| v.as_str()) == Some(id),
+                        "{}: experiment mismatch",
+                        path.display()
+                    );
+                    cells += 1;
+                }
+                anyhow::ensure!(
+                    cells > 0,
+                    "no portfolio cells under {}",
+                    cells_dir.display()
+                );
+                t.row(vec![
+                    format!("{id} cells"),
+                    cells_dir.display().to_string(),
+                    format!("ok ({cells} cells)"),
+                ]);
+            }
         }
         print!("{}", t.to_text());
         checked = true;

@@ -104,6 +104,27 @@ impl ShapeBucket {
 /// Precomputed aggregate tables for one workload; built once per
 /// [`crate::workloads::Workload`] instance (lazily, via
 /// `Workload::compiled`) and shared by every evaluation of it.
+///
+/// Callers never construct this directly — [`super::NativeEvaluator`]
+/// consults it transparently and falls back to the per-layer walk for
+/// off-grid geometries:
+///
+/// ```
+/// use imcopt::model::{MemoryTech, NativeEvaluator};
+/// use imcopt::space::SearchSpace;
+/// use imcopt::util::rng::Rng;
+/// use imcopt::workloads;
+///
+/// let w = workloads::resnet18();
+/// let space = SearchSpace::rram();
+/// let raw = space.decode(&space.random(&mut Rng::seed_from(7)));
+/// let ev = NativeEvaluator::new(MemoryTech::Rram);
+/// let fast = ev.evaluate(&raw, &w); // O(1) compiled tables
+/// let slow = ev.evaluate_naive(&raw, &w); // O(layers) oracle
+/// // capacity aggregates are integer-exact: feasibility always agrees
+/// assert_eq!(fast.feasible, slow.feasible);
+/// assert!(((fast.energy - slow.energy) / slow.energy).abs() < 1e-9);
+/// ```
 #[derive(Clone, Debug)]
 pub struct CompiledWorkload {
     /// Layer count at build time — `NativeEvaluator` falls back to the

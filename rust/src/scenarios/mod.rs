@@ -1,0 +1,436 @@
+//! Scenario portfolios: train/deploy generalization studies over the
+//! paper's workload sets.
+//!
+//! The paper's headline claim is that **one** jointly-optimized IMC design
+//! serves many workloads with near-specialized EDAP. The `genmatrix`
+//! experiment probes that claim hold-*one*-out; this module generalizes it
+//! to arbitrary **portfolios** — a [`Portfolio`] names the workload subset
+//! a joint search optimizes (*train*) and the subset the resulting design
+//! is scored on after deployment (*deploy*). Combinatorial generators
+//! produce the standard study shapes:
+//!
+//! * [`hold_k_out`] — every `k`-combination of a set is held out and the
+//!   joint search runs on the remaining `N − k` workloads (the
+//!   `genmatrix_k` experiment; `k = 1` reproduces `genmatrix` exactly,
+//!   down to the RNG streams — see [`Portfolio::joint_seed`]).
+//! * [`transfer_portfolios`] — cross-set transfer over the 9-workload set
+//!   (the `transfer` experiment): optimize on the cnn4 subset and deploy
+//!   on the five extra workloads, and the all-9 joint reference deployed
+//!   per workload.
+//!
+//! Deploy-side scoring is always the *generalization gap*: the joint
+//! design's per-workload EDAP divided by that workload's separate-search
+//! bound (a specialist optimized for it alone). [`gap`] and
+//! [`GapSummary`] centralize the arithmetic so every experiment reports
+//! the same quantity; the per-workload bounds themselves are computed
+//! once per experiment and memoized through the checkpoint layer
+//! (`experiments::common::separate_bound_cell`).
+//!
+//! Everything here is pure data + combinatorics — no evaluator, no
+//! checkpoint I/O — so portfolios are cheap to construct in tests and
+//! doctests. The experiment-side plumbing (journaled cells, JSON
+//! artifacts) lives in `experiments::common`.
+
+use crate::model::MemoryTech;
+use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::space::SearchSpace;
+use crate::util::stats;
+use crate::workloads::WorkloadSet;
+
+/// Radix of [`Portfolio::seed_tag`]: deploy indices are digits of a
+/// base-64 number, prefixed by a size-dependent base so deploy sets of
+/// different sizes land in disjoint tag ranges. A singleton `[w]` gets
+/// tag `w` — the property that makes `genmatrix_k`'s `k = 1` slice
+/// bit-identical to `genmatrix`.
+const SEED_RADIX: u64 = 64;
+
+/// One scenario family: a named workload set bound to the memory
+/// technology, search space and aggregation the paper evaluates it under.
+///
+/// The two paper instances ([`ScenarioSpec::cnn4`] on weight-stationary
+/// RRAM with Max aggregation, [`ScenarioSpec::all9`] on weight-swapping
+/// SRAM with Mean aggregation, §IV-J) are single-sourced here so
+/// `genmatrix`, `genmatrix_k` and `transfer` cannot drift apart.
+pub struct ScenarioSpec {
+    /// Stable set name ("cnn4" / "all9"): cell keys and artifact stems.
+    pub name: &'static str,
+    /// The workload set itself.
+    pub set: WorkloadSet,
+    /// Search space matching the memory technology.
+    pub space: SearchSpace,
+    /// Memory technology the designs are evaluated on.
+    pub mem: MemoryTech,
+    /// Cross-workload aggregation of the joint objective.
+    pub agg: Aggregation,
+}
+
+impl ScenarioSpec {
+    /// The paper's core 4-workload CNN set on weight-stationary RRAM,
+    /// Max-aggregated EDAP.
+    pub fn cnn4() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "cnn4",
+            set: WorkloadSet::cnn4(),
+            space: SearchSpace::rram(),
+            mem: MemoryTech::Rram,
+            agg: Aggregation::Max,
+        }
+    }
+
+    /// The 9-workload scalability set on weight-swapping SRAM, Mean
+    /// aggregation (§IV-J, as in Fig. 10, so GPT-2 Medium does not
+    /// dominate the joint score).
+    pub fn all9() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "all9",
+            set: WorkloadSet::all9(),
+            space: SearchSpace::sram(),
+            mem: MemoryTech::Sram,
+            agg: Aggregation::Mean,
+        }
+    }
+
+    /// The joint objective this scenario optimizes (EDAP under the
+    /// scenario's aggregation).
+    pub fn objective(&self) -> Objective {
+        Objective::new(ObjectiveKind::Edap, self.agg)
+    }
+}
+
+/// Both paper scenario families, in report order.
+pub fn paper_specs() -> Vec<ScenarioSpec> {
+    vec![ScenarioSpec::cnn4(), ScenarioSpec::all9()]
+}
+
+/// A generalization scenario: optimize jointly on `train`, score on
+/// `deploy`. Indices refer to one [`ScenarioSpec`]'s workload set; both
+/// lists are kept sorted and deduplicated so equal portfolios compare
+/// equal and produce equal cache/journal keys.
+///
+/// ```
+/// use imcopt::scenarios::{hold_k_out, Portfolio};
+///
+/// // Every hold-2-out split of a 4-workload set: C(4, 2) = 6 portfolios,
+/// // each training on the complement of its deploy pair.
+/// let ports = hold_k_out(4, 2);
+/// assert_eq!(ports.len(), 6);
+/// assert_eq!(ports[0].deploy, vec![0, 1]);
+/// assert_eq!(ports[0].train, vec![2, 3]);
+///
+/// // Hand-built portfolios normalize their index lists.
+/// let p = Portfolio::new("demo", vec![3, 1, 3], vec![0]);
+/// assert_eq!(p.train, vec![1, 3]);
+/// assert_eq!(p.seed_tag(), 0); // singleton deploy [w] tags as w
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Portfolio {
+    /// Stable identifier: journal-cell keys and artifact file stems
+    /// (unique within one experiment).
+    pub id: String,
+    /// Workload indices the joint search optimizes.
+    pub train: Vec<usize>,
+    /// Workload indices the chosen design is scored on after deployment.
+    pub deploy: Vec<usize>,
+}
+
+impl Portfolio {
+    /// Build a portfolio, normalizing (sorting + deduplicating) both
+    /// index lists. Panics if either side ends up empty — a portfolio
+    /// must train on something and deploy somewhere.
+    pub fn new(id: impl Into<String>, mut train: Vec<usize>, mut deploy: Vec<usize>) -> Portfolio {
+        train.sort_unstable();
+        train.dedup();
+        deploy.sort_unstable();
+        deploy.dedup();
+        assert!(!train.is_empty(), "portfolio must train on >= 1 workload");
+        assert!(!deploy.is_empty(), "portfolio must deploy on >= 1 workload");
+        Portfolio {
+            id: id.into(),
+            train,
+            deploy,
+        }
+    }
+
+    /// Number of held-out (deployed) workloads.
+    pub fn k(&self) -> usize {
+        self.deploy.len()
+    }
+
+    /// Deterministic tag of the deploy set: its indices read as base-64
+    /// digits on top of a size-dependent base (`0, 64, 64 + 64², ...`),
+    /// so deploy sets of different sizes cannot collide (e.g. `[0, 1]`
+    /// vs `[1]`; distinct for sets with indices < 64 and size ≤ 5 — the
+    /// u64 wraps beyond that, which can only repeat a seed, never
+    /// corrupt a result). The base for size 1 is 0, so a singleton `[w]`
+    /// tags as `w` — which keeps `genmatrix_k`'s `k = 1` RNG streams
+    /// identical to `genmatrix`'s.
+    pub fn seed_tag(&self) -> u64 {
+        let mut base = 0u64;
+        for m in 1..self.deploy.len() {
+            base = base.wrapping_add(SEED_RADIX.wrapping_pow(m as u32));
+        }
+        self.deploy
+            .iter()
+            .fold(base, |acc, &i| acc.wrapping_mul(SEED_RADIX).wrapping_add(i as u64))
+    }
+
+    /// Seed of this portfolio's joint search, derived from the experiment
+    /// seed (`base + tag·7919`, the scheme `genmatrix` uses per held-out
+    /// workload).
+    pub fn joint_seed(&self, base: u64) -> u64 {
+        base.wrapping_add(self.seed_tag().wrapping_mul(7919))
+    }
+
+    /// Workload names of an index list, resolved against the scenario's
+    /// set (helper for reports and artifacts).
+    pub fn names<'a>(indices: &[usize], set: &'a WorkloadSet) -> Vec<&'a str> {
+        indices.iter().map(|&i| set.workloads[i].name).collect()
+    }
+}
+
+/// Seed of the separate-search (specialist) bound for workload `wi` —
+/// salted like `genmatrix`'s per-workload specialist runs so the RNG
+/// streams differ from every joint search.
+pub fn bound_seed(base: u64, wi: usize) -> u64 {
+    base.wrapping_mul(31).wrapping_add(wi as u64 * 1009)
+}
+
+/// All `k`-combinations of `0..n` in lexicographic order.
+pub fn combinations(n: usize, k: usize) -> Vec<Vec<usize>> {
+    assert!(k >= 1 && k <= n, "need 1 <= k <= n (got k={k}, n={n})");
+    let mut out = Vec::new();
+    let mut cur: Vec<usize> = (0..k).collect();
+    loop {
+        out.push(cur.clone());
+        // advance the rightmost digit that can still move
+        let mut i = k;
+        while i > 0 {
+            i -= 1;
+            if cur[i] < n - (k - i) {
+                cur[i] += 1;
+                for j in i + 1..k {
+                    cur[j] = cur[j - 1] + 1;
+                }
+                break;
+            }
+            if i == 0 {
+                return out;
+            }
+        }
+    }
+}
+
+/// Indices of `0..n` not in `subset` (which must be sorted).
+pub fn complement(n: usize, subset: &[usize]) -> Vec<usize> {
+    (0..n).filter(|i| !subset.contains(i)).collect()
+}
+
+/// Every hold-`k`-out portfolio of an `n`-workload set: each
+/// `k`-combination is deployed on while the complement is trained on.
+/// Ids are `k<k>-<i>+<j>+...` over the deploy indices.
+pub fn hold_k_out(n: usize, k: usize) -> Vec<Portfolio> {
+    assert!(k >= 1 && k < n, "hold-k-out needs 1 <= k < n (got k={k}, n={n})");
+    combinations(n, k)
+        .into_iter()
+        .map(|deploy| {
+            let id = format!(
+                "k{k}-{}",
+                deploy
+                    .iter()
+                    .map(|i| i.to_string())
+                    .collect::<Vec<_>>()
+                    .join("+")
+            );
+            let train = complement(n, &deploy);
+            Portfolio::new(id, train, deploy)
+        })
+        .collect()
+}
+
+/// The cross-set transfer portfolios of the `transfer` experiment, all
+/// over the 9-workload set ([`ScenarioSpec::all9`]; its first four
+/// workloads are exactly the cnn4 set):
+///
+/// * `cnn4-to-extras` — optimize on the cnn4 subset, deploy on the five
+///   extra workloads (pure transfer: nothing deployed was trained on).
+/// * `cnn4-to-all9` — the same design scored on the full set (how much
+///   headroom the cnn4-trained design leaves on its own training set vs
+///   the extras).
+/// * `all9-joint` — the all-9 joint reference deployed per workload (the
+///   paper's 9-workload generalization row, as a portfolio).
+pub fn transfer_portfolios() -> Vec<Portfolio> {
+    vec![
+        Portfolio::new("cnn4-to-extras", (0..4).collect(), (4..9).collect()),
+        Portfolio::new("cnn4-to-all9", (0..4).collect(), (0..9).collect()),
+        Portfolio::new("all9-joint", (0..9).collect(), (0..9).collect()),
+    ]
+}
+
+/// Deploy-side generalization gap: the joint design's EDAP on a workload
+/// over the specialist bound for that workload. `1.0` = the joint design
+/// matches the specialist; `NaN` when the bound is non-positive or
+/// non-finite (no feasible specialist to compare against).
+pub fn gap(joint: f64, bound: f64) -> f64 {
+    if bound > 0.0 && bound.is_finite() {
+        joint / bound
+    } else {
+        f64::NAN
+    }
+}
+
+/// Aggregate view of a list of per-workload gaps (NaN/inf entries are
+/// excluded from the means but counted against `total`).
+#[derive(Clone, Copy, Debug)]
+pub struct GapSummary {
+    /// Arithmetic mean of the finite gaps (0 when none are finite).
+    pub mean: f64,
+    /// Geometric mean of the finite gaps (0 when none are finite).
+    pub geo_mean: f64,
+    /// Largest finite gap (−inf when none are finite).
+    pub worst: f64,
+    /// Position of the worst finite gap in the input slice.
+    pub worst_at: Option<usize>,
+    /// Finite gaps observed.
+    pub finite: usize,
+    /// Total gaps observed (finite or not).
+    pub total: usize,
+}
+
+/// Summarize a gap list (see [`GapSummary`]).
+pub fn summarize_gaps(gaps: &[f64]) -> GapSummary {
+    let finite: Vec<f64> = gaps.iter().copied().filter(|g| g.is_finite()).collect();
+    let mut worst = f64::NEG_INFINITY;
+    let mut worst_at = None;
+    for (i, &g) in gaps.iter().enumerate() {
+        if g.is_finite() && g > worst {
+            worst = g;
+            worst_at = Some(i);
+        }
+    }
+    GapSummary {
+        mean: stats::mean(&finite),
+        geo_mean: stats::geo_mean(&finite),
+        worst,
+        worst_at,
+        finite: finite.len(),
+        total: gaps.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combinations_counts_match_binomials() {
+        assert_eq!(combinations(4, 1).len(), 4);
+        assert_eq!(combinations(4, 2).len(), 6);
+        assert_eq!(combinations(4, 3).len(), 4);
+        assert_eq!(combinations(9, 2).len(), 36);
+        assert_eq!(combinations(9, 3).len(), 84);
+        assert_eq!(combinations(3, 3), vec![vec![0, 1, 2]]);
+        // lexicographic, all distinct
+        let cs = combinations(5, 2);
+        for w in cs.windows(2) {
+            assert!(w[0] < w[1], "{w:?} out of order");
+        }
+    }
+
+    #[test]
+    fn complement_partitions_the_index_range() {
+        assert_eq!(complement(4, &[1, 3]), vec![0, 2]);
+        assert_eq!(complement(3, &[0, 1, 2]), Vec::<usize>::new());
+        for c in combinations(6, 2) {
+            let mut both = c.clone();
+            both.extend(complement(6, &c));
+            both.sort_unstable();
+            assert_eq!(both, (0..6).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn hold_k_out_trains_on_the_complement() {
+        let ports = hold_k_out(4, 1);
+        assert_eq!(ports.len(), 4);
+        for (wi, p) in ports.iter().enumerate() {
+            assert_eq!(p.deploy, vec![wi]);
+            assert_eq!(p.train, complement(4, &[wi]));
+            assert_eq!(p.k(), 1);
+            // singleton seed tag is the index itself -> genmatrix streams
+            assert_eq!(p.seed_tag(), wi as u64);
+            assert_eq!(p.joint_seed(47), 47u64.wrapping_add(wi as u64 * 7919));
+        }
+        let k3 = hold_k_out(9, 3);
+        let ids: std::collections::BTreeSet<&str> =
+            k3.iter().map(|p| p.id.as_str()).collect();
+        assert_eq!(ids.len(), 84, "ids must be unique");
+    }
+
+    #[test]
+    fn seed_tags_distinguish_deploy_sets() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in 1..=3 {
+            for p in hold_k_out(9, k) {
+                assert!(seen.insert(p.seed_tag()), "tag collision at {:?}", p.deploy);
+            }
+        }
+    }
+
+    #[test]
+    fn bound_seed_matches_genmatrix_scheme() {
+        assert_eq!(bound_seed(47, 3), 47u64.wrapping_mul(31).wrapping_add(3 * 1009));
+    }
+
+    #[test]
+    fn transfer_portfolios_cover_the_all9_split() {
+        let ports = transfer_portfolios();
+        assert_eq!(ports.len(), 3);
+        let extras = &ports[0];
+        assert_eq!(extras.id, "cnn4-to-extras");
+        assert_eq!(extras.train, vec![0, 1, 2, 3]);
+        assert_eq!(extras.deploy, vec![4, 5, 6, 7, 8]);
+        // the first four all9 workloads are exactly the cnn4 set — the
+        // transfer indices rely on it
+        let cnn4 = WorkloadSet::cnn4();
+        let all9 = WorkloadSet::all9();
+        for (i, w) in cnn4.workloads.iter().enumerate() {
+            assert_eq!(w.name, all9.workloads[i].name);
+        }
+        let ids: std::collections::BTreeSet<&str> =
+            ports.iter().map(|p| p.id.as_str()).collect();
+        assert_eq!(ids.len(), ports.len());
+    }
+
+    #[test]
+    fn gap_and_summary_handle_non_finite_bounds() {
+        assert_eq!(gap(2.0, 1.0), 2.0);
+        assert!(gap(1.0, 0.0).is_nan());
+        assert!(gap(1.0, f64::INFINITY).is_nan());
+        assert!(gap(f64::INFINITY, 1.0).is_infinite());
+        let s = summarize_gaps(&[1.5, f64::NAN, 0.5, f64::INFINITY]);
+        assert_eq!(s.finite, 2);
+        assert_eq!(s.total, 4);
+        assert_eq!(s.worst, 1.5);
+        assert_eq!(s.worst_at, Some(0));
+        assert!((s.mean - 1.0).abs() < 1e-12);
+        let empty = summarize_gaps(&[f64::NAN]);
+        assert_eq!(empty.finite, 0);
+        assert!(empty.worst_at.is_none());
+    }
+
+    #[test]
+    fn paper_specs_match_genmatrix_setups() {
+        let specs = paper_specs();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "cnn4");
+        assert_eq!(specs[0].set.len(), 4);
+        assert_eq!(specs[0].mem, MemoryTech::Rram);
+        assert_eq!(specs[1].name, "all9");
+        assert_eq!(specs[1].set.len(), 9);
+        assert_eq!(specs[1].mem, MemoryTech::Sram);
+        for spec in &specs {
+            assert_eq!(spec.objective().kind, ObjectiveKind::Edap);
+            assert_eq!(spec.objective().agg, spec.agg);
+        }
+    }
+}

@@ -101,7 +101,7 @@ pub struct OptResult {
 
 impl OptResult {
     /// Collect the best `k` distinct designs from a scored population.
-    /// NaN-safe: `total_cmp` (as in [`BestTracker`]) orders NaNs last
+    /// NaN-safe: `total_cmp` (as in `BestTracker`) orders NaNs last
     /// instead of panicking mid-run. Deduplication is global, not
     /// adjacent-only — duplicate designs with tied scores (e.g. several
     /// `+∞`-scored infeasibles) cannot reappear in the top-k.
@@ -111,6 +111,23 @@ impl OptResult {
         scored.retain(|(d, _)| seen.insert(d.clone()));
         scored.truncate(k);
         scored
+    }
+
+    /// Relative spread of the reported top-k: how much worse the k-th
+    /// best design scores than the best (`worst/best − 1`, so `0.05` =
+    /// the alternatives are within 5%). `0.0` when the top list has
+    /// fewer than two entries or the best score is not a positive finite
+    /// number. The portfolio experiments report it as a proxy for how
+    /// interchangeable the near-optimal designs are.
+    pub fn spread(&self) -> f64 {
+        match (self.top.first(), self.top.last()) {
+            (Some((_, best)), Some((_, worst)))
+                if self.top.len() > 1 && *best > 0.0 && best.is_finite() =>
+            {
+                worst / best - 1.0
+            }
+            _ => 0.0,
+        }
     }
 }
 
@@ -129,7 +146,8 @@ pub(crate) const TRACK_CAP: usize = 64;
 /// Tracks the best-so-far set during a run; shared by all optimizers.
 ///
 /// A bounded top-k structure over *distinct* designs with configurable
-/// capacity. The worst live entry sits on top of a max-[`BinaryHeap`]
+/// capacity. The worst live entry sits on top of a
+/// max-[`std::collections::BinaryHeap`]
 /// (score, then insertion order), so admission checks and evictions are
 /// O(log k) instead of the previous sorted-vec linear scans; a `live` map
 /// keyed by design deduplicates and marks superseded heap entries stale

@@ -112,7 +112,7 @@ pub struct SearchSpace {
 }
 
 /// Union of every variant's crossbar row/col grid (the dense
-/// reduced-space grid is a superset of the full-space [`ROWS_COLS`]).
+/// reduced-space grid is a superset of the full-space `ROWS_COLS`).
 /// The compiled evaluator (`model::compiled`) precomputes one shape
 /// bucket per (rows, cols, dpw) drawn from this — extend it here, and
 /// the buckets follow; a value used by a space but missing here would

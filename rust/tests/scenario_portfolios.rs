@@ -1,0 +1,247 @@
+//! Scenario-portfolio integration:
+//!
+//! * the checked-in experiment catalog (`docs/experiments.md`) cannot
+//!   drift from `experiments::REGISTRY` (bless with `IMCOPT_BLESS=1`),
+//!   and `catalog_json` conforms to `schemas/registry.schema.json`;
+//! * the `k = 1` slice of `genmatrix_k` reproduces `genmatrix` bit for
+//!   bit (same seeds, same GA configuration, same gap arithmetic);
+//! * the portfolio experiments (`genmatrix_k`, `transfer`) emit
+//!   schema-valid per-portfolio cells and, after a simulated mid-flight
+//!   kill, resume to byte-identical artifacts.
+
+use imcopt::coordinator::ExpContext;
+use imcopt::experiments::{self, checkpoint::Checkpoint};
+use imcopt::util::{json, schema};
+use imcopt::workloads::WorkloadSet;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imcopt-portfolio-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// Quick, stable, hold-1-out context (the cheapest portfolio sweep).
+fn ctx_at(seed: u64, dir: &Path, resume: bool) -> ExpContext {
+    let mut c = ExpContext::quick(seed);
+    c.out_dir = dir.to_path_buf();
+    c.stable = true;
+    c.resume = resume;
+    c.hold_k = 1;
+    c
+}
+
+#[test]
+fn catalog_in_docs_matches_registry() {
+    let path = repo_path("docs/experiments.md");
+    let generated = experiments::catalog_markdown();
+    if std::env::var("IMCOPT_BLESS").is_ok() {
+        std::fs::write(&path, &generated).unwrap();
+        return;
+    }
+    let on_disk = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    assert_eq!(
+        on_disk, generated,
+        "docs/experiments.md drifted from experiments::REGISTRY; regenerate \
+         with `imcopt list --markdown > docs/experiments.md` (or \
+         IMCOPT_BLESS=1 cargo test --test scenario_portfolios)"
+    );
+}
+
+#[test]
+fn catalog_json_conforms_to_registry_schema() {
+    let schema_doc = json::parse(
+        &std::fs::read_to_string(repo_path("schemas/registry.schema.json")).unwrap(),
+    )
+    .unwrap();
+    // through the serialized form, exactly as `imcopt list --json` emits it
+    let doc = json::parse(&experiments::catalog_json().to_string()).unwrap();
+    let errs = schema::validate(&schema_doc, &doc);
+    assert!(errs.is_empty(), "catalog violates registry schema: {errs:?}");
+    assert_eq!(
+        doc.get("count").and_then(|c| c.as_usize()),
+        Some(experiments::REGISTRY.len())
+    );
+}
+
+fn read_json(path: &Path) -> json::Json {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    json::parse(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+fn f64_at<'a>(doc: &'a json::Json, keys: &[&str]) -> f64 {
+    let mut v = doc;
+    for k in keys {
+        v = v.get(k).unwrap_or_else(|| panic!("missing '{k}'"));
+    }
+    v.as_f64_lenient().expect("numeric field")
+}
+
+#[test]
+fn genmatrix_k1_slice_matches_genmatrix_bit_for_bit() {
+    let dir = tmp("k1");
+    let ctx = ctx_at(47, &dir, false);
+    experiments::run("genmatrix", &ctx).unwrap();
+    experiments::run("genmatrix_k", &ctx).unwrap();
+    for (set, ws) in [("cnn4", WorkloadSet::cnn4()), ("all9", WorkloadSet::all9())] {
+        for (wi, w) in ws.workloads.iter().enumerate() {
+            let gm = read_json(
+                &dir.join("genmatrix_cells").join(format!("{set}-{}.json", w.name)),
+            );
+            let pk = read_json(
+                &dir.join("genmatrix_k_cells").join(format!("{set}-k1-{wi}.json")),
+            );
+            let gaps = pk.get("deploy_gaps").and_then(|g| g.as_arr()).unwrap();
+            assert_eq!(gaps.len(), 1);
+            assert_eq!(
+                gaps[0].get("workload").and_then(|v| v.as_str()),
+                Some(w.name),
+                "{set}:{wi} held-out workload mismatch"
+            );
+            // same joint search: identical score; same specialist bound;
+            // identical deploy gap — bit for bit
+            for (a, b) in [
+                (
+                    f64_at(&gm, &["joint", "joint_score"]),
+                    f64_at(&pk, &["joint", "joint_score"]),
+                ),
+                (
+                    f64_at(&gm, &["separate_bound", "edap"]),
+                    f64_at(&gaps[0], &["edap_bound"]),
+                ),
+                (f64_at(&gm, &["gap"]), f64_at(&gaps[0], &["gap"])),
+            ] {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{set}:{} k=1 slice diverged from genmatrix ({a} vs {b})",
+                    w.name
+                );
+            }
+        }
+    }
+}
+
+/// Every emitted artifact (md/json/csv) below `dir`, keyed by relative
+/// path — checkpoint internals excluded (journal layouts may differ
+/// between an interrupted and a straight run; artifacts must not).
+fn artifacts(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).expect("readable dir") {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().to_string();
+            if path.is_dir() {
+                if name == "checkpoints" {
+                    continue;
+                }
+                walk(root, &path, out);
+            } else {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+fn validate_cells(dir: &Path, schema_doc: &json::Json, expect_exp: &str) -> usize {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .collect();
+    paths.sort();
+    let mut n = 0usize;
+    for path in paths {
+        let doc = read_json(&path);
+        let errs = schema::validate(schema_doc, &doc);
+        assert!(errs.is_empty(), "{}: {errs:?}", path.display());
+        assert_eq!(
+            doc.get("experiment").and_then(|v| v.as_str()),
+            Some(expect_exp),
+            "{}",
+            path.display()
+        );
+        n += 1;
+    }
+    n
+}
+
+#[test]
+fn portfolio_experiments_kill_resume_bit_identical() {
+    const IDS: [&str; 2] = ["genmatrix_k", "transfer"];
+    let dir_a = tmp("straight");
+    let dir_b = tmp("killed");
+
+    // reference: uninterrupted checkpointed run
+    let summary_a = experiments::run_selected(&IDS, &ctx_at(29, &dir_a, false)).unwrap();
+    assert_eq!(summary_a.executed, IDS.len());
+
+    // straight-run artifacts are schema-valid portfolio cells
+    let cell_schema = json::parse(
+        &std::fs::read_to_string(repo_path("schemas/portfolio_cell.schema.json")).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        validate_cells(&dir_a.join("genmatrix_k_cells"), &cell_schema, "genmatrix_k"),
+        13,
+        "hold-1-out emits one cell per workload of each set (4 + 9)"
+    );
+    assert_eq!(
+        validate_cells(&dir_a.join("transfer_cells"), &cell_schema, "transfer"),
+        3
+    );
+
+    // interrupted run: the simulated-kill hook stops genmatrix_k after
+    // two fresh cells, leaving a partial journal exactly like a hard kill
+    {
+        let ctx = ctx_at(29, &dir_b, false);
+        let mut ckpt =
+            Checkpoint::for_experiment(&ctx.out_dir, "genmatrix_k", false).unwrap();
+        ckpt.abort_after_cells = Some(2);
+        let err = experiments::run_with("genmatrix_k", &ctx, &mut ckpt).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("simulated kill"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(ckpt.computed(), 2);
+    }
+
+    // resume completes the partial experiment and runs the rest
+    let summary_b = experiments::run_selected(&IDS, &ctx_at(29, &dir_b, true)).unwrap();
+    assert_eq!(summary_b.executed, IDS.len(), "nothing was complete yet");
+    assert!(
+        summary_b.cells_reused >= 2,
+        "the journaled genmatrix_k cells must be reused, not re-run"
+    );
+
+    // artifacts are byte-identical to the uninterrupted run
+    let a = artifacts(&dir_a);
+    let b = artifacts(&dir_b);
+    let names_a: Vec<&String> = a.keys().collect();
+    let names_b: Vec<&String> = b.keys().collect();
+    assert_eq!(names_a, names_b, "artifact sets differ");
+    assert!(
+        a.keys().any(|k| k.contains("genmatrix_k_cells")),
+        "expected portfolio cells, got {names_a:?}"
+    );
+    for (name, bytes_a) in &a {
+        assert_eq!(
+            bytes_a, &b[name],
+            "artifact {name} differs between straight and resumed runs"
+        );
+    }
+}
