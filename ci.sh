@@ -11,10 +11,12 @@
 #      --json` validated against schemas/registry.schema.json)
 #   3. cross-process golden check: bless quick-budget report goldens into
 #      a scratch dir, then re-verify them from a second test process
-#   4. evaluator bench smoke -> BENCH_eval.json + BENCH_model.json,
-#      validated against schemas/bench_{eval,model}.schema.json (the
-#      model schema gates the compiled evaluator's >= 3x speedup over
-#      the naive layer loop and its <= 1e-9 oracle agreement)
+#   4. bench smokes -> BENCH_eval.json + BENCH_model.json (evaluator) and
+#      BENCH_pareto.json (non-dominated sort + hypervolume on >= 1k
+#      points), validated against schemas/bench_{eval,model,pareto}
+#      .schema.json (the model schema gates the compiled evaluator's
+#      >= 3x speedup over the naive layer loop and its <= 1e-9 oracle
+#      agreement)
 #   5. registry smoke: `imcopt run --all --quick` must emit a well-formed
 #      JSON artifact for every registered experiment (validated against
 #      schemas/experiment_report.schema.json), and a `--resume` re-run
@@ -71,6 +73,15 @@ if [ ! -f BENCH_model.json ]; then
     exit 1
 fi
 
+echo "=== bench smoke (pareto primitives) ==="
+# shellcheck disable=SC2086
+IMCOPT_BENCH_QUICK=1 cargo bench $FEATURES --bench pareto
+
+if [ ! -f BENCH_pareto.json ]; then
+    echo "error: BENCH_pareto.json was not produced" >&2
+    exit 1
+fi
+
 IMCOPT_BIN=./target/release/imcopt
 
 echo "=== validate BENCH_eval.json against its schema ==="
@@ -78,6 +89,9 @@ echo "=== validate BENCH_eval.json against its schema ==="
 
 echo "=== validate BENCH_model.json (compiled model >= 3x, <= 1e-9 agreement) ==="
 "$IMCOPT_BIN" validate --bench BENCH_model.json --schema schemas/bench_model.schema.json
+
+echo "=== validate BENCH_pareto.json (>= 1k points, monotone hypervolume) ==="
+"$IMCOPT_BIN" validate --bench BENCH_pareto.json --schema schemas/bench_pareto.schema.json
 
 echo "=== experiment catalog: registry JSON schema + docs drift ==="
 "$IMCOPT_BIN" list --json > target/registry.json
@@ -91,7 +105,7 @@ SMOKE_OUT="$(pwd)/target/ci-smoke"
 rm -rf "$SMOKE_OUT"
 "$IMCOPT_BIN" run --all --quick --stable --seed 5 --out-dir "$SMOKE_OUT"
 
-echo "=== validate experiment artifacts (all 15 required) ==="
+echo "=== validate experiment artifacts (all 16 required) ==="
 "$IMCOPT_BIN" validate --out-dir "$SMOKE_OUT" --require-all
 
 echo "=== resume smoke: a completed run replays without recomputation ==="

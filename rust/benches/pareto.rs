@@ -1,0 +1,75 @@
+//! Pareto-subsystem throughput: non-dominated sorting and hypervolume on
+//! a 1k-point objective cloud — the primitives behind the `pareto`
+//! experiment's NSGA-II ranking and front-quality reporting.
+//!
+//! Writes `BENCH_pareto.json`, validated in ci.sh against
+//! `schemas/bench_pareto.schema.json` (which pins the workload size at
+//! ≥ 1000 points and the hypervolume monotonicity sanity check).
+
+use imcopt::pareto::{indicators, sort};
+use imcopt::util::bench::Bench;
+use imcopt::util::json::Json;
+use imcopt::util::rng::Rng;
+
+fn main() {
+    let bench = Bench::new("pareto");
+    let mut rng = Rng::seed_from(1);
+    let n = 1024usize;
+    let dims = 3usize;
+    let points: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..dims).map(|_| rng.f64()).collect())
+        .collect();
+
+    // full NSGA-II-style ranking of the cloud
+    let m_sort = bench.run(&format!("nds/{n}x{dims}"), n, || {
+        std::hint::black_box(sort::non_dominated_sort(&points));
+    });
+    let fronts = sort::non_dominated_sort(&points);
+    let front: Vec<usize> = fronts[0].clone();
+    let m_crowd = bench.run(&format!("crowding/front{}", front.len()), front.len(), || {
+        std::hint::black_box(sort::crowding_distance(&points, &front));
+    });
+
+    // hypervolume of the full cloud (reduces to its non-dominated front
+    // internally; exact WFG path at 3 objectives)
+    let reference = vec![1.1f64; dims];
+    let m_hv = bench.run(&format!("hypervolume/{n}x{dims}"), 1, || {
+        std::hint::black_box(indicators::hypervolume(&points, &reference));
+    });
+    let hv = indicators::hypervolume(&points, &reference);
+    assert!(hv > 0.0 && hv.is_finite(), "degenerate hypervolume {hv}");
+
+    // sanity: adding a dominating point cannot shrink the hypervolume
+    let dominating: Vec<f64> = points[front[0]].iter().map(|&x| x / 2.0).collect();
+    let mut more = points.clone();
+    more.push(dominating);
+    let monotone = indicators::hypervolume(&more, &reference) >= hv;
+    assert!(monotone, "hypervolume shrank under a dominating point");
+
+    let sorts_per_sec = 1.0 / m_sort.mean.as_secs_f64();
+    let crowds_per_sec = 1.0 / m_crowd.mean.as_secs_f64();
+    let hv_per_sec = 1.0 / m_hv.mean.as_secs_f64();
+    println!(
+        "pareto primitives on {n}x{dims}: {sorts_per_sec:.1} sorts/s, \
+         {crowds_per_sec:.1} crowdings/s, {hv_per_sec:.1} hypervolumes/s \
+         (front {} points, hv {hv:.4})",
+        front.len()
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("pareto_front".into())),
+        ("points", Json::Num(n as f64)),
+        ("dims", Json::Num(dims as f64)),
+        ("front_size", Json::Num(front.len() as f64)),
+        ("sorts_per_sec", Json::Num(sorts_per_sec)),
+        ("crowdings_per_sec", Json::Num(crowds_per_sec)),
+        ("hypervolumes_per_sec", Json::Num(hv_per_sec)),
+        ("hypervolume", Json::Num(hv)),
+        ("monotone", Json::Bool(monotone)),
+    ]);
+    let out = "BENCH_pareto.json";
+    match std::fs::write(out, report.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

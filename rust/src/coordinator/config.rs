@@ -57,6 +57,16 @@ pub struct ExpContext {
     /// portfolio ids (`--portfolio a,b`); `None` runs every registered
     /// transfer portfolio (see `scenarios::transfer_portfolios`).
     pub portfolio: Option<String>,
+    /// Objective-vector mode(s) of the `pareto` experiment
+    /// (`--moo-mode metric|workload`); `None` runs both modes.
+    pub moo_mode: Option<String>,
+    /// Pareto-archive capacity (`--pareto-cap`): the `pareto`
+    /// experiment's reported fronts never exceed this many points.
+    pub pareto_cap: usize,
+    /// User-defined scenario family (`--spec <w1>+<w2>+...:<mem>[:<agg>]`,
+    /// see `scenarios::ScenarioSpec::parse`), honored by `genmatrix_k`,
+    /// `transfer` and `pareto`; `None` runs the paper families.
+    pub spec: Option<String>,
     /// Lazily loaded PJRT engine, shared across experiments.
     engine: Mutex<Option<Option<Arc<Mutex<Engine>>>>>,
 }
@@ -74,6 +84,9 @@ impl Default for ExpContext {
             top_k: 5,
             hold_k: 2,
             portfolio: None,
+            moo_mode: None,
+            pareto_cap: 128,
+            spec: None,
             engine: Mutex::new(None),
         }
     }
@@ -82,7 +95,8 @@ impl Default for ExpContext {
 impl ExpContext {
     /// Build from CLI arguments (`--seed`, `--quick`, `--native`,
     /// `--pjrt`, `--out-dir`/`--out`, `--threads`, `--stable`,
-    /// `--resume`, `--topk`, `--hold-k`, `--portfolio`).
+    /// `--resume`, `--topk`, `--hold-k`, `--portfolio`, `--moo-mode`,
+    /// `--pareto-cap`, `--spec`).
     pub fn from_args(args: &Args) -> ExpContext {
         let backend_choice = if args.flag("native") {
             BackendChoice::Native
@@ -106,6 +120,9 @@ impl ExpContext {
             top_k: args.opt_usize("topk", 5),
             hold_k: args.opt_usize("hold-k", 2).max(1),
             portfolio: args.opt("portfolio").map(String::from),
+            moo_mode: args.opt("moo-mode").map(String::from),
+            pareto_cap: args.opt_usize("pareto-cap", 128).max(1),
+            spec: args.opt("spec").map(String::from),
             ..ExpContext::default()
         }
     }
@@ -282,6 +299,26 @@ mod tests {
         let ctx = ExpContext::from_args(&args);
         assert_eq!(ctx.hold_k, 3);
         assert_eq!(ctx.portfolio.as_deref(), Some("cnn4-to-extras"));
+        // pareto knobs default sensibly and parse
+        assert!(ctx.moo_mode.is_none());
+        assert_eq!(ctx.pareto_cap, 128);
+        assert!(ctx.spec.is_none());
+        let args = Args::parse(
+            [
+                "run", "pareto", "--moo-mode", "metric", "--pareto-cap", "32",
+                "--spec", "resnet18+vgg16:rram",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let ctx = ExpContext::from_args(&args);
+        assert_eq!(ctx.moo_mode.as_deref(), Some("metric"));
+        assert_eq!(ctx.pareto_cap, 32);
+        assert_eq!(ctx.spec.as_deref(), Some("resnet18+vgg16:rram"));
+        // a zero cap clamps to 1
+        let args =
+            Args::parse(["run", "--pareto-cap", "0"].iter().map(|s| s.to_string()));
+        assert_eq!(ExpContext::from_args(&args).pareto_cap, 1);
         // defaults: hold-k 2, every portfolio; 0 clamps to 1
         let ctx = ExpContext::from_args(&Args::parse(["run"].iter().map(|s| s.to_string())));
         assert_eq!(ctx.hold_k, 2);

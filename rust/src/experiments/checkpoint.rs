@@ -46,6 +46,20 @@ const REPORT_KEY: &str = "__report__";
 /// Journal key pinning the run configuration the journal was written with.
 const CONFIG_KEY: &str = "__config__";
 
+/// File name of the **shared cross-experiment cell namespace** under
+/// `<out_dir>/checkpoints/`. Searches that are bit-identical across
+/// experiments — today the specialist bounds, keyed `bound:<set>:<w>`
+/// (same problem, same GA config, same [`crate::scenarios::bound_seed`]
+/// stream in `genmatrix`, `genmatrix_k`, `transfer` and `pareto`) — are
+/// journaled here once and replayed by every later experiment of the
+/// same run, so `imcopt run --all` stops paying for identical bounds
+/// twice. The file is a pure cache: every value is *also* journaled
+/// under the owning experiment's own key, so per-experiment journals
+/// stay standalone-resumable, and the cache is discarded whenever the
+/// bound configuration changes ([`Checkpoint::bind_config`]) or a
+/// non-resume sweep starts ([`Checkpoint::reset_shared`]).
+const SHARED_FILE: &str = "shared_bounds.jsonl";
+
 /// Remove a file, treating "not found" as success and surfacing anything
 /// else (a journal we cannot discard must not be silently appended to).
 fn remove_if_exists(path: &Path) -> Result<()> {
@@ -56,6 +70,41 @@ fn remove_if_exists(path: &Path) -> Result<()> {
     }
 }
 
+/// Load a `{"k": ..., "v": ...}`-per-line JSONL cell file into a map.
+/// A missing file is an empty map (cold start); a kill mid-append can
+/// truncate the final line, so unparseable lines are skipped rather than
+/// poisoning the resume. Any other I/O error surfaces.
+fn load_cells(path: &Path) -> Result<BTreeMap<String, Json>> {
+    let mut cells = BTreeMap::new();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(cells),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading journal {}", path.display()))
+        }
+    };
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!(
+                    "[checkpoint] skipping corrupt journal line in {}: {e}",
+                    path.display()
+                );
+                continue;
+            }
+        };
+        if let (Some(k), Some(v)) = (parsed.get("k").and_then(|k| k.as_str()), parsed.get("v"))
+        {
+            cells.insert(k.to_string(), v.clone());
+        }
+    }
+    Ok(cells)
+}
+
 /// Per-experiment checkpoint state. See the module docs.
 #[derive(Debug, Default)]
 pub struct Checkpoint {
@@ -64,6 +113,12 @@ pub struct Checkpoint {
     journal_path: Option<PathBuf>,
     memo_path: Option<PathBuf>,
     acc_path: Option<PathBuf>,
+    /// Cross-experiment shared namespace (see [`SHARED_FILE`]); loaded at
+    /// open, but consulted only once [`Checkpoint::bind_config`] has
+    /// verified the stored configuration matches this run.
+    shared_path: Option<PathBuf>,
+    shared: BTreeMap<String, Json>,
+    shared_active: bool,
     cells: BTreeMap<String, Json>,
     /// scope (problem config key) → (linear index → decoded
     /// [`Evaluations`]); decoded once at load/absorb time so warming a
@@ -97,10 +152,12 @@ impl Checkpoint {
         let journal_path = dir.join(format!("{id}.jsonl"));
         let memo_path = dir.join(format!("{id}.memo.jsonl"));
         let acc_path = dir.join(format!("{id}.acc.jsonl"));
+        let shared_path = dir.join(SHARED_FILE);
         let mut ckpt = Checkpoint {
             journal_path: Some(journal_path.clone()),
             memo_path: Some(memo_path.clone()),
             acc_path: Some(acc_path.clone()),
+            shared_path: Some(shared_path.clone()),
             ..Checkpoint::default()
         };
         if resume {
@@ -112,42 +169,23 @@ impl Checkpoint {
             remove_if_exists(&memo_path)?;
             remove_if_exists(&acc_path)?;
         }
+        // the shared namespace is a cache shared by the *other* experiments
+        // of this run, so it is loaded even on a cold open (run_selected
+        // discards it once per non-resume sweep via `reset_shared`)
+        ckpt.shared = load_cells(&shared_path)?;
         Ok(ckpt)
     }
 
+    /// Discard the shared cross-experiment namespace under `out_dir`.
+    /// Called once per non-resume `run_selected` sweep, so a fresh sweep
+    /// never reuses another sweep's bounds while the experiments *within*
+    /// it still share theirs.
+    pub fn reset_shared(out_dir: &Path) -> Result<()> {
+        remove_if_exists(&out_dir.join("checkpoints").join(SHARED_FILE))
+    }
+
     fn load_journal(&mut self, path: &Path) -> Result<()> {
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
-            // no journal yet — a cold resume; any other error (permissions,
-            // I/O) must surface rather than silently recomputing everything
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
-            Err(e) => {
-                return Err(e)
-                    .with_context(|| format!("reading journal {}", path.display()))
-            }
-        };
-        for line in text.lines() {
-            if line.trim().is_empty() {
-                continue;
-            }
-            // a kill mid-append can truncate the final line; skip anything
-            // unparseable rather than poisoning the resume
-            let parsed = match json::parse(line) {
-                Ok(v) => v,
-                Err(e) => {
-                    eprintln!(
-                        "[checkpoint] skipping corrupt journal line in {}: {e}",
-                        path.display()
-                    );
-                    continue;
-                }
-            };
-            if let (Some(k), Some(v)) =
-                (parsed.get("k").and_then(|k| k.as_str()), parsed.get("v"))
-            {
-                self.cells.insert(k.to_string(), v.clone());
-            }
-        }
+        self.cells = load_cells(path)?;
         Ok(())
     }
 
@@ -306,6 +344,11 @@ impl Checkpoint {
     /// configuration (seed, budget, topk, backend, stable mode) is an
     /// error — replaying its cells would silently mix results from two
     /// configurations into one report.
+    ///
+    /// Binding also activates the shared cross-experiment namespace:
+    /// its stored configuration must match too, but since the shared
+    /// file is only a cache backed by the per-experiment journals, a
+    /// mismatch just discards it instead of erroring.
     pub fn bind_config(&mut self, config: &Json) -> Result<()> {
         if let Some(stored) = self.cells.get(CONFIG_KEY) {
             anyhow::ensure!(
@@ -314,12 +357,105 @@ impl Checkpoint {
                  ({stored}) than this run ({config}); match the original flags \
                  or rerun without --resume"
             );
+            self.activate_shared(config)?;
             return Ok(());
         }
         let value = config.clone();
         self.append_journal(CONFIG_KEY, &value)?;
         self.cells.insert(CONFIG_KEY.to_string(), value);
+        self.activate_shared(config)?;
         Ok(())
+    }
+
+    /// Engage the shared namespace under `config`, discarding any cells
+    /// cached under a different configuration (see [`SHARED_FILE`]).
+    fn activate_shared(&mut self, config: &Json) -> Result<()> {
+        let Some(path) = self.shared_path.clone() else {
+            return Ok(());
+        };
+        match self.shared.get(CONFIG_KEY) {
+            Some(stored) if stored == config => {}
+            _ => {
+                // stale or uninitialized cache: restart it for this config
+                self.shared.clear();
+                let line = Json::obj(vec![
+                    ("k", Json::Str(CONFIG_KEY.to_string())),
+                    ("v", config.clone()),
+                ])
+                .to_string();
+                std::fs::write(&path, line + "\n")
+                    .with_context(|| format!("initializing {}", path.display()))?;
+                self.shared.insert(CONFIG_KEY.to_string(), config.clone());
+            }
+        }
+        self.shared_active = true;
+        Ok(())
+    }
+
+    fn append_shared(&self, key: &str, value: &Json) -> Result<()> {
+        let Some(path) = &self.shared_path else {
+            return Ok(());
+        };
+        let line = Json::obj(vec![
+            ("k", Json::Str(key.to_string())),
+            ("v", value.clone()),
+        ])
+        .to_string();
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening shared journal {}", path.display()))?;
+        writeln!(f, "{line}").context("appending shared cell")?;
+        f.flush().context("flushing shared journal")?;
+        Ok(())
+    }
+
+    /// Like [`Checkpoint::cell`], but additionally published under
+    /// `shared_key` in the cross-experiment namespace (when active — see
+    /// [`Checkpoint::bind_config`]). Resolution order: this experiment's
+    /// own journal (standalone resume), then the shared cache (another
+    /// experiment of the same run computed the identical search — the
+    /// value is copied into this journal so it stays standalone), then
+    /// `compute`. Shared hits count as reused, not computed.
+    pub fn shared_cell(
+        &mut self,
+        key: &str,
+        shared_key: &str,
+        compute: impl FnOnce() -> Result<Json>,
+    ) -> Result<Json> {
+        if let Some(v) = self.cells.get(key).cloned() {
+            self.reused += 1;
+            // publish a replayed value too, so later experiments of a
+            // partially-resumed sweep reuse it instead of recomputing
+            if self.shared_active && !self.shared.contains_key(shared_key) {
+                self.append_shared(shared_key, &v)?;
+                self.shared.insert(shared_key.to_string(), v.clone());
+            }
+            return Ok(v);
+        }
+        if self.shared_active {
+            if let Some(v) = self.shared.get(shared_key).cloned() {
+                self.append_journal(key, &v)?;
+                self.cells.insert(key.to_string(), v.clone());
+                self.reused += 1;
+                return Ok(v);
+            }
+        }
+        if let Some(n) = self.abort_after_cells {
+            if self.computed >= n {
+                bail!("checkpoint: simulated kill after {n} fresh cells");
+            }
+        }
+        let value = compute().with_context(|| format!("computing cell '{key}'"))?;
+        self.append_journal(key, &value)?;
+        self.cells.insert(key.to_string(), value.clone());
+        if self.shared_active && !self.shared.contains_key(shared_key) {
+            self.append_shared(shared_key, &value)?;
+            self.shared.insert(shared_key.to_string(), value.clone());
+        }
+        self.computed += 1;
+        Ok(value)
     }
 
     /// Journal the finished experiment's report (completion marker).
@@ -730,6 +866,79 @@ mod tests {
         // a cold (non-resume) open discards the journal, so any config binds
         let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
         ck.bind_config(&cfg_b).unwrap();
+    }
+
+    #[test]
+    fn shared_cells_cross_experiments_and_stay_standalone() {
+        let dir = tmp("shared");
+        let cfg = Json::obj(vec![("seed", Json::Str("5".into()))]);
+        // experiment A computes the bound and publishes it
+        {
+            let mut a = Checkpoint::for_experiment(&dir, "expa", false).unwrap();
+            a.bind_config(&cfg).unwrap();
+            let v = a
+                .shared_cell("expa:cnn4:bound:1", "bound:cnn4:1", || Ok(Json::Num(7.0)))
+                .unwrap();
+            assert_eq!(v, Json::Num(7.0));
+            assert_eq!((a.computed(), a.reused()), (1, 0));
+        }
+        // experiment B under the same config reuses it without computing
+        {
+            let mut b = Checkpoint::for_experiment(&dir, "expb", false).unwrap();
+            b.bind_config(&cfg).unwrap();
+            let v = b
+                .shared_cell("expb:cnn4:bound:1", "bound:cnn4:1", || {
+                    panic!("must come from the shared namespace")
+                })
+                .unwrap();
+            assert_eq!(v, Json::Num(7.0));
+            assert_eq!((b.computed(), b.reused()), (0, 1));
+        }
+        // ... and B's own journal is standalone: a resume replays the cell
+        // even after the shared namespace is discarded
+        Checkpoint::reset_shared(&dir).unwrap();
+        let mut b = Checkpoint::for_experiment(&dir, "expb", true).unwrap();
+        b.bind_config(&cfg).unwrap();
+        let v = b
+            .shared_cell("expb:cnn4:bound:1", "bound:cnn4:1", || panic!("journaled"))
+            .unwrap();
+        assert_eq!(v, Json::Num(7.0));
+    }
+
+    #[test]
+    fn shared_namespace_discards_on_config_change_and_without_binding() {
+        let dir = tmp("shared-config");
+        let cfg_a = Json::obj(vec![("seed", Json::Str("5".into()))]);
+        let cfg_b = Json::obj(vec![("seed", Json::Str("6".into()))]);
+        {
+            let mut a = Checkpoint::for_experiment(&dir, "expa", false).unwrap();
+            a.bind_config(&cfg_a).unwrap();
+            a.shared_cell("k", "bound:cnn4:0", || Ok(Json::Num(1.0))).unwrap();
+        }
+        // a different configuration must not see the cached value
+        {
+            let mut b = Checkpoint::for_experiment(&dir, "expb", false).unwrap();
+            b.bind_config(&cfg_b).unwrap();
+            let v = b
+                .shared_cell("k", "bound:cnn4:0", || Ok(Json::Num(2.0)))
+                .unwrap();
+            assert_eq!(v, Json::Num(2.0), "stale shared value leaked across configs");
+            assert_eq!(b.computed(), 1);
+        }
+        // without bind_config the namespace stays inactive: no reads, no
+        // writes, plain cell semantics
+        let mut c = Checkpoint::for_experiment(&dir, "expc", false).unwrap();
+        let v = c
+            .shared_cell("k", "bound:cnn4:0", || Ok(Json::Num(3.0)))
+            .unwrap();
+        assert_eq!(v, Json::Num(3.0));
+        // the b-config cache was not clobbered by the unbound write
+        let mut d = Checkpoint::for_experiment(&dir, "expd", false).unwrap();
+        d.bind_config(&cfg_b).unwrap();
+        let v = d
+            .shared_cell("k2", "bound:cnn4:0", || panic!("cached under cfg_b"))
+            .unwrap();
+        assert_eq!(v, Json::Num(2.0));
     }
 
     #[test]

@@ -70,6 +70,38 @@ pub fn ga_cell(
     opt_cell(ckpt, key, || run_ga(problem, cfg, seed))
 }
 
+/// [`opt_cell`] through the shared cross-experiment namespace
+/// ([`Checkpoint::shared_cell`]): the result is journaled under this
+/// experiment's `key` *and* published under `shared_key`, so later
+/// experiments of the same run replay it instead of recomputing a
+/// bit-identical search. Only use for searches whose (problem, config,
+/// seed) derivation is identical wherever `shared_key` is used — the
+/// specialist bounds (`bound:<set>:<w>`) are the canonical case.
+pub fn opt_shared_cell(
+    ckpt: &mut Checkpoint,
+    key: &str,
+    shared_key: &str,
+    compute: impl FnOnce() -> OptResult,
+) -> Result<OptResult> {
+    let v = ckpt.shared_cell(key, shared_key, || {
+        Ok(checkpoint::opt_result_to_json(&compute()))
+    })?;
+    checkpoint::opt_result_from_json(&v)
+}
+
+/// The scenario families an experiment should sweep: the user-defined
+/// `--spec` family when given ([`ScenarioSpec::parse`]), the two paper
+/// families otherwise. Honored by `genmatrix_k`, `transfer` and
+/// `pareto` (the `genmatrix` paper reproduction always runs the paper
+/// families).
+pub fn resolve_specs(ctx: &ExpContext) -> Result<Vec<ScenarioSpec>> {
+    match &ctx.spec {
+        Some(s) => Ok(vec![ScenarioSpec::parse(s)
+            .with_context(|| format!("parsing --spec '{s}'"))?]),
+        None => Ok(scenarios::paper_specs()),
+    }
+}
+
 /// [`naive_largest_search`] as a checkpoint cell (the §IV-A baseline used
 /// by fig3/fig5/fig10): largest workload + conventional random-init GA,
 /// with the per-config eval memo persisted for warm resume. One
@@ -202,12 +234,38 @@ pub fn portfolio_cell(
     })
 }
 
-/// The separate-search (specialist) EDAP bound for one workload,
-/// journaled once per experiment under `<exp>:<set>:bound:<wi>` and
-/// replayed for every portfolio that deploys on `wi` — the bounds are
-/// computed once and memoized through the checkpoint layer, whatever the
-/// number of portfolios sharing them. Seeds, GA configuration and gap
-/// arithmetic mirror `genmatrix`'s specialist runs.
+/// The separate-search (specialist) bound for one workload: the full
+/// optimizer result, journaled once per experiment under
+/// `<exp>:<set>:bound:<wi>` and *shared across experiments* through the
+/// `bound:<set>:<wi>` namespace ([`Checkpoint::shared_cell`]) — the
+/// (problem, GA config, [`scenarios::bound_seed`]) derivation is
+/// identical in `genmatrix`, `genmatrix_k`, `transfer` and `pareto`, so
+/// one run of `imcopt run --all` computes each bound exactly once.
+pub fn separate_bound_result(
+    ckpt: &mut Checkpoint,
+    exp_id: &str,
+    ctx: &ExpContext,
+    spec: &ScenarioSpec,
+    wi: usize,
+) -> Result<(OptResult, f64)> {
+    let sep_problem = ctx
+        .problem(&spec.space, &spec.set, spec.mem, spec.objective())
+        .restricted(wi);
+    ckpt.warm_problem(&sep_problem);
+    let sep = opt_shared_cell(
+        ckpt,
+        &format!("{exp_id}:{}:bound:{wi}", spec.name),
+        &format!("bound:{}:{wi}", spec.name),
+        || run_ga(&sep_problem, four_phase(ctx), scenarios::bound_seed(ctx.seed, wi)),
+    )?;
+    ckpt.absorb_problem(&sep_problem)?;
+    let bound = per_workload_scores(&sep_problem, &sep.best, &Objective::edap())[wi];
+    Ok((sep, bound))
+}
+
+/// [`separate_bound_result`] reduced to the bound itself: the
+/// specialist's EDAP on its own workload (the denominator of every
+/// deploy-side gap).
 pub fn separate_bound_cell(
     ckpt: &mut Checkpoint,
     exp_id: &str,
@@ -215,19 +273,7 @@ pub fn separate_bound_cell(
     spec: &ScenarioSpec,
     wi: usize,
 ) -> Result<f64> {
-    let sep_problem = ctx
-        .problem(&spec.space, &spec.set, spec.mem, spec.objective())
-        .restricted(wi);
-    ckpt.warm_problem(&sep_problem);
-    let sep = ga_cell(
-        ckpt,
-        &format!("{exp_id}:{}:bound:{wi}", spec.name),
-        &sep_problem,
-        four_phase(ctx),
-        scenarios::bound_seed(ctx.seed, wi),
-    )?;
-    ckpt.absorb_problem(&sep_problem)?;
-    Ok(per_workload_scores(&sep_problem, &sep.best, &Objective::edap())[wi])
+    Ok(separate_bound_result(ckpt, exp_id, ctx, spec, wi)?.1)
 }
 
 /// Write one portfolio's standalone JSON cell artifact (shape pinned by

@@ -66,7 +66,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     // transfer (scenarios::paper_specs) so the sweeps cannot drift apart
     for spec in scenarios::paper_specs() {
         let (set_name, set, mem, space, agg) =
-            (spec.name, &spec.set, spec.mem, &spec.space, spec.agg);
+            (spec.name.as_str(), &spec.set, spec.mem, &spec.space, spec.agg);
         let objective = spec.objective();
         let mut t = Table::new(
             &format!(
@@ -105,25 +105,17 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
             ckpt.absorb_problem(&joint_problem)?;
 
             // the specialist bound: separate search on the held-out
-            // workload (salted seed so the RNG streams differ, as in
-            // fig5's strategy runs)
-            let sep_problem = ctx.problem(space, set, mem, objective).restricted(wi);
-            ckpt.warm_problem(&sep_problem);
-            let sep = common::ga_cell(
-                ckpt,
-                &format!("genmatrix:{set_name}:{wi}:sep"),
-                &sep_problem,
-                common::four_phase(ctx),
-                ctx.seed.wrapping_mul(31).wrapping_add(wi as u64 * 1009),
-            )?;
-            ckpt.absorb_problem(&sep_problem)?;
+            // workload ([`scenarios::bound_seed`]-salted RNG stream, as in
+            // fig5's strategy runs), journaled through the shared
+            // cross-experiment `bound:<set>:<w>` namespace so the
+            // portfolio experiments replay it instead of recomputing
+            let (sep, bound) =
+                common::separate_bound_result(ckpt, "genmatrix", ctx, &spec, wi)?;
 
-            // per-workload EDAP of both designs on the *held-out* workload
+            // per-workload EDAP of the joint design on the held-out workload
             let joint_scores =
                 common::per_workload_scores(&joint_problem, &joint.best, &edap);
-            let sep_scores = common::per_workload_scores(&sep_problem, &sep.best, &edap);
             let joint_held = joint_scores[wi];
-            let bound = sep_scores[wi];
             let gap = scenarios::gap(joint_held, bound);
             if gap.is_finite() {
                 gaps.push(gap);

@@ -22,6 +22,11 @@
 //! (resume skips completed cells) and emits a standalone JSON artifact
 //! under `<out_dir>/genmatrix_k_cells/<set>-<portfolio>.json`, shape
 //! pinned by `schemas/portfolio_cell.schema.json`.
+//!
+//! `--spec <w1>+<w2>+...:<mem>[:<agg>]` swaps the paper families for a
+//! user-defined one (`scenarios::ScenarioSpec::parse`); the specialist
+//! bounds ride the shared cross-experiment `bound:<set>:<w>` namespace
+//! either way.
 
 use super::checkpoint::Checkpoint;
 use super::common;
@@ -62,8 +67,15 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     std::fs::create_dir_all(&cells_dir)
         .with_context(|| format!("creating {}", cells_dir.display()))?;
 
-    for spec in scenarios::paper_specs() {
+    // paper families, or the user-defined `--spec` family
+    for spec in common::resolve_specs(ctx)? {
         let n = spec.set.len();
+        anyhow::ensure!(
+            n >= 2,
+            "hold-k-out needs at least 2 workloads in the set ('{}' has {n}); \
+             widen --spec",
+            spec.name
+        );
         let max_k = ctx.hold_k.clamp(1, n - 1);
         let names = spec.set.names();
         let mut summary = Table::new(
@@ -196,5 +208,28 @@ mod tests {
                 assert_eq!(gaps[0].get("in_train"), Some(&json::Json::Bool(false)));
             }
         }
+    }
+
+    #[test]
+    fn spec_family_replaces_the_paper_sets() {
+        let mut ctx = ExpContext::quick(57);
+        ctx.hold_k = 1;
+        ctx.spec = Some("resnet18+alexnet:rram".into());
+        ctx.out_dir = std::env::temp_dir().join("imcopt-genmatrix-k-spec-test");
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
+        // one summary + one per-workload table for the single custom family
+        assert_eq!(r.tables.len(), 2);
+        assert_eq!(r.tables[1].rows.len(), 2);
+        for wi in 0..2 {
+            let path = ctx
+                .out_dir
+                .join("genmatrix_k_cells")
+                .join(format!("custom-k1-{wi}.json"));
+            assert!(path.exists(), "{}", path.display());
+        }
+        // a single-workload spec cannot hold anything out
+        ctx.spec = Some("alexnet:rram".into());
+        assert!(run(&ctx, &mut Checkpoint::disabled()).is_err());
     }
 }

@@ -1,0 +1,464 @@
+//! Pareto fronts of the joint co-optimization problem — the scalarized
+//! EDAP number opened up into explicit trade-off surfaces.
+//!
+//! For each scenario family (`scenarios::paper_specs`, or the `--spec`
+//! family) the experiment runs, at **equal search budget**:
+//!
+//! * the scalarized four-phase GA (the paper's optimizer) as the
+//!   single-point reference, and
+//! * NSGA-II ([`crate::pareto::Nsga2`]) once per `--moo-mode`:
+//!   **metric** — axes `(agg(E), agg(L), A)`, whose product is the
+//!   scalar EDAP, so the front's minimum-product corner lands in the
+//!   same units as the GA best; **workload** — one EDAP axis per
+//!   workload, the literal cross-workload trade-off front behind the
+//!   paper's "one design serves many workloads" claim.
+//!
+//! Both optimizers share one `JointProblem` (and therefore one memo
+//! cache, threading pipeline and compiled evaluator). Every search is a
+//! checkpoint cell, so `--resume` replays completed fronts; per-front
+//! JSON artifacts land in `<out_dir>/pareto_fronts/<set>-<mode>.json`,
+//! shape pinned by `schemas/pareto_front.schema.json` and validated by
+//! `imcopt validate --out-dir`. Report tables compare the knee point
+//! (best compromise) and the minimum-EDAP corner against the
+//! scalarized GA best; `--pareto-cap` bounds the archived front.
+//!
+//! Determinism: fronts, indicators and artifacts are pure functions of
+//! (seed, config) — bit-identical across `--threads` settings and
+//! kill/`--resume` replays (`rust/tests/pareto_front.rs`).
+
+use super::checkpoint::{self, Checkpoint};
+use super::common;
+use crate::coordinator::ExpContext;
+use crate::pareto::{
+    indicators, MooMode, MooProblem, MooResult, MultiObjectiveOptimizer, Nsga2, Nsga2Config,
+};
+use crate::report::Report;
+use crate::search::{GaConfig, InitStrategy, Problem};
+use crate::space::Design;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use anyhow::{Context, Result};
+
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Pareto;
+
+impl super::Experiment for Pareto {
+    fn id(&self) -> &'static str {
+        "pareto"
+    }
+    fn description(&self) -> &'static str {
+        "NSGA-II Pareto fronts: energy/latency/area and per-workload EDAP trade-offs"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Medium
+    }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Cell
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+/// The modes to sweep: `--moo-mode metric|workload` selects one,
+/// `both`/unset runs both.
+fn selected_modes(ctx: &ExpContext) -> Result<Vec<MooMode>> {
+    match ctx.moo_mode.as_deref() {
+        None | Some("both") => Ok(vec![MooMode::Metric, MooMode::Workload]),
+        Some(s) => Ok(vec![MooMode::parse(s)?]),
+    }
+}
+
+/// NSGA-II sized by the context — the exact budget and sampling pools of
+/// the scalarized GA it is compared against.
+fn nsga_config(ctx: &ExpContext) -> Nsga2Config {
+    let (p_h, p_e) = ctx.sampling();
+    Nsga2Config {
+        init: InitStrategy::HammingDiverse { p_h, p_e },
+        cap: ctx.pareto_cap,
+        ..Nsga2Config::paper(ctx.budget())
+    }
+}
+
+/// One seed per scenario family, shared by the GA reference and every
+/// NSGA-II mode: both searches then draw the *same* Hamming-sampled
+/// initial population, so the corner-vs-best comparison starts from a
+/// common anchor and isolates the selection strategy.
+fn family_seed(base: u64, si: usize) -> u64 {
+    base.wrapping_add(si as u64 * 12007)
+}
+
+/// Journal a [`MooResult`] as a checkpoint cell.
+fn moo_cell(
+    ckpt: &mut Checkpoint,
+    key: &str,
+    compute: impl FnOnce() -> MooResult,
+) -> Result<MooResult> {
+    let v = ckpt.cell(key, || Ok(moo_result_to_json(&compute())))?;
+    moo_result_from_json(&v)
+}
+
+/// Serialize a multi-objective result (journal cell payload).
+pub fn moo_result_to_json(r: &MooResult) -> Json {
+    Json::obj(vec![
+        ("algorithm", Json::Str(r.algorithm.clone())),
+        (
+            "front",
+            Json::Arr(
+                r.front
+                    .iter()
+                    .map(|(d, o)| {
+                        Json::Arr(vec![
+                            checkpoint::design_to_json(d),
+                            Json::Arr(o.iter().map(|&x| Json::f64(x)).collect()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "front_sizes",
+            Json::Arr(r.front_sizes.iter().map(|&n| Json::Num(n as f64)).collect()),
+        ),
+        ("evals", Json::Num(r.evals as f64)),
+        ("wall_us", Json::Num(r.wall.as_micros() as f64)),
+    ])
+}
+
+/// Deserialize a result journaled by [`moo_result_to_json`].
+pub fn moo_result_from_json(v: &Json) -> Result<MooResult> {
+    let front = v
+        .get("front")
+        .and_then(|f| f.as_arr())
+        .context("moo result: missing 'front'")?
+        .iter()
+        .map(|pair| -> Result<(Design, Vec<f64>)> {
+            let pair = pair.as_arr().context("front entry: expected a pair")?;
+            anyhow::ensure!(pair.len() == 2, "front entry: expected [design, objectives]");
+            let objs = pair[1]
+                .as_arr()
+                .context("front objectives: expected an array")?
+                .iter()
+                .map(|x| x.as_f64_lenient().context("objective: expected a number"))
+                .collect::<Result<Vec<f64>>>()?;
+            Ok((checkpoint::design_from_json(&pair[0])?, objs))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let front_sizes = v
+        .get("front_sizes")
+        .and_then(|f| f.as_arr())
+        .context("moo result: missing 'front_sizes'")?
+        .iter()
+        .map(|x| x.as_usize().context("front size: expected a number"))
+        .collect::<Result<Vec<usize>>>()?;
+    Ok(MooResult {
+        algorithm: v
+            .get("algorithm")
+            .and_then(|a| a.as_str())
+            .context("moo result: missing 'algorithm'")?
+            .to_string(),
+        front,
+        front_sizes,
+        evals: v
+            .get("evals")
+            .and_then(|x| x.as_usize())
+            .context("moo result: missing 'evals'")?,
+        wall: std::time::Duration::from_micros(
+            v.get("wall_us")
+                .and_then(|x| x.as_f64_lenient())
+                .context("moo result: missing 'wall_us'")? as u64,
+        ),
+    })
+}
+
+/// Index of the minimum finite scalar (first on ties); `None` when no
+/// entry is finite.
+fn argmin_scalar(scalars: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &s) in scalars.iter().enumerate() {
+        if !s.is_finite() {
+            continue;
+        }
+        match best {
+            Some((_, b)) if s >= b => {}
+            _ => best = Some((i, s)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+    let mut report = Report::new(
+        "pareto",
+        "NSGA-II Pareto fronts vs the scalarized four-phase GA (equal budget)",
+    );
+    let fronts_dir = ctx.out_dir.join("pareto_fronts");
+    // every run (fresh or resumed) rewrites the complete front set for
+    // its configuration, so clearing first guarantees the directory
+    // never mixes fronts from differently-configured sweeps (a stale
+    // `--seed`/`--moo-mode`/`--spec` artifact would otherwise survive
+    // and pass `imcopt validate` as if it belonged to this run)
+    if fronts_dir.exists() {
+        std::fs::remove_dir_all(&fronts_dir)
+            .with_context(|| format!("clearing {}", fronts_dir.display()))?;
+    }
+    std::fs::create_dir_all(&fronts_dir)
+        .with_context(|| format!("creating {}", fronts_dir.display()))?;
+    let modes = selected_modes(ctx)?;
+
+    let mut summary = Table::new(
+        "front quality and corner comparison (corner = minimum-EDAP front point; \
+         GA best = scalarized four-phase GA at the same budget and seed)",
+        &[
+            "set", "mode", "axes", "front", "hv(norm)", "spacing", "knee EDAP",
+            "corner EDAP", "GA best EDAP", "corner/GA",
+        ],
+    );
+
+    for (si, spec) in common::resolve_specs(ctx)?.iter().enumerate() {
+        let problem = ctx.problem(&spec.space, &spec.set, spec.mem, spec.objective());
+        ckpt.warm_problem(&problem);
+        let seed = family_seed(ctx.seed, si);
+
+        // scalarized reference at the same budget
+        let ga_cfg = GaConfig {
+            top_k: ctx.top_k,
+            ..common::four_phase(ctx)
+        };
+        let ga = common::ga_cell(
+            ckpt,
+            &format!("pareto:{}:ga", spec.name),
+            &problem,
+            ga_cfg,
+            seed,
+        )?;
+
+        for mode in &modes {
+            let moo = MooProblem::new(&problem, *mode);
+            let mr = moo_cell(
+                ckpt,
+                &format!("pareto:{}:{}:front", spec.name, mode.name()),
+                || Nsga2::new(nsga_config(ctx)).run(&moo, &mut Rng::seed_from(seed)),
+            )?;
+            let objs = mr.objective_vectors();
+            let front_designs: Vec<Design> =
+                mr.front.iter().map(|(d, _)| d.clone()).collect();
+            // scalar joint EDAP of every front design (pure cache hits for
+            // the fresh-run path; deterministic recomputation on resume)
+            let scalars = problem.score_batch(&front_designs);
+            let knee = indicators::knee_index(&objs);
+            let corner = argmin_scalar(&scalars);
+            let hv = indicators::normalized_hypervolume(&objs);
+            let spc = indicators::spacing(&objs);
+            let corner_scalar = corner.map(|i| scalars[i]).unwrap_or(f64::NAN);
+            let ratio = if ga.best_score.is_finite() && ga.best_score > 0.0 {
+                corner_scalar / ga.best_score
+            } else {
+                f64::NAN
+            };
+            let active = moo.active_indices();
+            let axes = moo.vector_objective.axes(&spec.set, &active);
+
+            summary.row(vec![
+                spec.name.clone(),
+                mode.name().into(),
+                axes.len().to_string(),
+                mr.front.len().to_string(),
+                common::s(hv),
+                common::s(spc),
+                common::s(knee.map(|i| scalars[i]).unwrap_or(f64::NAN)),
+                common::s(corner_scalar),
+                common::s(ga.best_score),
+                common::s(ratio),
+            ]);
+
+            // standalone machine-readable front artifact (rewritten even on
+            // resume so the directory is complete after any run)
+            let point_json = |i: usize| {
+                Json::obj(vec![
+                    ("design", checkpoint::design_to_json(&front_designs[i])),
+                    ("described", Json::Str(spec.space.describe(&front_designs[i]))),
+                    (
+                        "objectives",
+                        Json::Arr(objs[i].iter().map(|&x| Json::f64(x)).collect()),
+                    ),
+                    ("scalar_edap", Json::f64(scalars[i])),
+                ])
+            };
+            let opt_point = |i: Option<usize>| match i {
+                Some(i) => point_json(i),
+                None => Json::Null,
+            };
+            let cell = Json::obj(vec![
+                ("experiment", Json::Str("pareto".into())),
+                ("set", Json::Str(spec.name.clone())),
+                ("mem", Json::Str(spec.mem.name().into())),
+                ("aggregation", Json::Str(spec.agg.name().into())),
+                ("mode", Json::Str(mode.name().into())),
+                (
+                    "axes",
+                    Json::Arr(axes.iter().map(|a| Json::Str(a.clone())).collect()),
+                ),
+                ("cap", Json::Num(ctx.pareto_cap as f64)),
+                ("seed", Json::Num(ctx.seed as f64)),
+                ("points", Json::Arr((0..mr.front.len()).map(point_json).collect())),
+                (
+                    "indicators",
+                    Json::obj(vec![
+                        ("front_size", Json::Num(mr.front.len() as f64)),
+                        ("hypervolume_norm", Json::f64(hv)),
+                        ("spacing", Json::f64(spc)),
+                    ]),
+                ),
+                ("knee", opt_point(knee)),
+                ("corner", opt_point(corner)),
+                (
+                    "ga_best",
+                    Json::obj(vec![
+                        ("design", checkpoint::design_to_json(&ga.best)),
+                        ("described", Json::Str(spec.space.describe(&ga.best))),
+                        ("scalar_edap", Json::f64(ga.best_score)),
+                    ]),
+                ),
+                ("corner_vs_ga", Json::f64(ratio)),
+            ]);
+            let path = fronts_dir.join(format!("{}-{}.json", spec.name, mode.name()));
+            std::fs::write(&path, cell.to_string() + "\n")
+                .with_context(|| format!("writing pareto front {}", path.display()))?;
+        }
+        ckpt.absorb_problem(&problem)?;
+    }
+    report.table(summary);
+    report.note(
+        "metric mode: axes (agg(E) mJ, agg(L) ms, A mm2) — their product is the \
+         scalar EDAP, so 'corner EDAP' is directly comparable to the GA best at \
+         the same budget and seed. workload mode: one EDAP axis per workload — \
+         the cross-workload trade-off surface; its knee is the front's best \
+         compromise across workloads. hv(norm) is the hypervolume of the \
+         min-max-normalized front against the 1.1^d reference; see docs/pareto.md.",
+    );
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn moo_result_codec_roundtrips_bit_exact() {
+        let r = MooResult {
+            algorithm: "NSGA-II (4-phase operators)".into(),
+            front: vec![
+                (Design(vec![1; 10]), vec![1.0 / 3.0, 2.5, 7.0]),
+                (Design(vec![2; 10]), vec![0.5, f64::INFINITY, 1.0]),
+            ],
+            front_sizes: vec![1, 2, 2],
+            evals: 480,
+            wall: std::time::Duration::from_micros(123_456),
+        };
+        let j = moo_result_to_json(&r);
+        let back = moo_result_from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.algorithm, r.algorithm);
+        assert_eq!(back.front.len(), 2);
+        for ((da, oa), (db, ob)) in r.front.iter().zip(&back.front) {
+            assert_eq!(da, db);
+            for (x, y) in oa.iter().zip(ob) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(back.front_sizes, r.front_sizes);
+        assert_eq!(back.evals, r.evals);
+        assert_eq!(back.wall, r.wall);
+    }
+
+    #[test]
+    fn mode_selection_honors_the_knob() {
+        let mut ctx = ExpContext::quick(1);
+        assert_eq!(selected_modes(&ctx).unwrap().len(), 2);
+        ctx.moo_mode = Some("both".into());
+        assert_eq!(selected_modes(&ctx).unwrap().len(), 2);
+        ctx.moo_mode = Some("metric".into());
+        assert_eq!(selected_modes(&ctx).unwrap(), vec![MooMode::Metric]);
+        ctx.moo_mode = Some("workload".into());
+        assert_eq!(selected_modes(&ctx).unwrap(), vec![MooMode::Workload]);
+        ctx.moo_mode = Some("nope".into());
+        assert!(selected_modes(&ctx).is_err());
+    }
+
+    #[test]
+    fn argmin_is_nan_safe_and_first_on_ties() {
+        assert_eq!(argmin_scalar(&[3.0, 1.0, 1.0, f64::NAN]), Some(1));
+        assert_eq!(argmin_scalar(&[f64::INFINITY, f64::NAN]), None);
+        assert_eq!(argmin_scalar(&[]), None);
+    }
+
+    #[test]
+    fn quick_run_emits_fronts_for_both_sets_and_modes() {
+        let mut ctx = ExpContext::quick(71);
+        ctx.out_dir = std::env::temp_dir().join("imcopt-pareto-test");
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
+        assert_eq!(r.tables.len(), 1);
+        assert_eq!(r.tables[0].rows.len(), 4, "2 sets x 2 modes");
+        for set in ["cnn4", "all9"] {
+            for mode in ["metric", "workload"] {
+                let path = ctx
+                    .out_dir
+                    .join("pareto_fronts")
+                    .join(format!("{set}-{mode}.json"));
+                let text = std::fs::read_to_string(&path)
+                    .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                let v = json::parse(&text).unwrap();
+                assert_eq!(v.get("experiment").and_then(|e| e.as_str()), Some("pareto"));
+                assert_eq!(v.get("mode").and_then(|m| m.as_str()), Some(mode));
+                let axes = v.get("axes").and_then(|a| a.as_arr()).unwrap();
+                let expected = if mode == "metric" {
+                    3
+                } else if set == "cnn4" {
+                    4
+                } else {
+                    9
+                };
+                assert_eq!(axes.len(), expected, "{set}-{mode}");
+                let points = v.get("points").and_then(|p| p.as_arr()).unwrap();
+                assert!(!points.is_empty(), "{set}-{mode}: empty front");
+                for p in points {
+                    assert_eq!(
+                        p.get("objectives").and_then(|o| o.as_arr()).unwrap().len(),
+                        expected
+                    );
+                }
+                assert!(v.get("ga_best").unwrap().get("scalar_edap").is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn custom_spec_and_single_mode() {
+        let mut ctx = ExpContext::quick(73);
+        ctx.out_dir = std::env::temp_dir().join("imcopt-pareto-spec-test");
+        ctx.spec = Some("resnet18+alexnet:rram".into());
+        ctx.moo_mode = Some("workload".into());
+        ctx.pareto_cap = 8;
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
+        assert_eq!(r.tables[0].rows.len(), 1);
+        let path = ctx.out_dir.join("pareto_fronts/custom-workload.json");
+        let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let points = v.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert!(points.len() <= 8, "--pareto-cap must bound the front");
+        assert_eq!(v.get("cap").and_then(|c| c.as_usize()), Some(8));
+        // a re-run under a different mode must not leave the old front
+        // behind: the directory always reflects exactly one configuration
+        ctx.moo_mode = Some("metric".into());
+        run(&ctx, &mut Checkpoint::disabled()).unwrap();
+        let fronts: Vec<_> = std::fs::read_dir(ctx.out_dir.join("pareto_fronts"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .collect();
+        assert_eq!(fronts, vec!["custom-metric.json"], "stale fronts survived");
+    }
+}

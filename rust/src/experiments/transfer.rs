@@ -49,10 +49,32 @@ impl super::Experiment for Transfer {
     }
 }
 
-/// Resolve `--portfolio` against the registered transfer portfolios
+/// The scenario and its transfer portfolios: the paper's all9 set by
+/// default, or a user-defined `--spec` family split at the half
+/// (`scenarios::split_transfer_portfolios` — train on the first ⌈n/2⌉
+/// workloads, deploy on the extras / the full set / the all-joint
+/// reference).
+fn spec_and_portfolios(ctx: &ExpContext) -> Result<(scenarios::ScenarioSpec, Vec<Portfolio>)> {
+    match &ctx.spec {
+        None => Ok((scenarios::ScenarioSpec::all9(), scenarios::transfer_portfolios())),
+        Some(s) => {
+            let spec = scenarios::ScenarioSpec::parse(s)
+                .with_context(|| format!("parsing --spec '{s}'"))?;
+            let n = spec.set.len();
+            anyhow::ensure!(
+                n >= 2,
+                "transfer needs at least 2 workloads in the set (got {n}); widen --spec"
+            );
+            let ports = scenarios::split_transfer_portfolios(n, n.div_ceil(2).min(n - 1));
+            Ok((spec, ports))
+        }
+    }
+}
+
+/// Resolve `--portfolio` against the scenario's transfer portfolios
 /// (unknown ids fail fast with the available list).
-fn selected_portfolios(ctx: &ExpContext) -> Result<Vec<Portfolio>> {
-    let all = scenarios::transfer_portfolios();
+fn selected_portfolios(ctx: &ExpContext, all: &[Portfolio]) -> Result<Vec<Portfolio>> {
+    let all = all.to_vec();
     let Some(csv) = &ctx.portfolio else {
         return Ok(all);
     };
@@ -73,9 +95,9 @@ fn selected_portfolios(ctx: &ExpContext) -> Result<Vec<Portfolio>> {
 }
 
 pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
-    let spec = scenarios::ScenarioSpec::all9();
+    let (spec, all_ports) = spec_and_portfolios(ctx)?;
     let names = spec.set.names();
-    let ports = selected_portfolios(ctx)?;
+    let ports = selected_portfolios(ctx, &all_ports)?;
     let mut report = Report::new(
         "transfer",
         "Cross-set transfer: train/deploy portfolios vs per-workload bounds",
@@ -182,17 +204,60 @@ mod tests {
 
     #[test]
     fn portfolio_filter_selects_and_rejects() {
+        let all = scenarios::transfer_portfolios();
         let mut ctx = ExpContext::quick(61);
         ctx.portfolio = Some("cnn4-to-extras".into());
-        assert_eq!(selected_portfolios(&ctx).unwrap().len(), 1);
+        assert_eq!(selected_portfolios(&ctx, &all).unwrap().len(), 1);
         ctx.portfolio = Some("cnn4-to-extras, all9-joint".into());
-        assert_eq!(selected_portfolios(&ctx).unwrap().len(), 2);
+        assert_eq!(selected_portfolios(&ctx, &all).unwrap().len(), 2);
         ctx.portfolio = Some("nope".into());
-        let err = selected_portfolios(&ctx).unwrap_err();
+        let err = selected_portfolios(&ctx, &all).unwrap_err();
         assert!(format!("{err}").contains("unknown portfolio"), "{err}");
         ctx.portfolio = Some(" , ".into());
-        assert!(selected_portfolios(&ctx).is_err());
+        assert!(selected_portfolios(&ctx, &all).is_err());
         ctx.portfolio = None;
-        assert_eq!(selected_portfolios(&ctx).unwrap().len(), 3);
+        assert_eq!(selected_portfolios(&ctx, &all).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn spec_swaps_the_scenario_and_splits_at_the_half() {
+        let mut ctx = ExpContext::quick(63);
+        // default: the paper's all9 family under its canonical ids
+        let (spec, ports) = spec_and_portfolios(&ctx).unwrap();
+        assert_eq!(spec.name, "all9");
+        assert_eq!(ports[0].id, "cnn4-to-extras");
+        // custom family: generic head-split ids over the custom set
+        ctx.spec = Some("resnet18+vgg16+alexnet:rram".into());
+        let (spec, ports) = spec_and_portfolios(&ctx).unwrap();
+        assert_eq!(spec.name, "custom");
+        assert_eq!(spec.set.len(), 3);
+        assert_eq!(ports.len(), 3);
+        assert_eq!(ports[0].id, "head2-to-extras");
+        assert_eq!(ports[0].train, vec![0, 1]);
+        assert_eq!(ports[0].deploy, vec![2]);
+        assert_eq!(ports[2].id, "all-joint");
+        // too-small and malformed specs fail fast
+        ctx.spec = Some("alexnet:rram".into());
+        assert!(spec_and_portfolios(&ctx).is_err());
+        ctx.spec = Some("alexnet:dram".into());
+        assert!(spec_and_portfolios(&ctx).is_err());
+    }
+
+    #[test]
+    fn custom_spec_transfer_runs_end_to_end() {
+        let mut ctx = ExpContext::quick(67);
+        ctx.out_dir = std::env::temp_dir().join("imcopt-transfer-spec-test");
+        ctx.spec = Some("resnet18+alexnet+mobilenetv3:rram".into());
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
+        assert_eq!(r.tables[0].rows.len(), 3, "three split portfolios");
+        // detail rows: 1 extra + 3 + 3
+        assert_eq!(r.tables[1].rows.len(), 7);
+        let path = ctx.out_dir.join("transfer_cells/head2-to-extras.json");
+        let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            v.get("portfolio").and_then(|p| p.get("set")).and_then(|s| s.as_str()),
+            Some("custom")
+        );
     }
 }

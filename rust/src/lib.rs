@@ -19,6 +19,11 @@
 //! * [`search`] — the paper's four-phase genetic algorithm with
 //!   Hamming-distance sampling, plus the baseline optimizers of Table 3
 //!   (GA, PSO, ES, ERES, CMA-ES, G3PCX) and exhaustive enumeration.
+//! * [`pareto`] — the multi-objective counterpart: NSGA-II over vector
+//!   objectives ([`pareto::MooMode`]: energy/latency/area axes, or one
+//!   EDAP axis per workload), bounded deterministic front archives and
+//!   front-quality indicators (hypervolume, spacing, knee); surfaced by
+//!   the `pareto` registry experiment (see `docs/pareto.md`).
 //! * [`accuracy`] — RRAM non-ideality model (conductance noise, IR-drop,
 //!   quantization) for the accuracy-aware objective of Fig. 8.
 //! * [`runtime`] — PJRT engine that loads the AOT artifacts
@@ -66,6 +71,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod model;
 pub mod objective;
+pub mod pareto;
 pub mod report;
 pub mod runtime;
 pub mod scenarios;
@@ -79,6 +85,10 @@ pub mod prelude {
     pub use crate::coordinator::{EvalBackend, Evaluations, JointProblem};
     pub use crate::model::{Metrics, MemoryTech, NativeEvaluator};
     pub use crate::objective::{Aggregation, Objective, ObjectiveKind};
+    pub use crate::pareto::{
+        MooMode, MooProblem, MooResult, MultiObjective, MultiObjectiveOptimizer, Nsga2,
+        Nsga2Config, ParetoArchive, VectorObjective,
+    };
     pub use crate::scenarios::{Portfolio, ScenarioSpec};
     pub use crate::search::{
         FourPhaseGa, GaConfig, GeneticAlgorithm, OptResult, Optimizer, SearchBudget,

@@ -4,7 +4,8 @@
 //! ```text
 //! imcopt run [ids...|--all] [--seed N] [--quick] [--out-dir DIR]
 //!            [--resume] [--stable] [--topk K] [--hold-k K]
-//!            [--portfolio IDS] [--native|--pjrt]
+//!            [--portfolio IDS] [--moo-mode M] [--pareto-cap N]
+//!            [--spec S] [--native|--pjrt]
 //! imcopt list [--markdown|--json]   # the experiment catalog
 //! imcopt validate [--out-dir DIR [--require-all]] [--bench FILE] [--schema FILE]
 //! imcopt search [--mem rram|sram] [--obj edap|edp|energy|latency|area|cost|acc]
@@ -81,6 +82,10 @@ fn print_help() {
          \x20 --topk K       best designs reported per genmatrix/portfolio cell\n\
          \x20 --hold-k K     genmatrix_k sweeps hold-k-out for k in 1..=K (default 2)\n\
          \x20 --portfolio P  restrict `transfer` to portfolio ids (comma-separated)\n\
+         \x20 --moo-mode M   pareto objective mode: metric|workload (default: both)\n\
+         \x20 --pareto-cap N pareto front-archive capacity (default 128)\n\
+         \x20 --spec S       user scenario family w1+w2+...:rram|sram[:agg] for\n\
+         \x20                genmatrix_k / transfer / pareto (default: paper sets)\n\
          \x20 --threads N    worker threads for population evaluation\n\
          \x20                (default: IMCOPT_THREADS env var, else all cores;\n\
          \x20                scores are identical for any thread count)",
@@ -188,6 +193,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         let mut t = Table::new("experiment artifacts", &["id", "artifact", "status"]);
         let mut present = 0usize;
         let mut genmatrix_present = false;
+        let mut pareto_present = false;
         let mut cell_dirs: Vec<(&str, &str)> = Vec::new();
         for exp in experiments::REGISTRY {
             let path = dir.join(format!("{}.json", exp.id()));
@@ -217,6 +223,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
             match exp.id() {
                 "genmatrix_k" => cell_dirs.push(("genmatrix_k", "genmatrix_k_cells")),
                 "transfer" => cell_dirs.push(("transfer", "transfer_cells")),
+                "pareto" => pareto_present = true,
                 _ => {}
             }
             t.row(vec![
@@ -297,6 +304,41 @@ fn cmd_validate(args: &Args) -> Result<()> {
                     format!("ok ({cells} cells)"),
                 ]);
             }
+        }
+        // a pareto run emits one front artifact per (set, mode), pinned by
+        // the pareto-front schema
+        if pareto_present {
+            let front_schema_path = Path::new(
+                args.opt_str("pareto-schema", "schemas/pareto_front.schema.json"),
+            );
+            let fronts_dir = dir.join("pareto_fronts");
+            let entries = std::fs::read_dir(&fronts_dir)
+                .with_context(|| format!("missing front dir {}", fronts_dir.display()))?;
+            let mut paths: Vec<_> = entries
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().is_some_and(|x| x == "json"))
+                .collect();
+            paths.sort();
+            let mut fronts = 0usize;
+            for path in paths {
+                let doc = validate_file(&path, front_schema_path)?;
+                anyhow::ensure!(
+                    doc.get("experiment").and_then(|v| v.as_str()) == Some("pareto"),
+                    "{}: experiment mismatch",
+                    path.display()
+                );
+                fronts += 1;
+            }
+            anyhow::ensure!(
+                fronts > 0,
+                "no pareto fronts under {}",
+                fronts_dir.display()
+            );
+            t.row(vec![
+                "pareto fronts".into(),
+                fronts_dir.display().to_string(),
+                format!("ok ({fronts} fronts)"),
+            ]);
         }
         print!("{}", t.to_text());
         checked = true;

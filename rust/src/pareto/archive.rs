@@ -1,0 +1,253 @@
+//! A bounded, deterministic archive of non-dominated designs.
+//!
+//! The archive is the front the `pareto` experiment ultimately reports:
+//! every feasible evaluated design is offered to it, dominated entries
+//! are evicted, and when the capacity (`--pareto-cap`) is exceeded the
+//! most crowded interior point is dropped — per-objective extremes carry
+//! infinite crowding distance and are never pruned, so the front's
+//! extent is stable under capacity pressure.
+//!
+//! Determinism contract: the archive's contents are a pure function of
+//! the *sequence* of [`ParetoArchive::offer`] calls. Rejection uses weak
+//! dominance (an incoming duplicate of a stored objective vector is
+//! rejected, first-seen wins), pruning breaks crowding ties by dropping
+//! the youngest entry, and [`ParetoArchive::entries`] orders the front
+//! lexicographically by objective vector (then insertion sequence) so
+//! artifacts serialize bit-identically across runs, thread counts and
+//! resume replays.
+
+use super::sort::{crowding_distance, dominates, weakly_dominates};
+use crate::space::Design;
+
+/// One archived design with its objective vector.
+#[derive(Clone, Debug)]
+pub struct ArchiveEntry {
+    pub design: Design,
+    pub objectives: Vec<f64>,
+    /// Insertion sequence number (deterministic tie-breaker).
+    pub seq: u64,
+}
+
+/// See the module docs.
+#[derive(Clone, Debug)]
+pub struct ParetoArchive {
+    cap: usize,
+    entries: Vec<ArchiveEntry>,
+    seq: u64,
+    offered: u64,
+}
+
+impl ParetoArchive {
+    /// An archive holding at most `cap` mutually non-dominated entries.
+    pub fn new(cap: usize) -> ParetoArchive {
+        ParetoArchive {
+            cap: cap.max(1),
+            entries: Vec::new(),
+            seq: 0,
+            offered: 0,
+        }
+    }
+
+    /// Offer one design. Non-finite vectors are rejected outright
+    /// (infeasible designs have no place on a front). Returns `true` if
+    /// the design entered the archive.
+    pub fn offer(&mut self, design: &Design, objectives: &[f64]) -> bool {
+        self.offered += 1;
+        if !objectives.iter().all(|x| x.is_finite()) {
+            return false;
+        }
+        if self
+            .entries
+            .iter()
+            .any(|e| weakly_dominates(&e.objectives, objectives))
+        {
+            return false;
+        }
+        self.entries
+            .retain(|e| !dominates(objectives, &e.objectives));
+        self.seq += 1;
+        self.entries.push(ArchiveEntry {
+            design: design.clone(),
+            objectives: objectives.to_vec(),
+            seq: self.seq,
+        });
+        if self.entries.len() > self.cap {
+            self.prune_one();
+        }
+        true
+    }
+
+    /// Offer a batch in order (designs parallel to objective vectors).
+    pub fn offer_batch(&mut self, designs: &[Design], objectives: &[Vec<f64>]) {
+        debug_assert_eq!(designs.len(), objectives.len());
+        for (d, o) in designs.iter().zip(objectives) {
+            self.offer(d, o);
+        }
+    }
+
+    /// Drop the most crowded interior entry (smallest crowding distance;
+    /// ties drop the youngest). All entries are mutually non-dominated,
+    /// so crowding over the whole set is well-defined; extremes have
+    /// infinite distance and survive unless *every* entry is extreme, in
+    /// which case the youngest goes.
+    fn prune_one(&mut self) {
+        let points: Vec<Vec<f64>> = self.entries.iter().map(|e| e.objectives.clone()).collect();
+        let front: Vec<usize> = (0..points.len()).collect();
+        let crowd = crowding_distance(&points, &front);
+        let victim = (0..self.entries.len())
+            .min_by(|&a, &b| {
+                crowd[a]
+                    .total_cmp(&crowd[b])
+                    // equal crowding (incl. all-infinite): drop the youngest
+                    .then(self.entries[b].seq.cmp(&self.entries[a].seq))
+            })
+            .expect("non-empty archive");
+        self.entries.remove(victim);
+    }
+
+    /// Number of archived entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total designs offered (feasible or not) — diagnostics.
+    pub fn offered(&self) -> u64 {
+        self.offered
+    }
+
+    /// The front in canonical order: lexicographic by objective vector
+    /// (`total_cmp` per axis), insertion sequence as the final tie-break.
+    pub fn entries(&self) -> Vec<ArchiveEntry> {
+        let mut out = self.entries.clone();
+        out.sort_by(|a, b| {
+            for (x, y) in a.objectives.iter().zip(&b.objectives) {
+                let c = x.total_cmp(y);
+                if c != std::cmp::Ordering::Equal {
+                    return c;
+                }
+            }
+            a.seq.cmp(&b.seq)
+        });
+        out
+    }
+
+    /// The canonical-order objective vectors (indicator inputs).
+    pub fn objective_vectors(&self) -> Vec<Vec<f64>> {
+        self.entries().into_iter().map(|e| e.objectives).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(i: u16) -> Design {
+        Design(vec![i; 10])
+    }
+
+    #[test]
+    fn keeps_only_non_dominated() {
+        let mut a = ParetoArchive::new(16);
+        assert!(a.offer(&d(0), &[2.0, 2.0]));
+        assert!(!a.offer(&d(1), &[3.0, 3.0]), "dominated incoming rejected");
+        assert!(a.offer(&d(2), &[1.0, 3.0]));
+        // dominates both stored entries -> they are evicted
+        assert!(a.offer(&d(3), &[0.5, 0.5]));
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.entries()[0].design, d(3));
+        assert_eq!(a.offered(), 4);
+    }
+
+    #[test]
+    fn duplicate_vectors_keep_first_seen() {
+        let mut a = ParetoArchive::new(16);
+        assert!(a.offer(&d(0), &[1.0, 2.0]));
+        assert!(!a.offer(&d(1), &[1.0, 2.0]), "equal vector weakly dominated");
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.entries()[0].design, d(0));
+    }
+
+    #[test]
+    fn rejects_non_finite() {
+        let mut a = ParetoArchive::new(4);
+        assert!(!a.offer(&d(0), &[f64::INFINITY, 1.0]));
+        assert!(!a.offer(&d(1), &[f64::NAN, 1.0]));
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn capacity_pruning_protects_extremes() {
+        let mut a = ParetoArchive::new(3);
+        // four mutually non-dominated points on the anti-diagonal; the
+        // interior pair is denser near (1,3)
+        a.offer(&d(0), &[0.0, 4.0]);
+        a.offer(&d(1), &[1.0, 3.0]);
+        a.offer(&d(2), &[1.2, 2.8]);
+        a.offer(&d(3), &[4.0, 0.0]);
+        assert_eq!(a.len(), 3);
+        let objs = a.objective_vectors();
+        // the extremes survive
+        assert!(objs.contains(&vec![0.0, 4.0]));
+        assert!(objs.contains(&vec![4.0, 0.0]));
+        // exactly one of the crowded interior pair survives
+        let interior = objs
+            .iter()
+            .filter(|o| o[0] > 0.0 && o[0] < 4.0)
+            .count();
+        assert_eq!(interior, 1);
+    }
+
+    #[test]
+    fn entries_order_is_canonical_and_stable() {
+        let offers: Vec<(Design, Vec<f64>)> = vec![
+            (d(5), vec![3.0, 1.0]),
+            (d(1), vec![1.0, 3.0]),
+            (d(7), vec![2.0, 2.0]),
+        ];
+        let mut a = ParetoArchive::new(8);
+        for (de, o) in &offers {
+            a.offer(de, o);
+        }
+        let e = a.entries();
+        let objs: Vec<&[f64]> = e.iter().map(|x| x.objectives.as_slice()).collect();
+        assert_eq!(objs, vec![&[1.0, 3.0][..], &[2.0, 2.0], &[3.0, 1.0]]);
+        // same offers in the same order -> identical archive, whatever the
+        // process/thread context
+        let mut b = ParetoArchive::new(8);
+        for (de, o) in &offers {
+            b.offer(de, o);
+        }
+        let eb = b.entries();
+        for (x, y) in e.iter().zip(&eb) {
+            assert_eq!(x.design, y.design);
+            assert_eq!(x.objectives, y.objectives);
+            assert_eq!(x.seq, y.seq);
+        }
+    }
+
+    #[test]
+    fn under_pressure_archive_stays_bounded_and_non_dominated() {
+        let mut a = ParetoArchive::new(8);
+        for i in 0..40u16 {
+            let x = 0.5 + i as f64 * 0.25;
+            let y = 10.0 / x; // mutually non-dominated trade-off curve
+            a.offer(&d(i), &[x, y]);
+            assert!(a.len() <= 8, "cap exceeded at offer {i}");
+        }
+        let objs = a.objective_vectors();
+        for (i, p) in objs.iter().enumerate() {
+            for (j, q) in objs.iter().enumerate() {
+                if i != j {
+                    assert!(!dominates(p, q), "{p:?} dominates {q:?}");
+                }
+            }
+        }
+        // extremes of the streamed curve survive the whole run
+        assert!(objs.contains(&vec![0.5, 20.0]));
+        assert!(objs.contains(&vec![0.5 + 39.0 * 0.25, 10.0 / (0.5 + 39.0 * 0.25)]));
+    }
+}

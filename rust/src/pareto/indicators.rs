@@ -1,0 +1,401 @@
+//! Front-quality indicators: hypervolume, spacing, knee / corner points.
+//!
+//! Hypervolume (minimization, against a reference point that every front
+//! point must weakly dominate) dispatches on dimensionality:
+//!
+//! * **≤ 4 objectives** — exact, via the WFG-style exclusive-contribution
+//!   recursion: `HV(S) = Σᵢ (vol(pᵢ) − HV(nds(limit(S[i+1..], pᵢ))))`,
+//!   where `limit` clamps the remaining points onto pᵢ's dominated box.
+//!   Worst-case exponential but fast on real fronts (the limit + nds
+//!   steps shrink the set quickly); the CI microbench pins the cost on a
+//!   1k-point cloud.
+//! * **> 4 objectives** — the *dominated-hypervolume* fallback: a
+//!   deterministic low-discrepancy (R-sequence) sample of the
+//!   `[front ideal, reference]` box, reporting the dominated fraction
+//!   times the box volume. No RNG is involved, so the estimate is
+//!   bit-stable run to run. It is monotone under adding points *as long
+//!   as the front's ideal (and therefore the sampling box) is
+//!   unchanged — a larger front then dominates a superset of the same
+//!   samples; a point that lowers the ideal re-scales the box and can
+//!   perturb the estimate by its discretization error, unlike the exact
+//!   ≤ 4-dim path, which is unconditionally monotone.
+//!
+//! Raw EDAP-scale fronts span orders of magnitude per axis, so reports
+//! use [`normalized_hypervolume`], which maps the front onto the unit box
+//! by its own ideal/nadir and measures against the reference `1.1`ᵈ —
+//! comparable across scenarios and modes.
+
+use super::sort::{dominates, weakly_dominates};
+
+/// Number of low-discrepancy samples for the > 4-objective fallback.
+/// Fixed (not configurable) so every report/artifact is reproducible.
+const FALLBACK_SAMPLES: usize = 4096;
+
+/// Exact-vs-fallback dispatch threshold (see module docs).
+pub const EXACT_DIMS_MAX: usize = 4;
+
+/// Hypervolume of `points` against `reference` (minimization: the measure
+/// of the region dominated by the front and bounded by the reference).
+/// Points outside the reference box are clamped to contribute nothing on
+/// the offending axes. Empty input → 0.
+pub fn hypervolume(points: &[Vec<f64>], reference: &[f64]) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    let dims = reference.len();
+    debug_assert!(points.iter().all(|p| p.len() == dims));
+    // only finite, mutually non-dominated points contribute
+    let mut front: Vec<Vec<f64>> = Vec::new();
+    for p in points {
+        if p.iter().all(|x| x.is_finite()) {
+            front.push(p.clone());
+        }
+    }
+    let mut front = nds(front);
+    if front.is_empty() {
+        return 0.0;
+    }
+    // canonical lexicographic order: makes the result independent of the
+    // caller's point order and keeps the WFG limit-sets collapsing early
+    front.sort_by(|a, b| {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| x.total_cmp(y))
+            .find(|c| *c != std::cmp::Ordering::Equal)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    if dims <= EXACT_DIMS_MAX {
+        wfg(&front, reference)
+    } else {
+        dominated_fraction(&front, reference)
+    }
+}
+
+/// Keep the non-dominated subset, first-seen representative per vector
+/// (weak dominance removes exact duplicates). Deterministic: input order
+/// decides survivors among equals.
+fn nds(points: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+    let mut front: Vec<Vec<f64>> = Vec::new();
+    for p in points {
+        if front.iter().any(|q| weakly_dominates(q, &p)) {
+            continue;
+        }
+        front.retain(|q| !dominates(&p, q));
+        front.push(p);
+    }
+    front
+}
+
+/// Volume of the box `[p, reference]` (zero if `p` exceeds the reference
+/// on any axis).
+fn inclusive_volume(p: &[f64], reference: &[f64]) -> f64 {
+    p.iter()
+        .zip(reference)
+        .map(|(&x, &r)| (r - x).max(0.0))
+        .product()
+}
+
+/// WFG exclusive-contribution recursion over a non-dominated set.
+fn wfg(front: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let mut total = 0.0;
+    for (i, p) in front.iter().enumerate() {
+        let rest = &front[i + 1..];
+        // limit: clamp the remaining points onto p's dominated region
+        let limited: Vec<Vec<f64>> = rest
+            .iter()
+            .map(|q| q.iter().zip(p).map(|(&x, &y)| x.max(y)).collect())
+            .collect();
+        let limited = nds(limited);
+        let overlap = if limited.is_empty() {
+            0.0
+        } else {
+            wfg(&limited, reference)
+        };
+        total += inclusive_volume(p, reference) - overlap;
+    }
+    total
+}
+
+/// Deterministic dominated-volume estimate for > 4 objectives: fraction
+/// of an R-sequence sample of the `[ideal, reference]` box dominated by
+/// the front, times the box volume.
+fn dominated_fraction(front: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let dims = reference.len();
+    // sampling box: front ideal .. reference (anything below the ideal is
+    // dominated by nothing and would only dilute the estimate)
+    let mut ideal = vec![f64::INFINITY; dims];
+    for p in front {
+        for (a, &x) in ideal.iter_mut().zip(p) {
+            *a = a.min(x);
+        }
+    }
+    let extent: Vec<f64> = ideal
+        .iter()
+        .zip(reference)
+        .map(|(&lo, &hi)| (hi - lo).max(0.0))
+        .collect();
+    let box_vol: f64 = extent.iter().product();
+    if box_vol <= 0.0 || !box_vol.is_finite() {
+        return 0.0;
+    }
+    let alphas = r_sequence_alphas(dims);
+    let mut dominated = 0usize;
+    let mut sample = vec![0.0f64; dims];
+    for k in 1..=FALLBACK_SAMPLES {
+        for j in 0..dims {
+            let u = (k as f64 * alphas[j]).fract();
+            sample[j] = ideal[j] + extent[j] * u;
+        }
+        if front.iter().any(|p| weakly_dominates(p, &sample)) {
+            dominated += 1;
+        }
+    }
+    box_vol * dominated as f64 / FALLBACK_SAMPLES as f64
+}
+
+/// Per-axis irrational step sizes of the Rd low-discrepancy sequence
+/// (powers of the inverse of the d-dimensional plastic constant, the
+/// unique positive root of `x^(d+1) = x + 1`).
+fn r_sequence_alphas(dims: usize) -> Vec<f64> {
+    // Newton's iteration converges in a handful of steps from 1.5
+    let mut phi = 1.5f64;
+    for _ in 0..64 {
+        let f = phi.powi(dims as i32 + 1) - phi - 1.0;
+        let df = (dims as f64 + 1.0) * phi.powi(dims as i32) - 1.0;
+        phi -= f / df;
+    }
+    (1..=dims).map(|j| (1.0 / phi.powi(j as i32)).fract()).collect()
+}
+
+/// Normalized hypervolume of a front: axes mapped to `[0, 1]` by the
+/// front's own ideal/nadir (degenerate axes collapse to 0), measured
+/// against the reference `1.1`ᵈ. A single-point front scores
+/// `1.1ᵈ − ...` trivially, so callers usually report it alongside the
+/// front size. Result is in `[0, 1.1ᵈ]`.
+pub fn normalized_hypervolume(points: &[Vec<f64>]) -> f64 {
+    let scaled = normalize_unit(points);
+    let Some(first) = scaled.first() else {
+        return 0.0;
+    };
+    let reference = vec![1.1f64; first.len()];
+    hypervolume(&scaled, &reference)
+}
+
+/// Schott's spacing metric: standard deviation of nearest-neighbor
+/// (Euclidean, on normalized axes) distances across the front. 0 for
+/// fronts of fewer than three points — and for perfectly even fronts.
+pub fn spacing(points: &[Vec<f64>]) -> f64 {
+    let scaled = normalize_unit(points);
+    let n = scaled.len();
+    if n < 3 {
+        return 0.0;
+    }
+    let mut nearest = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut best = f64::INFINITY;
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d2: f64 = scaled[i]
+                .iter()
+                .zip(&scaled[j])
+                .map(|(&a, &b)| (a - b) * (a - b))
+                .sum();
+            best = best.min(d2.sqrt());
+        }
+        nearest.push(best);
+    }
+    crate::util::stats::std_dev(&nearest)
+}
+
+/// Knee point: index of the front member closest (Euclidean) to the
+/// ideal point on per-axis-normalized coordinates — the classic "best
+/// compromise" read of a front. Ties break toward the lower index; `None`
+/// for fronts with no finite point.
+pub fn knee_index(points: &[Vec<f64>]) -> Option<usize> {
+    let scaled = normalize_unit(points);
+    let finite_indices: Vec<usize> = points
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.iter().all(|x| x.is_finite()))
+        .map(|(i, _)| i)
+        .collect();
+    debug_assert_eq!(scaled.len(), finite_indices.len());
+    let mut best: Option<(usize, f64)> = None;
+    for (p, &i) in scaled.iter().zip(&finite_indices) {
+        let d2: f64 = p.iter().map(|&x| x * x).sum();
+        match best {
+            Some((_, bd)) if d2 >= bd => {}
+            _ => best = Some((i, d2)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Index of the front member with the smallest product of objectives —
+/// the minimum-EDAP corner when the axes are `(agg E, agg L, A)` (their
+/// product *is* the scalar EDAP). Ties break toward the lower index;
+/// `None` when no point is finite.
+pub fn min_product_index(points: &[Vec<f64>]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, p) in points.iter().enumerate() {
+        if !p.iter().all(|x| x.is_finite()) {
+            continue;
+        }
+        let prod: f64 = p.iter().product();
+        match best {
+            Some((_, bp)) if prod >= bp => {}
+            _ => best = Some((i, prod)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Finite points mapped per-axis onto `[0, 1]` by the set's own
+/// ideal/nadir (degenerate axes collapse to 0). Non-finite points are
+/// dropped, preserving order.
+fn normalize_unit(points: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let finite: Vec<&Vec<f64>> = points
+        .iter()
+        .filter(|p| p.iter().all(|x| x.is_finite()))
+        .collect();
+    let Some(first) = finite.first() else {
+        return Vec::new();
+    };
+    let dims = first.len();
+    let mut lo = vec![f64::INFINITY; dims];
+    let mut hi = vec![f64::NEG_INFINITY; dims];
+    for p in &finite {
+        for j in 0..dims {
+            lo[j] = lo[j].min(p[j]);
+            hi[j] = hi[j].max(p[j]);
+        }
+    }
+    finite
+        .iter()
+        .map(|p| {
+            (0..dims)
+                .map(|j| {
+                    let ext = hi[j] - lo[j];
+                    if ext > 0.0 {
+                        (p[j] - lo[j]) / ext
+                    } else {
+                        0.0
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_is_its_box() {
+        let hv = hypervolume(&[vec![1.0, 2.0]], &[3.0, 4.0]);
+        assert!((hv - 4.0).abs() < 1e-12, "{hv}");
+        let hv3 = hypervolume(&[vec![0.0, 0.0, 0.0]], &[1.0, 2.0, 3.0]);
+        assert!((hv3 - 6.0).abs() < 1e-12, "{hv3}");
+    }
+
+    #[test]
+    fn two_point_overlap_counts_once() {
+        // boxes 2x1 and 1x2 overlapping in a 1x1 square -> 3
+        let hv = hypervolume(&[vec![0.0, 1.0], vec![1.0, 0.0]], &[2.0, 2.0]);
+        assert!((hv - 3.0).abs() < 1e-12, "{hv}");
+    }
+
+    #[test]
+    fn dominated_and_duplicate_points_add_nothing() {
+        let base = hypervolume(&[vec![0.0, 1.0], vec![1.0, 0.0]], &[2.0, 2.0]);
+        let more = hypervolume(
+            &[vec![0.0, 1.0], vec![1.0, 0.0], vec![1.5, 1.5], vec![0.0, 1.0]],
+            &[2.0, 2.0],
+        );
+        assert!((base - more).abs() < 1e-12);
+    }
+
+    #[test]
+    fn three_objective_staircase() {
+        // two disjoint unit boxes below ref (2,2,2): each 1x1x2 and 1x2x1
+        // overlapping in 1x1x1 -> 2 + 2 - 1 = 3
+        let hv = hypervolume(&[vec![1.0, 1.0, 0.0], vec![1.0, 0.0, 1.0]], &[2.0, 2.0, 2.0]);
+        assert!((hv - 3.0).abs() < 1e-12, "{hv}");
+    }
+
+    #[test]
+    fn four_dims_exact_and_five_dims_fallback_agree_roughly() {
+        // a single point: both paths must report (close to) its box volume
+        let p4 = vec![vec![0.5; 4]];
+        let r4 = vec![1.0; 4];
+        assert!((hypervolume(&p4, &r4) - 0.5f64.powi(4)).abs() < 1e-12);
+        let p5 = vec![vec![0.5; 5]];
+        let r5 = vec![1.0; 5];
+        // fallback box is [ideal, ref] = [0.5, 1]^5, fully dominated
+        let est = hypervolume(&p5, &r5);
+        assert!((est - 0.5f64.powi(5)).abs() < 1e-9, "{est}");
+    }
+
+    #[test]
+    fn fallback_is_monotone_and_deterministic() {
+        // the added point keeps the front's ideal unchanged, so both
+        // estimates sample the same box and the dominated sample set can
+        // only grow
+        let reference = vec![1.0; 5];
+        let a = vec![
+            vec![0.2, 0.8, 0.5, 0.5, 0.5],
+            vec![0.8, 0.2, 0.5, 0.5, 0.5],
+        ];
+        let mut b = a.clone();
+        b.push(vec![0.5, 0.5, 0.5, 0.5, 0.5]);
+        let hv_a = hypervolume(&a, &reference);
+        let hv_b = hypervolume(&b, &reference);
+        assert!(hv_b >= hv_a, "{hv_b} < {hv_a}");
+        assert!(hv_a > 0.0);
+        assert_eq!(
+            hypervolume(&a, &reference).to_bits(),
+            hv_a.to_bits(),
+            "fallback must be bit-stable"
+        );
+    }
+
+    #[test]
+    fn normalized_hv_ignores_scale() {
+        let small = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let big: Vec<Vec<f64>> = small
+            .iter()
+            .map(|p| p.iter().map(|&x| 1e6 * x + 42.0).collect())
+            .collect();
+        let a = normalized_hypervolume(&small);
+        let b = normalized_hypervolume(&big);
+        assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        assert!(a > 0.0 && a <= 1.1f64.powi(2) + 1e-12);
+    }
+
+    #[test]
+    fn spacing_prefers_even_fronts() {
+        let even = vec![vec![0.0, 3.0], vec![1.0, 2.0], vec![2.0, 1.0], vec![3.0, 0.0]];
+        let clumped = vec![vec![0.0, 3.0], vec![0.1, 2.9], vec![0.2, 2.8], vec![3.0, 0.0]];
+        assert!(spacing(&even) < spacing(&clumped));
+        assert_eq!(spacing(&even[..2]), 0.0);
+    }
+
+    #[test]
+    fn knee_and_corner_selection() {
+        let pts = vec![
+            vec![0.0, 10.0],
+            vec![3.0, 3.0], // compromise: closest to the normalized ideal
+            vec![10.0, 0.0],
+        ];
+        assert_eq!(knee_index(&pts), Some(1));
+        // min product: 0 * 10 = 0 at either extreme; ties -> lower index
+        assert_eq!(min_product_index(&pts), Some(0));
+        let with_inf = vec![vec![f64::INFINITY, 0.0], vec![2.0, 2.0]];
+        assert_eq!(knee_index(&with_inf), Some(1));
+        assert_eq!(min_product_index(&with_inf), Some(1));
+        assert_eq!(knee_index(&[]), None);
+    }
+}

@@ -1,0 +1,382 @@
+//! Multi-objective (Pareto) search over the joint co-optimization
+//! problem.
+//!
+//! The rest of the crate scores a design with **one** number
+//! ([`crate::objective::Objective::score`] — scalarized EDAP under an
+//! aggregation). This subsystem exposes the trade-offs that number hides:
+//! a [`VectorObjective`] maps a design's per-workload
+//! [`crate::model::Metrics`] to an objective *vector* under two modes
+//! ([`MooMode`]):
+//!
+//! * **metric** — `(agg(E), agg(L), A)`: the three EDAP factors as
+//!   separate axes (their product *is* the scalar EDAP, so the front's
+//!   minimum-product corner is directly comparable to the scalarized GA
+//!   best);
+//! * **workload** — one EDAP axis per active (train-set) workload: the
+//!   literal cross-workload trade-off surface the paper's joint
+//!   optimization navigates.
+//!
+//! [`MooProblem`] adapts a [`JointProblem`] into the [`MultiObjective`]
+//! trait, riding the existing batch-evaluation pipeline: a vector batch
+//! first warms the sharded memo cache through the parallel
+//! `score_batch` path (PR 1's threading, PR 3's O(1) compiled
+//! evaluator), then assembles vectors from the cached per-workload
+//! metrics — so multi-objective search inherits caching, threading and
+//! bit-determinism for free.
+//!
+//! The optimizer is [`Nsga2`] (fast non-dominated sorting + crowding
+//! distance + constraint-domination, [`sort`]), archiving every feasible
+//! evaluation into a bounded deterministic [`ParetoArchive`]
+//! ([`archive`]); front quality is measured by [`indicators`]
+//! (hypervolume — exact WFG-style recursion up to 4 objectives, a
+//! deterministic dominated-volume estimate beyond — plus spacing and
+//! knee/corner extraction). The `pareto` registry experiment
+//! (`experiments::pareto`, `docs/pareto.md`) wires it end to end.
+
+pub mod archive;
+pub mod indicators;
+pub mod nsga2;
+pub mod sort;
+
+pub use archive::{ArchiveEntry, ParetoArchive};
+pub use nsga2::{MooResult, MultiObjectiveOptimizer, Nsga2, Nsga2Config};
+
+use crate::coordinator::JointProblem;
+use crate::model::Metrics;
+use crate::objective::Aggregation;
+use crate::search::Problem;
+use crate::space::Design;
+use crate::util::rng::Rng;
+use crate::workloads::WorkloadSet;
+use anyhow::bail;
+
+/// How a design's metrics become an objective vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MooMode {
+    /// `(agg(E) mJ, agg(L) ms, A mm²)` — 3 axes whose product is the
+    /// scalar EDAP.
+    Metric,
+    /// One per-workload EDAP axis (mJ·ms·mm²) per active workload.
+    Workload,
+}
+
+impl MooMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MooMode::Metric => "metric",
+            MooMode::Workload => "workload",
+        }
+    }
+
+    /// Parse a `--moo-mode` value (`metric` | `workload`).
+    pub fn parse(s: &str) -> anyhow::Result<MooMode> {
+        match s {
+            "metric" => Ok(MooMode::Metric),
+            "workload" => Ok(MooMode::Workload),
+            other => bail!("unknown moo mode '{other}' (metric|workload)"),
+        }
+    }
+}
+
+/// Maps per-workload metrics to a minimized objective vector. Infeasible
+/// designs (any infeasible workload, or area over the constraint) map to
+/// an all-`+∞` vector so feasibility survives the vector view — the
+/// NSGA-II selection routes those through constraint-domination instead
+/// of the Pareto ranking.
+#[derive(Clone, Copy, Debug)]
+pub struct VectorObjective {
+    pub mode: MooMode,
+    /// Cross-workload aggregation for [`MooMode::Metric`] (matches the
+    /// scenario's scalar objective, so the product-corner comparison is
+    /// apples to apples).
+    pub agg: Aggregation,
+    /// Area constraint (mm²), as in the scalar objective.
+    pub area_constraint: f64,
+}
+
+impl VectorObjective {
+    pub fn new(mode: MooMode, agg: Aggregation) -> VectorObjective {
+        VectorObjective {
+            mode,
+            agg,
+            area_constraint: crate::model::consts::AREA_CONSTR_MM2,
+        }
+    }
+
+    /// Vector length for a problem with `active_workloads` active
+    /// (train-set) workloads.
+    pub fn dim(&self, active_workloads: usize) -> usize {
+        match self.mode {
+            MooMode::Metric => 3,
+            MooMode::Workload => active_workloads,
+        }
+    }
+
+    /// The objective vector of one design from its active-set metrics
+    /// (paper units: mJ / ms / mm², as in the scalar objective).
+    pub fn vector(&self, per_workload: &[Metrics]) -> Vec<f64> {
+        assert!(!per_workload.is_empty());
+        let dim = self.dim(per_workload.len());
+        if per_workload.iter().any(|m| !m.feasible) {
+            return vec![f64::INFINITY; dim];
+        }
+        let area = per_workload[0].area;
+        if area > self.area_constraint {
+            return vec![f64::INFINITY; dim];
+        }
+        match self.mode {
+            MooMode::Metric => {
+                let e: Vec<f64> = per_workload.iter().map(|m| m.energy * 1e3).collect();
+                let l: Vec<f64> = per_workload.iter().map(|m| m.latency * 1e3).collect();
+                vec![self.agg.apply(&e), self.agg.apply(&l), area]
+            }
+            MooMode::Workload => per_workload
+                .iter()
+                .map(|m| (m.energy * 1e3) * (m.latency * 1e3) * area)
+                .collect(),
+        }
+    }
+
+    /// Human-readable axis names (reports / artifacts): metric mode gets
+    /// the aggregated factor names, workload mode the active workloads'.
+    pub fn axes(&self, set: &WorkloadSet, active: &[usize]) -> Vec<String> {
+        match self.mode {
+            MooMode::Metric => vec![
+                format!("{}(E) mJ", self.agg.name()),
+                format!("{}(L) ms", self.agg.name()),
+                "A mm2".to_string(),
+            ],
+            MooMode::Workload => active
+                .iter()
+                .map(|&i| format!("EDAP {}", set.workloads[i].name))
+                .collect(),
+        }
+    }
+}
+
+/// A problem whose designs score as vectors (implemented by
+/// [`MooProblem`]; the [`Problem`] supertrait supplies the space, the
+/// feasibility-prefiltered sampling and the scalar view used by the
+/// Hamming-init pipeline).
+pub trait MultiObjective: Problem {
+    /// Objective-vector length.
+    fn objectives(&self) -> usize;
+    /// Vector scores for a batch (order-preserving; infeasible designs
+    /// yield all-`+∞` vectors).
+    fn objective_batch(&self, designs: &[Design]) -> Vec<Vec<f64>>;
+}
+
+/// [`JointProblem`] adapted to [`MultiObjective`]. Scalar calls delegate
+/// to the wrapped problem (same memo cache, same backend, same
+/// feasibility pre-filter), so a scalarized GA and an NSGA-II run over
+/// the same `MooProblem`/`JointProblem` pair share every evaluation.
+pub struct MooProblem<'p, 'w> {
+    pub inner: &'p JointProblem<'w>,
+    pub vector_objective: VectorObjective,
+}
+
+impl<'p, 'w> MooProblem<'p, 'w> {
+    /// Wrap a joint problem; the aggregation is taken from the problem's
+    /// scalar objective so metric-mode products match scalar scores.
+    pub fn new(inner: &'p JointProblem<'w>, mode: MooMode) -> MooProblem<'p, 'w> {
+        let mut vector_objective = VectorObjective::new(mode, inner.objective.agg);
+        vector_objective.area_constraint = inner.objective.area_constraint;
+        MooProblem {
+            inner,
+            vector_objective,
+        }
+    }
+
+    /// Active workload indices (the train set of a restricted problem).
+    pub fn active_indices(&self) -> Vec<usize> {
+        self.inner
+            .subset
+            .clone()
+            .unwrap_or_else(|| (0..self.inner.workloads.len()).collect())
+    }
+}
+
+impl Problem for MooProblem<'_, '_> {
+    fn space(&self) -> &crate::space::SearchSpace {
+        self.inner.space
+    }
+    fn score_batch(&self, designs: &[Design]) -> Vec<f64> {
+        self.inner.score_batch(designs)
+    }
+    fn random_candidate(&self, rng: &mut Rng) -> Design {
+        self.inner.random_candidate(rng)
+    }
+    fn violation(&self, design: &Design) -> f64 {
+        self.inner.violation(design)
+    }
+    fn evals(&self) -> usize {
+        self.inner.evals()
+    }
+}
+
+impl MultiObjective for MooProblem<'_, '_> {
+    fn objectives(&self) -> usize {
+        self.vector_objective.dim(self.active_indices().len())
+    }
+
+    fn objective_batch(&self, designs: &[Design]) -> Vec<Vec<f64>> {
+        // warm the sharded memo cache through the parallel scalar
+        // pipeline; the per-design reads below are then pure cache hits
+        let _ = self.inner.score_batch(designs);
+        designs
+            .iter()
+            .map(|d| {
+                self.vector_objective
+                    .vector(&self.inner.evaluate_design(d).metrics)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EvalBackend;
+    use crate::model::MemoryTech;
+    use crate::objective::Objective;
+    use crate::space::SearchSpace;
+
+    fn m(e_mj: f64, l_ms: f64, a: f64) -> Metrics {
+        Metrics {
+            energy: e_mj * 1e-3,
+            latency: l_ms * 1e-3,
+            area: a,
+            feasible: true,
+        }
+    }
+
+    #[test]
+    fn metric_mode_product_is_the_scalar_edap() {
+        let ms = [m(1.0, 2.0, 50.0), m(3.0, 1.0, 50.0)];
+        for agg in [Aggregation::Max, Aggregation::Mean, Aggregation::All] {
+            let v = VectorObjective::new(MooMode::Metric, agg).vector(&ms);
+            assert_eq!(v.len(), 3);
+            let product: f64 = v.iter().product();
+            let scalar = Objective::new(crate::objective::ObjectiveKind::Edap, agg)
+                .score(&ms, None, 32.0);
+            assert_eq!(
+                product.to_bits(),
+                scalar.to_bits(),
+                "{agg:?}: product {product} != scalar {scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn workload_mode_is_one_edap_axis_per_workload() {
+        let ms = [m(1.0, 2.0, 50.0), m(3.0, 1.0, 50.0)];
+        let v = VectorObjective::new(MooMode::Workload, Aggregation::Max).vector(&ms);
+        assert_eq!(v.len(), 2);
+        assert!((v[0] - 100.0).abs() < 1e-9, "{v:?}");
+        assert!((v[1] - 150.0).abs() < 1e-9, "{v:?}");
+    }
+
+    #[test]
+    fn infeasible_maps_to_all_infinite() {
+        let mut bad = m(1.0, 1.0, 10.0);
+        bad.feasible = false;
+        let vo = VectorObjective::new(MooMode::Metric, Aggregation::Max);
+        assert!(vo.vector(&[bad]).iter().all(|x| x.is_infinite()));
+        let big = m(1.0, 1.0, 900.0);
+        assert!(vo.vector(&[big]).iter().all(|x| x.is_infinite()));
+        let wo = VectorObjective::new(MooMode::Workload, Aggregation::Max);
+        let v = wo.vector(&[m(1.0, 1.0, 10.0), big]);
+        assert_eq!(v.len(), 2);
+        assert!(v.iter().all(|x| x.is_infinite()));
+    }
+
+    #[test]
+    fn mode_parse_and_axes() {
+        assert_eq!(MooMode::parse("metric").unwrap(), MooMode::Metric);
+        assert_eq!(MooMode::parse("workload").unwrap(), MooMode::Workload);
+        assert!(MooMode::parse("nope").is_err());
+        let set = WorkloadSet::cnn4();
+        let vo = VectorObjective::new(MooMode::Metric, Aggregation::Max);
+        assert_eq!(
+            vo.axes(&set, &[0, 1, 2, 3]),
+            vec!["Max(E) mJ", "Max(L) ms", "A mm2"]
+        );
+        let wo = VectorObjective::new(MooMode::Workload, Aggregation::Max);
+        assert_eq!(wo.axes(&set, &[0, 2]), vec!["EDAP resnet18", "EDAP alexnet"]);
+    }
+
+    #[test]
+    fn moo_problem_rides_the_joint_cache() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let inner = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        );
+        let moo = MooProblem::new(&inner, MooMode::Metric);
+        assert_eq!(moo.objectives(), 3);
+        let mut rng = Rng::seed_from(5);
+        let designs: Vec<Design> = (0..6).map(|_| moo.random_candidate(&mut rng)).collect();
+        let vecs = moo.objective_batch(&designs);
+        let evals_after = inner.evals();
+        assert_eq!(vecs.len(), 6);
+        // a second vector batch is pure cache hits
+        let again = moo.objective_batch(&designs);
+        assert_eq!(inner.evals(), evals_after);
+        for (a, b) in vecs.iter().zip(&again) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // metric-mode product equals the scalar joint score, bit for bit
+        let scalars = moo.score_batch(&designs);
+        for (v, s) in vecs.iter().zip(&scalars) {
+            if s.is_finite() {
+                let prod: f64 = v.iter().product();
+                assert_eq!(prod.to_bits(), s.to_bits());
+            } else {
+                assert!(v.iter().all(|x| x.is_infinite()));
+            }
+        }
+        // workload mode: one axis per active workload on a restricted set
+        let restricted = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        )
+        .restricted_to(vec![0, 2, 3]);
+        let wmoo = MooProblem::new(&restricted, MooMode::Workload);
+        assert_eq!(wmoo.objectives(), 3);
+        assert_eq!(wmoo.active_indices(), vec![0, 2, 3]);
+        let wv = wmoo.objective_batch(&designs[..1]);
+        assert_eq!(wv[0].len(), 3);
+    }
+
+    #[test]
+    fn nsga2_end_to_end_on_the_joint_problem() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let inner = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        );
+        let moo = MooProblem::new(&inner, MooMode::Metric);
+        let nsga = Nsga2::new(Nsga2Config {
+            init: crate::search::InitStrategy::HammingDiverse { p_h: 40, p_e: 20 },
+            cap: 16,
+            ..Nsga2Config::paper(crate::search::SearchBudget { pop: 8, gens: 4 })
+        });
+        let r = nsga.run(&moo, &mut Rng::seed_from(9));
+        assert!(!r.front.is_empty(), "no feasible front found");
+        assert!(r.front.len() <= 16);
+        for (_, o) in &r.front {
+            assert_eq!(o.len(), 3);
+            assert!(o.iter().all(|x| x.is_finite()));
+        }
+    }
+}

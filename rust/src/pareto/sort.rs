@@ -1,0 +1,207 @@
+//! Fast non-dominated sorting and crowding distance (Deb et al., NSGA-II).
+//!
+//! All comparisons minimize every objective. The sort is the O(M·N²)
+//! "fast non-dominated sort" of the NSGA-II paper: one pass computes each
+//! point's domination count and dominated set, then fronts peel off in
+//! waves. Output order is deterministic — within a front, points appear
+//! in ascending input index — so every consumer (selection, archives,
+//! artifacts) is bit-stable across runs and thread counts.
+//!
+//! Non-finite coordinates carry no dominance information here (`NaN`
+//! compares false both ways, so a NaN point ends up mutually
+//! non-dominating with everything). Callers that can see infeasible
+//! points must keep them out of the sort and rank them separately —
+//! [`crate::pareto::nsga2::Nsga2`] does exactly that via
+//! constraint-domination on [`crate::search::Problem::violation`].
+
+/// `a` dominates `b`: no worse in every objective, strictly better in at
+/// least one (minimization).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strict = false;
+    for (&x, &y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// `a` weakly dominates `b`: no worse in every objective (equal vectors
+/// weakly dominate each other). The archive uses this to keep exactly one
+/// representative per objective vector.
+pub fn weakly_dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).all(|(&x, &y)| x <= y)
+}
+
+/// Fast non-dominated sort: partition point indices into fronts.
+/// `fronts[0]` is the non-dominated set; every point of `fronts[i]`
+/// (i ≥ 1) is dominated by at least one point of `fronts[i − 1]` and by
+/// none of `fronts[i..]`. Within a front, indices ascend.
+pub fn non_dominated_sort(points: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // dominated[i] = indices i dominates; count[i] = how many dominate i
+    let mut dominated: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut count = vec![0usize; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&points[i], &points[j]) {
+                dominated[i].push(j);
+                count[j] += 1;
+            } else if dominates(&points[j], &points[i]) {
+                dominated[j].push(i);
+                count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next: Vec<usize> = Vec::new();
+        for &i in &current {
+            for &j in &dominated[i] {
+                count[j] -= 1;
+                if count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        // ascending input index keeps the output deterministic regardless
+        // of discovery order
+        next.sort_unstable();
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Rank of every point: `rank[i]` = index of the front containing `i`
+/// (0 = non-dominated). Convenience over [`non_dominated_sort`].
+pub fn ranks(points: &[Vec<f64>]) -> Vec<usize> {
+    let mut rank = vec![0usize; points.len()];
+    for (r, front) in non_dominated_sort(points).iter().enumerate() {
+        for &i in front {
+            rank[i] = r;
+        }
+    }
+    rank
+}
+
+/// Crowding distance of each member of one front (parallel to `front`):
+/// the NSGA-II density estimate. Boundary points (per-objective extremes)
+/// get `+∞`; interior points sum their normalized neighbor gaps per
+/// objective. Degenerate objectives (zero extent) contribute nothing.
+/// Ties in an objective sort break by point index, so the assignment is
+/// deterministic.
+pub fn crowding_distance(points: &[Vec<f64>], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m == 0 {
+        return dist;
+    }
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let dims = points[front[0]].len();
+    for obj in 0..dims {
+        // positions into `front`, sorted by this objective (ties by index)
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            points[front[a]][obj]
+                .total_cmp(&points[front[b]][obj])
+                .then(front[a].cmp(&front[b]))
+        });
+        let lo = points[front[order[0]]][obj];
+        let hi = points[front[order[m - 1]]][obj];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let extent = hi - lo;
+        if extent <= 0.0 || !extent.is_finite() {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let gap = points[front[order[w + 1]]][obj] - points[front[order[w - 1]]][obj];
+            dist[order[w]] += gap / extent;
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 2.0], &[2.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal is not strict");
+        assert!(weakly_dominates(&[1.0, 1.0], &[1.0, 1.0]));
+        assert!(!weakly_dominates(&[1.0, 2.0], &[2.0, 1.0]));
+        // NaN carries no dominance either way
+        assert!(!dominates(&[f64::NAN, 0.0], &[1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[f64::NAN, 0.0]));
+    }
+
+    #[test]
+    fn sort_peels_fronts_in_order() {
+        // three clear layers on the anti-diagonal plus a dominated tail
+        let pts = vec![
+            vec![1.0, 4.0], // front 0
+            vec![4.0, 1.0], // front 0
+            vec![2.0, 5.0], // front 1 (dominated by [1,4])
+            vec![5.0, 2.0], // front 1
+            vec![6.0, 6.0], // front 2
+        ];
+        let fronts = non_dominated_sort(&pts);
+        assert_eq!(fronts, vec![vec![0, 1], vec![2, 3], vec![4]]);
+        assert_eq!(ranks(&pts), vec![0, 0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn sort_handles_duplicates_and_singletons() {
+        // duplicates do not dominate each other -> same front
+        let pts = vec![vec![1.0, 1.0], vec![1.0, 1.0], vec![2.0, 2.0]];
+        let fronts = non_dominated_sort(&pts);
+        assert_eq!(fronts, vec![vec![0, 1], vec![2]]);
+        assert!(non_dominated_sort(&[]).is_empty());
+        assert_eq!(non_dominated_sort(&[vec![3.0]]), vec![vec![0]]);
+    }
+
+    #[test]
+    fn crowding_rewards_isolation() {
+        // five points on a line; the middle one sits in the densest spot
+        let pts = vec![
+            vec![0.0, 4.0],
+            vec![1.0, 3.0],
+            vec![1.5, 2.5], // crowded between neighbors
+            vec![2.0, 2.0],
+            vec![4.0, 0.0],
+        ];
+        let front: Vec<usize> = (0..5).collect();
+        let d = crowding_distance(&pts, &front);
+        assert!(d[0].is_infinite() && d[4].is_infinite());
+        assert!(d[2] < d[1] && d[2] < d[3], "{d:?}");
+        // small fronts are all-boundary
+        assert_eq!(crowding_distance(&pts, &[1, 3]), vec![f64::INFINITY; 2]);
+    }
+
+    #[test]
+    fn crowding_is_deterministic_under_ties() {
+        let pts = vec![vec![1.0, 1.0], vec![1.0, 1.0], vec![1.0, 1.0], vec![1.0, 1.0]];
+        let front: Vec<usize> = (0..4).collect();
+        let a = crowding_distance(&pts, &front);
+        let b = crowding_distance(&pts, &front);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

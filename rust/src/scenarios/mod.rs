@@ -50,10 +50,13 @@ const SEED_RADIX: u64 = 64;
 /// The two paper instances ([`ScenarioSpec::cnn4`] on weight-stationary
 /// RRAM with Max aggregation, [`ScenarioSpec::all9`] on weight-swapping
 /// SRAM with Mean aggregation, §IV-J) are single-sourced here so
-/// `genmatrix`, `genmatrix_k` and `transfer` cannot drift apart.
+/// `genmatrix`, `genmatrix_k`, `transfer` and `pareto` cannot drift
+/// apart; [`ScenarioSpec::parse`] opens user-defined families from the
+/// CLI (`--spec`).
 pub struct ScenarioSpec {
-    /// Stable set name ("cnn4" / "all9"): cell keys and artifact stems.
-    pub name: &'static str,
+    /// Stable set name ("cnn4" / "all9" / "custom" for `--spec`): cell
+    /// keys and artifact stems.
+    pub name: String,
     /// The workload set itself.
     pub set: WorkloadSet,
     /// Search space matching the memory technology.
@@ -69,7 +72,7 @@ impl ScenarioSpec {
     /// Max-aggregated EDAP.
     pub fn cnn4() -> ScenarioSpec {
         ScenarioSpec {
-            name: "cnn4",
+            name: "cnn4".into(),
             set: WorkloadSet::cnn4(),
             space: SearchSpace::rram(),
             mem: MemoryTech::Rram,
@@ -82,12 +85,68 @@ impl ScenarioSpec {
     /// dominate the joint score).
     pub fn all9() -> ScenarioSpec {
         ScenarioSpec {
-            name: "all9",
+            name: "all9".into(),
             set: WorkloadSet::all9(),
             space: SearchSpace::sram(),
             mem: MemoryTech::Sram,
             agg: Aggregation::Mean,
         }
+    }
+
+    /// Parse a user-defined scenario family from a `--spec` string:
+    /// `<w1>+<w2>+...:<mem>[:<agg>]`, e.g.
+    /// `resnet18+vit+gpt2-medium:sram:mean`. Workload names are the
+    /// canonical ones of [`crate::workloads::ALL_NAMES`], `mem` is
+    /// `rram` | `sram` (choosing the matching search space), and the
+    /// optional aggregation (`max` | `all` | `mean`) defaults to the
+    /// paper convention for the technology (RRAM → Max, SRAM → Mean).
+    /// The resulting spec is named `custom`; the checkpoint
+    /// configuration fingerprint pins the full `--spec` string, so
+    /// journals from different custom families never mix.
+    ///
+    /// ```
+    /// use imcopt::scenarios::ScenarioSpec;
+    ///
+    /// let spec = ScenarioSpec::parse("resnet18+vgg16:rram").unwrap();
+    /// assert_eq!(spec.name, "custom");
+    /// assert_eq!(spec.set.len(), 2);
+    /// assert!(ScenarioSpec::parse("resnet34:rram").is_err());
+    /// ```
+    pub fn parse(spec: &str) -> anyhow::Result<ScenarioSpec> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 2 || parts.len() == 3,
+            "--spec wants '<w1>+<w2>+...:<mem>[:<agg>]', got '{spec}'"
+        );
+        let names: Vec<&str> = parts[0]
+            .split('+')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        anyhow::ensure!(!names.is_empty(), "--spec lists no workloads: '{spec}'");
+        let set = WorkloadSet::by_names(&names)?;
+        let (mem, space) = match parts[1] {
+            "rram" => (MemoryTech::Rram, SearchSpace::rram()),
+            "sram" => (MemoryTech::Sram, SearchSpace::sram()),
+            other => anyhow::bail!("--spec memory '{other}' is not rram|sram"),
+        };
+        let agg = match parts.get(2) {
+            None => match mem {
+                MemoryTech::Rram => Aggregation::Max,
+                MemoryTech::Sram => Aggregation::Mean,
+            },
+            Some(&"max") => Aggregation::Max,
+            Some(&"all") => Aggregation::All,
+            Some(&"mean") => Aggregation::Mean,
+            Some(other) => anyhow::bail!("--spec aggregation '{other}' is not max|all|mean"),
+        };
+        Ok(ScenarioSpec {
+            name: "custom".into(),
+            set,
+            space,
+            mem,
+            agg,
+        })
     }
 
     /// The joint objective this scenario optimizes (EDAP under the
@@ -266,6 +325,31 @@ pub fn transfer_portfolios() -> Vec<Portfolio> {
     ]
 }
 
+/// The [`transfer_portfolios`] shape over an arbitrary `n`-workload set,
+/// split at `split`: train on the first `split` workloads, deploy on the
+/// extras / the full set, plus the all-`n` joint reference. Used by the
+/// `transfer` experiment under a `--spec` scenario (the paper's all9
+/// case is the `n = 9, split = 4` instance, under its own ids).
+pub fn split_transfer_portfolios(n: usize, split: usize) -> Vec<Portfolio> {
+    assert!(
+        split >= 1 && split < n,
+        "transfer split needs 1 <= split < n (got split={split}, n={n})"
+    );
+    vec![
+        Portfolio::new(
+            format!("head{split}-to-extras"),
+            (0..split).collect(),
+            (split..n).collect(),
+        ),
+        Portfolio::new(
+            format!("head{split}-to-all"),
+            (0..split).collect(),
+            (0..n).collect(),
+        ),
+        Portfolio::new("all-joint", (0..n).collect(), (0..n).collect()),
+    ]
+}
+
 /// Deploy-side generalization gap: the joint design's EDAP on a workload
 /// over the specialist bound for that workload. `1.0` = the joint design
 /// matches the specialist; `NaN` when the bound is non-positive or
@@ -416,6 +500,50 @@ mod tests {
         let empty = summarize_gaps(&[f64::NAN]);
         assert_eq!(empty.finite, 0);
         assert!(empty.worst_at.is_none());
+    }
+
+    #[test]
+    fn split_transfer_matches_the_all9_shape() {
+        let generic = split_transfer_portfolios(9, 4);
+        let paper = transfer_portfolios();
+        assert_eq!(generic.len(), paper.len());
+        for (g, p) in generic.iter().zip(&paper) {
+            assert_eq!(g.train, p.train);
+            assert_eq!(g.deploy, p.deploy);
+        }
+        assert_eq!(generic[0].id, "head4-to-extras");
+        let small = split_transfer_portfolios(3, 1);
+        assert_eq!(small[0].train, vec![0]);
+        assert_eq!(small[0].deploy, vec![1, 2]);
+        assert_eq!(small[2].id, "all-joint");
+    }
+
+    #[test]
+    fn spec_parse_accepts_and_rejects() {
+        let s = ScenarioSpec::parse("resnet18+vgg16+vit:sram").unwrap();
+        assert_eq!(s.name, "custom");
+        assert_eq!(s.set.names(), vec!["resnet18", "vgg16", "vit"]);
+        assert_eq!(s.mem, MemoryTech::Sram);
+        assert_eq!(s.agg, Aggregation::Mean, "SRAM defaults to Mean");
+        assert_eq!(s.space.variant, "sram-32nm");
+        let r = ScenarioSpec::parse("alexnet:rram:all").unwrap();
+        assert_eq!(r.agg, Aggregation::All);
+        assert_eq!(r.mem, MemoryTech::Rram);
+        assert_eq!(
+            ScenarioSpec::parse("alexnet:rram").unwrap().agg,
+            Aggregation::Max,
+            "RRAM defaults to Max"
+        );
+        for bad in [
+            "alexnet",             // no memory tech
+            "alexnet:dram",        // unknown tech
+            "alexnet:rram:median", // unknown aggregation
+            ":rram",               // empty workload list
+            "resnet34:rram",       // unknown workload
+            "a:b:c:d",             // too many parts
+        ] {
+            assert!(ScenarioSpec::parse(bad).is_err(), "'{bad}' must fail");
+        }
     }
 
     #[test]

@@ -193,7 +193,9 @@ fn poly_mut_gene(x: f64, hi: f64, eta: f64, rng: &mut Rng) -> f64 {
 }
 
 /// Produce two offspring from two parents under phase parameters.
-fn variate(
+/// Shared with the multi-objective engine (`pareto::nsga2`), so the
+/// scalar GA and NSGA-II explore with bit-identical operators.
+pub(crate) fn variate(
     space: &crate::space::SearchSpace,
     p1: &Design,
     p2: &Design,

@@ -49,13 +49,18 @@ pub trait Problem: Sync {
         self.space().random(rng)
     }
 
-    /// Graded constraint violation for stochastic ranking (ERES): 0 for
-    /// feasible designs, positive magnitude otherwise. The default cannot
-    /// grade, so it reports 1.0 for infeasible scores.
+    /// Graded constraint violation for stochastic ranking (ERES) and the
+    /// NSGA-II constraint-domination tournament: 0 for feasible designs,
+    /// positive magnitude otherwise. The default cannot grade, so any
+    /// non-finite score — `+∞` *and* `NaN` alike — reports a unit
+    /// violation: a NaN score is neither finite nor gradable, so it is
+    /// explicitly infeasible rather than silently feasible.
     fn violation(&self, design: &Design) -> f64 {
-        if self.score_batch(std::slice::from_ref(design))[0].is_finite() {
+        let score = self.score_batch(std::slice::from_ref(design))[0];
+        if score.is_finite() {
             0.0
         } else {
+            // covers +inf (constraint breach) and NaN (unscorable) alike
             1.0
         }
     }
@@ -525,6 +530,34 @@ mod tests {
         assert_eq!(top[0].0, mk(2));
         assert_eq!(top[1].0, mk(0));
         assert_eq!(top[2].0, mk(1));
+    }
+
+    #[test]
+    fn default_violation_treats_nan_as_infeasible() {
+        /// Scores: finite for index-0 == 0, +inf for 1, NaN otherwise.
+        struct NanScores(SearchSpace);
+        impl Problem for NanScores {
+            fn space(&self) -> &SearchSpace {
+                &self.0
+            }
+            fn score_batch(&self, designs: &[Design]) -> Vec<f64> {
+                designs
+                    .iter()
+                    .map(|d| match d.0[0] {
+                        0 => 1.0,
+                        1 => f64::INFINITY,
+                        _ => f64::NAN,
+                    })
+                    .collect()
+            }
+        }
+        let p = NanScores(SearchSpace::rram_reduced());
+        let mut ok = Design(vec![0; 10]);
+        assert_eq!(p.violation(&ok), 0.0);
+        ok.0[0] = 1;
+        assert_eq!(p.violation(&ok), 1.0, "+inf is infeasible");
+        ok.0[0] = 2;
+        assert_eq!(p.violation(&ok), 1.0, "NaN must grade as infeasible too");
     }
 
     #[test]

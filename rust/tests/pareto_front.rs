@@ -1,0 +1,280 @@
+//! Pareto subsystem integration:
+//!
+//! * property tests for the front invariants — non-dominated sorting is
+//!   mutually non-dominating and rank-complete, hypervolume is monotone
+//!   under adding a dominating point;
+//! * the acceptance check of the `pareto` experiment: on cnn4/RRAM at
+//!   the quick budget, the minimum-EDAP corner of the NSGA-II front
+//!   matches the scalarized four-phase GA best within 5% at an equal
+//!   evaluation budget;
+//! * determinism: the experiment's front artifacts are schema-valid and
+//!   bit-identical across `--threads 1` vs `--threads 8` and across a
+//!   simulated mid-run kill + `--resume` replay (the
+//!   `checkpoint_resume.rs` pattern).
+
+use imcopt::coordinator::ExpContext;
+use imcopt::experiments::{self, checkpoint::Checkpoint};
+use imcopt::pareto::{indicators, sort, MooMode, MooProblem, MultiObjectiveOptimizer};
+use imcopt::prelude::*;
+use imcopt::util::{json, proptest, schema};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imcopt-pareto-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+// ---- front invariants (property tests) ------------------------------------
+
+/// Random point cloud: dims in 2..=4, coords from a small grid so
+/// duplicates and per-axis ties actually occur.
+fn random_points(rng: &mut Rng) -> Vec<Vec<f64>> {
+    let dims = 2 + rng.below(3);
+    let n = 1 + rng.below(40);
+    (0..n)
+        .map(|_| (0..dims).map(|_| rng.below(6) as f64).collect())
+        .collect()
+}
+
+#[test]
+fn property_sort_is_rank_complete_and_mutually_non_dominating() {
+    proptest::check("non-dominated sort invariants", 120, |rng| {
+        let points = random_points(rng);
+        let fronts = sort::non_dominated_sort(&points);
+        // rank-complete: every index in exactly one front
+        let mut seen = vec![0usize; points.len()];
+        for front in &fronts {
+            for &i in front {
+                seen[i] += 1;
+            }
+        }
+        if seen.iter().any(|&c| c != 1) {
+            return Err(format!("indices not partitioned: {seen:?}"));
+        }
+        for (r, front) in fronts.iter().enumerate() {
+            // mutually non-dominating within a front
+            for &i in front {
+                for &j in front {
+                    if i != j && sort::dominates(&points[i], &points[j]) {
+                        return Err(format!("front {r}: {i} dominates {j}"));
+                    }
+                }
+            }
+            // every member of front r >= 1 is dominated by someone in
+            // front r - 1 (and nothing in r or beyond dominates front 0)
+            if r > 0 {
+                for &i in front {
+                    let covered = fronts[r - 1]
+                        .iter()
+                        .any(|&j| sort::dominates(&points[j], &points[i]));
+                    if !covered {
+                        return Err(format!("front {r} member {i} uncovered"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_hypervolume_monotone_under_dominating_point() {
+    proptest::check("hypervolume monotonicity", 60, |rng| {
+        let dims = 2 + rng.below(3);
+        let n = 1 + rng.below(12);
+        let points: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..dims).map(|_| 0.1 + 0.9 * rng.f64()).collect())
+            .collect();
+        let reference = vec![2.0f64; dims];
+        let base = indicators::hypervolume(&points, &reference);
+        // a point strictly dominating a random member
+        let q = &points[rng.below(points.len())];
+        let dominating: Vec<f64> = q.iter().map(|&x| x / 2.0).collect();
+        let mut more = points.clone();
+        more.push(dominating);
+        let grown = indicators::hypervolume(&more, &reference);
+        // monotone: the dominated region can only grow (strict growth is
+        // not guaranteed — another member may already dominate the new
+        // point's region)
+        if grown + 1e-12 < base {
+            return Err(format!("hv shrank: {base} -> {grown} (dims {dims})"));
+        }
+        Ok(())
+    });
+}
+
+// ---- acceptance: NSGA-II corner vs scalarized GA --------------------------
+
+#[test]
+fn nsga2_min_edap_corner_matches_scalarized_ga_within_5pct() {
+    let ctx = ExpContext::quick(17);
+    let spec = imcopt::scenarios::ScenarioSpec::cnn4();
+    let problem = ctx.problem(&spec.space, &spec.set, spec.mem, spec.objective());
+    let (p_h, p_e) = ctx.sampling();
+    let seed = 17u64;
+
+    // scalarized four-phase GA at the quick budget
+    let ga_cfg = GaConfig {
+        init: imcopt::search::InitStrategy::HammingDiverse { p_h, p_e },
+        ..GaConfig::four_phase(ctx.budget())
+    };
+    let ga = GeneticAlgorithm::new(ga_cfg).run(&problem, &mut Rng::seed_from(seed));
+    assert!(ga.best_score.is_finite(), "GA found no feasible design");
+
+    // NSGA-II in metric mode: same budget, same sampling pools, same seed
+    // (identical Hamming-sampled initial population)
+    let moo = MooProblem::new(&problem, MooMode::Metric);
+    let nsga = Nsga2::new(Nsga2Config {
+        init: imcopt::search::InitStrategy::HammingDiverse { p_h, p_e },
+        cap: 128,
+        ..Nsga2Config::paper(ctx.budget())
+    });
+    let mr = nsga.run(&moo, &mut Rng::seed_from(seed));
+    assert!(!mr.front.is_empty(), "empty front");
+
+    // equal evaluation budget, by construction
+    assert_eq!(
+        ga.evals, mr.evals,
+        "GA and NSGA-II must consume the same evaluation budget"
+    );
+
+    // the min-EDAP corner: metric-mode axis product == scalar EDAP
+    let corner = mr
+        .front
+        .iter()
+        .map(|(_, o)| o.iter().product::<f64>())
+        .fold(f64::INFINITY, f64::min);
+    assert!(corner.is_finite());
+    assert!(
+        corner <= ga.best_score * 1.05,
+        "NSGA-II corner {corner} vs GA best {} (ratio {:.3})",
+        ga.best_score,
+        corner / ga.best_score
+    );
+}
+
+// ---- experiment determinism (threads + kill/resume) -----------------------
+
+fn ctx_at(seed: u64, dir: &Path, resume: bool, threads: usize) -> ExpContext {
+    let mut c = ExpContext::quick(seed);
+    c.out_dir = dir.to_path_buf();
+    c.stable = true;
+    c.resume = resume;
+    c.threads = threads;
+    c
+}
+
+/// Every emitted artifact below `dir`, keyed by relative path —
+/// checkpoint internals excluded (journal layouts may differ between an
+/// interrupted and a straight run; artifacts must not).
+fn artifacts(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).expect("readable dir") {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().to_string();
+            if path.is_dir() {
+                if name == "checkpoints" {
+                    continue;
+                }
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+fn assert_identical(a: &BTreeMap<String, Vec<u8>>, b: &BTreeMap<String, Vec<u8>>, what: &str) {
+    let names_a: Vec<&String> = a.keys().collect();
+    let names_b: Vec<&String> = b.keys().collect();
+    assert_eq!(names_a, names_b, "{what}: artifact sets differ");
+    for (name, bytes) in a {
+        assert_eq!(bytes, &b[name], "{what}: artifact {name} differs");
+    }
+}
+
+#[test]
+fn pareto_fronts_are_schema_valid_and_thread_invariant() {
+    let dir_t1 = tmp("t1");
+    let dir_t8 = tmp("t8");
+    let s1 = experiments::run_selected(&["pareto"], &ctx_at(29, &dir_t1, false, 1)).unwrap();
+    assert_eq!(s1.executed, 1);
+    let _ = experiments::run_selected(&["pareto"], &ctx_at(29, &dir_t8, false, 8)).unwrap();
+
+    // schema conformance of every front artifact
+    let schema_doc = json::parse(
+        &std::fs::read_to_string(repo_path("schemas/pareto_front.schema.json")).unwrap(),
+    )
+    .unwrap();
+    let fronts_dir = dir_t1.join("pareto_fronts");
+    let mut n = 0usize;
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&fronts_dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    paths.sort();
+    for path in paths {
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let errs = schema::validate(&schema_doc, &doc);
+        assert!(errs.is_empty(), "{}: {errs:?}", path.display());
+        n += 1;
+    }
+    assert_eq!(n, 4, "2 sets x 2 modes");
+
+    // bit-identical fronts and reports at any worker-thread count
+    assert_identical(&artifacts(&dir_t1), &artifacts(&dir_t8), "threads 1 vs 8");
+}
+
+#[test]
+fn pareto_kill_resume_replays_bit_identical() {
+    let dir_a = tmp("straight");
+    let dir_b = tmp("killed");
+
+    let summary_a = experiments::run_selected(&["pareto"], &ctx_at(31, &dir_a, false, 1)).unwrap();
+    assert_eq!(summary_a.executed, 1);
+
+    // interrupted run: the simulated-kill hook stops after two fresh
+    // cells (the cnn4 GA reference + one front), like a hard kill
+    {
+        let ctx = ctx_at(31, &dir_b, false, 1);
+        let mut ckpt = Checkpoint::for_experiment(&ctx.out_dir, "pareto", false).unwrap();
+        ckpt.abort_after_cells = Some(2);
+        let err = experiments::run_with("pareto", &ctx, &mut ckpt).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("simulated kill"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(ckpt.computed(), 2);
+    }
+
+    let summary_b = experiments::run_selected(&["pareto"], &ctx_at(31, &dir_b, true, 1)).unwrap();
+    assert_eq!(summary_b.executed, 1, "the experiment was not complete yet");
+    assert!(
+        summary_b.cells_reused >= 2,
+        "journaled cells must be reused, not re-run"
+    );
+    assert_eq!(
+        summary_b.cells_computed + summary_b.cells_reused,
+        summary_a.cells_computed,
+        "resume must account for every cell of a straight run"
+    );
+
+    let a = artifacts(&dir_a);
+    assert!(
+        a.keys().any(|k| k.contains("pareto_fronts")),
+        "expected front artifacts, got {:?}",
+        a.keys().collect::<Vec<_>>()
+    );
+    assert_identical(&a, &artifacts(&dir_b), "straight vs killed+resumed");
+}

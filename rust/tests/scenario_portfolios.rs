@@ -244,4 +244,31 @@ fn portfolio_experiments_kill_resume_bit_identical() {
             "artifact {name} differs between straight and resumed runs"
         );
     }
+
+    // focused cross-experiment shared-bound check: wipe transfer's own
+    // journals (keeping checkpoints/shared_bounds.jsonl, written by the
+    // genmatrix_k leg of the straight run) and re-run transfer alone with
+    // --resume. Its 9 all9 specialist bounds must all come from the
+    // shared `bound:<set>:<w>` namespace — only the 3 portfolio joint
+    // searches may compute fresh. If sharing regressed, this computes 12.
+    for f in ["transfer.jsonl", "transfer.memo.jsonl", "transfer.acc.jsonl"] {
+        let _ = std::fs::remove_file(dir_a.join("checkpoints").join(f));
+    }
+    let again = experiments::run_selected(&["transfer"], &ctx_at(29, &dir_a, true)).unwrap();
+    assert_eq!(again.executed, 1, "transfer journal was deleted, so it re-runs");
+    assert_eq!(
+        again.cells_computed, 3,
+        "all 9 specialist bounds must replay from the shared namespace \
+         (computed {}, reused {})",
+        again.cells_computed, again.cells_reused
+    );
+    // ... and its artifacts come out byte-identical again
+    let c = artifacts(&dir_a);
+    assert_eq!(a.keys().collect::<Vec<_>>(), c.keys().collect::<Vec<_>>());
+    for (name, bytes) in &a {
+        assert_eq!(
+            bytes, &c[name],
+            "shared-bound replay changed artifact {name}"
+        );
+    }
 }
