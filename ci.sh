@@ -21,6 +21,11 @@
 #      JSON artifact for every registered experiment (validated against
 #      schemas/experiment_report.schema.json), and a `--resume` re-run
 #      must replay everything without recomputing a single cell
+#   6. orchestrator crash matrix: the same sweep at --workers 4 with a
+#      deterministically killed worker (IMCOPT_FAULT) must complete via
+#      restarts + lease stealing, produce artifacts byte-identical to the
+#      single-process smoke, resume with zero recompute, and emit an
+#      orchestrator_status.json conforming to its schema
 #
 # Set IMCOPT_FEATURES="--features pjrt" to run the same gate against the
 # feature-gated PJRT path (vendored API stub; see vendor/xla-stub).
@@ -119,5 +124,36 @@ case "$RESUME_LINE" in
         exit 1
         ;;
 esac
+
+echo "=== orchestrator crash matrix: --workers 4 with a killed worker ==="
+ORCH_OUT="$(pwd)/target/ci-orch"
+rm -rf "$ORCH_OUT"
+# worker 1 is killed at its second claimed cell on every (re)start: one
+# restart, then abandonment — the surviving workers steal its leases and
+# the sweep must still complete
+IMCOPT_FAULT="w1:exit@cell=2" IMCOPT_MAX_RESTARTS=1 IMCOPT_LEASE_MS=500 \
+    "$IMCOPT_BIN" run --all --quick --stable --seed 5 \
+    --out-dir "$ORCH_OUT" --workers 4
+
+echo "=== validate orchestrated artifacts (all 16 required) ==="
+"$IMCOPT_BIN" validate --out-dir "$ORCH_OUT" --require-all
+"$IMCOPT_BIN" validate --bench "$ORCH_OUT/orchestrator_status.json" \
+    --schema schemas/orchestrator_status.schema.json
+
+echo "=== orchestrated out-dir resumes single-process with zero recompute ==="
+ORCH_RESUME=$("$IMCOPT_BIN" run --all --quick --stable --seed 5 \
+    --out-dir "$ORCH_OUT" --resume | tail -n 1)
+echo "$ORCH_RESUME"
+case "$ORCH_RESUME" in
+    *"executed=0"*"cells_computed=0"*) ;;
+    *)
+        echo "error: resume after an orchestrated run re-ran work" >&2
+        exit 1
+        ;;
+esac
+
+echo "=== orchestrated artifacts are byte-identical to the single-process smoke ==="
+diff -r --exclude=checkpoints --exclude=orchestrator_status.json \
+    "$SMOKE_OUT" "$ORCH_OUT"
 
 echo "=== ci.sh passed ==="

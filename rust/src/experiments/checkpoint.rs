@@ -30,14 +30,17 @@
 
 use crate::coordinator::{Evaluations, JointProblem};
 use crate::model::Metrics;
+use crate::orchestrator::lease::CellClaims;
 use crate::report::Report;
 use crate::search::OptResult;
 use crate::space::Design;
+use crate::util::fault;
 use crate::util::json::{self, Json};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Journal key marking a completed experiment (stores the full report).
@@ -105,6 +108,116 @@ fn load_cells(path: &Path) -> Result<BTreeMap<String, Json>> {
     Ok(cells)
 }
 
+/// Open a journal for a crash-consistent append: the fault-injection point
+/// fires first (so an injected IO fault never half-writes), then a
+/// truncated tail left by a previously killed writer is newline-terminated
+/// so this append starts on a fresh line (the loader skips the corrupt
+/// line; it never merges with ours). Callers `write_all` whole lines and
+/// finish with `sync_data` so a kill after the call loses nothing.
+fn open_journal_for_append(path: &Path, kind: &str) -> Result<std::fs::File> {
+    fault::point(&format!("journal:{kind}"))
+        .with_context(|| format!("appending to {}", path.display()))?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .read(true)
+        .open(path)
+        .with_context(|| format!("opening {kind} journal {}", path.display()))?;
+    let len = f
+        .metadata()
+        .with_context(|| format!("inspecting {}", path.display()))?
+        .len();
+    if len > 0 {
+        use std::io::{Read as _, Seek as _, SeekFrom};
+        f.seek(SeekFrom::End(-1)).context("seeking journal tail")?;
+        let mut last = [0u8; 1];
+        f.read_exact(&mut last).context("reading journal tail")?;
+        if last[0] != b'\n' {
+            eprintln!(
+                "[checkpoint] repairing truncated tail of {}",
+                path.display()
+            );
+            f.write_all(b"\n").context("repairing journal tail")?;
+        }
+    }
+    Ok(f)
+}
+
+/// Incrementally fold journal lines appended since `offset` into `map`,
+/// advancing `offset` past the last *complete* line (a concurrent writer
+/// may be mid-append; its partial tail is left for the next refresh).
+fn refresh_cells(
+    path: &Path,
+    offset: &mut u64,
+    map: &mut BTreeMap<String, Json>,
+) -> Result<()> {
+    use std::io::{Read as _, Seek as _, SeekFrom};
+    let mut f = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => {
+            return Err(e).with_context(|| format!("refreshing {}", path.display()))
+        }
+    };
+    let len = f
+        .metadata()
+        .with_context(|| format!("inspecting {}", path.display()))?
+        .len();
+    if len <= *offset {
+        return Ok(());
+    }
+    f.seek(SeekFrom::Start(*offset))
+        .context("seeking journal refresh offset")?;
+    let mut buf = Vec::with_capacity((len - *offset) as usize);
+    f.read_to_end(&mut buf)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let Some(last_newline) = buf.iter().rposition(|&b| b == b'\n') else {
+        return Ok(());
+    };
+    let complete = last_newline + 1;
+    for line in String::from_utf8_lossy(&buf[..complete]).lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!(
+                    "[checkpoint] skipping corrupt journal line in {}: {e}",
+                    path.display()
+                );
+                continue;
+            }
+        };
+        if let (Some(k), Some(v)) = (parsed.get("k").and_then(|k| k.as_str()), parsed.get("v"))
+        {
+            map.insert(k.to_string(), v.clone());
+        }
+    }
+    *offset += complete as u64;
+    Ok(())
+}
+
+/// Run a cell's compute closure with panic isolation: a panicking cell
+/// becomes an `Err` naming the cell and the panic message, so the caller
+/// (the experiment runner) can retry or quarantine the experiment instead
+/// of unwinding across the whole sweep.
+fn run_compute(key: &str, compute: impl FnOnce() -> Result<Json>) -> Result<Json> {
+    fault::point(&format!("cell:{key}"))
+        .with_context(|| format!("computing cell '{key}'"))?;
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(compute)) {
+        Ok(r) => r.with_context(|| format!("computing cell '{key}'")),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            bail!("cell '{key}' panicked: {msg}")
+        }
+    }
+}
+
 /// Per-experiment checkpoint state. See the module docs.
 #[derive(Debug, Default)]
 pub struct Checkpoint {
@@ -133,6 +246,14 @@ pub struct Checkpoint {
     /// many fresh computations errors out instead of running, leaving the
     /// journal exactly as a hard kill would.
     pub abort_after_cells: Option<usize>,
+    /// Cross-process cell-claim coordinator (multi-worker runs); `None`
+    /// (the default) gives plain single-process semantics.
+    coord: Option<Arc<CellClaims>>,
+    /// Byte offsets up to which the journal / shared file have been folded
+    /// into `cells` / `shared` by [`refresh_cells`] — coordinated runs
+    /// re-read only the suffix another worker appended.
+    journal_offset: u64,
+    shared_offset: u64,
 }
 
 impl Checkpoint {
@@ -182,6 +303,29 @@ impl Checkpoint {
     /// it still share theirs.
     pub fn reset_shared(out_dir: &Path) -> Result<()> {
         remove_if_exists(&out_dir.join("checkpoints").join(SHARED_FILE))
+    }
+
+    /// Pre-initialize the shared namespace for `config`. The supervisor
+    /// calls this once before spawning workers, closing the window where
+    /// two workers racing through [`Checkpoint::bind_config`] would both
+    /// truncate-rewrite the cache file (and could clobber a bound the
+    /// other had already published). Idempotent: an already-matching
+    /// cache is left untouched.
+    pub fn ensure_shared(out_dir: &Path, config: &Json) -> Result<()> {
+        let dir = out_dir.join("checkpoints");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(SHARED_FILE);
+        if load_cells(&path)?.get(CONFIG_KEY) == Some(config) {
+            return Ok(());
+        }
+        let line = Json::obj(vec![
+            ("k", Json::Str(CONFIG_KEY.to_string())),
+            ("v", config.clone()),
+        ])
+        .to_string();
+        crate::util::write_atomic(&path, &(line + "\n"))
+            .with_context(|| format!("initializing {}", path.display()))
     }
 
     fn load_journal(&mut self, path: &Path) -> Result<()> {
@@ -290,14 +434,73 @@ impl Checkpoint {
             ("v", value.clone()),
         ])
         .to_string();
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-            .with_context(|| format!("opening journal {}", path.display()))?;
-        writeln!(f, "{line}").context("appending journal cell")?;
-        f.flush().context("flushing journal")?;
+        let mut f = open_journal_for_append(path, "cells")?;
+        f.write_all((line + "\n").as_bytes())
+            .context("appending journal cell")?;
+        f.sync_data().context("syncing journal")?;
         Ok(())
+    }
+
+    /// Attach a cross-process claim coordinator: from here on, a cell miss
+    /// first claims the key's lease so only one worker computes it while
+    /// the others wait for the value to appear in the journal (or steal
+    /// the lease if the holder dies). No-op on non-persistent checkpoints
+    /// — without a journal there is nothing for other workers to read.
+    pub fn coordinate(&mut self, claims: Arc<CellClaims>) {
+        if self.journal_path.is_some() {
+            self.coord = Some(claims);
+        }
+    }
+
+    fn refresh_journal(&mut self) -> Result<()> {
+        if let Some(path) = self.journal_path.clone() {
+            let mut off = self.journal_offset;
+            refresh_cells(&path, &mut off, &mut self.cells)?;
+            self.journal_offset = off;
+        }
+        Ok(())
+    }
+
+    fn refresh_shared(&mut self) -> Result<()> {
+        if let Some(path) = self.shared_path.clone() {
+            let mut off = self.shared_offset;
+            refresh_cells(&path, &mut off, &mut self.shared)?;
+            self.shared_offset = off;
+        }
+        Ok(())
+    }
+
+    /// Re-read both files and return the journaled (or shared) value for
+    /// `key` if another worker has produced it meanwhile. Counts as a
+    /// reuse; shared hits are copied into this journal so it stays
+    /// standalone-resumable.
+    fn poll_other_workers(
+        &mut self,
+        key: &str,
+        shared_key: Option<&str>,
+    ) -> Result<Option<Json>> {
+        self.refresh_journal()?;
+        if self.shared_active {
+            self.refresh_shared()?;
+        }
+        if let Some(v) = self.cells.get(key).cloned() {
+            self.reused += 1;
+            if let Some(sk) = shared_key {
+                self.publish_shared(sk, &v)?;
+            }
+            return Ok(Some(v));
+        }
+        if let Some(sk) = shared_key {
+            if self.shared_active {
+                if let Some(v) = self.shared.get(sk).cloned() {
+                    self.append_journal(key, &v)?;
+                    self.cells.insert(key.to_string(), v.clone());
+                    self.reused += 1;
+                    return Ok(Some(v));
+                }
+            }
+        }
+        Ok(None)
     }
 
     /// Return the journaled value for `key`, computing, journaling and
@@ -323,20 +526,94 @@ impl Checkpoint {
         key: &str,
         compute: impl FnOnce() -> Result<Json>,
     ) -> Result<Json> {
-        if let Some(v) = self.cells.get(key) {
+        self.cell_inner(key, None, compute)
+    }
+
+    /// The common miss path of [`Checkpoint::cell`] and
+    /// [`Checkpoint::shared_cell`]. When coordinated (multi-worker), a
+    /// miss claims the key's lease before computing; losing the claim
+    /// means another live worker is computing the same cell, so this
+    /// worker polls the journal until the value lands (or the holder's
+    /// lease goes stale and the claim is stolen). Winning the claim
+    /// re-checks the journal first — the previous holder may have
+    /// journaled the value just before dying.
+    fn cell_inner(
+        &mut self,
+        key: &str,
+        shared_key: Option<&str>,
+        compute: impl FnOnce() -> Result<Json>,
+    ) -> Result<Json> {
+        if let Some(v) = self.cells.get(key).cloned() {
             self.reused += 1;
-            return Ok(v.clone());
+            if let Some(sk) = shared_key {
+                // publish a replayed value too, so later experiments of a
+                // partially-resumed sweep reuse it instead of recomputing
+                self.publish_shared(sk, &v)?;
+            }
+            return Ok(v);
+        }
+        if let Some(sk) = shared_key {
+            if self.shared_active {
+                if let Some(v) = self.shared.get(sk).cloned() {
+                    self.append_journal(key, &v)?;
+                    self.cells.insert(key.to_string(), v.clone());
+                    self.reused += 1;
+                    return Ok(v);
+                }
+            }
         }
         if let Some(n) = self.abort_after_cells {
             if self.computed >= n {
                 bail!("checkpoint: simulated kill after {n} fresh cells");
             }
         }
-        let value = compute().with_context(|| format!("computing cell '{key}'"))?;
+        if let Some(claims) = self.coord.clone() {
+            let claim_key = shared_key.unwrap_or(key).to_string();
+            let mut compute = Some(compute);
+            loop {
+                match claims.try_claim(&claim_key)? {
+                    Some(guard) => {
+                        if let Some(v) = self.poll_other_workers(key, shared_key)? {
+                            return Ok(v);
+                        }
+                        let value = run_compute(
+                            key,
+                            compute.take().expect("claim loop computes once"),
+                        )?;
+                        self.append_journal(key, &value)?;
+                        self.cells.insert(key.to_string(), value.clone());
+                        if let Some(sk) = shared_key {
+                            self.publish_shared(sk, &value)?;
+                        }
+                        self.computed += 1;
+                        guard.release();
+                        return Ok(value);
+                    }
+                    None => {
+                        std::thread::sleep(claims.poll_interval());
+                        if let Some(v) = self.poll_other_workers(key, shared_key)? {
+                            return Ok(v);
+                        }
+                    }
+                }
+            }
+        }
+        let value = run_compute(key, compute)?;
         self.append_journal(key, &value)?;
         self.cells.insert(key.to_string(), value.clone());
+        if let Some(sk) = shared_key {
+            self.publish_shared(sk, &value)?;
+        }
         self.computed += 1;
         Ok(value)
+    }
+
+    fn publish_shared(&mut self, shared_key: &str, v: &Json) -> Result<()> {
+        if self.shared_active && !self.shared.contains_key(shared_key) {
+            self.append_shared(shared_key, v)?;
+            self.shared.insert(shared_key.to_string(), v.clone());
+        }
+        Ok(())
     }
 
     /// Bind this checkpoint to the run configuration. A fresh journal
@@ -383,8 +660,9 @@ impl Checkpoint {
                     ("v", config.clone()),
                 ])
                 .to_string();
-                std::fs::write(&path, line + "\n")
+                crate::util::write_atomic(&path, &(line + "\n"))
                     .with_context(|| format!("initializing {}", path.display()))?;
+                self.shared_offset = 0;
                 self.shared.insert(CONFIG_KEY.to_string(), config.clone());
             }
         }
@@ -401,13 +679,10 @@ impl Checkpoint {
             ("v", value.clone()),
         ])
         .to_string();
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-            .with_context(|| format!("opening shared journal {}", path.display()))?;
-        writeln!(f, "{line}").context("appending shared cell")?;
-        f.flush().context("flushing shared journal")?;
+        let mut f = open_journal_for_append(path, "shared")?;
+        f.write_all((line + "\n").as_bytes())
+            .context("appending shared cell")?;
+        f.sync_data().context("syncing shared journal")?;
         Ok(())
     }
 
@@ -424,38 +699,7 @@ impl Checkpoint {
         shared_key: &str,
         compute: impl FnOnce() -> Result<Json>,
     ) -> Result<Json> {
-        if let Some(v) = self.cells.get(key).cloned() {
-            self.reused += 1;
-            // publish a replayed value too, so later experiments of a
-            // partially-resumed sweep reuse it instead of recomputing
-            if self.shared_active && !self.shared.contains_key(shared_key) {
-                self.append_shared(shared_key, &v)?;
-                self.shared.insert(shared_key.to_string(), v.clone());
-            }
-            return Ok(v);
-        }
-        if self.shared_active {
-            if let Some(v) = self.shared.get(shared_key).cloned() {
-                self.append_journal(key, &v)?;
-                self.cells.insert(key.to_string(), v.clone());
-                self.reused += 1;
-                return Ok(v);
-            }
-        }
-        if let Some(n) = self.abort_after_cells {
-            if self.computed >= n {
-                bail!("checkpoint: simulated kill after {n} fresh cells");
-            }
-        }
-        let value = compute().with_context(|| format!("computing cell '{key}'"))?;
-        self.append_journal(key, &value)?;
-        self.cells.insert(key.to_string(), value.clone());
-        if self.shared_active && !self.shared.contains_key(shared_key) {
-            self.append_shared(shared_key, &value)?;
-            self.shared.insert(shared_key.to_string(), value.clone());
-        }
-        self.computed += 1;
-        Ok(value)
+        self.cell_inner(key, Some(shared_key), compute)
     }
 
     /// Journal the finished experiment's report (completion marker).
@@ -524,11 +768,7 @@ impl Checkpoint {
             return Ok(());
         };
         let map = &self.memo[&scope];
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-            .with_context(|| format!("opening memo {}", path.display()))?;
+        let mut f = open_journal_for_append(path, "memo")?;
         for k in &fresh {
             let line = Json::obj(vec![
                 ("s", Json::Str(scope.clone())),
@@ -536,9 +776,10 @@ impl Checkpoint {
                 ("v", evaluation_to_json(&map[k])),
             ])
             .to_string();
-            writeln!(f, "{line}").context("appending memo entry")?;
+            f.write_all((line + "\n").as_bytes())
+                .context("appending memo entry")?;
         }
-        f.flush().context("flushing memo")?;
+        f.sync_data().context("syncing memo")?;
         Ok(())
     }
 
@@ -563,11 +804,7 @@ impl Checkpoint {
         let Some(path) = &self.acc_path else {
             return Ok(());
         };
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-            .with_context(|| format!("opening acc memo {}", path.display()))?;
+        let mut f = open_journal_for_append(path, "acc")?;
         for (k, v) in &fresh {
             let line = Json::obj(vec![
                 ("s", Json::Str(scope.clone())),
@@ -575,9 +812,10 @@ impl Checkpoint {
                 ("v", Json::f64(*v)),
             ])
             .to_string();
-            writeln!(f, "{line}").context("appending acc memo entry")?;
+            f.write_all((line + "\n").as_bytes())
+                .context("appending acc memo entry")?;
         }
-        f.flush().context("flushing acc memo")?;
+        f.sync_data().context("syncing acc memo")?;
         Ok(())
     }
 }
@@ -820,6 +1058,97 @@ mod tests {
         assert!(ck.get("bad").is_none());
         // the damaged key recomputes cleanly
         ck.cell("bad", || Ok(Json::Num(3.0))).unwrap();
+    }
+
+    #[test]
+    fn append_repairs_truncated_tail_before_writing() {
+        let dir = tmp("tail-repair");
+        {
+            let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+            ck.cell("one", || Ok(Json::Num(1.0))).unwrap();
+        }
+        // a killed writer leaves a partial line with no terminator
+        let journal = dir.join("checkpoints/demo.jsonl");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&journal).unwrap();
+        use std::io::Write as _;
+        f.write_all(b"{\"k\": \"partial\", \"v\": [1,").unwrap();
+        drop(f);
+        // the next append must newline-terminate the partial line first,
+        // so its own line never merges with the corpse
+        let mut ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        ck.cell("two", || Ok(Json::Num(2.0))).unwrap();
+        let ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        assert_eq!(ck.get("one"), Some(&Json::Num(1.0)));
+        assert_eq!(ck.get("two"), Some(&Json::Num(2.0)));
+        assert!(ck.get("partial").is_none());
+    }
+
+    #[test]
+    fn shared_journal_recovers_from_truncated_tail() {
+        let dir = tmp("shared-tail");
+        let cfg = Json::obj(vec![("seed", Json::Str("5".into()))]);
+        {
+            let mut a = Checkpoint::for_experiment(&dir, "expa", false).unwrap();
+            a.bind_config(&cfg).unwrap();
+            a.shared_cell("a:k", "bound:cnn4:1", || Ok(Json::Num(7.0))).unwrap();
+        }
+        // kill mid-append to the shared cache
+        let shared = dir.join("checkpoints").join("shared_bounds.jsonl");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&shared).unwrap();
+        use std::io::Write as _;
+        f.write_all(b"{\"k\": \"bound:cnn4:2\", \"v\": 9").unwrap();
+        drop(f);
+        // the surviving complete lines (config + first bound) still load;
+        // the truncated bound recomputes and appends on a fresh line
+        let mut b = Checkpoint::for_experiment(&dir, "expb", false).unwrap();
+        b.bind_config(&cfg).unwrap();
+        let v = b
+            .shared_cell("b:k", "bound:cnn4:1", || panic!("cached bound lost"))
+            .unwrap();
+        assert_eq!(v, Json::Num(7.0));
+        let v = b
+            .shared_cell("b:k2", "bound:cnn4:2", || Ok(Json::Num(9.5)))
+            .unwrap();
+        assert_eq!(v, Json::Num(9.5));
+        // a third experiment sees both bounds intact after the repair
+        let mut c = Checkpoint::for_experiment(&dir, "expc", false).unwrap();
+        c.bind_config(&cfg).unwrap();
+        assert_eq!(
+            c.shared_cell("c:k", "bound:cnn4:2", || panic!("repaired bound lost"))
+                .unwrap(),
+            Json::Num(9.5)
+        );
+    }
+
+    #[test]
+    fn acc_memo_recovers_from_truncated_tail() {
+        let dir = tmp("acc-tail");
+        std::fs::create_dir_all(dir.join("checkpoints")).unwrap();
+        let acc = dir.join("checkpoints/demo.acc.jsonl");
+        std::fs::write(
+            &acc,
+            "{\"s\": \"scope\", \"k\": \"4,7,2\", \"v\": 0.125}\n\
+             {\"s\": \"scope\", \"k\": \"5,8,3\", \"v\": 0.5",
+        )
+        .unwrap();
+        let ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        let scope = ck.acc.get("scope").expect("intact acc entries load");
+        assert_eq!(scope.get(&(4, 7, 2)), Some(&0.125));
+        assert!(
+            !scope.contains_key(&(5, 8, 3)),
+            "truncated acc line must be skipped, not mis-parsed"
+        );
+    }
+
+    #[test]
+    fn panicking_cell_is_isolated_into_an_error() {
+        let mut ck = Checkpoint::disabled();
+        let err = ck.cell("p", || panic!("boom")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+        // the checkpoint stays usable after the isolated panic
+        assert_eq!(ck.cell("q", || Ok(Json::Num(1.0))).unwrap(), Json::Num(1.0));
     }
 
     #[test]

@@ -363,7 +363,8 @@ pub fn write_portfolio_cell(
             ),
         ),
     ]);
-    std::fs::write(path, cell.to_string() + "\n")
+    // atomic: concurrent orchestrator workers may emit the same cell
+    crate::util::write_atomic(path, &(cell.to_string() + "\n"))
         .with_context(|| format!("writing portfolio cell {}", path.display()))
 }
 

@@ -181,9 +181,10 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
                     ),
                 ),
             ]);
-            std::fs::write(
-                cells_dir.join(format!("{set_name}-{held}.json")),
-                cell.to_string() + "\n",
+            // atomic: concurrent orchestrator workers may emit the same cell
+            crate::util::write_atomic(
+                &cells_dir.join(format!("{set_name}-{held}.json")),
+                &(cell.to_string() + "\n"),
             )
             .with_context(|| format!("writing genmatrix cell {set_name}-{held}"))?;
         }

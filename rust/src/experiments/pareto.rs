@@ -324,7 +324,8 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
                 ("corner_vs_ga", Json::f64(ratio)),
             ]);
             let path = fronts_dir.join(format!("{}-{}.json", spec.name, mode.name()));
-            std::fs::write(&path, cell.to_string() + "\n")
+            // atomic: concurrent orchestrator workers may emit the same front
+            crate::util::write_atomic(&path, &(cell.to_string() + "\n"))
                 .with_context(|| format!("writing pareto front {}", path.display()))?;
         }
         ckpt.absorb_problem(&problem)?;

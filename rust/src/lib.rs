@@ -44,6 +44,11 @@
 //!   The registry is self-describing: `imcopt list --markdown`
 //!   regenerates the catalog in `docs/experiments.md`, and a drift test
 //!   pins the checked-in file to [`experiments::REGISTRY`].
+//! * [`orchestrator`] — fault-tolerant multi-process sweeps
+//!   (`imcopt run --workers N`): file-locked cell claims with heartbeat
+//!   leases, a worker supervisor with restart budgets and quarantine,
+//!   and the deterministic fault-injection harness behind the
+//!   crash-matrix tests (see `docs/orchestration.md`).
 //! * [`util`] — std-only infrastructure (RNG, thread pool, sharded
 //!   striped-lock cache, JSON, stats, tables, CLI, property-testing and
 //!   bench harnesses); the offline crate registry has no
@@ -71,6 +76,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod model;
 pub mod objective;
+pub mod orchestrator;
 pub mod pareto;
 pub mod report;
 pub mod runtime;

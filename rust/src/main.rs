@@ -5,7 +5,7 @@
 //! imcopt run [ids...|--all] [--seed N] [--quick] [--out-dir DIR]
 //!            [--resume] [--stable] [--topk K] [--hold-k K]
 //!            [--portfolio IDS] [--moo-mode M] [--pareto-cap N]
-//!            [--spec S] [--native|--pjrt]
+//!            [--spec S] [--native|--pjrt] [--workers N]
 //! imcopt list [--markdown|--json]   # the experiment catalog
 //! imcopt validate [--out-dir DIR [--require-all]] [--bench FILE] [--schema FILE]
 //! imcopt search [--mem rram|sram] [--obj edap|edp|energy|latency|area|cost|acc]
@@ -19,6 +19,10 @@
 //! `run` drives the experiment registry with per-experiment checkpoints
 //! under `--out-dir`; a run killed mid-flight resumes with `--resume`
 //! without re-evaluating completed cells (`exp` is a legacy alias).
+//! `--workers N` shards the sweep's cells across N supervised worker
+//! processes with lease stealing, crash restarts and quarantine (see
+//! `docs/orchestration.md`); experiments that keep failing exit the
+//! process with code 3 instead of aborting the sweep.
 
 use anyhow::{bail, Context, Result};
 use imcopt::coordinator::ExpContext;
@@ -88,7 +92,20 @@ fn print_help() {
          \x20                genmatrix_k / transfer / pareto (default: paper sets)\n\
          \x20 --threads N    worker threads for population evaluation\n\
          \x20                (default: IMCOPT_THREADS env var, else all cores;\n\
-         \x20                scores are identical for any thread count)",
+         \x20                scores are identical for any thread count)\n\
+         \x20 --workers N    shard `run` across N worker processes sharing one\n\
+         \x20                --out-dir: file-locked cell claims with heartbeat\n\
+         \x20                leases, stale-lease stealing, crash restarts and\n\
+         \x20                quarantine (reports are byte-identical at any N;\n\
+         \x20                see docs/orchestration.md)\n\
+         \n\
+         orchestrator environment (all optional; docs/orchestration.md):\n\
+         \x20 IMCOPT_FAULT=<plan | seed:rate>  deterministic fault injection,\n\
+         \x20                e.g. 'w1:exit@cell=2' or '7:0.01' (crash-matrix tests)\n\
+         \x20 IMCOPT_LEASE_MS=30000 lease staleness timeout before stealing\n\
+         \x20 IMCOPT_CELL_RETRIES=2 extra attempts per failing experiment\n\
+         \x20 IMCOPT_RETRY_MS=100   retry backoff base (doubles, capped 5s)\n\
+         \x20 IMCOPT_MAX_RESTARTS=2 restarts per crashed worker before abandoning",
         ids = experiments::ALL_IDS.join(", ")
     );
 }
@@ -108,6 +125,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
     }
     let ctx = ExpContext::from_args(args);
+    // an explicitly requested backend that cannot load is a CLI error,
+    // not a mid-sweep panic
+    ctx.require_backend()?;
     let positional_all =
         args.positionals.is_empty() || args.positionals.iter().any(|s| s == "all");
     let ids: Vec<&str> = if args.flag("all") || positional_all {
@@ -115,8 +135,25 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         args.positionals.iter().map(|s| s.as_str()).collect()
     };
-    let summary = experiments::run_selected(&ids, &ctx)?;
+    if ctx.worker_id.is_some() {
+        // orchestrator worker process: coordinate through cell claims,
+        // write the status file, exit 0 or EXIT_QUARANTINED
+        return imcopt::orchestrator::worker_main(&ids, &ctx);
+    }
+    let summary = if ctx.workers > 1 {
+        imcopt::orchestrator::supervisor::supervise(&ids, &ctx)?
+    } else {
+        experiments::run_selected(&ids, &ctx)?
+    };
     println!("\n{}", summary.to_line());
+    if !summary.quarantined.is_empty() {
+        for q in &summary.quarantined {
+            eprintln!("quarantined: {} — {}", q.experiment, q.reason);
+        }
+        // graceful degradation is still a degradation: every healthy
+        // experiment completed, but the exit code must say "not clean"
+        std::process::exit(imcopt::orchestrator::EXIT_QUARANTINED);
+    }
     Ok(())
 }
 
@@ -379,6 +416,7 @@ fn parse_objective(args: &Args) -> Result<Objective> {
 
 fn cmd_search(args: &Args) -> Result<()> {
     let ctx = ExpContext::from_args(args);
+    ctx.require_backend()?;
     let mem = parse_mem(args)?;
     let objective = parse_objective(args)?;
     let set = match args.opt("workloads") {

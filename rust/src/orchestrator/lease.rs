@@ -1,0 +1,379 @@
+//! File-locked cell claims with heartbeat leases.
+//!
+//! Workers sharing one `--out-dir` coordinate through lease files under
+//! `<out_dir>/checkpoints/claims/`: before computing a checkpoint cell, a
+//! worker atomically creates `<fnv64(key)>.lease` (`O_CREAT|O_EXCL`, the
+//! only primitive the protocol needs from the filesystem). While the claim
+//! is held, a background heartbeat thread re-touches the file so its mtime
+//! stays fresh; a lease whose mtime is older than `IMCOPT_LEASE_MS`
+//! (default 30000) belongs to a crashed or wedged worker and is **stolen**
+//! (rewritten via temp + rename, which also refreshes the mtime
+//! atomically).
+//!
+//! The protocol is deliberately *advisory*: cells are deterministic pure
+//! functions of (key, run config), so two workers racing the same cell at
+//! worst compute it twice and journal the identical value — claims exist
+//! to avoid that waste, not to guard correctness. This is also why hashed
+//! file names are safe: an fnv64 collision merely serializes two unrelated
+//! cells behind one lease; each worker still reads its value from the
+//! journal under the real key. A worker that is wedged but still
+//! heartbeating holds its lease forever — detecting live-but-stuck workers
+//! is the supervisor's job (restart budget), not the lease layer's.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, SystemTime};
+
+/// FNV-1a 64-bit hash — stable across processes and platforms, which the
+/// claim protocol needs (every worker must map a key to the same file).
+pub fn fnv64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn env_ms(name: &str, default: u64) -> Duration {
+    let ms = std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(default);
+    Duration::from_millis(ms)
+}
+
+#[derive(Debug, Default)]
+struct HeartbeatState {
+    /// Lease files currently held by this process; re-touched on every
+    /// heartbeat tick.
+    held: Vec<PathBuf>,
+}
+
+/// The per-process claim coordinator: one instance per worker, shared by
+/// every experiment's [`crate::experiments::checkpoint::Checkpoint`] via
+/// `Arc`. Owns the heartbeat thread (started lazily on the first claim,
+/// joined on drop).
+#[derive(Debug)]
+pub struct CellClaims {
+    dir: PathBuf,
+    worker: usize,
+    lease_timeout: Duration,
+    poll: Duration,
+    state: Arc<Mutex<HeartbeatState>>,
+    stop: Arc<AtomicBool>,
+    heartbeat: Mutex<Option<std::thread::JoinHandle<()>>>,
+    claims: AtomicU64,
+    steals: AtomicU64,
+}
+
+impl CellClaims {
+    /// Coordinator rooted at `<out_dir>/checkpoints/claims/`. `worker` is
+    /// informational (recorded in lease files for debugging).
+    pub fn new(out_dir: &Path, worker: usize) -> Result<CellClaims> {
+        let dir = out_dir.join("checkpoints").join("claims");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating claims dir {}", dir.display()))?;
+        Ok(CellClaims {
+            dir,
+            worker,
+            lease_timeout: env_ms("IMCOPT_LEASE_MS", 30_000),
+            poll: env_ms("IMCOPT_POLL_MS", 50),
+            state: Arc::new(Mutex::new(HeartbeatState::default())),
+            stop: Arc::new(AtomicBool::new(false)),
+            heartbeat: Mutex::new(None),
+            claims: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+        })
+    }
+
+    /// Remove every lease file under `out_dir` — called by the supervisor
+    /// before a sweep so leases from a previous (possibly killed) run
+    /// never stall the new one for a full lease timeout.
+    pub fn clear(out_dir: &Path) -> Result<()> {
+        let dir = out_dir.join("checkpoints").join("claims");
+        match std::fs::remove_dir_all(&dir) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| format!("clearing {}", dir.display())),
+        }
+    }
+
+    /// How long a waiter sleeps between journal polls while another worker
+    /// holds the lease (`IMCOPT_POLL_MS`, default 50).
+    pub fn poll_interval(&self) -> Duration {
+        self.poll
+    }
+
+    /// Total successful claims / stale-lease steals by this process.
+    pub fn claim_count(&self) -> u64 {
+        self.claims.load(Ordering::Relaxed)
+    }
+
+    pub fn steal_count(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    fn lease_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}.lease", fnv64(key)))
+    }
+
+    fn lease_body(&self, key: &str) -> String {
+        format!(
+            "{{\"key\": {}, \"worker\": {}, \"pid\": {}}}\n",
+            crate::util::json::Json::Str(key.to_string()),
+            self.worker,
+            std::process::id()
+        )
+    }
+
+    /// Try to claim `key`'s lease. `Ok(Some(..))` = acquired (fresh file
+    /// created, or a stale lease stolen); `Ok(None)` = a live worker holds
+    /// it. Only filesystem errors are `Err`.
+    pub fn try_claim(self: &Arc<Self>, key: &str) -> Result<Option<ClaimGuard>> {
+        let path = self.lease_path(key);
+        let created = std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path);
+        match created {
+            Ok(mut f) => {
+                use std::io::Write as _;
+                let _ = f.write_all(self.lease_body(key).as_bytes());
+                self.acquired(&path);
+                Ok(Some(ClaimGuard::new(self, path)))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let age = match std::fs::metadata(&path).and_then(|m| m.modified()) {
+                    Ok(mtime) => SystemTime::now()
+                        .duration_since(mtime)
+                        .unwrap_or(Duration::ZERO),
+                    // holder released (or was stolen) between our open and
+                    // stat — retry on the next poll rather than racing
+                    Err(_) => return Ok(None),
+                };
+                if age < self.lease_timeout {
+                    return Ok(None);
+                }
+                // Stale: the holder stopped heartbeating (crashed, killed,
+                // or wedged past the timeout). Steal by temp + rename —
+                // atomic, and resets the mtime so other thieves back off.
+                let tmp = self.dir.join(format!(
+                    "steal-{}-{}.tmp",
+                    std::process::id(),
+                    fnv64(key)
+                ));
+                std::fs::write(&tmp, self.lease_body(key))
+                    .with_context(|| format!("writing steal temp {}", tmp.display()))?;
+                std::fs::rename(&tmp, &path)
+                    .with_context(|| format!("stealing lease {}", path.display()))?;
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                self.acquired(&path);
+                Ok(Some(ClaimGuard::new(self, path)))
+            }
+            Err(e) => {
+                Err(e).with_context(|| format!("claiming lease {}", path.display()))
+            }
+        }
+    }
+
+    fn acquired(self: &Arc<Self>, path: &Path) {
+        self.claims.fetch_add(1, Ordering::Relaxed);
+        self.state
+            .lock()
+            .expect("heartbeat state lock")
+            .held
+            .push(path.to_path_buf());
+        self.ensure_heartbeat();
+    }
+
+    /// Start the heartbeat thread on first use: every tick it rewrites the
+    /// held lease files in place, refreshing their mtimes. The interval is
+    /// a quarter of the lease timeout (capped at 1s) so a healthy holder
+    /// always beats the staleness clock with margin.
+    fn ensure_heartbeat(self: &Arc<Self>) {
+        let mut slot = self.heartbeat.lock().expect("heartbeat slot lock");
+        if slot.is_some() {
+            return;
+        }
+        let interval = (self.lease_timeout / 4).min(Duration::from_secs(1));
+        let state = Arc::clone(&self.state);
+        let stop = Arc::clone(&self.stop);
+        *slot = Some(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(interval);
+                let held = state.lock().expect("heartbeat state lock").held.clone();
+                for path in held {
+                    // re-read + rewrite bumps the mtime; a file someone
+                    // stole away from us just fails silently (harmless —
+                    // the journal, not the lease, carries the value)
+                    if let Ok(body) = std::fs::read(&path) {
+                        let _ = std::fs::write(&path, body);
+                    }
+                }
+            }
+        }));
+    }
+
+    fn forget(&self, path: &Path) {
+        let mut st = self.state.lock().expect("heartbeat state lock");
+        st.held.retain(|p| p != path);
+    }
+}
+
+impl Drop for CellClaims {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.heartbeat.lock().expect("heartbeat slot lock").take() {
+            let _ = h.join();
+        }
+        // release anything still held so a clean worker exit never leaves
+        // leases for others to wait out
+        let held = std::mem::take(&mut self.state.lock().expect("state lock").held);
+        for path in held {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// A held lease; releasing (explicitly or on drop) deletes the lease file
+/// and stops heartbeating it.
+#[derive(Debug)]
+pub struct ClaimGuard {
+    owner: Arc<CellClaims>,
+    path: PathBuf,
+    released: bool,
+}
+
+impl ClaimGuard {
+    fn new(owner: &Arc<CellClaims>, path: PathBuf) -> ClaimGuard {
+        ClaimGuard {
+            owner: Arc::clone(owner),
+            path,
+            released: false,
+        }
+    }
+
+    /// Release the claim (idempotent; also runs on drop).
+    pub fn release(mut self) {
+        self.release_inner();
+    }
+
+    fn release_inner(&mut self) {
+        if self.released {
+            return;
+        }
+        self.released = true;
+        self.owner.forget(&self.path);
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl Drop for ClaimGuard {
+    fn drop(&mut self) {
+        self.release_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("imcopt-lease-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn fnv64_is_stable_and_spreads() {
+        assert_eq!(fnv64(""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv64("bound:cnn4:1"), fnv64("bound:cnn4:2"));
+        assert_eq!(fnv64("abc"), fnv64("abc"));
+    }
+
+    #[test]
+    fn claim_is_exclusive_until_released() {
+        let dir = tmp("exclusive");
+        let a = Arc::new(CellClaims::new(&dir, 0).unwrap());
+        let b = Arc::new(CellClaims::new(&dir, 1).unwrap());
+        let guard = a.try_claim("cell-x").unwrap().expect("first claim wins");
+        assert!(b.try_claim("cell-x").unwrap().is_none(), "fresh lease held");
+        // an unrelated key is claimable concurrently
+        assert!(b.try_claim("cell-y").unwrap().is_some());
+        guard.release();
+        assert!(
+            b.try_claim("cell-x").unwrap().is_some(),
+            "released lease must be claimable"
+        );
+        assert_eq!(a.claim_count(), 1);
+        assert_eq!(a.steal_count(), 0);
+    }
+
+    #[test]
+    fn dropping_the_guard_releases() {
+        let dir = tmp("drop");
+        let a = Arc::new(CellClaims::new(&dir, 0).unwrap());
+        {
+            let _guard = a.try_claim("k").unwrap().expect("claim");
+        }
+        assert!(a.try_claim("k").unwrap().is_some(), "drop released the lease");
+    }
+
+    #[test]
+    fn stale_lease_is_stolen_fresh_one_is_not() {
+        let dir = tmp("steal");
+        // a tiny timeout so the test can age a lease out quickly
+        let mut a = CellClaims::new(&dir, 0).unwrap();
+        a.lease_timeout = Duration::from_millis(40);
+        let a = Arc::new(a);
+        // simulate a dead holder: a lease file nobody heartbeats
+        let dead = a.lease_path("cell-x");
+        std::fs::write(&dead, "{\"key\": \"cell-x\", \"worker\": 9, \"pid\": 0}\n")
+            .unwrap();
+        assert!(
+            a.try_claim("cell-x").unwrap().is_none(),
+            "fresh foreign lease must be honored"
+        );
+        std::thread::sleep(Duration::from_millis(80));
+        let guard = a
+            .try_claim("cell-x")
+            .unwrap()
+            .expect("stale lease must be stolen");
+        assert_eq!(a.steal_count(), 1);
+        guard.release();
+    }
+
+    #[test]
+    fn heartbeat_keeps_a_held_lease_fresh() {
+        let dir = tmp("heartbeat");
+        let mut a = CellClaims::new(&dir, 0).unwrap();
+        a.lease_timeout = Duration::from_millis(120);
+        let a = Arc::new(a);
+        let mut b = CellClaims::new(&dir, 1).unwrap();
+        b.lease_timeout = Duration::from_millis(120);
+        let b = Arc::new(b);
+        let guard = a.try_claim("cell-x").unwrap().expect("claim");
+        // well past the timeout, but the heartbeat (interval 30ms) keeps
+        // re-touching the file, so b must keep honoring it
+        std::thread::sleep(Duration::from_millis(300));
+        assert!(
+            b.try_claim("cell-x").unwrap().is_none(),
+            "heartbeated lease stolen despite live holder"
+        );
+        guard.release();
+    }
+
+    #[test]
+    fn clear_removes_leftover_leases() {
+        let dir = tmp("clear");
+        let a = Arc::new(CellClaims::new(&dir, 0).unwrap());
+        let _guard = a.try_claim("k").unwrap().expect("claim");
+        CellClaims::clear(&dir).unwrap();
+        let b = Arc::new(CellClaims::new(&dir, 1).unwrap());
+        assert!(b.try_claim("k").unwrap().is_some());
+    }
+}

@@ -1,0 +1,191 @@
+//! Fault-tolerant multi-process orchestration for `imcopt run --workers N`.
+//!
+//! The orchestrator shards checkpoint **cells** — not experiments — across
+//! N worker processes sharing one `--out-dir`:
+//!
+//! * [`lease`] — file-locked cell claims. A worker claims a cell by
+//!   atomically creating a lease file; a heartbeat thread keeps the lease
+//!   fresh, and leases of crashed/wedged workers go stale and are stolen
+//!   after `IMCOPT_LEASE_MS`.
+//! * [`supervisor`] — spawns the workers (each is `imcopt run` re-invoked
+//!   with `IMCOPT_WORKER_ID` set), monitors exit statuses, restarts
+//!   crashed workers with a capped backoff budget (`IMCOPT_MAX_RESTARTS`),
+//!   and aggregates per-worker summaries plus the quarantine list into
+//!   `<out_dir>/orchestrator_status.json`
+//!   (`schemas/orchestrator_status.schema.json`).
+//! * Panic isolation and per-experiment retry live in the session runner
+//!   ([`crate::experiments::run_session`]): a panicking or faulted cell
+//!   becomes an error, the experiment is retried with capped exponential
+//!   backoff (journal replay makes a retry cost only the lost cell), and
+//!   an experiment that keeps failing is **quarantined** so the rest of
+//!   the sweep completes.
+//!
+//! Correctness rests on the repo's determinism contract: cells are pure
+//! functions of (key, run config), so duplicated computation across
+//! workers is harmless — the journals deduplicate by key, and `--stable`
+//! reports are byte-identical at any worker count. The crash matrix in
+//! `rust/tests/orchestrator_faults.rs` enforces exactly that, driven by
+//! the deterministic fault harness in [`crate::util::fault`].
+//!
+//! Environment knobs (all optional):
+//!
+//! | variable | default | meaning |
+//! |----------|---------|---------|
+//! | `IMCOPT_LEASE_MS` | 30000 | lease staleness timeout |
+//! | `IMCOPT_POLL_MS` | 50 | journal poll interval while waiting on a claim |
+//! | `IMCOPT_CELL_RETRIES` | 2 | extra attempts per failing experiment |
+//! | `IMCOPT_RETRY_MS` | 100 | backoff base (doubles per retry, capped 5s) |
+//! | `IMCOPT_MAX_RESTARTS` | 2 | restarts per crashed worker before abandoning it |
+//! | `IMCOPT_FAULT` | unset | fault-injection plan (see [`crate::util::fault`]) |
+
+pub mod lease;
+pub mod supervisor;
+
+use crate::coordinator::ExpContext;
+use crate::experiments::{self, RunSummary};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use lease::CellClaims;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Worker exit code meaning "sweep finished, but some experiments are
+/// quarantined" — the supervisor must not restart such a worker (retrying
+/// won't help a deterministically poisoned cell), but must surface the
+/// degradation.
+pub const EXIT_QUARANTINED: i32 = 3;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Per-experiment retry schedule (panic isolation's second line of
+/// defense): `1 + IMCOPT_CELL_RETRIES` attempts, sleeping
+/// `IMCOPT_RETRY_MS * 2^retry` (capped at 5s) between them. Because every
+/// attempt reopens the checkpoint with resume semantics, a retry replays
+/// all journaled cells and re-runs only the one that failed.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub attempts: usize,
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 1 + env_u64("IMCOPT_CELL_RETRIES", 2) as usize,
+            backoff_base: Duration::from_millis(env_u64("IMCOPT_RETRY_MS", 100)),
+            backoff_cap: Duration::from_secs(5),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `retry` (1-based): base · 2^(retry-1),
+    /// capped.
+    pub fn backoff(&self, retry: usize) -> Duration {
+        let factor = 1u32 << (retry.saturating_sub(1)).min(16) as u32;
+        (self.backoff_base * factor).min(self.backoff_cap)
+    }
+}
+
+/// Path of the per-worker status file (summary + quarantine list) the
+/// supervisor aggregates.
+pub fn worker_status_path(out_dir: &Path, worker: usize) -> std::path::PathBuf {
+    out_dir
+        .join("checkpoints")
+        .join("workers")
+        .join(format!("w{worker}.json"))
+}
+
+/// Path of a worker's redirected stdout+stderr log.
+pub fn worker_log_path(out_dir: &Path, worker: usize) -> std::path::PathBuf {
+    out_dir
+        .join("checkpoints")
+        .join("workers")
+        .join(format!("w{worker}.log"))
+}
+
+/// Serialize a worker's run outcome for the supervisor.
+pub fn summary_to_json(worker: usize, summary: &RunSummary, claims: &CellClaims) -> Json {
+    Json::obj(vec![
+        ("worker", Json::Num(worker as f64)),
+        ("pid", Json::Num(std::process::id() as f64)),
+        ("executed", Json::Num(summary.executed as f64)),
+        ("replayed", Json::Num(summary.replayed as f64)),
+        ("cells_reused", Json::Num(summary.cells_reused as f64)),
+        ("cells_computed", Json::Num(summary.cells_computed as f64)),
+        ("claims", Json::Num(claims.claim_count() as f64)),
+        ("steals", Json::Num(claims.steal_count() as f64)),
+        (
+            "quarantined",
+            Json::Arr(
+                summary
+                    .quarantined
+                    .iter()
+                    .map(|q| {
+                        Json::obj(vec![
+                            ("experiment", Json::Str(q.experiment.clone())),
+                            ("reason", Json::Str(q.reason.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Entry point of a worker process (`IMCOPT_WORKER_ID` is set): run the
+/// sweep coordinated through cell claims, write the worker status file,
+/// and exit 0 (clean) or [`EXIT_QUARANTINED`]. Never returns on success.
+pub fn worker_main(ids: &[&str], ctx: &ExpContext) -> Result<()> {
+    let worker = ctx.worker_id.context("worker_main without IMCOPT_WORKER_ID")?;
+    let claims = Arc::new(CellClaims::new(&ctx.out_dir, worker)?);
+    let summary = experiments::run_session(ids, ctx, Some(&claims))?;
+    println!("\n[worker {worker}] {}", summary.to_line());
+    let status = summary_to_json(worker, &summary, &claims);
+    let path = worker_status_path(&ctx.out_dir, worker);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    crate::util::write_atomic(&path, &(status.to_string() + "\n"))
+        .with_context(|| format!("writing {}", path.display()))?;
+    let code = if summary.quarantined.is_empty() {
+        0
+    } else {
+        EXIT_QUARANTINED
+    };
+    drop(claims);
+    std::process::exit(code);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            attempts: 3,
+            backoff_base: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(5),
+        };
+        assert_eq!(p.backoff(1), Duration::from_millis(100));
+        assert_eq!(p.backoff(2), Duration::from_millis(200));
+        assert_eq!(p.backoff(3), Duration::from_millis(400));
+        assert_eq!(p.backoff(30), Duration::from_secs(5), "cap holds");
+    }
+
+    #[test]
+    fn status_paths_live_under_checkpoints() {
+        let out = Path::new("/tmp/x");
+        assert!(worker_status_path(out, 3).ends_with("checkpoints/workers/w3.json"));
+        assert!(worker_log_path(out, 3).ends_with("checkpoints/workers/w3.log"));
+    }
+}

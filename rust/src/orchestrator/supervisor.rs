@@ -1,0 +1,372 @@
+//! Worker-process supervisor for `imcopt run --workers N`.
+//!
+//! The supervisor prepares the out-dir (clearing journals for fresh
+//! sweeps, pre-initializing the shared bound cache so workers cannot race
+//! its truncate-rewrite, and removing stale lease files), spawns N copies
+//! of the current binary with `IMCOPT_WORKER_ID` set, and monitors their
+//! exit statuses:
+//!
+//! * exit 0 — worker finished its sweep cleanly;
+//! * exit [`EXIT_QUARANTINED`] — finished, but some experiments are
+//!   quarantined (deterministic failures; restarting would not help);
+//! * anything else (including death by signal) — a crash. The worker is
+//!   restarted with capped exponential backoff up to `IMCOPT_MAX_RESTARTS`
+//!   times, then **abandoned**: its lease claims go stale and the
+//!   surviving workers steal them, so the sweep still completes.
+//!
+//! The run succeeds iff every requested experiment either has a stored
+//! report or is quarantined. The outcome — per-worker states, restart
+//! counts, the union quarantine list — lands atomically in
+//! `<out_dir>/orchestrator_status.json`
+//! (`schemas/orchestrator_status.schema.json`).
+
+use super::{worker_log_path, worker_status_path, RetryPolicy, EXIT_QUARANTINED};
+use crate::coordinator::{config::BackendChoice, ExpContext};
+use crate::experiments::{self, Quarantine, RunSummary};
+use crate::orchestrator::lease::CellClaims;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+/// Reconstruct the `imcopt run` argument vector a worker needs to execute
+/// the same sweep as the supervisor's own invocation (minus `--workers`,
+/// plus a per-worker thread share).
+fn worker_args(ids: &[&str], ctx: &ExpContext, threads: usize) -> Vec<String> {
+    let mut args: Vec<String> = vec!["run".into()];
+    args.extend(ids.iter().map(|s| s.to_string()));
+    for (flag, value) in [
+        ("--seed", ctx.seed.to_string()),
+        ("--out-dir", ctx.out_dir.display().to_string()),
+        ("--threads", threads.to_string()),
+        ("--topk", ctx.top_k.to_string()),
+        ("--hold-k", ctx.hold_k.to_string()),
+        ("--pareto-cap", ctx.pareto_cap.to_string()),
+    ] {
+        args.push(flag.into());
+        args.push(value);
+    }
+    for (flag, value) in [
+        ("--portfolio", &ctx.portfolio),
+        ("--moo-mode", &ctx.moo_mode),
+        ("--spec", &ctx.spec),
+    ] {
+        if let Some(v) = value {
+            args.push(flag.into());
+            args.push(v.clone());
+        }
+    }
+    if ctx.quick {
+        args.push("--quick".into());
+    }
+    if ctx.stable {
+        args.push("--stable".into());
+    }
+    match ctx.backend_choice {
+        BackendChoice::Native => args.push("--native".into()),
+        BackendChoice::Pjrt => args.push("--pjrt".into()),
+        BackendChoice::Auto => {}
+    }
+    // workers always resume: the supervisor prepared the journals, and a
+    // restarted worker must replay, not restart, the sweep
+    args.push("--resume".into());
+    args
+}
+
+fn spawn_worker(out_dir: &Path, worker: usize, args: &[String]) -> Result<Child> {
+    let exe = std::env::current_exe().context("locating the imcopt binary")?;
+    let log = worker_log_path(out_dir, worker);
+    if let Some(dir) = log.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let open_log = || {
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&log)
+            .with_context(|| format!("opening worker log {}", log.display()))
+    };
+    Command::new(&exe)
+        .args(args)
+        .env("IMCOPT_WORKER_ID", worker.to_string())
+        .stdin(Stdio::null())
+        .stdout(open_log()?)
+        .stderr(open_log()?)
+        .spawn()
+        .with_context(|| format!("spawning worker {worker} ({})", exe.display()))
+}
+
+#[derive(Debug)]
+struct WorkerSlot {
+    worker: usize,
+    child: Option<Child>,
+    restarts: usize,
+    state: &'static str,
+    exit_code: Option<i32>,
+}
+
+/// Parse a worker's status file into a partial [`RunSummary`] (best
+/// effort: a crashed worker never wrote one).
+fn read_worker_summary(out_dir: &Path, worker: usize) -> Option<(RunSummary, Json)> {
+    let path = worker_status_path(out_dir, worker);
+    let text = std::fs::read_to_string(&path).ok()?;
+    let doc = json::parse(&text).ok()?;
+    let field = |k: &str| doc.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+    let mut summary = RunSummary {
+        executed: field("executed"),
+        replayed: field("replayed"),
+        cells_reused: field("cells_reused"),
+        cells_computed: field("cells_computed"),
+        quarantined: Vec::new(),
+    };
+    if let Some(qs) = doc.get("quarantined").and_then(|q| q.as_arr()) {
+        for q in qs {
+            if let (Some(exp), Some(reason)) = (
+                q.get("experiment").and_then(|e| e.as_str()),
+                q.get("reason").and_then(|r| r.as_str()),
+            ) {
+                summary.quarantined.push(Quarantine {
+                    experiment: exp.to_string(),
+                    reason: reason.to_string(),
+                });
+            }
+        }
+    }
+    Some((summary, doc))
+}
+
+/// Run `ids` across `ctx.workers` worker processes sharing `ctx.out_dir`.
+/// Returns the aggregated summary; errors if any experiment ended neither
+/// completed nor quarantined (e.g. every worker holding its cells died
+/// past the restart budget).
+pub fn supervise(ids: &[&str], ctx: &ExpContext) -> Result<RunSummary> {
+    let workers = ctx.workers.max(1);
+    let config = experiments::config_fingerprint(ctx);
+    // ---- prepare the out-dir ------------------------------------------
+    if !ctx.resume {
+        // workers always run with --resume, so the fresh-sweep clearing
+        // that run_session would do must happen here, once, up front
+        experiments::checkpoint::Checkpoint::reset_shared(&ctx.out_dir)?;
+        for &id in ids {
+            experiments::checkpoint::Checkpoint::for_experiment(
+                &ctx.out_dir,
+                id,
+                false,
+            )?;
+        }
+    }
+    experiments::checkpoint::Checkpoint::ensure_shared(&ctx.out_dir, &config)?;
+    // leases from a previous (killed) run must not stall this one
+    CellClaims::clear(&ctx.out_dir)?;
+    let workers_dir = ctx.out_dir.join("checkpoints").join("workers");
+    if workers_dir.exists() {
+        // stale status files would fool completion accounting
+        std::fs::remove_dir_all(&workers_dir)
+            .with_context(|| format!("clearing {}", workers_dir.display()))?;
+    }
+    // ---- spawn and monitor --------------------------------------------
+    let max_restarts = std::env::var("IMCOPT_MAX_RESTARTS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(2);
+    let policy = RetryPolicy::default();
+    let threads = (ctx.threads / workers).max(1);
+    let args = worker_args(ids, ctx, threads);
+    println!(
+        "[orchestrator] spawning {workers} workers over {} \
+         (lease steal + restart budget {max_restarts})",
+        ctx.out_dir.display()
+    );
+    let mut slots: Vec<WorkerSlot> = Vec::with_capacity(workers);
+    for w in 0..workers {
+        slots.push(WorkerSlot {
+            worker: w,
+            child: Some(spawn_worker(&ctx.out_dir, w, &args)?),
+            restarts: 0,
+            state: "running",
+            exit_code: None,
+        });
+    }
+    loop {
+        let mut running = 0usize;
+        for slot in &mut slots {
+            let Some(child) = slot.child.as_mut() else {
+                continue;
+            };
+            match child.try_wait().context("polling worker")? {
+                None => running += 1,
+                Some(status) => {
+                    let code = status.code();
+                    slot.exit_code = code;
+                    slot.child = None;
+                    match code {
+                        Some(0) => slot.state = "done",
+                        Some(c) if c == EXIT_QUARANTINED => {
+                            // deterministic failures: restarting would hit
+                            // the same poisoned cells again
+                            slot.state = "done-quarantined";
+                        }
+                        _ => {
+                            if slot.restarts < max_restarts {
+                                slot.restarts += 1;
+                                let backoff = policy.backoff(slot.restarts);
+                                eprintln!(
+                                    "[orchestrator] worker {} crashed \
+                                     (status {status}); restart {}/{max_restarts} \
+                                     in {}",
+                                    slot.worker,
+                                    slot.restarts,
+                                    crate::util::fmt_duration(backoff)
+                                );
+                                std::thread::sleep(backoff);
+                                slot.child =
+                                    Some(spawn_worker(&ctx.out_dir, slot.worker, &args)?);
+                                slot.state = "running";
+                                running += 1;
+                            } else {
+                                eprintln!(
+                                    "[orchestrator] worker {} abandoned after \
+                                     {max_restarts} restarts; its leases will \
+                                     go stale and be stolen",
+                                    slot.worker
+                                );
+                                slot.state = "abandoned";
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if running == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    // ---- aggregate and account ----------------------------------------
+    let mut summary = RunSummary::default();
+    let mut worker_status = Vec::new();
+    for slot in &slots {
+        let mut entry = vec![
+            ("worker", Json::Num(slot.worker as f64)),
+            ("state", Json::Str(slot.state.to_string())),
+            ("restarts", Json::Num(slot.restarts as f64)),
+            (
+                "exit_code",
+                match slot.exit_code {
+                    Some(c) => Json::Num(c as f64),
+                    None => Json::Null,
+                },
+            ),
+        ];
+        if let Some((ws, doc)) = read_worker_summary(&ctx.out_dir, slot.worker) {
+            summary.merge(&ws);
+            for k in ["claims", "steals", "cells_computed", "cells_reused"] {
+                if let Some(v) = doc.get(k) {
+                    entry.push((k, v.clone()));
+                }
+            }
+        }
+        worker_status.push(Json::Obj(
+            entry
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        ));
+    }
+    let quarantined_ids: Vec<String> = summary
+        .quarantined
+        .iter()
+        .map(|q| q.experiment.clone())
+        .collect();
+    let mut completed = Vec::new();
+    let mut missing = Vec::new();
+    for &id in ids {
+        let ckpt =
+            experiments::checkpoint::Checkpoint::for_experiment(&ctx.out_dir, id, true)?;
+        if ckpt.stored_report()?.is_some() {
+            completed.push(id.to_string());
+        } else if !quarantined_ids.contains(&id.to_string()) {
+            missing.push(id.to_string());
+        }
+    }
+    let status = Json::obj(vec![
+        ("workers", Json::Num(workers as f64)),
+        ("resume", Json::Bool(ctx.resume)),
+        (
+            "worker_status",
+            Json::Arr(worker_status),
+        ),
+        (
+            "completed",
+            Json::Arr(completed.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+        (
+            "quarantined",
+            Json::Arr(
+                summary
+                    .quarantined
+                    .iter()
+                    .map(|q| {
+                        Json::obj(vec![
+                            ("experiment", Json::Str(q.experiment.clone())),
+                            ("reason", Json::Str(q.reason.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let status_path = ctx.out_dir.join("orchestrator_status.json");
+    crate::util::write_atomic(&status_path, &(status.to_string() + "\n"))
+        .with_context(|| format!("writing {}", status_path.display()))?;
+    println!(
+        "[orchestrator] {} completed, {} quarantined; status in {}",
+        completed.len(),
+        summary.quarantined.len(),
+        status_path.display()
+    );
+    anyhow::ensure!(
+        missing.is_empty(),
+        "orchestrated sweep incomplete: {missing:?} neither completed nor \
+         quarantined (see worker logs under {})",
+        workers_dir.display()
+    );
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_args_reconstruct_the_invocation() {
+        let mut ctx = ExpContext::quick(7);
+        ctx.stable = true;
+        ctx.out_dir = "/tmp/sweep".into();
+        ctx.portfolio = Some("cnn4-to-extras".into());
+        let args = worker_args(&["fig3", "table3"], &ctx, 2);
+        let joined = args.join(" ");
+        assert!(joined.starts_with("run fig3 table3 "));
+        assert!(joined.contains("--seed 7"));
+        assert!(joined.contains("--out-dir /tmp/sweep"));
+        assert!(joined.contains("--threads 2"));
+        assert!(joined.contains("--portfolio cnn4-to-extras"));
+        assert!(joined.contains("--quick"));
+        assert!(joined.contains("--stable"));
+        assert!(joined.contains("--native"), "quick ctx pins native");
+        assert!(joined.ends_with("--resume"));
+        assert!(!joined.contains("--workers"), "workers never nest");
+    }
+
+    #[test]
+    fn worker_args_omit_unset_options() {
+        let ctx = ExpContext::quick(1);
+        let args = worker_args(&["fig3"], &ctx, 1);
+        let joined = args.join(" ");
+        assert!(!joined.contains("--portfolio"));
+        assert!(!joined.contains("--moo-mode"));
+        assert!(!joined.contains("--spec"));
+    }
+}

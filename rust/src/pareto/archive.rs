@@ -5,7 +5,12 @@
 //! are evicted, and when the capacity (`--pareto-cap`) is exceeded the
 //! most crowded interior point is dropped — per-objective extremes carry
 //! infinite crowding distance and are never pruned, so the front's
-//! extent is stable under capacity pressure.
+//! extent is stable under capacity pressure. The **min-product corner**
+//! (the front's best scalar-EDAP point, see
+//! [`min_product_index`](crate::pareto::indicators::min_product_index))
+//! is likewise pinned: it is the design the `pareto` report compares
+//! against the GA best, and it sits in the front's interior where
+//! crowding pressure would otherwise prune it.
 //!
 //! Determinism contract: the archive's contents are a pure function of
 //! the *sequence* of [`ParetoArchive::offer`] calls. Rejection uses weak
@@ -89,12 +94,17 @@ impl ParetoArchive {
     /// ties drop the youngest). All entries are mutually non-dominated,
     /// so crowding over the whole set is well-defined; extremes have
     /// infinite distance and survive unless *every* entry is extreme, in
-    /// which case the youngest goes.
+    /// which case the youngest goes. The min-product corner is exempt
+    /// from victim selection (see the module docs).
     fn prune_one(&mut self) {
         let points: Vec<Vec<f64>> = self.entries.iter().map(|e| e.objectives.clone()).collect();
         let front: Vec<usize> = (0..points.len()).collect();
         let crowd = crowding_distance(&points, &front);
+        // pruning only happens at len == cap + 1 >= 2, so excluding one
+        // pinned index always leaves a victim candidate
+        let pinned = crate::pareto::indicators::min_product_index(&points);
         let victim = (0..self.entries.len())
+            .filter(|&i| Some(i) != pinned)
             .min_by(|&a, &b| {
                 crowd[a]
                     .total_cmp(&crowd[b])
@@ -199,6 +209,25 @@ mod tests {
             .filter(|o| o[0] > 0.0 && o[0] < 4.0)
             .count();
         assert_eq!(interior, 1);
+    }
+
+    #[test]
+    fn pruning_pins_the_min_product_corner() {
+        let mut a = ParetoArchive::new(3);
+        a.offer(&d(0), &[1.0, 5.0]);
+        a.offer(&d(1), &[2.0, 2.0]);
+        a.offer(&d(2), &[5.0, 1.0]);
+        // (2.1, 1.9): product 3.99 — the front's new min-EDAP corner, but
+        // also the youngest, least-crowded interior point; unpinned
+        // pruning would drop exactly this entry
+        a.offer(&d(3), &[2.1, 1.9]);
+        assert_eq!(a.len(), 3);
+        let objs = a.objective_vectors();
+        assert!(objs.contains(&vec![2.1, 1.9]), "corner must survive: {objs:?}");
+        assert!(!objs.contains(&vec![2.0, 2.0]), "next candidate goes: {objs:?}");
+        // the per-axis extremes keep their usual protection
+        assert!(objs.contains(&vec![1.0, 5.0]));
+        assert!(objs.contains(&vec![5.0, 1.0]));
     }
 
     #[test]

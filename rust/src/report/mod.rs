@@ -161,10 +161,16 @@ impl Report {
     pub fn emit(&self, out_dir: &Path) -> Result<()> {
         print!("{}", self.to_text());
         std::fs::create_dir_all(out_dir)?;
-        std::fs::write(out_dir.join(format!("{}.md", self.id)), self.to_markdown())?;
-        std::fs::write(
-            out_dir.join(format!("{}.json", self.id)),
-            self.to_json().to_string() + "\n",
+        // temp-file + rename per artifact: concurrent orchestrator workers
+        // replaying the same report each land a complete file instead of
+        // interleaving writes
+        crate::util::write_atomic(
+            &out_dir.join(format!("{}.md", self.id)),
+            &self.to_markdown(),
+        )?;
+        crate::util::write_atomic(
+            &out_dir.join(format!("{}.json", self.id)),
+            &(self.to_json().to_string() + "\n"),
         )?;
         for (i, t) in self.tables.iter().enumerate() {
             let name = if self.tables.len() == 1 {
@@ -172,7 +178,7 @@ impl Report {
             } else {
                 format!("{}_{}.csv", self.id, i)
             };
-            std::fs::write(out_dir.join(name), t.to_csv())?;
+            crate::util::write_atomic(&out_dir.join(name), &t.to_csv())?;
         }
         Ok(())
     }

@@ -8,6 +8,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod proptest;
@@ -16,6 +17,28 @@ pub mod schema;
 pub mod shards;
 pub mod stats;
 pub mod table;
+
+/// Write `contents` to `path` atomically: write a same-directory temp file,
+/// then rename over the target. Concurrent writers (e.g. two orchestrator
+/// workers emitting the same report) each land a complete file — readers
+/// never observe an interleaved or truncated artifact.
+pub fn write_atomic(path: &std::path::Path, contents: &str) -> std::io::Result<()> {
+    let tmp = path.with_extension(format!(
+        "{}.tmp.{}",
+        path.extension()
+            .map(|e| e.to_string_lossy().to_string())
+            .unwrap_or_default(),
+        std::process::id()
+    ));
+    std::fs::write(&tmp, contents)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
 
 /// `ceil(a / b)` for positive integers, avoiding float rounding.
 #[inline]
@@ -54,6 +77,23 @@ pub fn fmt_sig(x: f64, sig: usize) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("imcopt-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        write_atomic(&path, "first\n").unwrap();
+        write_atomic(&path, "second\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second\n");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .filter(|n| n.contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     #[test]
     fn ceil_div_basics() {

@@ -114,6 +114,96 @@ fn interrupted_run_resumes_bit_identical() {
     }
 }
 
+/// The portfolio/multi-objective experiments journal differently shaped
+/// cells (scenario cells, NSGA-II fronts, shared separate-search bounds)
+/// than the optimizer experiments of [`IDS`] — the kill/resume contract
+/// must hold for them too.
+const IDS2: [&str; 2] = ["transfer", "pareto"];
+
+/// A context narrowed to one custom scenario family so the sweep stays
+/// CI-sized: `transfer` runs the split portfolios of the 2-workload set,
+/// `pareto` one spec in metric mode.
+fn ctx_portfolio(seed: u64, dir: &Path, resume: bool) -> ExpContext {
+    let mut c = ctx_at(seed, dir, resume);
+    c.spec = Some("resnet18+vgg16:rram".into());
+    c.moo_mode = Some("metric".into());
+    c.pareto_cap = 16;
+    c
+}
+
+#[test]
+fn killed_transfer_and_pareto_runs_resume_bit_identical() {
+    let dir_a = tmp("portfolio-straight");
+    let dir_b = tmp("portfolio-killed");
+
+    // reference: uninterrupted checkpointed run
+    let summary_a =
+        experiments::run_selected(&IDS2, &ctx_portfolio(37, &dir_a, false)).unwrap();
+    assert_eq!(summary_a.executed, IDS2.len());
+    assert!(summary_a.quarantined.is_empty());
+
+    // kill *each* experiment after its first fresh cell
+    let ctx = ctx_portfolio(37, &dir_b, false);
+    let mut killed_cells = 0usize;
+    for id in IDS2 {
+        let mut ckpt = Checkpoint::for_experiment(&ctx.out_dir, id, false).unwrap();
+        ckpt.abort_after_cells = Some(1);
+        let err = experiments::run_with(id, &ctx, &mut ckpt).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("simulated kill"),
+            "{id}: unexpected error: {err:#}"
+        );
+        assert_eq!(ckpt.computed(), 1, "{id} must die after exactly one cell");
+        killed_cells += ckpt.computed();
+    }
+
+    // one resume completes both experiments
+    let summary_b =
+        experiments::run_selected(&IDS2, &ctx_portfolio(37, &dir_b, true)).unwrap();
+    assert_eq!(summary_b.executed, IDS2.len(), "no report was stored yet");
+    assert_eq!(summary_b.replayed, 0);
+    assert!(
+        summary_b.cells_reused >= killed_cells,
+        "every pre-kill cell must be reused, not re-run (reused {} < {killed_cells})",
+        summary_b.cells_reused
+    );
+    // both runs visit the same deterministic cell sequence; visits are
+    // split between computed and reused differently, never lost
+    assert_eq!(
+        summary_b.cells_computed + summary_b.cells_reused,
+        summary_a.cells_computed + summary_a.cells_reused,
+        "resume must account for every cell visit of a straight run"
+    );
+
+    // artifacts are byte-identical to the uninterrupted run
+    let a = artifacts(&dir_a);
+    let b = artifacts(&dir_b);
+    let names_a: Vec<&String> = a.keys().collect();
+    let names_b: Vec<&String> = b.keys().collect();
+    assert_eq!(names_a, names_b, "artifact sets differ");
+    assert!(
+        a.keys().any(|k| k.ends_with("pareto.json")),
+        "expected pareto artifacts, got {names_a:?}"
+    );
+    assert!(
+        a.keys().any(|k| k.ends_with("transfer.json")),
+        "expected transfer artifacts, got {names_a:?}"
+    );
+    for (name, bytes_a) in &a {
+        assert_eq!(
+            bytes_a, &b[name],
+            "artifact {name} differs between straight and resumed runs"
+        );
+    }
+
+    // a second resume replays both stored reports with zero computation
+    let again =
+        experiments::run_selected(&IDS2, &ctx_portfolio(37, &dir_b, true)).unwrap();
+    assert_eq!(again.replayed, IDS2.len());
+    assert_eq!(again.executed, 0);
+    assert_eq!(again.cells_computed, 0, "replay must not recompute cells");
+}
+
 #[test]
 fn completed_experiments_replay_without_recomputation() {
     let dir = tmp("replay");

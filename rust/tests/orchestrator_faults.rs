@@ -1,0 +1,261 @@
+//! Crash matrix for the orchestrator: under any seeded fault
+//! interleaving — worker kills, injected panics, journal I/O errors, at
+//! any worker count — a `--resume` completes the sweep with artifacts
+//! **byte-identical** to an undisturbed run and zero recomputation on a
+//! further resume.
+//!
+//! Faults are injected with the deterministic harness in
+//! `imcopt::util::fault` via `IMCOPT_FAULT` (see `docs/orchestration.md`
+//! for the plan grammar). Every case drives the real binary
+//! (`CARGO_BIN_EXE_imcopt`), so process exits, lease files, worker
+//! respawns and exit-code protocols are all exercised for real.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+/// fig3 + table3: cheap, cell-granular, and covering both GA and
+/// non-GA journal cell kinds.
+const IDS: [&str; 2] = ["fig3", "table3"];
+const SEED: &str = "11";
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_imcopt")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imcopt-faults-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// An `imcopt run` command over `dir` with fast orchestrator knobs and a
+/// clean fault environment (cases opt in via `.env("IMCOPT_FAULT", ..)`).
+fn run_cmd(dir: &Path, extra: &[&str]) -> Command {
+    let mut cmd = Command::new(bin());
+    cmd.arg("run")
+        .args(IDS)
+        .args(["--quick", "--stable", "--native"])
+        .args(["--seed", SEED])
+        .arg("--out-dir")
+        .arg(dir)
+        .args(extra)
+        .env_remove("IMCOPT_FAULT")
+        .env_remove("IMCOPT_WORKER_ID")
+        .env("IMCOPT_THREADS", "2")
+        .env("IMCOPT_LEASE_MS", "300")
+        .env("IMCOPT_POLL_MS", "10")
+        .env("IMCOPT_RETRY_MS", "10")
+        .env("IMCOPT_MAX_RESTARTS", "1");
+    cmd
+}
+
+fn run_ok(cmd: &mut Command, what: &str) -> Output {
+    let out = cmd.output().expect("spawn imcopt");
+    assert!(
+        out.status.success(),
+        "{what} failed ({}):\nstdout:\n{}\nstderr:\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out
+}
+
+/// Every emitted artifact below `dir` keyed by relative path, excluding
+/// orchestration internals (checkpoints, status file) whose layout
+/// legitimately differs between disturbed and undisturbed runs.
+fn artifacts(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).expect("readable dir") {
+            let path = entry.unwrap().path();
+            let name = path.file_name().unwrap().to_string_lossy().to_string();
+            if path.is_dir() {
+                if name == "checkpoints" {
+                    continue;
+                }
+                walk(root, &path, out);
+            } else if name != "orchestrator_status.json" {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+/// The undisturbed single-process reference run.
+fn reference(name: &str) -> BTreeMap<String, Vec<u8>> {
+    let dir = tmp(name);
+    run_ok(&mut run_cmd(&dir, &[]), "reference run");
+    let arts = artifacts(&dir);
+    assert!(
+        arts.keys().any(|k| k.ends_with("fig3.json"))
+            && arts.keys().any(|k| k.ends_with("table3.json")),
+        "reference run produced {:?}",
+        arts.keys().collect::<Vec<_>>()
+    );
+    arts
+}
+
+/// Drive one fault case: run under `IMCOPT_FAULT=plan` (exit status is
+/// the fault's business — a kill is *expected* to fail), then resume
+/// single-process and demand byte-identity with `reference` plus zero
+/// recompute on a second resume.
+fn assert_fault_case(
+    name: &str,
+    plan: &str,
+    workers: &[&str],
+    reference: &BTreeMap<String, Vec<u8>>,
+) {
+    let dir = tmp(name);
+    let faulted = run_cmd(&dir, workers)
+        .env("IMCOPT_FAULT", plan)
+        .output()
+        .expect("spawn imcopt");
+    // recovery, not the crash, is what must succeed
+    let resume = run_ok(&mut run_cmd(&dir, &["--resume"]), &format!("{name}: resume"));
+    let got = artifacts(&dir);
+    assert_eq!(
+        got.keys().collect::<Vec<_>>(),
+        reference.keys().collect::<Vec<_>>(),
+        "{name}: artifact sets differ after fault '{plan}' (faulted run: {}, resume stdout:\n{})",
+        faulted.status,
+        String::from_utf8_lossy(&resume.stdout),
+    );
+    for (file, bytes) in reference {
+        assert_eq!(
+            &got[file], bytes,
+            "{name}: artifact {file} differs from the undisturbed run after fault '{plan}'"
+        );
+    }
+    // a second resume replays everything: zero executed, zero recompute
+    let again = run_ok(&mut run_cmd(&dir, &["--resume"]), &format!("{name}: second resume"));
+    let stdout = String::from_utf8_lossy(&again.stdout);
+    assert!(
+        stdout.contains("executed=0") && stdout.contains("cells_computed=0"),
+        "{name}: second resume recomputed work:\n{stdout}"
+    );
+}
+
+#[test]
+fn crash_matrix_single_process() {
+    let reference = reference("ref-single");
+    // hard kills at different cells, an injected panic (caught and
+    // retried in-process), and a journal-append I/O fault
+    for (name, plan) in [
+        ("sp-exit-first-cell", "exit@cell=1"),
+        ("sp-exit-third-cell", "exit@cell=3"),
+        ("sp-panic-second-cell", "panic@cell=2"),
+        ("sp-io-journal", "io@journal=2"),
+    ] {
+        assert_fault_case(name, plan, &[], &reference);
+    }
+}
+
+#[test]
+fn crash_matrix_four_workers() {
+    let reference = reference("ref-workers");
+    let w4: [&str; 2] = ["--workers", "4"];
+    for (name, plan) in [
+        // worker 1 dies at its first claimed cell — restarted once, dies
+        // again, abandoned; survivors steal its stale leases
+        ("w4-exit-w1", "w1:exit@cell=1"),
+        ("w4-exit-w3", "w3:exit@cell=2"),
+        // panics and I/O faults are isolated inside the worker
+        ("w4-panic-w0", "w0:panic@cell=1"),
+        ("w4-io-w2", "w2:io@journal=1"),
+        // an unscoped fault fires in *every* worker
+        ("w4-panic-all", "panic@cell=3"),
+    ] {
+        assert_fault_case(name, plan, &w4, &reference);
+    }
+}
+
+#[test]
+fn crashed_worker_is_restarted_and_the_sweep_completes() {
+    let reference = reference("ref-steal");
+    let dir = tmp("steal");
+    // the orchestrated run itself must succeed despite worker 1
+    // crash-looping into abandonment: restarts + lease stealing cover it
+    let out = run_ok(
+        run_cmd(&dir, &["--workers", "4"]).env("IMCOPT_FAULT", "w1:exit@cell=1"),
+        "orchestrated run with a crashing worker",
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("run summary:"),
+        "missing aggregate summary:\n{stdout}"
+    );
+    // the supervisor documents the outcome machine-readably
+    let status_path = dir.join("orchestrator_status.json");
+    let status = std::fs::read_to_string(&status_path).expect("orchestrator_status.json");
+    for key in ["\"workers\":4", "\"worker_status\":", "\"completed\":", "\"quarantined\":"] {
+        assert!(status.contains(key), "status missing {key}: {status}");
+    }
+    for id in IDS {
+        assert!(status.contains(&format!("\"{id}\"")), "{id} not completed: {status}");
+    }
+    // and the artifacts match the undisturbed single-process run exactly
+    let got = artifacts(&dir);
+    assert_eq!(got.keys().collect::<Vec<_>>(), reference.keys().collect::<Vec<_>>());
+    for (file, bytes) in &reference {
+        assert_eq!(&got[file], bytes, "artifact {file} differs at 4 workers");
+    }
+}
+
+#[test]
+fn permanently_poisoned_cell_is_quarantined_and_the_sweep_degrades_gracefully() {
+    let reference = reference("ref-poison");
+    let dir = tmp("poison");
+    // `=*` never stops firing: fig3's first RRAM cell panics on every
+    // attempt, so retries are exhausted and fig3 is quarantined
+    let out = run_cmd(&dir, &[])
+        .env("IMCOPT_FAULT", "panic@cell:fig3:rram:joint=*")
+        .output()
+        .expect("spawn imcopt");
+    assert_eq!(
+        out.status.code(),
+        Some(3),
+        "quarantine must exit with the dedicated code, got {}:\nstdout:\n{}\nstderr:\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("quarantined=1"), "summary must count the loss:\n{stdout}");
+    assert!(
+        stderr.contains("quarantined: fig3") && stderr.contains("panicked"),
+        "quarantine reason must be surfaced:\n{stderr}"
+    );
+    // graceful degradation: table3 still completed, byte-identical
+    let got = artifacts(&dir);
+    assert!(
+        !got.keys().any(|k| k.starts_with("fig3")),
+        "poisoned fig3 must not emit artifacts: {:?}",
+        got.keys().collect::<Vec<_>>()
+    );
+    let table3: Vec<&String> =
+        reference.keys().filter(|k| k.starts_with("table3")).collect();
+    assert!(!table3.is_empty());
+    for file in table3 {
+        assert_eq!(
+            got.get(file),
+            reference.get(file),
+            "table3 artifact {file} differs despite fig3's quarantine"
+        );
+    }
+    // lifting the fault and resuming heals the sweep completely
+    run_ok(&mut run_cmd(&dir, &["--resume"]), "healing resume");
+    let healed = artifacts(&dir);
+    assert_eq!(
+        healed.keys().collect::<Vec<_>>(),
+        reference.keys().collect::<Vec<_>>()
+    );
+    for (file, bytes) in &reference {
+        assert_eq!(&healed[file], bytes, "healed artifact {file} differs");
+    }
+}
