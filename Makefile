@@ -4,11 +4,13 @@
 #   make test       release build + full test suite
 #   make lint       rustfmt --check + clippy -D warnings
 #   make check      full CI gate (ci.sh): lint, build, tests, golden
-#                   cross-check, evaluator bench + schema validation,
-#                   `imcopt run --all --quick` smoke + artifact validation,
-#                   and the --resume replay check
+#                   cross-check, bench + schema validation, bench-trend
+#                   gate vs bench_baselines/, `imcopt run --all --quick`
+#                   smoke + artifact validation, the --resume replay
+#                   check and the orchestrator crash matrix. Run one
+#                   stage with ./ci.sh --stage <name>.
 #   make check-pjrt ci.sh against the pjrt feature (vendored xla API stub)
-#   make bench      full evaluator bench (2s budget per case)
+#   make bench      full benches (2s budget per case) -> BENCH_*.json
 #   make artifacts  export the AOT JAX/Pallas artifacts (needs python+jax)
 #   make pjrt       release build with the PJRT runtime (stub xla unless
 #                   Cargo.toml points at the real crate)
@@ -36,6 +38,8 @@ check-pjrt:
 
 bench:
 	$(CARGO) bench --bench evaluator
+	$(CARGO) bench --bench pareto
+	$(CARGO) bench --bench surrogate
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
@@ -45,4 +49,4 @@ pjrt:
 
 clean:
 	$(CARGO) clean
-	rm -f BENCH_eval.json
+	rm -f BENCH_eval.json BENCH_model.json BENCH_pareto.json BENCH_surrogate.json

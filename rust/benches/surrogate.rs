@@ -1,0 +1,143 @@
+//! Surrogate pre-screening throughput: the ridge pipeline behind the GA
+//! and NSGA-II two-stage generation loops (`--screen-frac`, see
+//! `docs/search.md`) — feature extraction, online ridge fits, per-design
+//! prediction, and the full rank-and-partition screening pass — against
+//! the exact evaluator it short-circuits.
+//!
+//! Writes `BENCH_surrogate.json`, validated in ci.sh against
+//! `schemas/bench_surrogate.schema.json` and gated against the committed
+//! `bench_baselines/BENCH_surrogate.json` by the trend leg. The headline
+//! is `screen_speedup`: how many surrogate predictions fit in one exact
+//! joint evaluation — the factor that makes ranking a `1/frac`-times
+//! larger offspring pool essentially free.
+
+use imcopt::coordinator::{EvalBackend, JointProblem};
+use imcopt::model::MemoryTech;
+use imcopt::objective::Objective;
+use imcopt::search::surrogate::{features, RidgeModel, ScreenState, N_FEATURES};
+use imcopt::search::Problem;
+use imcopt::space::{Design, SearchSpace};
+use imcopt::util::bench::Bench;
+use imcopt::util::json::Json;
+use imcopt::util::rng::Rng;
+use imcopt::workloads::WorkloadSet;
+
+fn main() {
+    let bench = Bench::new("surrogate");
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let problem = JointProblem::with_backend(
+        &space,
+        &set,
+        EvalBackend::native(MemoryTech::Rram),
+        Objective::edap(),
+    );
+    let mut rng = Rng::seed_from(1);
+    let n_train = 256usize;
+    let train: Vec<Design> = (0..n_train).map(|_| problem.random_candidate(&mut rng)).collect();
+    let scores = problem.score_batch(&train);
+    let pool: Vec<Design> = (0..256).map(|_| problem.random_candidate(&mut rng)).collect();
+
+    // ---- the exact path screening avoids ----------------------------------
+    // Fresh problem per iteration so every design is a cache miss (the GA
+    // only ever evaluates designs it has not seen).
+    let m_eval = bench.run("exact/score_batch-cnn4/256", pool.len(), || {
+        let p = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        );
+        std::hint::black_box(p.score_batch(&pool));
+    });
+
+    // ---- feature extraction -------------------------------------------------
+    let raws: Vec<[f64; 10]> = train.iter().map(|d| space.decode(d)).collect();
+    let m_feat = bench.run("features/256", raws.len(), || {
+        for raw in &raws {
+            std::hint::black_box(features(raw));
+        }
+    });
+
+    // ---- online ridge fit ----------------------------------------------------
+    // The exact training pairs ScreenState accumulates: finite positive
+    // scores, log-domain target.
+    let mut xs: Vec<[f64; N_FEATURES]> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    for (d, &s) in train.iter().zip(&scores) {
+        if s.is_finite() && s > 0.0 {
+            xs.push(features(&space.decode(d)));
+            ys.push(s.ln());
+        }
+    }
+    assert!(
+        xs.len() > N_FEATURES + 1,
+        "too few feasible training designs ({}) for a ridge fit",
+        xs.len()
+    );
+    let m_fit = bench.run(&format!("ridge_fit/{}", xs.len()), 1, || {
+        std::hint::black_box(RidgeModel::fit(&xs, &ys, 1e-3));
+    });
+    let model = RidgeModel::fit(&xs, &ys, 1e-3).expect("ridge fit degenerated");
+    let r2 = model.r2(&xs, &ys);
+    println!("training-set r2 on {} feasible designs: {r2:.3}", xs.len());
+
+    // ---- per-design prediction ----------------------------------------------
+    let pool_feats: Vec<[f64; N_FEATURES]> =
+        pool.iter().map(|d| features(&space.decode(d))).collect();
+    let m_pred = bench.run("predict/256", pool_feats.len(), || {
+        for x in &pool_feats {
+            std::hint::black_box(model.predict(x));
+        }
+    });
+
+    // ---- full screening pass (decode + features + predict + rank) ----------
+    let mut screen = ScreenState::new(0.25).expect("0.25 enables screening");
+    screen.observe(&space, &train, &scores);
+    let keep = 64usize;
+    let m_rank = bench.run(&format!("screen_select/256->{keep}"), pool.len(), || {
+        let mut s = screen.clone();
+        std::hint::black_box(s.select(&space, pool.clone(), keep));
+    });
+
+    // determinism guard: ranking is a pure function of (training set, pool)
+    let sel_a = screen.clone().select(&space, pool.clone(), keep);
+    let sel_b = screen.clone().select(&space, pool.clone(), keep);
+    let ranking_deterministic = sel_a == sel_b && sel_a.len() == keep;
+    assert!(ranking_deterministic, "screening rank diverged between runs");
+
+    let evals_per_sec = pool.len() as f64 / m_eval.mean.as_secs_f64();
+    let features_per_sec = raws.len() as f64 / m_feat.mean.as_secs_f64();
+    let fits_per_sec = 1.0 / m_fit.mean.as_secs_f64();
+    let predicts_per_sec = pool_feats.len() as f64 / m_pred.mean.as_secs_f64();
+    let rank_per_sec = pool.len() as f64 / m_rank.mean.as_secs_f64();
+    let screen_speedup = predicts_per_sec / evals_per_sec;
+    assert!(
+        screen_speedup.is_finite() && screen_speedup > 1.0,
+        "surrogate prediction must beat exact evaluation, got {screen_speedup:.2}x"
+    );
+    println!(
+        "surrogate screen: {predicts_per_sec:.0} predictions/s vs \
+         {evals_per_sec:.0} exact evals/s = {screen_speedup:.0}x; full \
+         rank-and-partition {rank_per_sec:.0} candidates/s"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("surrogate_screen".into())),
+        ("space", Json::Str("rram-32nm".into())),
+        ("workload_set", Json::Str("cnn4".into())),
+        ("train_designs", Json::Num(xs.len() as f64)),
+        ("features_per_sec", Json::Num(features_per_sec)),
+        ("fits_per_sec", Json::Num(fits_per_sec)),
+        ("predicts_per_sec", Json::Num(predicts_per_sec)),
+        ("rank_per_sec", Json::Num(rank_per_sec)),
+        ("screen_speedup", Json::Num(screen_speedup)),
+        ("surrogate_r2", Json::Num(r2)),
+        ("ranking_deterministic", Json::Bool(ranking_deterministic)),
+    ]);
+    let out = "BENCH_surrogate.json";
+    match std::fs::write(out, report.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -67,6 +67,15 @@ pub struct ExpContext {
     /// see `scenarios::ScenarioSpec::parse`), honored by `genmatrix_k`,
     /// `transfer` and `pareto`; `None` runs the paper families.
     pub spec: Option<String>,
+    /// Surrogate screening fraction for the GA/NSGA-II generation loops
+    /// (`--screen-frac`, clamped to `[0.05, 1.0]`). At the default `1.0`
+    /// the exact loops run unchanged (bit-identical to pre-surrogate
+    /// builds); below `1.0` only this fraction of each generation's
+    /// offspring pool reaches the exact evaluator (see
+    /// `search::surrogate::ScreenState` and `docs/search.md`). Part of
+    /// the checkpoint config fingerprint, so `--resume` never mixes
+    /// screened and exact cells.
+    pub screen_frac: f64,
     /// Worker processes for `imcopt run` (`--workers N`): 1 (the default)
     /// runs in-process, more spawn the orchestrator supervisor. Excluded
     /// from the checkpoint config fingerprint — cells are deterministic at
@@ -99,6 +108,7 @@ impl Default for ExpContext {
             moo_mode: None,
             pareto_cap: 128,
             spec: None,
+            screen_frac: 1.0,
             workers: 1,
             worker_id: None,
             backend_notices: Mutex::new(Vec::new()),
@@ -111,7 +121,7 @@ impl ExpContext {
     /// Build from CLI arguments (`--seed`, `--quick`, `--native`,
     /// `--pjrt`, `--out-dir`/`--out`, `--threads`, `--stable`,
     /// `--resume`, `--topk`, `--hold-k`, `--portfolio`, `--moo-mode`,
-    /// `--pareto-cap`, `--spec`).
+    /// `--pareto-cap`, `--spec`, `--screen-frac`).
     pub fn from_args(args: &Args) -> ExpContext {
         let backend_choice = if args.flag("native") {
             BackendChoice::Native
@@ -138,6 +148,7 @@ impl ExpContext {
             moo_mode: args.opt("moo-mode").map(String::from),
             pareto_cap: args.opt_usize("pareto-cap", 128).max(1),
             spec: args.opt("spec").map(String::from),
+            screen_frac: args.opt_f64("screen-frac", 1.0).clamp(0.05, 1.0),
             workers: args.opt_usize("workers", 1).max(1),
             worker_id: std::env::var("IMCOPT_WORKER_ID")
                 .ok()
@@ -420,5 +431,27 @@ mod tests {
         assert!(ctx.portfolio.is_none());
         let args = Args::parse(["run", "--hold-k", "0"].iter().map(|s| s.to_string()));
         assert_eq!(ExpContext::from_args(&args).hold_k, 1);
+    }
+
+    #[test]
+    fn from_args_parses_and_clamps_screen_frac() {
+        // default is off (exact loops)
+        let ctx = ExpContext::from_args(&Args::parse(["run"].iter().map(|s| s.to_string())));
+        assert_eq!(ctx.screen_frac, 1.0);
+        let args = Args::parse(
+            ["run", "surrogate", "--screen-frac", "0.25"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(ExpContext::from_args(&args).screen_frac, 0.25);
+        // out-of-range values clamp instead of poisoning the sweep
+        let args =
+            Args::parse(["run", "--screen-frac", "0.0"].iter().map(|s| s.to_string()));
+        assert_eq!(ExpContext::from_args(&args).screen_frac, 0.05);
+        let args =
+            Args::parse(["run", "--screen-frac", "7"].iter().map(|s| s.to_string()));
+        assert_eq!(ExpContext::from_args(&args).screen_frac, 1.0);
+        // unparsable falls back to the default
+        let args =
+            Args::parse(["run", "--screen-frac", "x"].iter().map(|s| s.to_string()));
+        assert_eq!(ExpContext::from_args(&args).screen_frac, 1.0);
     }
 }

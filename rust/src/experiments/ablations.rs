@@ -76,6 +76,8 @@ pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
             budget: ctx.budget(),
             elites: 2,
             early_stop: None,
+            top_k: 5,
+            screen_frac: ctx.screen_frac,
             label: name.into(),
         };
         let r = GeneticAlgorithm::new(cfg).run(&p, &mut Rng::seed_from(ctx.seed));

@@ -17,18 +17,23 @@ use anyhow::{Context, Result};
 use std::path::Path;
 
 /// The proposed 4-phase GA sized by the context (paper budget unless
-/// `--quick`).
+/// `--quick`), with the context's surrogate screening fraction
+/// (`--screen-frac`; 1.0 = exact loop).
 pub fn four_phase(ctx: &ExpContext) -> GaConfig {
     let (p_h, p_e) = ctx.sampling();
     GaConfig {
         init: InitStrategy::HammingDiverse { p_h, p_e },
+        screen_frac: ctx.screen_frac,
         ..GaConfig::four_phase(ctx.budget())
     }
 }
 
 /// Non-modified GA baseline \[44\].
 pub fn classic(ctx: &ExpContext) -> GaConfig {
-    GaConfig::classic(ctx.budget())
+    GaConfig {
+        screen_frac: ctx.screen_frac,
+        ..GaConfig::classic(ctx.budget())
+    }
 }
 
 /// Non-modified GA with the enhanced-sampling front-end.
@@ -36,6 +41,7 @@ pub fn classic_sampled(ctx: &ExpContext) -> GaConfig {
     let (p_h, p_e) = ctx.sampling();
     GaConfig {
         init: InitStrategy::HammingDiverse { p_h, p_e },
+        screen_frac: ctx.screen_frac,
         ..GaConfig::classic(ctx.budget())
     }
 }
@@ -184,6 +190,23 @@ pub struct PortfolioOutcome {
     pub summary: scenarios::GapSummary,
 }
 
+/// Cross-experiment shared-cell key for a jointly-optimized design: the
+/// (problem, GA config, seed) derivation is fully determined by the
+/// scenario, the train subset and the seed, so any two experiments that
+/// arrive at the same `(spec, train, seed)` triple would run a
+/// bit-identical search. Publishing the joint under this key lets
+/// `genmatrix` replay `genmatrix_k`'s `k = 1` singleton-deploy cells (and
+/// vice versa) instead of recomputing them — see `shares_joints` on
+/// [`portfolio_cell`].
+pub fn joint_shared_key(spec: &ScenarioSpec, train: &[usize], seed: u64) -> String {
+    let train_tag = train
+        .iter()
+        .map(|i| i.to_string())
+        .collect::<Vec<_>>()
+        .join("+");
+    format!("joint:{}:{train_tag}:{seed}", spec.name)
+}
+
 /// Run one portfolio through the checkpoint: a journaled joint search on
 /// the train subset (key `<exp>:<set>:<portfolio>:joint`, seeded by
 /// [`Portfolio::joint_seed`]), then dense deploy-side scoring of the
@@ -191,12 +214,20 @@ pub struct PortfolioOutcome {
 /// ([`separate_bound_cell`]). The gap arithmetic matches `genmatrix`
 /// exactly, so a `k = 1` hold-out portfolio reproduces the `genmatrix`
 /// cell for that workload bit for bit.
+///
+/// With `shares_joints` the joint search is additionally published under
+/// [`joint_shared_key`] so other experiments of the same run can replay
+/// it ([`Checkpoint::shared_cell`]). Opt-in per caller: `genmatrix_k`
+/// shares (its `k = 1` slice is provably identical to `genmatrix`'s
+/// joints); `transfer` does not (its cells must stay independently
+/// recomputable after a journal wipe).
 pub fn portfolio_cell(
     ckpt: &mut Checkpoint,
     exp_id: &str,
     ctx: &ExpContext,
     spec: &ScenarioSpec,
     p: &Portfolio,
+    shares_joints: bool,
 ) -> Result<PortfolioOutcome> {
     let joint_problem = ctx
         .problem(&spec.space, &spec.set, spec.mem, spec.objective())
@@ -206,13 +237,18 @@ pub fn portfolio_cell(
         top_k: ctx.top_k,
         ..four_phase(ctx)
     };
-    let joint = ga_cell(
-        ckpt,
-        &format!("{exp_id}:{}:{}:joint", spec.name, p.id),
-        &joint_problem,
-        cfg,
-        p.joint_seed(ctx.seed),
-    )?;
+    let key = format!("{exp_id}:{}:{}:joint", spec.name, p.id);
+    let seed = p.joint_seed(ctx.seed);
+    let joint = if shares_joints {
+        opt_shared_cell(
+            ckpt,
+            &key,
+            &joint_shared_key(spec, &p.train, seed),
+            || run_ga(&joint_problem, cfg, seed),
+        )?
+    } else {
+        ga_cell(ckpt, &key, &joint_problem, cfg, seed)?
+    };
     ckpt.absorb_problem(&joint_problem)?;
     let joint_scores = per_workload_scores(&joint_problem, &joint.best, &Objective::edap());
     let mut deploy = Vec::with_capacity(p.deploy.len());

@@ -86,7 +86,12 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
             let held = set.workloads[wi].name;
             let train: Vec<usize> = (0..set.len()).filter(|&j| j != wi).collect();
 
-            // joint search on the N−1 training workloads
+            // joint search on the N−1 training workloads, published in the
+            // shared cross-experiment namespace: genmatrix_k's k=1
+            // singleton-deploy portfolios derive the same (problem, config,
+            // seed) triple, so within one `run --all` sweep whichever of the
+            // two experiments runs first computes the joint and the other
+            // replays it (see `common::joint_shared_key`)
             let joint_problem = ctx
                 .problem(space, set, mem, objective)
                 .restricted_to(train.clone());
@@ -95,12 +100,12 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
                 top_k: ctx.top_k,
                 ..common::four_phase(ctx)
             };
-            let joint = common::ga_cell(
+            let seed = ctx.seed.wrapping_add(wi as u64 * 7919);
+            let joint = common::opt_shared_cell(
                 ckpt,
                 &format!("genmatrix:{set_name}:{wi}:joint"),
-                &joint_problem,
-                cfg,
-                ctx.seed.wrapping_add(wi as u64 * 7919),
+                &common::joint_shared_key(&spec, &train, seed),
+                || common::run_ga(&joint_problem, cfg, seed),
             )?;
             ckpt.absorb_problem(&joint_problem)?;
 

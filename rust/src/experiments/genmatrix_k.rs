@@ -96,7 +96,9 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
             let mut worst = f64::NEG_INFINITY;
             let mut worst_label = "-".to_string();
             for p in &ports {
-                let out = common::portfolio_cell(ckpt, "genmatrix_k", ctx, &spec, p)?;
+                // shares_joints: the k=1 slice's joints are bit-identical
+                // to genmatrix's, so they replay across the two experiments
+                let out = common::portfolio_cell(ckpt, "genmatrix_k", ctx, &spec, p, true)?;
                 for d in &out.deploy {
                     all_gaps.push(d.gap);
                     if d.gap.is_finite() {

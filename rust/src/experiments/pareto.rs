@@ -77,6 +77,7 @@ fn nsga_config(ctx: &ExpContext) -> Nsga2Config {
     Nsga2Config {
         init: InitStrategy::HammingDiverse { p_h, p_e },
         cap: ctx.pareto_cap,
+        screen_frac: ctx.screen_frac,
         ..Nsga2Config::paper(ctx.budget())
     }
 }

@@ -120,7 +120,9 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         &["portfolio", "workload", "trained?", "EDAP joint", "EDAP bound", "gap x"],
     );
     for p in &ports {
-        let out = common::portfolio_cell(ckpt, "transfer", ctx, &spec, p)?;
+        // no joint sharing: transfer's kill/resume contract requires its
+        // cells to recompute independently after a journal wipe
+        let out = common::portfolio_cell(ckpt, "transfer", ctx, &spec, p, false)?;
         let worst_label = out
             .summary
             .worst_at

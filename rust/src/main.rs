@@ -5,9 +5,10 @@
 //! imcopt run [ids...|--all] [--seed N] [--quick] [--out-dir DIR]
 //!            [--resume] [--stable] [--topk K] [--hold-k K]
 //!            [--portfolio IDS] [--moo-mode M] [--pareto-cap N]
-//!            [--spec S] [--native|--pjrt] [--workers N]
+//!            [--spec S] [--screen-frac F] [--native|--pjrt] [--workers N]
 //! imcopt list [--markdown|--json]   # the experiment catalog
 //! imcopt validate [--out-dir DIR [--require-all]] [--bench FILE] [--schema FILE]
+//!                 [--trend FILE --baseline FILE [--tolerance PCT]]
 //! imcopt search [--mem rram|sram] [--obj edap|edp|energy|latency|area|cost|acc]
 //!               [--agg max|all|mean] [--workloads a,b,c] [--seed N]
 //! imcopt eval --design R,C,M,T,G,B,Vstep,TC,GLB,TECH [--mem rram|sram]
@@ -73,7 +74,10 @@ fn print_help() {
          \x20                 ({ids})\n\
          \x20 list           show the experiment registry (--markdown regenerates\n\
          \x20                docs/experiments.md, --json the validated listing)\n\
-         \x20 validate       check experiment/bench JSON artifacts against schemas\n\
+         \x20 validate       check experiment/bench JSON artifacts against schemas;\n\
+         \x20                --trend FILE --baseline FILE [--tolerance PCT] gates\n\
+         \x20                bench throughput/speedup fields against a committed\n\
+         \x20                baseline (the ci.sh regression gate; default 15%)\n\
          \x20 search         run one joint co-optimization\n\
          \x20 eval           evaluate a single design\n\
          \x20 workloads      list workload statistics\n\
@@ -90,6 +94,11 @@ fn print_help() {
          \x20 --pareto-cap N pareto front-archive capacity (default 128)\n\
          \x20 --spec S       user scenario family w1+w2+...:rram|sram[:agg] for\n\
          \x20                genmatrix_k / transfer / pareto (default: paper sets)\n\
+         \x20 --screen-frac F surrogate pre-screening: fraction of each GA/NSGA-II\n\
+         \x20                generation's offspring pool that reaches the exact\n\
+         \x20                evaluator (clamped to [0.05, 1.0]; default 1.0 = exact\n\
+         \x20                loop, bit-identical to builds without screening; see\n\
+         \x20                docs/search.md)\n\
          \x20 --threads N    worker threads for population evaluation\n\
          \x20                (default: IMCOPT_THREADS env var, else all cores;\n\
          \x20                scores are identical for any thread count)\n\
@@ -208,12 +217,109 @@ fn validate_file(doc_path: &Path, schema_path: &Path) -> Result<json::Json> {
     Ok(doc)
 }
 
+/// The bench-trend gate (`validate --trend FILE --baseline FILE`):
+/// compare a fresh bench report against a committed baseline and fail on
+/// throughput/speedup regressions beyond the tolerance. Only rate-like
+/// fields participate — names ending in `_per_sec` or containing
+/// `speedup`; identity and config fields are the schema validator's
+/// job. A trend field present in the baseline but missing from the
+/// current report is an error (a silently dropped metric must not pass
+/// the gate). Re-bless an intentional change by copying the fresh
+/// report over the baseline (README.md, "Bench-trend gate").
+fn trend_check(bench_path: &Path, baseline_path: &Path, tolerance_pct: f64) -> Result<()> {
+    let load = |p: &Path| -> Result<json::Json> {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", p.display()))
+    };
+    let current = load(bench_path)?;
+    let baseline = load(baseline_path)?;
+    let json::Json::Obj(base_fields) = &baseline else {
+        bail!("{}: baseline must be a JSON object", baseline_path.display());
+    };
+    let floor_factor = 1.0 - tolerance_pct / 100.0;
+    let mut t = Table::new(
+        &format!(
+            "bench trend: {} vs {} (tolerance {tolerance_pct:.0}%)",
+            bench_path.display(),
+            baseline_path.display()
+        ),
+        &["field", "baseline", "current", "floor", "status"],
+    );
+    let mut gated = 0usize;
+    let mut regressions: Vec<String> = Vec::new();
+    for (key, value) in base_fields {
+        if !(key.ends_with("_per_sec") || key.contains("speedup")) {
+            continue;
+        }
+        let Some(base) = value.as_f64_lenient() else {
+            continue;
+        };
+        let cur = current
+            .get(key)
+            .and_then(|v| v.as_f64_lenient())
+            .with_context(|| {
+                format!(
+                    "{}: trend field '{key}' from the baseline is missing",
+                    bench_path.display()
+                )
+            })?;
+        let floor = base * floor_factor;
+        let ok = cur >= floor;
+        gated += 1;
+        if !ok {
+            regressions.push(format!(
+                "{key}: {cur:.3} < floor {floor:.3} (baseline {base:.3})"
+            ));
+        }
+        t.row(vec![
+            key.clone(),
+            format!("{base:.3}"),
+            format!("{cur:.3}"),
+            format!("{floor:.3}"),
+            String::from(if ok { "ok" } else { "REGRESSED" }),
+        ]);
+    }
+    print!("{}", t.to_text());
+    anyhow::ensure!(
+        gated > 0,
+        "{}: no trend fields (*_per_sec / *speedup*) to gate on",
+        baseline_path.display()
+    );
+    if !regressions.is_empty() {
+        bail!(
+            "bench trend regression in {} ({} of {gated} fields beyond \
+             {tolerance_pct:.0}%):\n  {}",
+            bench_path.display(),
+            regressions.len(),
+            regressions.join("\n  ")
+        );
+    }
+    println!(
+        "ok: {} holds the {} baseline ({gated} fields within {tolerance_pct:.0}%)",
+        bench_path.display(),
+        baseline_path.display()
+    );
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let mut checked = false;
     if let Some(bench) = args.opt("bench") {
         let schema = args.opt_str("schema", "schemas/bench_eval.schema.json");
         validate_file(Path::new(bench), Path::new(schema))?;
         println!("ok: {bench} conforms to {schema}");
+        checked = true;
+    }
+    if let Some(bench) = args.opt("trend") {
+        let baseline = args
+            .opt("baseline")
+            .context("--trend requires --baseline FILE (the committed floor)")?;
+        trend_check(
+            Path::new(bench),
+            Path::new(baseline),
+            args.opt_f64("tolerance", 15.0),
+        )?;
         checked = true;
     }
     if let Some(dir) = args.opt("out-dir") {
@@ -381,7 +487,10 @@ fn cmd_validate(args: &Args) -> Result<()> {
         checked = true;
     }
     if !checked {
-        bail!("nothing to validate: pass --out-dir DIR and/or --bench FILE");
+        bail!(
+            "nothing to validate: pass --out-dir DIR, --bench FILE and/or \
+             --trend FILE --baseline FILE"
+        );
     }
     Ok(())
 }

@@ -43,6 +43,9 @@ fn worker_args(ids: &[&str], ctx: &ExpContext, threads: usize) -> Vec<String> {
         ("--topk", ctx.top_k.to_string()),
         ("--hold-k", ctx.hold_k.to_string()),
         ("--pareto-cap", ctx.pareto_cap.to_string()),
+        // part of the config fingerprint: a worker defaulting to 1.0
+        // while the supervisor screened would be rejected by bind_config
+        ("--screen-frac", ctx.screen_frac.to_string()),
     ] {
         args.push(flag.into());
         args.push(value);
@@ -346,10 +349,12 @@ mod tests {
         ctx.stable = true;
         ctx.out_dir = "/tmp/sweep".into();
         ctx.portfolio = Some("cnn4-to-extras".into());
+        ctx.screen_frac = 0.25;
         let args = worker_args(&["fig3", "table3"], &ctx, 2);
         let joined = args.join(" ");
         assert!(joined.starts_with("run fig3 table3 "));
         assert!(joined.contains("--seed 7"));
+        assert!(joined.contains("--screen-frac 0.25"));
         assert!(joined.contains("--out-dir /tmp/sweep"));
         assert!(joined.contains("--threads 2"));
         assert!(joined.contains("--portfolio cnn4-to-extras"));

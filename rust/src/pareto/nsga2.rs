@@ -46,6 +46,13 @@ pub struct Nsga2Config {
     /// Archive capacity (`--pareto-cap`): the reported front never
     /// exceeds this many points.
     pub cap: usize,
+    /// Fraction of each generation's offspring pool that reaches the
+    /// exact evaluator (`--screen-frac`). `1.0` (the default) runs the
+    /// exact pre-surrogate loop bit-identically; below `1.0` a
+    /// [`ScreenState`](crate::search::surrogate::ScreenState) trained on
+    /// the log geometric mean of the observed objective vectors screens a
+    /// `1/frac`-times larger variation pool down to λ exact evaluations.
+    pub screen_frac: f64,
     pub label: String,
 }
 
@@ -61,6 +68,7 @@ impl Nsga2Config {
             },
             budget,
             cap: 128,
+            screen_frac: 1.0,
             label: "NSGA-II (4-phase operators)".into(),
         }
     }
@@ -225,6 +233,9 @@ impl MultiObjectiveOptimizer for Nsga2 {
         let mut evals = 0usize;
         let mut archive = ParetoArchive::new(cfg.cap);
         let mut front_sizes: Vec<usize> = Vec::new();
+        // `None` at `screen_frac >= 1.0`: the loop below then runs the
+        // exact pre-surrogate code path (same RNG draws, bit-identical)
+        let mut screen = crate::search::surrogate::ScreenState::new(cfg.screen_frac);
 
         // ---- initial population (same pipeline as the scalar GA) ----------
         let mut pop: Vec<Design> = match cfg.init {
@@ -241,6 +252,9 @@ impl MultiObjectiveOptimizer for Nsga2 {
         evals += pop.len();
         archive.offer_batch(&pop, &pop_objs);
         front_sizes.push(archive.len());
+        if let Some(s) = screen.as_mut() {
+            s.observe_vec(space, &pop, &pop_objs);
+        }
 
         let phases = &cfg.phases;
         let gens_per_phase = (cfg.budget.gens / phases.len()).max(1);
@@ -250,19 +264,45 @@ impl MultiObjectiveOptimizer for Nsga2 {
                 let keys = rank_population(problem, &pop, &pop_objs);
 
                 // offspring via constrained tournament + SBX/poly mutation
-                let mut off: Vec<Design> = Vec::with_capacity(pop_size);
-                while off.len() < pop_size {
-                    let p1 = tournament(&pop, &keys, rng).clone();
-                    let p2 = tournament(&pop, &keys, rng).clone();
-                    let (c1, c2) = variate(space, &p1, &p2, ph, rng);
-                    off.push(c1);
-                    if off.len() < pop_size {
-                        off.push(c2);
+                let off: Vec<Design> = match screen.as_mut() {
+                    None => {
+                        // exact path (--screen-frac 1.0 / default)
+                        let mut off: Vec<Design> = Vec::with_capacity(pop_size);
+                        while off.len() < pop_size {
+                            let p1 = tournament(&pop, &keys, rng).clone();
+                            let p2 = tournament(&pop, &keys, rng).clone();
+                            let (c1, c2) = variate(space, &p1, &p2, ph, rng);
+                            off.push(c1);
+                            if off.len() < pop_size {
+                                off.push(c2);
+                            }
+                        }
+                        off
                     }
-                }
+                    Some(s) => {
+                        // two-stage path: recycle last round's rejects,
+                        // variate up to a 1/frac-times larger pool, keep
+                        // the surrogate's top λ for exact evaluation
+                        let target = s.pool_target(pop_size);
+                        let mut pool = s.take_carry();
+                        while pool.len() < target {
+                            let p1 = tournament(&pop, &keys, rng).clone();
+                            let p2 = tournament(&pop, &keys, rng).clone();
+                            let (c1, c2) = variate(space, &p1, &p2, ph, rng);
+                            pool.push(c1);
+                            if pool.len() < target {
+                                pool.push(c2);
+                            }
+                        }
+                        s.select(space, pool, pop_size)
+                    }
+                };
                 let off_objs = problem.objective_batch(&off);
                 evals += off.len();
                 archive.offer_batch(&off, &off_objs);
+                if let Some(s) = screen.as_mut() {
+                    s.observe_vec(space, &off, &off_objs);
+                }
 
                 // (μ+λ): parents compete with offspring
                 let mut pool = std::mem::take(&mut pop);
@@ -408,6 +448,36 @@ mod tests {
             a.front.len() != c.front.len()
                 || a.front.iter().zip(&c.front).any(|((da, _), (dc, _))| da != dc)
         );
+    }
+
+    #[test]
+    fn screened_runs_match_budget_and_explicit_one_matches_default() {
+        // explicit screen_frac 1.0 must be the exact loop, bit for bit
+        let exact = small().run(&TwoCorners::new(), &mut Rng::seed_from(15));
+        let mut one_cfg = small().config;
+        one_cfg.screen_frac = 1.0;
+        let one = Nsga2::new(one_cfg).run(&TwoCorners::new(), &mut Rng::seed_from(15));
+        assert_eq!(exact.front.len(), one.front.len());
+        for ((da, oa), (db, ob)) in exact.front.iter().zip(&one.front) {
+            assert_eq!(da, db);
+            for (x, y) in oa.iter().zip(ob) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // a screened run spends the same exact-evaluation budget and is
+        // deterministic per seed
+        let mut cfg = small().config;
+        cfg.screen_frac = 0.25;
+        let a = Nsga2::new(cfg.clone()).run(&TwoCorners::new(), &mut Rng::seed_from(15));
+        let b = Nsga2::new(cfg).run(&TwoCorners::new(), &mut Rng::seed_from(15));
+        assert_eq!(a.evals, exact.evals, "screening must not change evaluator calls");
+        assert_eq!(a.front.len(), b.front.len());
+        for ((da, oa), (db, ob)) in a.front.iter().zip(&b.front) {
+            assert_eq!(da, db);
+            for (x, y) in oa.iter().zip(ob) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -97,6 +97,14 @@ pub struct GaConfig {
     /// Distinct best designs reported in `OptResult::top` (the tracker
     /// keeps at least this many; `genmatrix` raises it via `--topk`).
     pub top_k: usize,
+    /// Fraction of each generation's offspring pool that reaches the
+    /// exact evaluator (`--screen-frac`). At the default `1.0` screening
+    /// is off and the loop is bit-identical to the pre-surrogate engine;
+    /// below `1.0` a [`ScreenState`](super::surrogate::ScreenState)
+    /// ranks a `1/frac`-times
+    /// larger variation pool and only the predicted-best λ evaluate —
+    /// same evaluator calls per generation, wider candidate pool.
+    pub screen_frac: f64,
     pub label: String,
 }
 
@@ -111,6 +119,7 @@ impl GaConfig {
             elites: 2,
             early_stop: None,
             top_k: 5,
+            screen_frac: 1.0,
             label: "GA (non-modified)".into(),
         }
     }
@@ -139,6 +148,7 @@ impl GaConfig {
             elites: 2,
             early_stop: None,
             top_k: 5,
+            screen_frac: 1.0,
             label: "4-phase GA (proposed)".into(),
         }
     }
@@ -255,6 +265,9 @@ impl Optimizer for GeneticAlgorithm {
         let pop_size = cfg.budget.pop;
         let mut evals = 0usize;
         let mut tracker = BestTracker::with_cap(cfg.top_k.max(super::TRACK_CAP));
+        // `None` at `screen_frac >= 1.0`: the loop below then runs the
+        // exact pre-surrogate code path (same RNG draws, bit-identical)
+        let mut screen = super::surrogate::ScreenState::new(cfg.screen_frac);
 
         // ---- initial population -------------------------------------------
         let mut pop: Vec<Design> = match cfg.init {
@@ -281,6 +294,9 @@ impl Optimizer for GeneticAlgorithm {
                 evals += pop.len();
                 tracker.observe(&pop, &scores);
                 tracker.end_generation();
+                if let Some(s) = screen.as_mut() {
+                    s.observe(space, &pop, &scores);
+                }
 
                 // §V-D early stopping: cut the phase short once the best
                 // score plateaus
@@ -307,13 +323,36 @@ impl Optimizer for GeneticAlgorithm {
                     .take(cfg.elites.min(scored.len()))
                     .map(|(d, _)| d.clone())
                     .collect();
-                while next.len() < pop_size {
-                    let p1 = tournament(&scored, rng).clone();
-                    let p2 = tournament(&scored, rng).clone();
-                    let (c1, c2) = variate(space, &p1, &p2, ph, rng);
-                    next.push(c1);
-                    if next.len() < pop_size {
-                        next.push(c2);
+                match screen.as_mut() {
+                    None => {
+                        // exact path (--screen-frac 1.0 / default)
+                        while next.len() < pop_size {
+                            let p1 = tournament(&scored, rng).clone();
+                            let p2 = tournament(&scored, rng).clone();
+                            let (c1, c2) = variate(space, &p1, &p2, ph, rng);
+                            next.push(c1);
+                            if next.len() < pop_size {
+                                next.push(c2);
+                            }
+                        }
+                    }
+                    Some(s) => {
+                        // two-stage path: recycle last round's rejects,
+                        // variate up to a 1/frac-times larger pool, keep
+                        // the surrogate's top λ for exact evaluation
+                        let lambda = pop_size - next.len();
+                        let target = s.pool_target(lambda);
+                        let mut pool = s.take_carry();
+                        while pool.len() < target {
+                            let p1 = tournament(&scored, rng).clone();
+                            let p2 = tournament(&scored, rng).clone();
+                            let (c1, c2) = variate(space, &p1, &p2, ph, rng);
+                            pool.push(c1);
+                            if pool.len() < target {
+                                pool.push(c2);
+                            }
+                        }
+                        next.extend(s.select(space, pool, lambda));
                     }
                 }
                 pop = next;
@@ -457,6 +496,36 @@ mod tests {
         for w in r.top.windows(2) {
             assert!(w[0].1 <= w[1].1);
         }
+    }
+
+    #[test]
+    fn screened_run_keeps_eval_budget_and_differs_from_exact() {
+        let p = Sphere::centered(SearchSpace::rram_reduced());
+        let budget = SearchBudget { pop: 12, gens: 8 };
+        let exact = GeneticAlgorithm::new(GaConfig::classic(budget))
+            .run(&p, &mut Rng::seed_from(21));
+        let screened_cfg = GaConfig {
+            screen_frac: 0.25,
+            ..GaConfig::classic(budget)
+        };
+        let screened = GeneticAlgorithm::new(screened_cfg.clone())
+            .run(&Sphere::centered(SearchSpace::rram_reduced()), &mut Rng::seed_from(21));
+        // same exact-evaluation budget per construction
+        assert_eq!(screened.evals, exact.evals);
+        // explicit 1.0 is the exact path, bit for bit
+        let one = GeneticAlgorithm::new(GaConfig {
+            screen_frac: 1.0,
+            ..GaConfig::classic(budget)
+        })
+        .run(&Sphere::centered(SearchSpace::rram_reduced()), &mut Rng::seed_from(21));
+        assert_eq!(one.best_score.to_bits(), exact.best_score.to_bits());
+        assert_eq!(one.history, exact.history);
+        assert_eq!(one.best, exact.best);
+        // screened runs are themselves deterministic per seed
+        let screened2 = GeneticAlgorithm::new(screened_cfg)
+            .run(&Sphere::centered(SearchSpace::rram_reduced()), &mut Rng::seed_from(21));
+        assert_eq!(screened.best_score.to_bits(), screened2.best_score.to_bits());
+        assert_eq!(screened.best, screened2.best);
     }
 
     #[test]

@@ -13,6 +13,12 @@
 //! * Table 3 baselines: [`pso::Pso`], [`es::EvolutionStrategy`] (ES and
 //!   stochastic-ranking ERES), [`cmaes::CmaEs`], [`g3pcx::G3Pcx`], and
 //!   [`exhaustive::Exhaustive`] ground truth.
+//!
+//! With `--screen-frac < 1.0` the GA (and `pareto::nsga2`) generation
+//! loops run **two-stage**: an online ridge surrogate
+//! ([`surrogate::ScreenState`]) ranks a `1/frac`-times larger offspring
+//! pool and only the predicted-best λ reach the exact evaluator, with
+//! rejects recycled into the next variation round — see `docs/search.md`.
 
 pub mod cmaes;
 pub mod es;
@@ -29,6 +35,7 @@ pub use exhaustive::Exhaustive;
 pub use g3pcx::G3Pcx;
 pub use ga::{EarlyStop, FourPhaseGa, GaConfig, GeneticAlgorithm, InitStrategy, PhaseParams};
 pub use pso::Pso;
+pub use surrogate::ScreenState;
 
 use crate::space::{Design, SearchSpace};
 use crate::util::rng::Rng;

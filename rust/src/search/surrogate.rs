@@ -7,15 +7,24 @@
 //! (log-transformed geometry, voltage, interactions). It is deliberately
 //! *not* used to replace evaluation inside the GA — the paper warns that
 //! hardware-metric prediction "requires substantially higher accuracy" —
-//! but to **prescreen** the diversity-sampled pool: evaluate a subset,
-//! fit, rank the remainder by prediction, and spend the remaining
-//! evaluation budget on the most promising candidates. The ablation
-//! experiment (`imcopt run ablations`) quantifies the evals-vs-quality
-//! trade-off.
+//! but to **prescreen** candidates so only the promising fraction reaches
+//! the exact evaluator:
+//!
+//! * [`surrogate_init`] prescreens the diversity-sampled initial pool
+//!   (evaluate a subset, fit, rank the remainder, evaluate the top half);
+//! * [`ScreenState`] is the multi-fidelity hot-loop variant
+//!   (`--screen-frac`): the GA/NSGA-II generation loops variate a
+//!   `1/frac`-times larger offspring pool, the online-fitted model ranks
+//!   it, only the top λ candidates are evaluated exactly, and the rejects
+//!   are recycled into the next variation round — see `docs/search.md`.
+//!
+//! The `surrogate` registry experiment quantifies the equal-wall-clock
+//! quality trade-off; `imcopt run ablations` covers the init-time variant.
 
 use super::{sampling, Problem};
-use crate::space::{idx, Design};
+use crate::space::{idx, Design, SearchSpace};
 use crate::util::rng::Rng;
+use std::collections::HashSet;
 
 /// Number of engineered features (excluding the bias).
 pub const N_FEATURES: usize = 14;
@@ -223,6 +232,148 @@ pub fn surrogate_init(
     (init, evals)
 }
 
+/// Ridge regularization used by the online hot-loop model (matches the
+/// init-time prescreen in [`surrogate_init`]).
+const SCREEN_LAMBDA: f64 = 1e-3;
+
+/// Online surrogate screening state for the GA/NSGA-II generation loops
+/// (`--screen-frac`, ROADMAP direction 4).
+///
+/// Every exact evaluation the loop performs is [`ScreenState::observe`]d
+/// in population order; at offspring time the loop variates a pool of
+/// [`ScreenState::pool_target`] candidates (recycled rejects first, then
+/// fresh variation) and [`ScreenState::select`] keeps the λ with the best
+/// predicted log-score for exact evaluation, carrying the rejects into
+/// the next round. The exact evaluator is still called on exactly λ
+/// candidates per generation, so a screened run costs the same wall-clock
+/// as the exact loop (plus the fit/rank overhead pinned by
+/// `BENCH_surrogate.json`) — the win is a `1/frac`-times larger candidate
+/// pool per generation.
+///
+/// Determinism: training pairs accumulate in evaluation order (which is
+/// thread-count-independent — `score_batch` is bit-identical at any
+/// `--threads`), duplicates are dropped by design identity preserving
+/// first-seen order, and ranking ties break by pool index via
+/// `total_cmp`, so a screened run is a pure function of
+/// (problem, config, seed).
+#[derive(Clone, Debug)]
+pub struct ScreenState {
+    frac: f64,
+    xs: Vec<[f64; N_FEATURES]>,
+    ys: Vec<f64>,
+    seen: HashSet<Design>,
+    carry: Vec<Design>,
+}
+
+impl ScreenState {
+    /// Screening state for an evaluated fraction `frac` ∈ (0, 1), or
+    /// `None` when `frac >= 1.0` (or is not finite) — the caller must
+    /// then run the exact, unscreened loop so default runs stay
+    /// bit-identical.
+    pub fn new(frac: f64) -> Option<ScreenState> {
+        if !frac.is_finite() || frac >= 1.0 {
+            return None;
+        }
+        Some(ScreenState {
+            frac: frac.max(0.05),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            seen: HashSet::new(),
+            carry: Vec::new(),
+        })
+    }
+
+    /// Record exact scalar scores (one observation per first-seen design;
+    /// non-finite / non-positive scores are skipped — the model predicts
+    /// log-score).
+    pub fn observe(&mut self, space: &SearchSpace, designs: &[Design], scores: &[f64]) {
+        for (d, &s) in designs.iter().zip(scores) {
+            if !s.is_finite() || s <= 0.0 {
+                continue;
+            }
+            if self.seen.insert(d.clone()) {
+                self.xs.push(features(&space.decode(d)));
+                self.ys.push(s.ln());
+            }
+        }
+    }
+
+    /// Record exact objective *vectors* (the NSGA-II loop): the training
+    /// target is the mean of the per-axis logs — the log geometric mean,
+    /// a scalar proxy that ranks "generally strong" vectors first.
+    /// Vectors with any non-finite or non-positive axis are skipped.
+    pub fn observe_vec(&mut self, space: &SearchSpace, designs: &[Design], objs: &[Vec<f64>]) {
+        for (d, o) in designs.iter().zip(objs) {
+            if o.is_empty() || o.iter().any(|x| !x.is_finite() || *x <= 0.0) {
+                continue;
+            }
+            if self.seen.insert(d.clone()) {
+                self.xs.push(features(&space.decode(d)));
+                self.ys.push(o.iter().map(|x| x.ln()).sum::<f64>() / o.len() as f64);
+            }
+        }
+    }
+
+    /// Offspring-pool size for `lambda` evaluation slots:
+    /// `ceil(lambda / frac)`, never below `lambda`.
+    pub fn pool_target(&self, lambda: usize) -> usize {
+        ((lambda as f64 / self.frac).ceil() as usize).max(lambda)
+    }
+
+    /// Rejects carried from the previous [`ScreenState::select`] — seed
+    /// the next offspring pool with these before fresh variation.
+    pub fn take_carry(&mut self) -> Vec<Design> {
+        std::mem::take(&mut self.carry)
+    }
+
+    /// Keep the `keep` pool members with the best (lowest) predicted
+    /// log-score for exact evaluation; the rest become the next round's
+    /// carry. Until the model has enough training data to fit, the first
+    /// `keep` pool members pass through unranked (plain truncation keeps
+    /// the cold start deterministic).
+    pub fn select(&mut self, space: &SearchSpace, pool: Vec<Design>, keep: usize) -> Vec<Design> {
+        if pool.len() <= keep {
+            self.carry.clear();
+            return pool;
+        }
+        let mut chosen = vec![false; pool.len()];
+        match RidgeModel::fit(&self.xs, &self.ys, SCREEN_LAMBDA) {
+            Some(model) => {
+                let mut ranked: Vec<(f64, usize)> = pool
+                    .iter()
+                    .enumerate()
+                    .map(|(i, d)| (model.predict(&features(&space.decode(d))), i))
+                    .collect();
+                ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                for &(_, i) in ranked.iter().take(keep) {
+                    chosen[i] = true;
+                }
+            }
+            None => {
+                for c in chosen.iter_mut().take(keep) {
+                    *c = true;
+                }
+            }
+        }
+        let mut selected = Vec::with_capacity(keep);
+        let mut rejected = Vec::with_capacity(pool.len() - keep);
+        for (i, d) in pool.into_iter().enumerate() {
+            if chosen[i] {
+                selected.push(d);
+            } else {
+                rejected.push(d);
+            }
+        }
+        self.carry = rejected;
+        selected
+    }
+
+    /// Training observations accumulated so far (distinct designs).
+    pub fn observations(&self) -> usize {
+        self.xs.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,5 +459,101 @@ mod tests {
         // the population should contain feasible designs
         let scores = crate::search::Problem::score_batch(&p, &init);
         assert!(scores.iter().any(|s| s.is_finite()));
+    }
+
+    #[test]
+    fn screen_state_is_off_at_frac_one() {
+        assert!(ScreenState::new(1.0).is_none());
+        assert!(ScreenState::new(2.0).is_none());
+        assert!(ScreenState::new(f64::NAN).is_none());
+        assert!(ScreenState::new(0.5).is_some());
+    }
+
+    #[test]
+    fn screen_pool_target_rounds_up_and_floors_at_lambda() {
+        let s = ScreenState::new(0.25).unwrap();
+        assert_eq!(s.pool_target(40), 160);
+        assert_eq!(s.pool_target(10), 40);
+        assert_eq!(s.pool_target(0), 0);
+        let s = ScreenState::new(0.3).unwrap();
+        assert_eq!(s.pool_target(10), 34); // ceil(10 / 0.3)
+        // the constructor clamps absurdly small fractions
+        let s = ScreenState::new(1e-9).unwrap();
+        assert_eq!(s.pool_target(10), 200); // frac clamped to 0.05
+    }
+
+    #[test]
+    fn screen_cold_start_truncates_and_carries_rejects() {
+        let space = SearchSpace::rram();
+        let mut rng = Rng::seed_from(11);
+        let mut s = ScreenState::new(0.5).unwrap();
+        let pool: Vec<Design> = (0..8).map(|_| space.random(&mut rng)).collect();
+        let selected = s.select(&space, pool.clone(), 4);
+        // no training data yet: plain truncation, order preserved
+        assert_eq!(selected, pool[..4].to_vec());
+        assert_eq!(s.take_carry(), pool[4..].to_vec());
+        assert!(s.take_carry().is_empty(), "carry is consumed once");
+        // a pool no larger than keep passes through whole
+        let small: Vec<Design> = pool[..3].to_vec();
+        assert_eq!(s.select(&space, small.clone(), 4), small);
+        assert!(s.take_carry().is_empty());
+    }
+
+    #[test]
+    fn screen_observe_dedups_and_skips_non_finite() {
+        let space = SearchSpace::rram();
+        let mut rng = Rng::seed_from(12);
+        let mut s = ScreenState::new(0.5).unwrap();
+        let d: Vec<Design> = (0..3).map(|_| space.random(&mut rng)).collect();
+        s.observe(&space, &d, &[2.0, f64::INFINITY, 3.0]);
+        assert_eq!(s.observations(), 2, "non-finite score skipped");
+        s.observe(&space, &d, &[2.0, 4.0, 3.0]);
+        assert_eq!(s.observations(), 3, "duplicates ignored, new finite added");
+        s.observe_vec(&space, &d[..1], &[vec![1.0, 2.0]]);
+        assert_eq!(s.observations(), 3, "observe_vec dedups against observe");
+    }
+
+    #[test]
+    fn screen_select_ranks_with_fitted_model_deterministically() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let p = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        );
+        let mut rng = Rng::seed_from(13);
+        let mut s = ScreenState::new(0.25).unwrap();
+        // train past the fit threshold on real scores
+        let train: Vec<Design> = (0..80).map(|_| p.random_candidate(&mut rng)).collect();
+        let scores = crate::search::Problem::score_batch(&p, &train);
+        s.observe(&space, &train, &scores);
+        assert!(s.observations() > N_FEATURES + 1);
+
+        let pool: Vec<Design> = (0..40).map(|_| p.random_candidate(&mut rng)).collect();
+        let a = s.clone().select(&space, pool.clone(), 10);
+        let b = s.clone().select(&space, pool.clone(), 10);
+        assert_eq!(a, b, "ranking must be deterministic");
+        assert_eq!(a.len(), 10);
+        // selection + carry partition the pool, preserving pool order
+        let mut sc = s.clone();
+        let sel = sc.select(&space, pool.clone(), 10);
+        let carry = sc.take_carry();
+        assert_eq!(carry.len(), 30);
+        let (mut i, mut j) = (0, 0);
+        for d in &pool {
+            if i < sel.len() && &sel[i] == d {
+                i += 1;
+            } else {
+                assert_eq!(&carry[j], d, "partition must preserve pool order");
+                j += 1;
+            }
+        }
+        assert_eq!((i, j), (sel.len(), carry.len()));
+        // and the model genuinely reorders: selection is generally not the
+        // plain prefix once fitted (sanity, not a strict guarantee — the
+        // seeded pool makes this stable)
+        assert_ne!(sel, pool[..10].to_vec(), "fitted model should rank, not truncate");
     }
 }

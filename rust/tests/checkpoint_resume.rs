@@ -204,6 +204,95 @@ fn killed_transfer_and_pareto_runs_resume_bit_identical() {
     assert_eq!(again.cells_computed, 0, "replay must not recompute cells");
 }
 
+/// The `surrogate` ablation journals screened GA cells whose RNG stream
+/// threads through `ScreenState`'s carry between generations — the
+/// kill/resume contract must hold for those too, and the run-config
+/// fingerprint must pin `--screen-frac` so a resume under a different
+/// screening fraction is rejected instead of silently mixing loops.
+#[test]
+fn killed_surrogate_run_resumes_bit_identical() {
+    const ID: [&str; 1] = ["surrogate"];
+    let dir_a = tmp("surrogate-straight");
+    let dir_b = tmp("surrogate-killed");
+    let ctx_screened = |dir: &Path, resume: bool, frac: f64| {
+        let mut c = ctx_at(43, dir, resume);
+        c.screen_frac = frac;
+        c
+    };
+
+    // reference: uninterrupted checkpointed run
+    let summary_a =
+        experiments::run_selected(&ID, &ctx_screened(&dir_a, false, 0.25)).unwrap();
+    assert_eq!(summary_a.executed, 1);
+    assert!(summary_a.quarantined.is_empty());
+
+    // kill after the first fresh cell (the frac-1.0 exact anchor); the
+    // config is bound first, exactly as `run_session` does, so the
+    // journal pins the fingerprint it was written under
+    {
+        let ctx = ctx_screened(&dir_b, false, 0.25);
+        let mut ckpt = Checkpoint::for_experiment(&ctx.out_dir, "surrogate", false).unwrap();
+        ckpt.bind_config(&experiments::config_fingerprint(&ctx)).unwrap();
+        ckpt.abort_after_cells = Some(1);
+        let err = experiments::run_with("surrogate", &ctx, &mut ckpt).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("simulated kill"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(ckpt.computed(), 1);
+    }
+
+    // resuming under a different --screen-frac must be rejected: the
+    // journaled cells were produced by a differently screened loop
+    {
+        let ctx = ctx_screened(&dir_b, true, 0.5);
+        let mut ckpt = Checkpoint::for_experiment(&ctx.out_dir, "surrogate", true).unwrap();
+        let err = ckpt
+            .bind_config(&experiments::config_fingerprint(&ctx))
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("different configuration"),
+            "expected a config-fingerprint rejection, got: {err:#}"
+        );
+    }
+
+    // resume under the original fraction completes bit-identically
+    let summary_b =
+        experiments::run_selected(&ID, &ctx_screened(&dir_b, true, 0.25)).unwrap();
+    assert_eq!(summary_b.executed, 1, "the report was never stored");
+    assert!(
+        summary_b.cells_reused >= 1,
+        "the journaled pre-kill cell must be reused, not re-run"
+    );
+    assert_eq!(
+        summary_b.cells_computed + summary_b.cells_reused,
+        summary_a.cells_computed + summary_a.cells_reused,
+        "resume must account for every cell visit of a straight run"
+    );
+
+    let a = artifacts(&dir_a);
+    let b = artifacts(&dir_b);
+    let names_a: Vec<&String> = a.keys().collect();
+    let names_b: Vec<&String> = b.keys().collect();
+    assert_eq!(names_a, names_b, "artifact sets differ");
+    assert!(
+        a.keys().any(|k| k.ends_with("surrogate.json")),
+        "expected surrogate artifacts, got {names_a:?}"
+    );
+    for (name, bytes_a) in &a {
+        assert_eq!(
+            bytes_a, &b[name],
+            "artifact {name} differs between straight and resumed runs"
+        );
+    }
+
+    // a second resume replays the stored report with zero computation
+    let again = experiments::run_selected(&ID, &ctx_screened(&dir_b, true, 0.25)).unwrap();
+    assert_eq!(again.replayed, 1);
+    assert_eq!(again.executed, 0);
+    assert_eq!(again.cells_computed, 0, "replay must not recompute cells");
+}
+
 #[test]
 fn completed_experiments_replay_without_recomputation() {
     let dir = tmp("replay");
