@@ -11,11 +11,13 @@
 #            determinism, surrogate screening determinism, catalog drift)
 #   golden   cross-process golden check: bless quick-budget report
 #            goldens into a scratch dir, re-verify from a second process
-#   bench    bench smokes -> BENCH_eval/model/pareto/surrogate.json,
-#            each validated against schemas/bench_*.schema.json (the
-#            model schema gates the compiled evaluator's >= 3x speedup;
-#            the surrogate schema gates screen_speedup > 1 and a
-#            deterministic ranking)
+#   bench    bench smokes -> BENCH_eval/model/pareto/surrogate/
+#            robustness.json, each validated against
+#            schemas/bench_*.schema.json (the model schema gates the
+#            compiled evaluator's >= 3x speedup; the surrogate schema
+#            gates screen_speedup > 1 and a deterministic ranking; the
+#            robustness bench asserts robust-scoring overhead below the
+#            naive ensemble-size multiple)
 #   trend    bench-trend gate: every BENCH_*.json is compared against
 #            its committed floor in bench_baselines/ via `imcopt
 #            validate --trend` — a >15% throughput/speedup regression
@@ -24,7 +26,9 @@
 #   catalog  registry JSON schema + docs/experiments.md drift
 #   smoke    `imcopt run --all --quick` emits a well-formed artifact for
 #            every registered experiment (--require-all), and a
-#            `--resume` re-run replays without recomputing a cell
+#            `--resume` re-run replays without recomputing a cell; plus a
+#            robust-mode leg: `imcopt run robustness --robust cvar0.25`
+#            with its own zero-recompute resume check
 #   orch     orchestrator crash matrix: the same sweep at --workers 4
 #            with a deterministically killed worker must complete via
 #            restarts + lease stealing, match the smoke byte for byte,
@@ -118,12 +122,12 @@ stage_golden() {
 
 stage_bench() {
     ensure_bin
-    for b in evaluator pareto surrogate; do
+    for b in evaluator pareto surrogate robustness; do
         echo "=== bench smoke ($b) ==="
         # shellcheck disable=SC2086
         IMCOPT_BENCH_QUICK=1 cargo bench $FEATURES --bench "$b"
     done
-    for f in BENCH_eval BENCH_model BENCH_pareto BENCH_surrogate; do
+    for f in BENCH_eval BENCH_model BENCH_pareto BENCH_surrogate BENCH_robustness; do
         if [ ! -f "$f.json" ]; then
             echo "error: $f.json was not produced" >&2
             exit 1
@@ -141,11 +145,14 @@ stage_bench() {
 
     echo "=== validate BENCH_surrogate.json (screen_speedup > 1, deterministic ranking) ==="
     "$IMCOPT_BIN" validate --bench BENCH_surrogate.json --schema schemas/bench_surrogate.schema.json
+
+    echo "=== validate BENCH_robustness.json (overhead below ensemble size, deterministic) ==="
+    "$IMCOPT_BIN" validate --bench BENCH_robustness.json --schema schemas/bench_robustness.schema.json
 }
 
 stage_trend() {
     ensure_bin
-    for b in eval model pareto surrogate; do
+    for b in eval model pareto surrogate robustness; do
         if [ ! -f "BENCH_$b.json" ]; then
             echo "error: BENCH_$b.json missing — run './ci.sh --stage bench' first" >&2
             exit 1
@@ -173,7 +180,7 @@ stage_smoke() {
     rm -rf "$SMOKE_OUT"
     "$IMCOPT_BIN" run --all --quick --stable --seed 5 --out-dir "$SMOKE_OUT"
 
-    echo "=== validate experiment artifacts (all 17 required) ==="
+    echo "=== validate experiment artifacts (all 18 required) ==="
     "$IMCOPT_BIN" validate --out-dir "$SMOKE_OUT" --require-all
 
     echo "=== resume smoke: a completed run replays without recomputation ==="
@@ -184,6 +191,25 @@ stage_smoke() {
         *"executed=0"*"cells_computed=0"*) ;;
         *)
             echo "error: --resume re-ran work on a completed out-dir" >&2
+            exit 1
+            ;;
+    esac
+
+    echo "=== robust-mode smoke: imcopt run robustness --robust cvar0.25 ==="
+    ROBUST_OUT="$(pwd)/target/ci-robust"
+    rm -rf "$ROBUST_OUT"
+    "$IMCOPT_BIN" run robustness --quick --stable --seed 5 \
+        --robust cvar0.25 --out-dir "$ROBUST_OUT"
+    "$IMCOPT_BIN" validate --out-dir "$ROBUST_OUT"
+
+    echo "=== robust-mode resume replays with zero recompute ==="
+    ROBUST_RESUME=$("$IMCOPT_BIN" run robustness --quick --stable --seed 5 \
+        --robust cvar0.25 --out-dir "$ROBUST_OUT" --resume | tail -n 1)
+    echo "$ROBUST_RESUME"
+    case "$ROBUST_RESUME" in
+        *"executed=0"*"cells_computed=0"*) ;;
+        *)
+            echo "error: robust-mode --resume re-ran work on a completed out-dir" >&2
             exit 1
             ;;
     esac
@@ -201,7 +227,7 @@ stage_orch() {
         "$IMCOPT_BIN" run --all --quick --stable --seed 5 \
         --out-dir "$ORCH_OUT" --workers 4
 
-    echo "=== validate orchestrated artifacts (all 17 required) ==="
+    echo "=== validate orchestrated artifacts (all 18 required) ==="
     "$IMCOPT_BIN" validate --out-dir "$ORCH_OUT" --require-all
     "$IMCOPT_BIN" validate --bench "$ORCH_OUT/orchestrator_status.json" \
         --schema schemas/orchestrator_status.schema.json

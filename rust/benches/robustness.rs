@@ -1,0 +1,119 @@
+//! Device-variation robustness overhead: what a `--robust` objective
+//! costs relative to the nominal accuracy-aware objective it wraps. A
+//! robust score aggregates one accuracy evaluation per ensemble member
+//! (3 corners + K jittered draws per corner), but the per-layer eps memo
+//! is shared across designs, so the steady-state overhead is far below
+//! the naive `ensemble.len()`×.
+//!
+//! Writes `BENCH_robustness.json`, validated in ci.sh against
+//! `schemas/bench_robustness.schema.json` and gated against the committed
+//! `bench_baselines/BENCH_robustness.json` by the trend leg. The headline
+//! is `robust_overhead`: robust-batch time over nominal-batch time for
+//! the same fresh-cache workload.
+
+use imcopt::accuracy::{analytical_eps, NoiseSpec};
+use imcopt::coordinator::{EvalBackend, JointProblem};
+use imcopt::model::MemoryTech;
+use imcopt::objective::{Aggregation, Objective, ObjectiveKind};
+use imcopt::robustness::{Corner, RobustConfig};
+use imcopt::search::Problem;
+use imcopt::space::{Design, SearchSpace};
+use imcopt::util::bench::Bench;
+use imcopt::util::json::Json;
+use imcopt::util::rng::Rng;
+use imcopt::workloads::WorkloadSet;
+
+fn acc_problem<'a>(
+    space: &'a SearchSpace,
+    set: &'a WorkloadSet,
+    robust: Option<RobustConfig>,
+) -> JointProblem<'a> {
+    JointProblem::with_backend(
+        space,
+        set,
+        EvalBackend::native(MemoryTech::Rram),
+        Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max),
+    )
+    .with_robust(robust)
+}
+
+fn main() {
+    let bench = Bench::new("robustness");
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let rc = RobustConfig::from_flag("worst", 1, 8).expect("valid mode");
+    let ensemble_len = rc.ensemble.len();
+    let mut rng = Rng::seed_from(1);
+    let pool: Vec<Design> = (0..128).map(|_| space.random(&mut rng)).collect();
+
+    // ---- perturbed eps pipeline ------------------------------------------
+    // NoiseSpec -> corner perturbation -> analytical per-layer eps: the
+    // inner kernel each extra ensemble member pays per distinct geometry.
+    let raws: Vec<[f64; 10]> = pool.iter().map(|d| space.decode(d)).collect();
+    let high = Corner::High.perturbation();
+    let m_eps = bench.run("perturb_eps/128", raws.len(), || {
+        for raw in &raws {
+            let spec = high.apply(&NoiseSpec::from_design(raw, MemoryTech::Rram));
+            std::hint::black_box(analytical_eps(&spec, 1));
+        }
+    });
+
+    // ---- nominal vs robust scoring ---------------------------------------
+    // Fresh problem per iteration so every design is a cache miss — the
+    // GA only ever scores designs it has not seen.
+    let m_nom = bench.run("nominal/score_batch-cnn4/128", pool.len(), || {
+        let p = acc_problem(&space, &set, None);
+        std::hint::black_box(p.score_batch(&pool));
+    });
+    let m_rob = bench.run(
+        &format!("robust-worst-n{ensemble_len}/score_batch-cnn4/128"),
+        pool.len(),
+        || {
+            let p = acc_problem(&space, &set, Some(rc.clone()));
+            std::hint::black_box(p.score_batch(&pool));
+        },
+    );
+
+    // determinism guard: two fresh robust problems produce bit-identical
+    // batches (the contract rust/tests/robustness_determinism.rs pins
+    // across thread counts)
+    let s_a = acc_problem(&space, &set, Some(rc.clone())).score_batch(&pool);
+    let s_b = acc_problem(&space, &set, Some(rc.clone())).score_batch(&pool);
+    let deterministic = s_a
+        .iter()
+        .zip(&s_b)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(deterministic, "robust score batches diverged between runs");
+
+    let perturb_eps_per_sec = raws.len() as f64 / m_eps.mean.as_secs_f64();
+    let nominal_score_per_sec = pool.len() as f64 / m_nom.mean.as_secs_f64();
+    let robust_score_per_sec = pool.len() as f64 / m_rob.mean.as_secs_f64();
+    let robust_overhead = m_rob.mean.as_secs_f64() / m_nom.mean.as_secs_f64();
+    assert!(
+        robust_overhead.is_finite() && robust_overhead < ensemble_len as f64,
+        "eps memo sharing must keep robust overhead below the naive \
+         {ensemble_len}x, got {robust_overhead:.2}x"
+    );
+    println!(
+        "robust objective: {robust_score_per_sec:.0} designs/s vs \
+         {nominal_score_per_sec:.0} nominal = {robust_overhead:.2}x for a \
+         {ensemble_len}-member ensemble"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("robustness".into())),
+        ("space", Json::Str("rram-32nm".into())),
+        ("workload_set", Json::Str("cnn4".into())),
+        ("ensemble_members", Json::Num(ensemble_len as f64)),
+        ("perturb_eps_per_sec", Json::Num(perturb_eps_per_sec)),
+        ("nominal_score_per_sec", Json::Num(nominal_score_per_sec)),
+        ("robust_score_per_sec", Json::Num(robust_score_per_sec)),
+        ("robust_overhead", Json::Num(robust_overhead)),
+        ("deterministic", Json::Bool(deterministic)),
+    ]);
+    let out = "BENCH_robustness.json";
+    match std::fs::write(out, report.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -131,6 +131,13 @@ pub fn accuracy_from_eps(eps: f64, base_acc: f64, chance: f64) -> f64 {
     chance + (base_acc - chance) * (-(eps / EPS_SCALE) * (eps / EPS_SCALE)).exp()
 }
 
+/// Whether a workload has a Fig. 8 accuracy baseline — accuracy-aware
+/// objectives (and the robustness corner specs built on them) are only
+/// defined over baseline-covered workloads.
+pub fn has_baseline(workload: &str) -> bool {
+    BASELINES.iter().any(|(n, _, _, _)| *n == workload)
+}
+
 /// Baseline lookup by workload name (panics on workloads without a Fig. 8
 /// baseline — the experiment only uses the CNN-4 set).
 pub fn baseline(workload: &str) -> (f64, f64) {
@@ -225,5 +232,14 @@ mod tests {
     #[should_panic(expected = "no accuracy baseline")]
     fn unknown_baseline_panics() {
         baseline("gpt2-medium");
+    }
+
+    #[test]
+    fn has_baseline_matches_table() {
+        for (name, _, _, _) in BASELINES {
+            assert!(has_baseline(name));
+        }
+        assert!(!has_baseline("gpt2-medium"));
+        assert!(!has_baseline(""));
     }
 }

@@ -2,8 +2,10 @@
 //! benches and examples.
 
 use crate::model::MemoryTech;
-use crate::objective::Objective;
+use crate::objective::{Objective, ObjectiveKind};
+use crate::robustness::RobustConfig;
 use crate::runtime::Engine;
+use crate::scenarios::ScenarioSpec;
 use crate::search::SearchBudget;
 use crate::space::SearchSpace;
 use crate::util::cli::Args;
@@ -76,6 +78,21 @@ pub struct ExpContext {
     /// the checkpoint config fingerprint, so `--resume` never mixes
     /// screened and exact cells.
     pub screen_frac: f64,
+    /// Robust-objective mode (`--robust worst|cvar<q>|mean`): when set,
+    /// accuracy-aware searches score the aggregate over a seeded
+    /// device-variation [`PerturbationEnsemble`] instead of the nominal
+    /// operating point (see `docs/robustness.md`). `None` (the default)
+    /// leaves every loop bit-identical to non-robust builds. Part of the
+    /// checkpoint config fingerprint and forwarded in orchestrator
+    /// worker argv.
+    ///
+    /// [`PerturbationEnsemble`]: crate::robustness::PerturbationEnsemble
+    pub robust: Option<String>,
+    /// Minimum nominal accuracy a design must reach on every active
+    /// workload before it can enter a Pareto front (`--acc-floor`,
+    /// constraint-domination in `pareto::VectorObjective`); `None` (the
+    /// default) disables the floor. Also part of the config fingerprint.
+    pub acc_floor: Option<f64>,
     /// Worker processes for `imcopt run` (`--workers N`): 1 (the default)
     /// runs in-process, more spawn the orchestrator supervisor. Excluded
     /// from the checkpoint config fingerprint — cells are deterministic at
@@ -109,6 +126,8 @@ impl Default for ExpContext {
             pareto_cap: 128,
             spec: None,
             screen_frac: 1.0,
+            robust: None,
+            acc_floor: None,
             workers: 1,
             worker_id: None,
             backend_notices: Mutex::new(Vec::new()),
@@ -121,7 +140,8 @@ impl ExpContext {
     /// Build from CLI arguments (`--seed`, `--quick`, `--native`,
     /// `--pjrt`, `--out-dir`/`--out`, `--threads`, `--stable`,
     /// `--resume`, `--topk`, `--hold-k`, `--portfolio`, `--moo-mode`,
-    /// `--pareto-cap`, `--spec`, `--screen-frac`).
+    /// `--pareto-cap`, `--spec`, `--screen-frac`, `--robust`,
+    /// `--acc-floor`).
     pub fn from_args(args: &Args) -> ExpContext {
         let backend_choice = if args.flag("native") {
             BackendChoice::Native
@@ -149,6 +169,11 @@ impl ExpContext {
             pareto_cap: args.opt_usize("pareto-cap", 128).max(1),
             spec: args.opt("spec").map(String::from),
             screen_frac: args.opt_f64("screen-frac", 1.0).clamp(0.05, 1.0),
+            robust: args.opt("robust").map(String::from),
+            acc_floor: args
+                .opt("acc-floor")
+                .and_then(|v| v.parse::<f64>().ok())
+                .filter(|f| f.is_finite() && *f > 0.0 && *f < 1.0),
             workers: args.opt_usize("workers", 1).max(1),
             worker_id: std::env::var("IMCOPT_WORKER_ID")
                 .ok()
@@ -293,8 +318,36 @@ impl ExpContext {
         }
     }
 
+    /// Monte-Carlo draws per corner for `--robust` ensembles (reduced
+    /// under `--quick`, like every other budget knob).
+    pub fn robust_draws(&self) -> usize {
+        if self.quick {
+            2
+        } else {
+            8
+        }
+    }
+
+    /// Parse the `--robust` flag into a resolved [`RobustConfig`]
+    /// (corners-and-draws ensemble seeded from `--seed`); `None` when the
+    /// flag is unset, an error on an unparsable mode. `imcopt run`
+    /// validates this once at startup, so later callers may `expect`.
+    pub fn robust_config(&self) -> anyhow::Result<Option<RobustConfig>> {
+        match &self.robust {
+            None => Ok(None),
+            Some(mode) => Ok(Some(RobustConfig::from_flag(
+                mode,
+                self.seed,
+                self.robust_draws(),
+            )?)),
+        }
+    }
+
     /// Convenience: build a joint problem wired to this context's backend
-    /// and worker-thread count (`--threads` / `IMCOPT_THREADS`).
+    /// and worker-thread count (`--threads` / `IMCOPT_THREADS`). With
+    /// `--robust` set and an accuracy-aware objective, the robust
+    /// configuration is attached (non-accuracy objectives never see it,
+    /// so their scores and config keys stay byte-identical).
     pub fn problem<'a>(
         &self,
         space: &'a SearchSpace,
@@ -302,8 +355,27 @@ impl ExpContext {
         mem: MemoryTech,
         objective: Objective,
     ) -> JointProblem<'a> {
+        let robust = if objective.kind == ObjectiveKind::EdapAccuracy {
+            self.robust_config().expect("--robust validated at startup")
+        } else {
+            None
+        };
         JointProblem::with_backend(space, workloads, self.backend(mem), objective)
             .with_threads(self.threads)
+            .with_robust(robust)
+    }
+
+    /// Build the joint problem of a scenario spec. A corner spec
+    /// (`--spec …:<corner>`) pins the accuracy model to that single
+    /// operating point — overriding any `--robust` ensemble, since the
+    /// noise-sweep family asks "what does the front look like *at* this
+    /// corner", not "robust to all corners".
+    pub fn spec_problem<'a>(&self, spec: &'a ScenarioSpec) -> JointProblem<'a> {
+        let p = self.problem(&spec.space, &spec.set, spec.mem, spec.objective());
+        match spec.corner {
+            Some(c) => p.with_robust(Some(RobustConfig::at_corner(c))),
+            None => p,
+        }
     }
 }
 
@@ -431,6 +503,60 @@ mod tests {
         assert!(ctx.portfolio.is_none());
         let args = Args::parse(["run", "--hold-k", "0"].iter().map(|s| s.to_string()));
         assert_eq!(ExpContext::from_args(&args).hold_k, 1);
+    }
+
+    #[test]
+    fn from_args_parses_robust_flags() {
+        // defaults are off
+        let ctx = ExpContext::from_args(&Args::parse(["run"].iter().map(|s| s.to_string())));
+        assert!(ctx.robust.is_none());
+        assert!(ctx.acc_floor.is_none());
+        assert!(ctx.robust_config().unwrap().is_none());
+        let args = Args::parse(
+            ["run", "robustness", "--robust", "cvar0.25", "--acc-floor", "0.9"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let ctx = ExpContext::from_args(&args);
+        assert_eq!(ctx.robust.as_deref(), Some("cvar0.25"));
+        assert_eq!(ctx.acc_floor, Some(0.9));
+        let rc = ctx.robust_config().unwrap().expect("configured");
+        assert_eq!(rc.descriptor(), format!("cvar0.25@ens-s{}-k8", ctx.seed));
+        // --quick shrinks the ensemble like every other budget knob
+        let args = Args::parse(
+            ["run", "--robust", "worst", "--quick"].iter().map(|s| s.to_string()),
+        );
+        let ctx = ExpContext::from_args(&args);
+        assert_eq!(
+            ctx.robust_config().unwrap().unwrap().ensemble.len(),
+            3 + 3 * 2
+        );
+        // a bad mode is a startup error, out-of-range floors are dropped
+        let args = Args::parse(
+            ["run", "--robust", "median", "--acc-floor", "1.5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let ctx = ExpContext::from_args(&args);
+        assert!(ctx.robust_config().is_err());
+        assert!(ctx.acc_floor.is_none());
+    }
+
+    #[test]
+    fn spec_problem_pins_corner_robust_config() {
+        let ctx = ExpContext::quick(3);
+        let spec = ScenarioSpec::parse("resnet18+alexnet:rram:high").unwrap();
+        let p = ctx.spec_problem(&spec);
+        assert_eq!(
+            p.robust().map(|rc| rc.descriptor()),
+            Some("worst@corner-high".into())
+        );
+        assert!(p.config_key().contains("robust:worst@corner-high"));
+        // corner-free specs stay robust-free (and key-identical to seed)
+        let plain = ScenarioSpec::parse("resnet18+alexnet:rram").unwrap();
+        let p = ctx.spec_problem(&plain);
+        assert!(p.robust().is_none());
+        assert!(!p.config_key().contains("robust:"));
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod config;
 use crate::accuracy;
 use crate::model::{MemoryTech, Metrics, NativeEvaluator};
 use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::robustness::RobustConfig;
 use crate::runtime::Engine;
 use crate::search::Problem;
 use crate::space::{idx, Design, SearchSpace};
@@ -97,8 +98,15 @@ pub struct JointProblem<'a> {
     cache: ShardedCache<u64, Evaluations>,
     evals: AtomicUsize,
     /// Cache for the (expensive) accuracy proxy keyed by (rows, cols,
-    /// bits) — the only parameters the noise model depends on.
-    acc_cache: ShardedCache<(u16, u16, u16), f64>,
+    /// bits, perturbation id) — the design parameters the noise model
+    /// depends on, plus which [`RobustConfig`] ensemble member (if any)
+    /// transformed the noise spec. Id 0 is the unperturbed nominal path;
+    /// ids `1..=N` index `robust.ensemble.members`.
+    acc_cache: ShardedCache<(u16, u16, u16, u16), f64>,
+    /// Robust-objective configuration (`--robust`): when set and the
+    /// objective is accuracy-aware, scores aggregate over the
+    /// perturbation ensemble instead of the nominal point alone.
+    robust: Option<RobustConfig>,
 }
 
 impl<'a> JointProblem<'a> {
@@ -130,6 +138,7 @@ impl<'a> JointProblem<'a> {
             cache: ShardedCache::new(),
             evals: AtomicUsize::new(0),
             acc_cache: ShardedCache::new(),
+            robust: None,
         }
     }
 
@@ -138,6 +147,22 @@ impl<'a> JointProblem<'a> {
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
+    }
+
+    /// Attach a robust-objective configuration (builder-style). Only
+    /// meaningful for [`ObjectiveKind::EdapAccuracy`]; `None` (the
+    /// default) keeps every score bit-identical to the nominal path.
+    /// The config joins [`JointProblem::config_key`] and
+    /// [`JointProblem::acc_scope`] so persisted memos never mix across
+    /// ensembles or modes.
+    pub fn with_robust(mut self, robust: Option<RobustConfig>) -> Self {
+        self.robust = robust;
+        self
+    }
+
+    /// The attached robust configuration, if any.
+    pub fn robust(&self) -> Option<&RobustConfig> {
+        self.robust.as_ref()
     }
 
     /// Restrict to a single workload (the paper's "separate search").
@@ -188,26 +213,43 @@ impl<'a> JointProblem<'a> {
             .unwrap_or_else(|| (0..self.workloads.len()).collect())
     }
 
-    /// Accuracy estimates per active workload for one design (Fig. 8).
-    /// Uses the AOT noisy-crossbar proxy when available, with the
-    /// analytical model as fallback; memoized on (rows, cols, bits) in a
-    /// sharded cache whose stripe lock is held during the computation, so
-    /// concurrent workers compute each key exactly once.
-    fn accuracies(&self, raw: &[f64; 10], d: &Design) -> Vec<f64> {
-        let mem = self.backend.mem();
-        let key = (d.0[idx::ROWS], d.0[idx::COLS], d.0[idx::BITS_CELL]);
-        let per_layer_eps = self.acc_cache.get_or_insert_with(key, || {
-            let spec = accuracy::NoiseSpec::from_design(raw, mem);
-            if let EvalBackend::Pjrt(engine, _) = &self.backend {
-                let eng = engine.lock().unwrap();
-                if eng.has_accproxy() {
-                    if let Ok(eps) = eng.accproxy_eps(spec.weight_sigma(), spec.ir_drop) {
-                        return eps;
-                    }
+    /// Per-layer eps for one noise spec: the AOT noisy-crossbar proxy
+    /// when available, with the analytical model as fallback.
+    fn eps_for_spec(&self, spec: &accuracy::NoiseSpec) -> f64 {
+        if let EvalBackend::Pjrt(engine, _) = &self.backend {
+            let eng = engine.lock().unwrap();
+            if eng.has_accproxy() {
+                if let Ok(eps) = eng.accproxy_eps(spec.weight_sigma(), spec.ir_drop) {
+                    return eps;
                 }
             }
-            accuracy::analytical_eps(&spec, 1)
-        });
+        }
+        accuracy::analytical_eps(spec, 1)
+    }
+
+    /// Memoized per-layer eps at one perturbation id (0 = nominal,
+    /// `1..=N` = ensemble member `pert - 1` of the attached
+    /// [`RobustConfig`]). The sharded stripe lock is held during the
+    /// computation, so concurrent workers compute each key exactly once.
+    fn per_layer_eps(&self, raw: &[f64; 10], d: &Design, pert: u16) -> f64 {
+        let key = (d.0[idx::ROWS], d.0[idx::COLS], d.0[idx::BITS_CELL], pert);
+        self.acc_cache.get_or_insert_with(key, || {
+            let spec = accuracy::NoiseSpec::from_design(raw, self.backend.mem());
+            let spec = match (&self.robust, pert) {
+                (Some(rc), p) if p > 0 => {
+                    rc.ensemble.members[(p - 1) as usize].apply(&spec)
+                }
+                _ => spec,
+            };
+            self.eps_for_spec(&spec)
+        })
+    }
+
+    /// Accuracy estimates per active workload for one design at one
+    /// perturbation id (Fig. 8; id 0 reproduces the paper's nominal
+    /// operating point).
+    fn accuracies_at(&self, raw: &[f64; 10], d: &Design, pert: u16) -> Vec<f64> {
+        let per_layer_eps = self.per_layer_eps(raw, d, pert);
         self.active_indices()
             .iter()
             .map(|&wi| {
@@ -219,8 +261,20 @@ impl<'a> JointProblem<'a> {
             .collect()
     }
 
+    /// Nominal (unperturbed) accuracy estimates per active workload —
+    /// used by accuracy-floor constraints and robustness reporting.
+    /// Panics on workloads without a Fig. 8 baseline.
+    pub fn nominal_accuracies(&self, d: &Design) -> Vec<f64> {
+        let raw = self.space.decode(d);
+        self.accuracies_at(&raw, d, 0)
+    }
+
     /// Assemble the full evaluation record of one design from its
-    /// per-workload metrics (accuracies + objective score).
+    /// per-workload metrics (accuracies + objective score). With a
+    /// [`RobustConfig`] attached and an accuracy-aware objective, the
+    /// score is the robust aggregate over the perturbation ensemble
+    /// (hardware metrics are perturbation-invariant — only accuracies
+    /// move); the recorded `accuracies` stay nominal for reporting.
     fn build_evaluation(
         &self,
         d: &Design,
@@ -228,13 +282,25 @@ impl<'a> JointProblem<'a> {
         metrics: Vec<Metrics>,
     ) -> Evaluations {
         let accuracies = if self.objective.kind == ObjectiveKind::EdapAccuracy {
-            Some(self.accuracies(raw, d))
+            Some(self.accuracies_at(raw, d, 0))
         } else {
             None
         };
-        let score = self
-            .objective
-            .score(&metrics, accuracies.as_deref(), raw[idx::TECH_NM]);
+        let score = match (&self.robust, self.objective.kind) {
+            (Some(rc), ObjectiveKind::EdapAccuracy) => {
+                let mut member_scores: Vec<f64> = (0..rc.ensemble.len())
+                    .map(|i| {
+                        let accs = self.accuracies_at(raw, d, (i + 1) as u16);
+                        self.objective
+                            .score(&metrics, Some(&accs), raw[idx::TECH_NM])
+                    })
+                    .collect();
+                rc.mode.aggregate(&mut member_scores)
+            }
+            _ => self
+                .objective
+                .score(&metrics, accuracies.as_deref(), raw[idx::TECH_NM]),
+        };
         Evaluations {
             metrics,
             accuracies,
@@ -389,8 +455,12 @@ impl<'a> JointProblem<'a> {
                 .join("+"),
             None => "all".to_string(),
         };
+        let robust = match &self.robust {
+            Some(rc) => format!("|robust:{}", rc.descriptor()),
+            None => String::new(),
+        };
         format!(
-            "{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}{robust}",
             self.space.variant,
             self.workloads.names().join(","),
             subset,
@@ -435,8 +505,12 @@ impl<'a> JointProblem<'a> {
                 }
             }
         };
+        let robust = match &self.robust {
+            Some(rc) => format!("|robust:{}", rc.descriptor()),
+            None => String::new(),
+        };
         format!(
-            "{}|{}|{source}",
+            "{}|{}|{source}{robust}",
             self.space.variant,
             self.backend.mem().name(),
         )
@@ -448,8 +522,8 @@ impl<'a> JointProblem<'a> {
     }
 
     /// Snapshot of the accuracy-proxy memo (per-layer eps keyed by the
-    /// `(rows, cols, bits)` design indices), sorted by key.
-    pub fn acc_snapshot(&self) -> Vec<((u16, u16, u16), f64)> {
+    /// `(rows, cols, bits, perturbation id)` indices), sorted by key.
+    pub fn acc_snapshot(&self) -> Vec<((u16, u16, u16, u16), f64)> {
         self.acc_cache.sorted_entries()
     }
 
@@ -457,7 +531,7 @@ impl<'a> JointProblem<'a> {
     /// Entries must come from a problem with the same
     /// [`JointProblem::acc_scope`]; like the evaluation memo, preloading
     /// changes only throughput, never scores.
-    pub fn preload_acc_cache(&self, entries: Vec<((u16, u16, u16), f64)>) {
+    pub fn preload_acc_cache(&self, entries: Vec<((u16, u16, u16, u16), f64)>) {
         for (k, v) in entries {
             self.acc_cache.insert(k, v);
         }
@@ -871,6 +945,97 @@ mod tests {
             acc_obj,
         );
         assert_ne!(p.acc_scope(), r.acc_scope());
+    }
+
+    #[test]
+    fn robust_worst_never_beats_nominal() {
+        use crate::robustness::RobustConfig;
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let acc_obj = Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max);
+        let nominal = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            acc_obj,
+        );
+        let robust = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            acc_obj,
+        )
+        .with_robust(Some(RobustConfig::from_flag("worst", 9, 2).unwrap()));
+        let mut rng = Rng::seed_from(41);
+        let mut checked = 0;
+        for _ in 0..32 {
+            let d = nominal.random_candidate(&mut rng);
+            let sn = nominal.evaluate_design(&d).score;
+            if !sn.is_finite() {
+                continue;
+            }
+            let sr = robust.evaluate_design(&d).score;
+            // worst case over an ensemble containing the (identity)
+            // nominal corner can only cost more
+            assert!(sr >= sn * (1.0 - 1e-12), "robust {sr} < nominal {sn}");
+            // the high corner strictly degrades RRAM accuracy
+            assert!(sr > sn, "high corner must strictly worsen {sn}");
+            checked += 1;
+        }
+        assert!(checked >= 3, "too few feasible probes ({checked})");
+        // the robust problem memoizes one eps per perturbation id it saw
+        assert!(robust.acc_cache_len() > nominal.acc_cache_len());
+        // nominal accuracies are still reported (pert id 0)
+        let d = nominal.random_candidate(&mut rng);
+        let ev = robust.evaluate_design(&d);
+        assert_eq!(ev.accuracies.as_ref().map(Vec::len), Some(4));
+    }
+
+    #[test]
+    fn robust_config_scopes_keys() {
+        use crate::robustness::RobustConfig;
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let acc_obj = Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max);
+        let plain = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            acc_obj,
+        );
+        assert!(!plain.config_key().contains("robust:"));
+        assert!(!plain.acc_scope().contains("robust:"));
+        let rc = RobustConfig::from_flag("cvar0.5", 3, 1).unwrap();
+        let r = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            acc_obj,
+        )
+        .with_robust(Some(rc.clone()));
+        assert!(r.config_key().contains("robust:cvar0.5@ens-s3-k1"));
+        assert!(r.acc_scope().contains("robust:cvar0.5@ens-s3-k1"));
+        assert_ne!(plain.config_key(), r.config_key());
+    }
+
+    #[test]
+    fn robust_ignored_for_non_accuracy_objectives() {
+        use crate::robustness::RobustConfig;
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let plain = problem(&space, &set, MemoryTech::Rram);
+        let r = problem(&space, &set, MemoryTech::Rram)
+            .with_robust(Some(RobustConfig::from_flag("worst", 1, 1).unwrap()));
+        let mut rng = Rng::seed_from(17);
+        let designs: Vec<Design> =
+            (0..8).map(|_| plain.random_candidate(&mut rng)).collect();
+        for (a, b) in plain
+            .score_batch(&designs)
+            .iter()
+            .zip(&r.score_batch(&designs))
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

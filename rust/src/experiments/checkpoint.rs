@@ -237,9 +237,10 @@ pub struct Checkpoint {
     /// [`Evaluations`]); decoded once at load/absorb time so warming a
     /// problem is a clone, not a JSON decode.
     memo: BTreeMap<String, BTreeMap<u64, Evaluations>>,
-    /// scope ([`JointProblem::acc_scope`]) → ((rows, cols, bits) design
-    /// indices → memoized per-layer eps of the accuracy proxy).
-    acc: BTreeMap<String, BTreeMap<(u16, u16, u16), f64>>,
+    /// scope ([`JointProblem::acc_scope`]) → ((rows, cols, bits,
+    /// perturbation id) indices → memoized per-layer eps of the accuracy
+    /// proxy; id 0 = nominal, ids ≥ 1 = robustness-ensemble members).
+    acc: BTreeMap<String, BTreeMap<(u16, u16, u16, u16), f64>>,
     computed: usize,
     reused: usize,
     /// Simulated-kill hook for the resume tests: the cell *after* this
@@ -791,7 +792,7 @@ impl Checkpoint {
         }
         let snapshot = problem.acc_snapshot();
         let map = self.acc.entry(scope.clone()).or_default();
-        let mut fresh: Vec<((u16, u16, u16), f64)> = Vec::new();
+        let mut fresh: Vec<((u16, u16, u16, u16), f64)> = Vec::new();
         for (k, v) in snapshot {
             if !map.contains_key(&k) {
                 map.insert(k, v);
@@ -820,15 +821,26 @@ impl Checkpoint {
     }
 }
 
-/// `(rows, cols, bits)` design-index key ↔ "r,c,b" string (acc memo file).
-fn acc_key_to_string(k: (u16, u16, u16)) -> String {
-    format!("{},{},{}", k.0, k.1, k.2)
+/// `(rows, cols, bits, perturbation id)` design-index key ↔ string (acc
+/// memo file). Perturbation id 0 (the nominal path) keeps the legacy
+/// three-component "r,c,b" spelling, so default (non-robust) runs write
+/// byte-identical memo files to every earlier version; ensemble members
+/// serialize as "r,c,b,p". The parser accepts both.
+fn acc_key_to_string(k: (u16, u16, u16, u16)) -> String {
+    if k.3 == 0 {
+        format!("{},{},{}", k.0, k.1, k.2)
+    } else {
+        format!("{},{},{},{}", k.0, k.1, k.2, k.3)
+    }
 }
 
-fn parse_acc_key(s: &str) -> Option<(u16, u16, u16)> {
+fn parse_acc_key(s: &str) -> Option<(u16, u16, u16, u16)> {
     let mut it = s.split(',').map(|p| p.parse::<u16>().ok());
-    match (it.next(), it.next(), it.next(), it.next()) {
-        (Some(Some(r)), Some(Some(c)), Some(Some(b)), None) => Some((r, c, b)),
+    match (it.next(), it.next(), it.next(), it.next(), it.next()) {
+        (Some(Some(r)), Some(Some(c)), Some(Some(b)), None, None) => Some((r, c, b, 0)),
+        (Some(Some(r)), Some(Some(c)), Some(Some(b)), Some(Some(p)), None) => {
+            Some((r, c, b, p))
+        }
         _ => None,
     }
 }
@@ -1133,9 +1145,9 @@ mod tests {
         .unwrap();
         let ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
         let scope = ck.acc.get("scope").expect("intact acc entries load");
-        assert_eq!(scope.get(&(4, 7, 2)), Some(&0.125));
+        assert_eq!(scope.get(&(4, 7, 2, 0)), Some(&0.125));
         assert!(
-            !scope.contains_key(&(5, 8, 3)),
+            !scope.contains_key(&(5, 8, 3, 0)),
             "truncated acc line must be skipped, not mis-parsed"
         );
     }
@@ -1418,11 +1430,59 @@ mod tests {
 
     #[test]
     fn acc_key_codec_roundtrips() {
-        for k in [(0u16, 0u16, 0u16), (4, 7, 2), (512, 256, 4)] {
+        for k in [
+            (0u16, 0u16, 0u16, 0u16),
+            (4, 7, 2, 0),
+            (512, 256, 4, 0),
+            (4, 7, 2, 1),
+            (512, 256, 4, 27),
+        ] {
             assert_eq!(parse_acc_key(&acc_key_to_string(k)), Some(k));
         }
+        // nominal keys keep the legacy three-component spelling ...
+        assert_eq!(acc_key_to_string((4, 7, 2, 0)), "4,7,2");
+        assert_eq!(acc_key_to_string((4, 7, 2, 3)), "4,7,2,3");
+        // ... and legacy memo files parse as perturbation id 0
+        assert_eq!(parse_acc_key("4,7,2"), Some((4, 7, 2, 0)));
         assert_eq!(parse_acc_key("1,2"), None);
-        assert_eq!(parse_acc_key("1,2,3,4"), None);
+        assert_eq!(parse_acc_key("1,2,3,4,5"), None);
         assert_eq!(parse_acc_key("a,b,c"), None);
+    }
+
+    #[test]
+    fn robust_acc_memo_round_trips_with_scope_isolation() {
+        use crate::robustness::RobustConfig;
+        let dir = tmp("robustmemo");
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let rc = RobustConfig::from_flag("worst", 5, 1).unwrap();
+        let p = acc_problem(&space, &set).with_robust(Some(rc.clone()));
+        let mut rng = Rng::seed_from(45);
+        let designs: Vec<Design> =
+            (0..5).map(|_| p.random_candidate(&mut rng)).collect();
+        let scores = p.score_batch(&designs);
+        assert!(p.acc_cache_len() > 0);
+        {
+            let mut ck = Checkpoint::for_experiment(&dir, "demo", false).unwrap();
+            ck.absorb_problem(&p).unwrap();
+        }
+        let ck = Checkpoint::for_experiment(&dir, "demo", true).unwrap();
+        // same robust config warms everything, scores replay bit-identically
+        let q = acc_problem(&space, &set).with_robust(Some(rc));
+        ck.warm_problem(&q);
+        assert_eq!(q.acc_cache_len(), p.acc_cache_len());
+        let warm = q.score_batch(&designs);
+        assert_eq!(q.evals(), 0);
+        for (a, b) in scores.iter().zip(&warm) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // a different ensemble (or none) is a different scope: no import
+        let other = acc_problem(&space, &set)
+            .with_robust(Some(RobustConfig::from_flag("worst", 6, 1).unwrap()));
+        ck.warm_problem(&other);
+        assert_eq!(other.acc_cache_len(), 0);
+        let nominal = acc_problem(&space, &set);
+        ck.warm_problem(&nominal);
+        assert_eq!(nominal.acc_cache_len(), 0);
     }
 }

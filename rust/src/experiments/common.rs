@@ -229,9 +229,7 @@ pub fn portfolio_cell(
     p: &Portfolio,
     shares_joints: bool,
 ) -> Result<PortfolioOutcome> {
-    let joint_problem = ctx
-        .problem(&spec.space, &spec.set, spec.mem, spec.objective())
-        .restricted_to(p.train.clone());
+    let joint_problem = ctx.spec_problem(spec).restricted_to(p.train.clone());
     ckpt.warm_problem(&joint_problem);
     let cfg = GaConfig {
         top_k: ctx.top_k,
@@ -284,9 +282,7 @@ pub fn separate_bound_result(
     spec: &ScenarioSpec,
     wi: usize,
 ) -> Result<(OptResult, f64)> {
-    let sep_problem = ctx
-        .problem(&spec.space, &spec.set, spec.mem, spec.objective())
-        .restricted(wi);
+    let sep_problem = ctx.spec_problem(spec).restricted(wi);
     ckpt.warm_problem(&sep_problem);
     let sep = opt_shared_cell(
         ckpt,
@@ -381,6 +377,7 @@ pub fn write_portfolio_cell(
                 ("geo_mean_gap", Json::f64(out.summary.geo_mean)),
                 ("worst_gap", Json::f64(out.summary.worst)),
                 ("finite_gaps", Json::Num(out.summary.finite as f64)),
+                ("infeasible_rate", Json::f64(infeasible_rate(out))),
             ]),
         ),
         (
@@ -402,6 +399,17 @@ pub fn write_portfolio_cell(
     // atomic: concurrent orchestrator workers may emit the same cell
     crate::util::write_atomic(path, &(cell.to_string() + "\n"))
         .with_context(|| format!("writing portfolio cell {}", path.display()))
+}
+
+/// Fraction of a portfolio's deploy workloads whose gap is non-finite
+/// (infeasible deployment or unusable bound). 0 for an empty deploy set.
+/// Lets capacity-limited rows (e.g. gpt2-medium on RRAM) stay in the
+/// table as a reported degradation instead of being excluded.
+pub fn infeasible_rate(out: &PortfolioOutcome) -> f64 {
+    if out.deploy.is_empty() {
+        return 0.0;
+    }
+    1.0 - out.summary.finite as f64 / out.deploy.len() as f64
 }
 
 /// Per-workload single-workload scores of a chosen design (Fig. 3/5

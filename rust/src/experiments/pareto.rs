@@ -218,8 +218,31 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     );
 
     for (si, spec) in common::resolve_specs(ctx)?.iter().enumerate() {
-        let problem = ctx.problem(&spec.space, &spec.set, spec.mem, spec.objective());
+        let problem = ctx.spec_problem(spec);
         ckpt.warm_problem(&problem);
+        // the accuracy floor needs a nominal-accuracy model for every
+        // workload of the family; sets without full baselines keep their
+        // plain fronts and say so in the report
+        let floor = match ctx.acc_floor {
+            Some(f)
+                if spec
+                    .set
+                    .workloads
+                    .iter()
+                    .all(|w| crate::accuracy::has_baseline(w.name)) =>
+            {
+                Some(f)
+            }
+            Some(f) => {
+                ctx.record_notice(format!(
+                    "--acc-floor {f} ignored for set '{}': not every workload \
+                     carries an accuracy baseline",
+                    spec.name
+                ));
+                None
+            }
+            None => None,
+        };
         let seed = family_seed(ctx.seed, si);
 
         // scalarized reference at the same budget
@@ -236,7 +259,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         )?;
 
         for mode in &modes {
-            let moo = MooProblem::new(&problem, *mode);
+            let moo = MooProblem::new(&problem, *mode).with_acc_floor(floor);
             let mr = moo_cell(
                 ckpt,
                 &format!("pareto:{}:{}:front", spec.name, mode.name()),

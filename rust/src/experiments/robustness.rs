@@ -1,0 +1,492 @@
+//! Device-variation robustness study (the `robustness` experiment).
+//!
+//! Two questions the scalarized reproduction cannot answer:
+//!
+//! 1. **What does nominal-point optimization give up under device
+//!    variation?** Two equal-budget four-phase GA searches on the cnn4 /
+//!    RRAM family under the accuracy-aware EDAP objective: one at the
+//!    nominal operating point, one under the robust aggregate
+//!    (`--robust`, default `worst`) over a seeded corners-and-draws
+//!    [`PerturbationEnsemble`]. Each chosen design is then cross-scored
+//!    under *both* problems, giving the robust regret of the nominal
+//!    design (how much worse its worst case is) and the nominal cost of
+//!    the robust design (how much nominal headroom robustness buys away).
+//!
+//! 2. **What does an accuracy floor cost in EDAP?** Per memory
+//!    technology (cnn4 on RRAM and on SRAM), three equal-budget NSGA-II
+//!    metric-mode fronts: unconstrained, and with `--acc-floor`-style
+//!    constraint-domination floors at `a0 + 0.5%` and `a0 + 1%`, where
+//!    `a0` is the minimum nominal accuracy of the unconstrained front's
+//!    minimum-EDAP corner. The reported curve is the corner-EDAP ratio
+//!    against the unconstrained front — "the EDAP cost of a +1% accuracy
+//!    floor". On SRAM the accuracy model is design-invariant (no analog
+//!    noise), so any floor above the fixed baseline is infeasible by
+//!    construction — the curve reports that as `inf` instead of hiding
+//!    the row.
+//!
+//! Every search is a checkpoint cell (`--resume` replays); standalone
+//! JSON artifacts land in `<out_dir>/robustness_cells/`
+//! (`schemas/robustness_cell.schema.json`). Determinism: everything is a
+//! pure function of (seed, config) — bit-identical across `--threads`,
+//! `--workers` and kill/`--resume` (`rust/tests/robustness_determinism.rs`).
+//!
+//! [`PerturbationEnsemble`]: crate::robustness::PerturbationEnsemble
+
+use super::checkpoint::{self, Checkpoint};
+use super::common;
+use super::pareto::{moo_result_from_json, moo_result_to_json};
+use crate::accuracy;
+use crate::coordinator::{ExpContext, JointProblem};
+use crate::model::MemoryTech;
+use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::pareto::{MooMode, MooProblem, MooResult, MultiObjectiveOptimizer, Nsga2, Nsga2Config};
+use crate::report::Report;
+use crate::robustness::{Corner, RobustConfig};
+use crate::search::{GaConfig, InitStrategy, Problem};
+use crate::space::{Design, SearchSpace};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workloads::WorkloadSet;
+use anyhow::{Context, Result};
+
+/// Registry entry (see `experiments::REGISTRY`).
+pub struct Robustness;
+
+impl super::Experiment for Robustness {
+    fn id(&self) -> &'static str {
+        "robustness"
+    }
+    fn description(&self) -> &'static str {
+        "Device-variation robustness: nominal-vs-robust designs and accuracy-floor cost"
+    }
+    fn cost(&self) -> super::Cost {
+        super::Cost::Medium
+    }
+    fn granularity(&self) -> super::Granularity {
+        super::Granularity::Cell
+    }
+    fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+        run(ctx, ckpt)
+    }
+}
+
+/// The robust configuration this experiment studies: the user's
+/// `--robust` mode when given, the worst-case corners-and-draws ensemble
+/// otherwise (the study needs *a* robust objective even when the global
+/// flag is off; the flag then only changes which aggregate is compared).
+fn study_robust_config(ctx: &ExpContext) -> Result<RobustConfig> {
+    Ok(match ctx.robust_config()? {
+        Some(rc) => rc,
+        None => RobustConfig::from_flag("worst", ctx.seed, ctx.robust_draws())?,
+    })
+}
+
+/// NSGA-II sized by the context (mirrors the `pareto` experiment's
+/// configuration so corner EDAPs are comparable across studies).
+fn nsga_config(ctx: &ExpContext) -> Nsga2Config {
+    let (p_h, p_e) = ctx.sampling();
+    Nsga2Config {
+        init: InitStrategy::HammingDiverse { p_h, p_e },
+        cap: ctx.pareto_cap,
+        screen_frac: ctx.screen_frac,
+        ..Nsga2Config::paper(ctx.budget())
+    }
+}
+
+/// Journal a [`MooResult`] as a checkpoint cell (same codec as `pareto`).
+fn moo_cell(
+    ckpt: &mut Checkpoint,
+    key: &str,
+    compute: impl FnOnce() -> MooResult,
+) -> Result<MooResult> {
+    let v = ckpt.cell(key, || Ok(moo_result_to_json(&compute())))?;
+    moo_result_from_json(&v)
+}
+
+/// Index of the minimum finite scalar (first on ties); `None` when no
+/// entry is finite (e.g. a floor nobody can reach).
+fn argmin_scalar(scalars: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &s) in scalars.iter().enumerate() {
+        if !s.is_finite() {
+            continue;
+        }
+        match best {
+            Some((_, b)) if s >= b => {}
+            _ => best = Some((i, s)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Smallest accuracy across a workload set for one design at a
+/// device-variation corner, through the public accuracy + robustness
+/// models (the same per-layer quadrature the joint problem memoizes).
+fn min_accuracy_at_corner(
+    space: &SearchSpace,
+    set: &WorkloadSet,
+    mem: MemoryTech,
+    d: &Design,
+    corner: Corner,
+) -> f64 {
+    let raw = space.decode(d);
+    let spec = corner.perturbation().apply(&accuracy::NoiseSpec::from_design(&raw, mem));
+    let per_layer = accuracy::analytical_eps(&spec, 1);
+    set.workloads
+        .iter()
+        .map(|w| {
+            let eps = per_layer * (w.mapped_layers() as f64).sqrt();
+            let (base, chance) = accuracy::baseline(w.name);
+            accuracy::accuracy_from_eps(eps, base, chance)
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// One side of the nominal-vs-robust comparison, fully cross-scored.
+struct GapSide {
+    label: &'static str,
+    design: Design,
+    nominal_score: f64,
+    robust_score: f64,
+    min_nominal_acc: f64,
+    min_high_corner_acc: f64,
+}
+
+/// One point of a floor-cost curve.
+struct FloorPoint {
+    floor: Option<f64>,
+    corner_edap: f64,
+    front_size: usize,
+}
+
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
+    let mut report = Report::new(
+        "robustness",
+        "Device variation: nominal-vs-robust designs and the EDAP cost of accuracy floors",
+    );
+    let cells_dir = ctx.out_dir.join("robustness_cells");
+    // like pareto_fronts/: the floor values depend on the configuration,
+    // so the directory always reflects exactly one run's cells
+    if cells_dir.exists() {
+        std::fs::remove_dir_all(&cells_dir)
+            .with_context(|| format!("clearing {}", cells_dir.display()))?;
+    }
+    std::fs::create_dir_all(&cells_dir)
+        .with_context(|| format!("creating {}", cells_dir.display()))?;
+
+    // ---- part 1: nominal vs robust GA on cnn4 / RRAM ---------------------
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let objective = Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max);
+    let rc = study_robust_config(ctx)?;
+    let nominal_problem = ctx
+        .problem(&space, &set, MemoryTech::Rram, objective)
+        .with_robust(None);
+    let robust_problem = ctx
+        .problem(&space, &set, MemoryTech::Rram, objective)
+        .with_robust(Some(rc.clone()));
+    let cfg = GaConfig {
+        top_k: ctx.top_k,
+        ..common::four_phase(ctx)
+    };
+
+    ckpt.warm_problem(&nominal_problem);
+    let nominal = common::ga_cell(
+        ckpt,
+        "robustness:cnn4:nominal",
+        &nominal_problem,
+        cfg.clone(),
+        ctx.seed,
+    )?;
+    ckpt.absorb_problem(&nominal_problem)?;
+    ckpt.warm_problem(&robust_problem);
+    let robust = common::ga_cell(
+        ckpt,
+        "robustness:cnn4:robust",
+        &robust_problem,
+        cfg,
+        ctx.seed,
+    )?;
+    ckpt.absorb_problem(&robust_problem)?;
+
+    let side = |label: &'static str, r: &crate::search::OptResult| -> GapSide {
+        let d = r.best.clone();
+        GapSide {
+            label,
+            nominal_score: nominal_problem.score_batch(&[d.clone()])[0],
+            robust_score: robust_problem.score_batch(&[d.clone()])[0],
+            min_nominal_acc: nominal_problem
+                .nominal_accuracies(&d)
+                .iter()
+                .copied()
+                .fold(f64::INFINITY, f64::min),
+            min_high_corner_acc: min_accuracy_at_corner(
+                &space,
+                &set,
+                MemoryTech::Rram,
+                &d,
+                Corner::High,
+            ),
+            design: d,
+        }
+    };
+    let sides = [side("nominal", &nominal), side("robust", &robust)];
+    // how much worse the nominal design's worst case is than the robust
+    // design's, and what the robust design pays at the nominal point
+    let regret = sides[0].robust_score / sides[1].robust_score;
+    let nominal_cost = sides[1].nominal_score / sides[0].nominal_score;
+
+    let mut gap_table = Table::new(
+        &format!(
+            "nominal vs robust four-phase GA on cnn4/RRAM (accuracy-aware EDAP, \
+             robust aggregate = {})",
+            rc.descriptor()
+        ),
+        &[
+            "design",
+            "nominal score",
+            "robust score",
+            "min acc (nominal)",
+            "min acc (high corner)",
+        ],
+    );
+    for s in &sides {
+        gap_table.row(vec![
+            s.label.to_string(),
+            common::s(s.nominal_score),
+            common::s(s.robust_score),
+            common::s(s.min_nominal_acc),
+            common::s(s.min_high_corner_acc),
+        ]);
+    }
+    report.table(gap_table);
+
+    let side_json = |s: &GapSide| {
+        Json::obj(vec![
+            ("design", checkpoint::design_to_json(&s.design)),
+            ("described", Json::Str(space.describe(&s.design))),
+            ("nominal_score", Json::f64(s.nominal_score)),
+            ("robust_score", Json::f64(s.robust_score)),
+            ("min_nominal_accuracy", Json::f64(s.min_nominal_acc)),
+            ("min_high_corner_accuracy", Json::f64(s.min_high_corner_acc)),
+        ])
+    };
+    let gap_cell = Json::obj(vec![
+        ("experiment", Json::Str("robustness".into())),
+        ("kind", Json::Str("gap".into())),
+        ("set", Json::Str("cnn4".into())),
+        ("mem", Json::Str(MemoryTech::Rram.name().into())),
+        ("robust", Json::Str(rc.descriptor())),
+        ("seed", Json::Num(ctx.seed as f64)),
+        ("nominal", side_json(&sides[0])),
+        ("robust_design", side_json(&sides[1])),
+        ("robust_regret", Json::f64(regret)),
+        ("nominal_cost", Json::f64(nominal_cost)),
+    ]);
+    let gap_path = cells_dir.join("gap.json");
+    crate::util::write_atomic(&gap_path, &(gap_cell.to_string() + "\n"))
+        .with_context(|| format!("writing {}", gap_path.display()))?;
+
+    // ---- part 2: accuracy-floor cost curves, RRAM vs SRAM ----------------
+    let mut floor_table = Table::new(
+        "EDAP cost of nominal-accuracy floors (NSGA-II metric fronts at equal \
+         budget; corner = minimum-EDAP front point; floors sit 0.5% and 1% \
+         above the unconstrained corner's minimum accuracy)",
+        &["set", "mem", "floor", "corner EDAP", "vs unconstrained", "front"],
+    );
+    let sram_space = SearchSpace::sram();
+    let legs: [(&str, &SearchSpace, MemoryTech, Aggregation); 2] = [
+        ("rram", &space, MemoryTech::Rram, Aggregation::Max),
+        ("sram", &sram_space, MemoryTech::Sram, Aggregation::Mean),
+    ];
+    for (li, (leg, leg_space, mem, agg)) in legs.iter().enumerate() {
+        let problem = ctx.problem(leg_space, &set, *mem, Objective::new(ObjectiveKind::Edap, *agg));
+        ckpt.warm_problem(&problem);
+        let seed = ctx.seed.wrapping_add(li as u64 * 9973 + 1);
+        let corner_of = |mr: &MooResult, problem: &JointProblem<'_>| {
+            let designs: Vec<Design> = mr.front.iter().map(|(d, _)| d.clone()).collect();
+            let scalars = problem.score_batch(&designs);
+            argmin_scalar(&scalars).map(|i| (designs[i].clone(), scalars[i]))
+        };
+
+        // unconstrained reference front: its corner anchors the floors
+        let base = moo_cell(ckpt, &format!("robustness:floor:{leg}:base"), || {
+            let moo = MooProblem::new(&problem, MooMode::Metric);
+            Nsga2::new(nsga_config(ctx)).run(&moo, &mut Rng::seed_from(seed))
+        })?;
+        let base_corner = corner_of(&base, &problem);
+        let (a0, base_edap) = match &base_corner {
+            Some((d, s)) => {
+                let a = problem
+                    .nominal_accuracies(d)
+                    .iter()
+                    .copied()
+                    .fold(f64::INFINITY, f64::min);
+                (a, *s)
+            }
+            None => (f64::NAN, f64::INFINITY),
+        };
+
+        let mut points = vec![FloorPoint {
+            floor: None,
+            corner_edap: base_edap,
+            front_size: base.front.len(),
+        }];
+        if a0.is_finite() {
+            for (fi, delta) in [0.005, 0.01].into_iter().enumerate() {
+                let floor = (a0 + delta).min(0.9999);
+                let mr = moo_cell(ckpt, &format!("robustness:floor:{leg}:f{fi}"), || {
+                    let moo =
+                        MooProblem::new(&problem, MooMode::Metric).with_acc_floor(Some(floor));
+                    Nsga2::new(nsga_config(ctx)).run(&moo, &mut Rng::seed_from(seed))
+                })?;
+                let edap = corner_of(&mr, &problem).map(|(_, s)| s).unwrap_or(f64::INFINITY);
+                points.push(FloorPoint {
+                    floor: Some(floor),
+                    corner_edap: edap,
+                    front_size: mr.front.len(),
+                });
+            }
+        }
+        ckpt.absorb_problem(&problem)?;
+
+        for p in &points {
+            floor_table.row(vec![
+                "cnn4".into(),
+                mem.name().to_string(),
+                p.floor.map(|f| common::s(f)).unwrap_or_else(|| "none".into()),
+                common::s(p.corner_edap),
+                common::s(p.corner_edap / base_edap),
+                p.front_size.to_string(),
+            ]);
+        }
+        let cell = Json::obj(vec![
+            ("experiment", Json::Str("robustness".into())),
+            ("kind", Json::Str("floor_curve".into())),
+            ("set", Json::Str("cnn4".into())),
+            ("mem", Json::Str(mem.name().into())),
+            ("seed", Json::Num(ctx.seed as f64)),
+            ("baseline_min_accuracy", Json::f64(a0)),
+            (
+                "points",
+                Json::Arr(
+                    points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                (
+                                    "floor",
+                                    match p.floor {
+                                        Some(f) => Json::f64(f),
+                                        None => Json::Null,
+                                    },
+                                ),
+                                ("corner_edap", Json::f64(p.corner_edap)),
+                                ("cost_vs_base", Json::f64(p.corner_edap / base_edap)),
+                                ("front_size", Json::Num(p.front_size as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let path = cells_dir.join(format!("floor-{leg}.json"));
+        crate::util::write_atomic(&path, &(cell.to_string() + "\n"))
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    report.table(floor_table);
+
+    report.note(format!(
+        "robust regret {} = the nominal design's robust (ensemble-aggregate) \
+         score over the robust design's; nominal cost {} = the robust design's \
+         nominal score over the nominal design's. Floors constrain the minimum \
+         *nominal* accuracy across the cnn4 workloads via constraint-domination \
+         (pareto::VectorObjective); on SRAM the accuracy model is \
+         design-invariant, so any floor above the fixed baseline reports inf — \
+         the accuracy floor is an RRAM design lever, not an SRAM one.",
+        common::s(regret),
+        common::s(nominal_cost),
+    ));
+    report.emit(&ctx.out_dir)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn quick_run_emits_gap_and_floor_cells() {
+        let mut ctx = ExpContext::quick(83);
+        ctx.out_dir = std::env::temp_dir().join("imcopt-robustness-test");
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+        let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
+        assert_eq!(r.tables.len(), 2);
+        assert_eq!(r.tables[0].rows.len(), 2, "nominal + robust rows");
+        assert_eq!(r.tables[1].rows.len(), 6, "2 legs x 3 floor points");
+
+        let gap = json::parse(
+            &std::fs::read_to_string(ctx.out_dir.join("robustness_cells/gap.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(gap.get("kind").and_then(|k| k.as_str()), Some("gap"));
+        assert_eq!(
+            gap.get("robust").and_then(|x| x.as_str()),
+            Some(format!("worst@ens-s{}-k2", ctx.seed).as_str()),
+            "quick mode draws 2 per corner"
+        );
+        for key in ["nominal", "robust_design"] {
+            let s = gap.get(key).unwrap();
+            let nom = s.get("nominal_score").and_then(|x| x.as_f64_lenient()).unwrap();
+            let rob = s.get("robust_score").and_then(|x| x.as_f64_lenient()).unwrap();
+            // a feasible design's robust worst case is never better than
+            // its nominal score (perturbations only add noise)
+            if nom.is_finite() && rob.is_finite() {
+                assert!(rob >= nom * (1.0 - 1e-12), "{key}: {rob} < {nom}");
+            }
+        }
+
+        let rram = json::parse(
+            &std::fs::read_to_string(ctx.out_dir.join("robustness_cells/floor-rram.json"))
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(rram.get("kind").and_then(|k| k.as_str()), Some("floor_curve"));
+        let points = rram.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(points.len(), 3, "base + two floors");
+        assert_eq!(points[0].get("floor"), Some(&json::Json::Null));
+        let a0 = rram
+            .get("baseline_min_accuracy")
+            .and_then(|x| x.as_f64_lenient())
+            .unwrap();
+        assert!(a0.is_finite() && a0 > 0.0 && a0 < 1.0, "{a0}");
+
+        // SRAM: design-invariant accuracy, so every floor above the fixed
+        // baseline is infeasible by construction
+        let sram = json::parse(
+            &std::fs::read_to_string(ctx.out_dir.join("robustness_cells/floor-sram.json"))
+                .unwrap(),
+        )
+        .unwrap();
+        let spoints = sram.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(spoints.len(), 3);
+        for p in &spoints[1..] {
+            let edap = p.get("corner_edap").and_then(|x| x.as_f64_lenient()).unwrap();
+            assert!(edap.is_infinite(), "SRAM floored corner must be infeasible: {edap}");
+        }
+    }
+
+    #[test]
+    fn study_config_honors_the_flag_and_defaults_to_worst() {
+        let mut ctx = ExpContext::quick(5);
+        let rc = study_robust_config(&ctx).unwrap();
+        assert_eq!(rc.descriptor(), "worst@ens-s5-k2");
+        ctx.robust = Some("cvar0.5".into());
+        let rc = study_robust_config(&ctx).unwrap();
+        assert_eq!(rc.descriptor(), "cvar0.5@ens-s5-k2");
+        ctx.robust = Some("nope".into());
+        assert!(study_robust_config(&ctx).is_err());
+    }
+}

@@ -49,14 +49,22 @@ impl super::Experiment for Transfer {
     }
 }
 
-/// The scenario and its transfer portfolios: the paper's all9 set by
-/// default, or a user-defined `--spec` family split at the half
+/// The scenario legs and their transfer portfolios: by default the
+/// paper's all9 SRAM set plus the weight-stationary companion row
+/// (`all9-rram`, whose GPT-2 Medium deployments are infeasible by
+/// construction and surface as an infeasibility rate); under a
+/// user-defined `--spec` a single leg split at the half
 /// (`scenarios::split_transfer_portfolios` — train on the first ⌈n/2⌉
 /// workloads, deploy on the extras / the full set / the all-joint
 /// reference).
-fn spec_and_portfolios(ctx: &ExpContext) -> Result<(scenarios::ScenarioSpec, Vec<Portfolio>)> {
+fn spec_and_portfolios(
+    ctx: &ExpContext,
+) -> Result<Vec<(scenarios::ScenarioSpec, Vec<Portfolio>)>> {
     match &ctx.spec {
-        None => Ok((scenarios::ScenarioSpec::all9(), scenarios::transfer_portfolios())),
+        None => Ok(vec![
+            (scenarios::ScenarioSpec::all9(), scenarios::transfer_portfolios()),
+            (scenarios::ScenarioSpec::all9_rram(), scenarios::rram_transfer_portfolios()),
+        ]),
         Some(s) => {
             let spec = scenarios::ScenarioSpec::parse(s)
                 .with_context(|| format!("parsing --spec '{s}'"))?;
@@ -66,38 +74,46 @@ fn spec_and_portfolios(ctx: &ExpContext) -> Result<(scenarios::ScenarioSpec, Vec
                 "transfer needs at least 2 workloads in the set (got {n}); widen --spec"
             );
             let ports = scenarios::split_transfer_portfolios(n, n.div_ceil(2).min(n - 1));
-            Ok((spec, ports))
+            Ok(vec![(spec, ports)])
         }
     }
 }
 
-/// Resolve `--portfolio` against the scenario's transfer portfolios
-/// (unknown ids fail fast with the available list).
-fn selected_portfolios(ctx: &ExpContext, all: &[Portfolio]) -> Result<Vec<Portfolio>> {
-    let all = all.to_vec();
+/// Resolve `--portfolio` against every leg's transfer portfolios
+/// (unknown ids fail fast with the union of available ids). Returns the
+/// selected portfolios per leg, parallel to `legs`.
+fn selected_portfolios(
+    ctx: &ExpContext,
+    legs: &[(scenarios::ScenarioSpec, Vec<Portfolio>)],
+) -> Result<Vec<Vec<Portfolio>>> {
     let Some(csv) = &ctx.portfolio else {
-        return Ok(all);
+        return Ok(legs.iter().map(|(_, ports)| ports.clone()).collect());
     };
-    let mut out = Vec::new();
+    let mut picked: Vec<Vec<Portfolio>> = vec![Vec::new(); legs.len()];
     for id in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-        match all.iter().find(|p| p.id == id) {
-            Some(p) => out.push(p.clone()),
+        let hit = legs.iter().enumerate().find_map(|(li, (_, ports))| {
+            ports.iter().find(|p| p.id == id).map(|p| (li, p.clone()))
+        });
+        match hit {
+            Some((li, p)) => picked[li].push(p),
             None => {
-                let ids: Vec<&str> = all.iter().map(|p| p.id.as_str()).collect();
+                let ids: Vec<&str> = legs
+                    .iter()
+                    .flat_map(|(_, ports)| ports.iter().map(|p| p.id.as_str()))
+                    .collect();
                 bail!("unknown portfolio '{id}' (available: {ids:?})");
             }
         }
     }
-    if out.is_empty() {
+    if picked.iter().all(|ps| ps.is_empty()) {
         bail!("--portfolio selected nothing (empty list)");
     }
-    Ok(out)
+    Ok(picked)
 }
 
 pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
-    let (spec, all_ports) = spec_and_portfolios(ctx)?;
-    let names = spec.set.names();
-    let ports = selected_portfolios(ctx, &all_ports)?;
+    let legs = spec_and_portfolios(ctx)?;
+    let per_leg = selected_portfolios(ctx, &legs)?;
     let mut report = Report::new(
         "transfer",
         "Cross-set transfer: train/deploy portfolios vs per-workload bounds",
@@ -107,54 +123,64 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         .with_context(|| format!("creating {}", cells_dir.display()))?;
 
     let mut summary = Table::new(
-        &format!(
-            "transfer portfolios on {} ({} workloads) — deploy-side EDAP gap vs \
-             specialist bound",
-            spec.mem.name(),
-            spec.set.len()
-        ),
-        &["portfolio", "train", "deploy", "mean gap", "geo-mean gap", "worst gap", "worst workload"],
+        "transfer portfolios — deploy-side EDAP gap vs specialist bound",
+        &[
+            "portfolio",
+            "mem",
+            "train",
+            "deploy",
+            "mean gap",
+            "geo-mean gap",
+            "worst gap",
+            "infeasible rate",
+            "worst workload",
+        ],
     );
     let mut detail = Table::new(
         "per-workload deploy gaps (trained? = workload was in the train set)",
         &["portfolio", "workload", "trained?", "EDAP joint", "EDAP bound", "gap x"],
     );
-    for p in &ports {
-        // no joint sharing: transfer's kill/resume contract requires its
-        // cells to recompute independently after a journal wipe
-        let out = common::portfolio_cell(ckpt, "transfer", ctx, &spec, p, false)?;
-        let worst_label = out
-            .summary
-            .worst_at
-            .map(|i| names[out.deploy[i].workload].to_string())
-            .unwrap_or_else(|| "-".into());
-        summary.row(vec![
-            p.id.clone(),
-            p.train.len().to_string(),
-            p.deploy.len().to_string(),
-            common::s(out.summary.mean),
-            common::s(out.summary.geo_mean),
-            common::s(out.summary.worst),
-            worst_label,
-        ]);
-        for d in &out.deploy {
-            detail.row(vec![
+    for ((spec, _), ports) in legs.iter().zip(&per_leg) {
+        let names = spec.set.names();
+        for p in ports {
+            // no joint sharing: transfer's kill/resume contract requires
+            // its cells to recompute independently after a journal wipe
+            let out = common::portfolio_cell(ckpt, "transfer", ctx, spec, p, false)?;
+            let worst_label = out
+                .summary
+                .worst_at
+                .map(|i| names[out.deploy[i].workload].to_string())
+                .unwrap_or_else(|| "-".into());
+            summary.row(vec![
                 p.id.clone(),
-                names[d.workload].to_string(),
-                String::from(if p.train.contains(&d.workload) { "yes" } else { "no" }),
-                common::s(d.joint_edap),
-                common::s(d.bound_edap),
-                common::s(d.gap),
+                spec.mem.name().to_string(),
+                p.train.len().to_string(),
+                p.deploy.len().to_string(),
+                common::s(out.summary.mean),
+                common::s(out.summary.geo_mean),
+                common::s(out.summary.worst),
+                common::s(common::infeasible_rate(&out)),
+                worst_label,
             ]);
+            for d in &out.deploy {
+                detail.row(vec![
+                    p.id.clone(),
+                    names[d.workload].to_string(),
+                    String::from(if p.train.contains(&d.workload) { "yes" } else { "no" }),
+                    common::s(d.joint_edap),
+                    common::s(d.bound_edap),
+                    common::s(d.gap),
+                ]);
+            }
+            common::write_portfolio_cell(
+                &cells_dir.join(format!("{}.json", p.id)),
+                "transfer",
+                spec,
+                p,
+                ctx.seed,
+                &out,
+            )?;
         }
-        common::write_portfolio_cell(
-            &cells_dir.join(format!("{}.json", p.id)),
-            "transfer",
-            &spec,
-            p,
-            ctx.seed,
-            &out,
-        )?;
     }
     report.table(summary);
     report.table(detail);
@@ -162,7 +188,10 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         "gap = joint design's EDAP on a deployed workload / that workload's \
          separate-search bound (1.0 = transfers as well as a specialist). \
          cnn4-to-extras is the paper's headline generalization claim posed as \
-         pure transfer: nothing deployed was seen during the search."
+         pure transfer: nothing deployed was seen during the search. The \
+         cnn4-to-extras-rram row replays it on weight-stationary RRAM, where \
+         GPT-2 Medium cannot fit on-chip: such capacity failures stay in the \
+         table as a deploy-side infeasible rate instead of dropping the row."
             .to_string(),
     );
     report.emit(&ctx.out_dir)?;
@@ -181,18 +210,46 @@ mod tests {
         let _ = std::fs::remove_dir_all(&ctx.out_dir);
         let r = run(&ctx, &mut Checkpoint::disabled()).unwrap();
         assert_eq!(r.tables.len(), 2);
-        assert_eq!(r.tables[0].rows.len(), 3, "three portfolios");
-        // detail rows: 5 extras + 9 + 9
-        assert_eq!(r.tables[1].rows.len(), 23);
-        for p in scenarios::transfer_portfolios() {
+        assert_eq!(r.tables[0].rows.len(), 4, "three SRAM portfolios + the RRAM row");
+        // detail rows: (5 extras + 9 + 9) on SRAM + 5 extras on RRAM
+        assert_eq!(r.tables[1].rows.len(), 28);
+        let mut cells: Vec<(scenarios::Portfolio, &str)> = scenarios::transfer_portfolios()
+            .into_iter()
+            .map(|p| (p, "SRAM"))
+            .collect();
+        cells.extend(scenarios::rram_transfer_portfolios().into_iter().map(|p| (p, "RRAM")));
+        for (p, mem) in cells {
             let path = ctx.out_dir.join("transfer_cells").join(format!("{}.json", p.id));
             let text = std::fs::read_to_string(&path)
                 .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
             let v = json::parse(&text).unwrap();
             assert_eq!(v.get("experiment").and_then(|e| e.as_str()), Some("transfer"));
+            assert_eq!(
+                v.get("portfolio").and_then(|q| q.get("mem")).and_then(|m| m.as_str()),
+                Some(mem)
+            );
             let gaps = v.get("deploy_gaps").and_then(|g| g.as_arr()).unwrap();
             assert_eq!(gaps.len(), p.deploy.len());
+            let rate = v
+                .get("summary")
+                .and_then(|s| s.get("infeasible_rate"))
+                .and_then(|x| x.as_f64())
+                .unwrap();
+            assert!((0.0..=1.0).contains(&rate), "{rate}");
         }
+        // the RRAM companion row keeps its capacity failures in-table:
+        // GPT-2 Medium cannot fit a weight-stationary chip
+        let text = std::fs::read_to_string(
+            ctx.out_dir.join("transfer_cells/cnn4-to-extras-rram.json"),
+        )
+        .unwrap();
+        let v = json::parse(&text).unwrap();
+        let rate = v
+            .get("summary")
+            .and_then(|s| s.get("infeasible_rate"))
+            .and_then(|x| x.as_f64())
+            .unwrap();
+        assert!(rate > 0.0, "expected gpt2-medium to be infeasible on RRAM, rate={rate}");
         // the pure-transfer portfolio never deploys on a trained workload
         let text = std::fs::read_to_string(
             ctx.out_dir.join("transfer_cells/cnn4-to-extras.json"),
@@ -206,31 +263,43 @@ mod tests {
 
     #[test]
     fn portfolio_filter_selects_and_rejects() {
-        let all = scenarios::transfer_portfolios();
         let mut ctx = ExpContext::quick(61);
+        let legs = spec_and_portfolios(&ctx).unwrap();
+        let count = |picked: Vec<Vec<scenarios::Portfolio>>| -> usize {
+            picked.iter().map(|ps| ps.len()).sum()
+        };
         ctx.portfolio = Some("cnn4-to-extras".into());
-        assert_eq!(selected_portfolios(&ctx, &all).unwrap().len(), 1);
+        assert_eq!(count(selected_portfolios(&ctx, &legs).unwrap()), 1);
         ctx.portfolio = Some("cnn4-to-extras, all9-joint".into());
-        assert_eq!(selected_portfolios(&ctx, &all).unwrap().len(), 2);
+        assert_eq!(count(selected_portfolios(&ctx, &legs).unwrap()), 2);
+        // the RRAM companion row resolves onto its own leg
+        ctx.portfolio = Some("cnn4-to-extras-rram".into());
+        let picked = selected_portfolios(&ctx, &legs).unwrap();
+        assert!(picked[0].is_empty() && picked[1].len() == 1);
         ctx.portfolio = Some("nope".into());
-        let err = selected_portfolios(&ctx, &all).unwrap_err();
+        let err = selected_portfolios(&ctx, &legs).unwrap_err();
         assert!(format!("{err}").contains("unknown portfolio"), "{err}");
         ctx.portfolio = Some(" , ".into());
-        assert!(selected_portfolios(&ctx, &all).is_err());
+        assert!(selected_portfolios(&ctx, &legs).is_err());
         ctx.portfolio = None;
-        assert_eq!(selected_portfolios(&ctx, &all).unwrap().len(), 3);
+        assert_eq!(count(selected_portfolios(&ctx, &legs).unwrap()), 4);
     }
 
     #[test]
     fn spec_swaps_the_scenario_and_splits_at_the_half() {
         let mut ctx = ExpContext::quick(63);
-        // default: the paper's all9 family under its canonical ids
-        let (spec, ports) = spec_and_portfolios(&ctx).unwrap();
-        assert_eq!(spec.name, "all9");
-        assert_eq!(ports[0].id, "cnn4-to-extras");
-        // custom family: generic head-split ids over the custom set
+        // default: the paper's all9 family plus the RRAM companion leg
+        let legs = spec_and_portfolios(&ctx).unwrap();
+        assert_eq!(legs.len(), 2);
+        assert_eq!(legs[0].0.name, "all9");
+        assert_eq!(legs[0].1[0].id, "cnn4-to-extras");
+        assert_eq!(legs[1].0.name, "all9-rram");
+        assert_eq!(legs[1].1[0].id, "cnn4-to-extras-rram");
+        // custom family: one leg with generic head-split ids
         ctx.spec = Some("resnet18+vgg16+alexnet:rram".into());
-        let (spec, ports) = spec_and_portfolios(&ctx).unwrap();
+        let legs = spec_and_portfolios(&ctx).unwrap();
+        assert_eq!(legs.len(), 1);
+        let (spec, ports) = &legs[0];
         assert_eq!(spec.name, "custom");
         assert_eq!(spec.set.len(), 3);
         assert_eq!(ports.len(), 3);

@@ -26,6 +26,12 @@
 //!   the `pareto` registry experiment (see `docs/pareto.md`).
 //! * [`accuracy`] — RRAM non-ideality model (conductance noise, IR-drop,
 //!   quantization) for the accuracy-aware objective of Fig. 8.
+//! * [`robustness`] — deterministic device-variation injection:
+//!   σ(g)/IR-drop corners, retention drift and stuck-at cells as
+//!   [`robustness::Perturbation`]s over the accuracy noise model, seeded
+//!   [`robustness::PerturbationEnsemble`]s, and the robust objective
+//!   modes behind `--robust worst|cvar<q>|mean` (see
+//!   `docs/robustness.md`).
 //! * [`runtime`] — PJRT engine that loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`) and executes batched fitness evaluation on the
 //!   hot path; Python never runs at search time.
@@ -79,6 +85,7 @@ pub mod objective;
 pub mod orchestrator;
 pub mod pareto;
 pub mod report;
+pub mod robustness;
 pub mod runtime;
 pub mod scenarios;
 pub mod search;
@@ -94,6 +101,9 @@ pub mod prelude {
     pub use crate::pareto::{
         MooMode, MooProblem, MooResult, MultiObjective, MultiObjectiveOptimizer, Nsga2,
         Nsga2Config, ParetoArchive, VectorObjective,
+    };
+    pub use crate::robustness::{
+        Corner, Perturbation, PerturbationEnsemble, RobustConfig, RobustMode,
     };
     pub use crate::scenarios::{Portfolio, ScenarioSpec};
     pub use crate::search::{

@@ -94,6 +94,13 @@ fn print_help() {
          \x20 --pareto-cap N pareto front-archive capacity (default 128)\n\
          \x20 --spec S       user scenario family w1+w2+...:rram|sram[:agg] for\n\
          \x20                genmatrix_k / transfer / pareto (default: paper sets)\n\
+         \x20 --robust M     robust accuracy-aware objectives: aggregate each\n\
+         \x20                design's score over a seeded device-variation\n\
+         \x20                ensemble (worst|cvar<q>|mean, e.g. cvar0.25; off by\n\
+         \x20                default — see docs/robustness.md)\n\
+         \x20 --acc-floor A  minimum nominal accuracy (0,1) a design must reach\n\
+         \x20                on every workload to enter a Pareto front\n\
+         \x20                (constraint domination; pareto/robustness runs)\n\
          \x20 --screen-frac F surrogate pre-screening: fraction of each GA/NSGA-II\n\
          \x20                generation's offspring pool that reaches the exact\n\
          \x20                evaluator (clamped to [0.05, 1.0]; default 1.0 = exact\n\
@@ -137,6 +144,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     // an explicitly requested backend that cannot load is a CLI error,
     // not a mid-sweep panic
     ctx.require_backend()?;
+    // likewise a malformed --robust mode (worst|cvar<q>|mean)
+    ctx.robust_config()?;
     let positional_all =
         args.positionals.is_empty() || args.positionals.iter().any(|s| s == "all");
     let ids: Vec<&str> = if args.flag("all") || positional_all {
@@ -337,6 +346,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         let mut present = 0usize;
         let mut genmatrix_present = false;
         let mut pareto_present = false;
+        let mut robustness_present = false;
         let mut cell_dirs: Vec<(&str, &str)> = Vec::new();
         for exp in experiments::REGISTRY {
             let path = dir.join(format!("{}.json", exp.id()));
@@ -367,6 +377,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
                 "genmatrix_k" => cell_dirs.push(("genmatrix_k", "genmatrix_k_cells")),
                 "transfer" => cell_dirs.push(("transfer", "transfer_cells")),
                 "pareto" => pareto_present = true,
+                "robustness" => robustness_present = true,
                 _ => {}
             }
             t.row(vec![
@@ -481,6 +492,50 @@ fn cmd_validate(args: &Args) -> Result<()> {
                 "pareto fronts".into(),
                 fronts_dir.display().to_string(),
                 format!("ok ({fronts} fronts)"),
+            ]);
+        }
+        // a robustness run emits a nominal-vs-robust gap cell plus one
+        // floor-cost curve per memory technology
+        if robustness_present {
+            let cell_schema_path = Path::new(args.opt_str(
+                "robustness-schema",
+                "schemas/robustness_cell.schema.json",
+            ));
+            let cells_dir = dir.join("robustness_cells");
+            let entries = std::fs::read_dir(&cells_dir)
+                .with_context(|| format!("missing cell dir {}", cells_dir.display()))?;
+            let mut paths: Vec<_> = entries
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().is_some_and(|x| x == "json"))
+                .collect();
+            paths.sort();
+            let mut cells = 0usize;
+            let mut kinds: Vec<String> = Vec::new();
+            for path in paths {
+                let doc = validate_file(&path, cell_schema_path)?;
+                anyhow::ensure!(
+                    doc.get("experiment").and_then(|v| v.as_str()) == Some("robustness"),
+                    "{}: experiment mismatch",
+                    path.display()
+                );
+                if let Some(k) = doc.get("kind").and_then(|v| v.as_str()) {
+                    kinds.push(k.to_string());
+                }
+                cells += 1;
+            }
+            anyhow::ensure!(
+                cells > 0,
+                "no robustness cells under {}",
+                cells_dir.display()
+            );
+            anyhow::ensure!(
+                kinds.iter().any(|k| k == "gap") && kinds.iter().any(|k| k == "floor_curve"),
+                "robustness cells must include a 'gap' and a 'floor_curve' kind, got {kinds:?}"
+            );
+            t.row(vec![
+                "robustness cells".into(),
+                cells_dir.display().to_string(),
+                format!("ok ({cells} cells)"),
             ]);
         }
         print!("{}", t.to_text());

@@ -33,6 +33,19 @@ pub use compiled::CompiledWorkload;
 use crate::space::idx;
 use crate::workloads::Workload;
 use consts::*;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of evaluations that fell back to the naive layer
+/// walk because the crossbar geometry was off the compiled grid (the
+/// workload still matched its compiled tables). Monotone; experiments
+/// snapshot it around a session and surface any delta as a report notice
+/// so silent fallbacks become visible without perturbing results.
+static OFFGRID_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Current value of the off-grid fallback counter.
+pub fn offgrid_fallbacks() -> u64 {
+    OFFGRID_FALLBACKS.load(Ordering::Relaxed)
+}
 
 /// Memory technology of the IMC macro (paper §III-B).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -199,6 +212,8 @@ impl NativeEvaluator {
             if let Some(m) = cw.metrics(self.mem, &d, area) {
                 return m;
             }
+            // geometry off the precomputed grid: correct but slow path
+            OFFGRID_FALLBACKS.fetch_add(1, Ordering::Relaxed);
         }
         self.naive_with_view(&d, area, w)
     }

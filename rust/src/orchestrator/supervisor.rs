@@ -54,11 +54,18 @@ fn worker_args(ids: &[&str], ctx: &ExpContext, threads: usize) -> Vec<String> {
         ("--portfolio", &ctx.portfolio),
         ("--moo-mode", &ctx.moo_mode),
         ("--spec", &ctx.spec),
+        // fingerprinted like --screen-frac: a worker defaulting to
+        // nominal scoring under a robust supervisor would be rejected
+        ("--robust", &ctx.robust),
     ] {
         if let Some(v) = value {
             args.push(flag.into());
             args.push(v.clone());
         }
+    }
+    if let Some(f) = ctx.acc_floor {
+        args.push("--acc-floor".into());
+        args.push(f.to_string());
     }
     if ctx.quick {
         args.push("--quick".into());
@@ -350,11 +357,15 @@ mod tests {
         ctx.out_dir = "/tmp/sweep".into();
         ctx.portfolio = Some("cnn4-to-extras".into());
         ctx.screen_frac = 0.25;
+        ctx.robust = Some("cvar0.25".into());
+        ctx.acc_floor = Some(0.92);
         let args = worker_args(&["fig3", "table3"], &ctx, 2);
         let joined = args.join(" ");
         assert!(joined.starts_with("run fig3 table3 "));
         assert!(joined.contains("--seed 7"));
         assert!(joined.contains("--screen-frac 0.25"));
+        assert!(joined.contains("--robust cvar0.25"));
+        assert!(joined.contains("--acc-floor 0.92"));
         assert!(joined.contains("--out-dir /tmp/sweep"));
         assert!(joined.contains("--threads 2"));
         assert!(joined.contains("--portfolio cnn4-to-extras"));
@@ -373,5 +384,7 @@ mod tests {
         assert!(!joined.contains("--portfolio"));
         assert!(!joined.contains("--moo-mode"));
         assert!(!joined.contains("--spec"));
+        assert!(!joined.contains("--robust"));
+        assert!(!joined.contains("--acc-floor"));
     }
 }

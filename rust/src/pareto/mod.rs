@@ -92,6 +92,14 @@ pub struct VectorObjective {
     pub agg: Aggregation,
     /// Area constraint (mm²), as in the scalar objective.
     pub area_constraint: f64,
+    /// Minimum nominal accuracy a design must reach on every active
+    /// workload to be front-eligible (`--acc-floor`). Enforced by
+    /// [`MooProblem`] through constraint-domination: below-floor designs
+    /// get an all-`+∞` vector plus a graded violation term, exactly like
+    /// capacity/area infeasibility. Requires every active workload to
+    /// carry a Fig. 8 accuracy baseline; `None` (the default) changes
+    /// nothing.
+    pub acc_floor: Option<f64>,
 }
 
 impl VectorObjective {
@@ -100,7 +108,14 @@ impl VectorObjective {
             mode,
             agg,
             area_constraint: crate::model::consts::AREA_CONSTR_MM2,
+            acc_floor: None,
         }
+    }
+
+    /// Set the accuracy floor (builder-style).
+    pub fn with_acc_floor(mut self, floor: Option<f64>) -> VectorObjective {
+        self.acc_floor = floor;
+        self
     }
 
     /// Vector length for a problem with `active_workloads` active
@@ -187,12 +202,29 @@ impl<'p, 'w> MooProblem<'p, 'w> {
         }
     }
 
+    /// Set the accuracy floor (builder-style; see
+    /// [`VectorObjective::acc_floor`]).
+    pub fn with_acc_floor(mut self, floor: Option<f64>) -> Self {
+        self.vector_objective = self.vector_objective.with_acc_floor(floor);
+        self
+    }
+
     /// Active workload indices (the train set of a restricted problem).
     pub fn active_indices(&self) -> Vec<usize> {
         self.inner
             .subset
             .clone()
             .unwrap_or_else(|| (0..self.inner.workloads.len()).collect())
+    }
+
+    /// Smallest nominal accuracy across the active workloads (memoized
+    /// per design geometry through the joint problem's accuracy cache).
+    fn min_nominal_accuracy(&self, d: &Design) -> f64 {
+        self.inner
+            .nominal_accuracies(d)
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
     }
 }
 
@@ -207,7 +239,14 @@ impl Problem for MooProblem<'_, '_> {
         self.inner.random_candidate(rng)
     }
     fn violation(&self, design: &Design) -> f64 {
-        self.inner.violation(design)
+        let mut v = self.inner.violation(design);
+        // graded accuracy-floor shortfall: below-floor designs compare
+        // by how far below they are (constraint-domination), like the
+        // capacity and area terms of the inner violation
+        if let Some(floor) = self.vector_objective.acc_floor {
+            v += (floor - self.min_nominal_accuracy(design)).max(0.0) / floor;
+        }
+        v
     }
     fn evals(&self) -> usize {
         self.inner.evals()
@@ -226,8 +265,20 @@ impl MultiObjective for MooProblem<'_, '_> {
         designs
             .iter()
             .map(|d| {
-                self.vector_objective
-                    .vector(&self.inner.evaluate_design(d).metrics)
+                let v = self
+                    .vector_objective
+                    .vector(&self.inner.evaluate_design(d).metrics);
+                // accuracy floor: an otherwise-feasible design below the
+                // floor becomes infeasible (all-+∞) and competes through
+                // the graded violation instead of the Pareto ranking
+                if let Some(floor) = self.vector_objective.acc_floor {
+                    if v.iter().all(|x| x.is_finite())
+                        && self.min_nominal_accuracy(d) < floor
+                    {
+                        return vec![f64::INFINITY; v.len()];
+                    }
+                }
+                v
             })
             .collect()
     }
@@ -353,6 +404,44 @@ mod tests {
         assert_eq!(wmoo.active_indices(), vec![0, 2, 3]);
         let wv = wmoo.objective_batch(&designs[..1]);
         assert_eq!(wv[0].len(), 3);
+    }
+
+    #[test]
+    fn acc_floor_gates_front_membership() {
+        let space = SearchSpace::rram();
+        let set = WorkloadSet::cnn4();
+        let inner = JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        );
+        let mut rng = Rng::seed_from(14);
+        let plain = MooProblem::new(&inner, MooMode::Metric);
+        let designs: Vec<Design> =
+            (0..8).map(|_| plain.random_candidate(&mut rng)).collect();
+        let base = plain.objective_batch(&designs);
+        // a vacuous floor changes nothing, bit for bit
+        let loose = MooProblem::new(&inner, MooMode::Metric).with_acc_floor(Some(1e-6));
+        for (a, b) in base.iter().zip(&loose.objective_batch(&designs)) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // an unreachable floor (above every 8-bit baseline) kills every
+        // design and grades the violation by the shortfall
+        let strict =
+            MooProblem::new(&inner, MooMode::Metric).with_acc_floor(Some(0.999));
+        for v in strict.objective_batch(&designs) {
+            assert!(v.iter().all(|x| x.is_infinite()));
+        }
+        let d = &designs[0];
+        assert!(strict.violation(d) > plain.violation(d));
+        assert!(loose.violation(d).to_bits() == plain.violation(d).to_bits());
+        // a tighter floor violates harder (constraint-domination ordering)
+        let tighter =
+            MooProblem::new(&inner, MooMode::Metric).with_acc_floor(Some(0.9999));
+        assert!(tighter.violation(d) > strict.violation(d));
     }
 
     #[test]

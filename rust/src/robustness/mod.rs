@@ -1,0 +1,466 @@
+//! Device-variation robustness: deterministic non-ideality injection.
+//!
+//! The paper's §IV-H accuracy model evaluates RRAM non-idealities at a
+//! single nominal operating point. Real deployments see device-level
+//! spread around that point: σ(g)-corner scaling across wafers,
+//! conductance drift over retention time, stuck-at-G_min/G_max cells,
+//! and IR-drop corners from wire-resistance variation. This module makes
+//! that spread a first-class, *deterministic* model — mirroring how
+//! `util::fault` made process-level faults deterministic and testable,
+//! but at the device level:
+//!
+//! * [`Perturbation`] — one operating point, expressed as a transform on
+//!   a design's [`accuracy::NoiseSpec`]. Stuck-at and drift errors fold
+//!   into the conductance-noise term in quadrature (they are independent
+//!   error sources on the same weights), so every knob is monotone: more
+//!   drift, more stuck cells, a higher σ corner or a worse IR corner can
+//!   only increase the per-layer error ε. SRAM designs (digital, no
+//!   programming noise, no IR-drop) are invariants of every perturbation.
+//! * [`Corner`] — the three named operating corners (low/nominal/high).
+//! * [`PerturbationEnsemble`] — corners × K Monte-Carlo draws, generated
+//!   from the seed alone (no per-thread or per-worker state), so ensemble
+//!   members are bit-identical across `--threads`, `--workers`, and
+//!   kill/`--resume` by construction.
+//! * [`RobustMode`] — how a robust objective aggregates per-member
+//!   scores: worst-case, CVaR(q) (mean of the worst q-tail), or mean.
+//!
+//! The coordinator wires ensembles into [`crate::coordinator::JointProblem`]
+//! via perturbation-id-extended accuracy-memo keys (id 0 is the unperturbed
+//! nominal path, ids 1..=N index ensemble members); see `docs/robustness.md`.
+//!
+//! [`accuracy::NoiseSpec`]: crate::accuracy::NoiseSpec
+
+use crate::accuracy::NoiseSpec;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+
+/// Relative error contributed by a fully stuck cell population of
+/// fraction 1 (stuck-at-G_min/G_max is a gross weight error; the
+/// expected contribution of a fraction `f` scales as √f in quadrature).
+pub const STUCK_ERR: f64 = 0.5;
+
+/// Conductance-drift coefficient: relative error per unit of normalized
+/// retention-time drift (drift = 1 ≈ the paper's 1-year retention corner).
+pub const DRIFT_COEFF: f64 = 0.05;
+
+/// One device-variation operating point, as a transform on a design's
+/// noise specification. All knobs are non-negative; the nominal point is
+/// `sigma_scale = ir_scale = 1`, `drift = stuck_frac = 0`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Perturbation {
+    /// Multiplier on the mean conductance-noise std (σ(g) corner).
+    pub sigma_scale: f64,
+    /// Normalized retention-time drift (0 = fresh, 1 = retention corner).
+    pub drift: f64,
+    /// Fraction of cells stuck at G_min/G_max.
+    pub stuck_frac: f64,
+    /// Multiplier on the IR-drop attenuation (wire-resistance corner).
+    pub ir_scale: f64,
+}
+
+impl Perturbation {
+    /// The identity transform (nominal operating point).
+    pub fn nominal() -> Perturbation {
+        Perturbation {
+            sigma_scale: 1.0,
+            drift: 0.0,
+            stuck_frac: 0.0,
+            ir_scale: 1.0,
+        }
+    }
+
+    /// Transform a design's noise spec to this operating point.
+    ///
+    /// Stuck-at and drift errors enter the conductance-noise term in
+    /// quadrature (independent error sources on the same weights), so ε
+    /// is monotone in every knob. `level_factor` is untouched — and
+    /// because `weight_sigma = sigma_mean × level_factor`, SRAM designs
+    /// (`level_factor = 0`, `ir_drop = 0`) see no effect from any
+    /// perturbation: device variation is an analog phenomenon.
+    pub fn apply(&self, spec: &NoiseSpec) -> NoiseSpec {
+        let scaled = spec.sigma_mean * self.sigma_scale.max(0.0);
+        let stuck = STUCK_ERR * self.stuck_frac.max(0.0).sqrt();
+        let drift = DRIFT_COEFF * self.drift.max(0.0);
+        NoiseSpec {
+            sigma_mean: (scaled * scaled + stuck * stuck + drift * drift).sqrt(),
+            level_factor: spec.level_factor,
+            ir_drop: spec.ir_drop * self.ir_scale.max(0.0),
+        }
+    }
+}
+
+/// Named device-variation corners (the endpoints of the measured σ(g)
+/// spread plus the retention/stuck-at worst case).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Corner {
+    /// Best-case wafer: 0.8× σ(g), 0.8× IR-drop, no drift or stuck cells.
+    Low,
+    /// The paper's nominal operating point (identity transform).
+    Nominal,
+    /// Worst-case wafer: 1.25× σ(g), 1.25× IR-drop, half-retention drift
+    /// and 0.2 % stuck cells.
+    High,
+}
+
+impl Corner {
+    pub const ALL: [Corner; 3] = [Corner::Low, Corner::Nominal, Corner::High];
+
+    /// Parse a corner token (as used in `--spec` scenario strings).
+    pub fn parse(s: &str) -> Option<Corner> {
+        match s {
+            "low" => Some(Corner::Low),
+            "nominal" => Some(Corner::Nominal),
+            "high" => Some(Corner::High),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Corner::Low => "low",
+            Corner::Nominal => "nominal",
+            Corner::High => "high",
+        }
+    }
+
+    /// The corner's operating point.
+    pub fn perturbation(&self) -> Perturbation {
+        match self {
+            Corner::Low => Perturbation {
+                sigma_scale: 0.8,
+                drift: 0.0,
+                stuck_frac: 0.0,
+                ir_scale: 0.8,
+            },
+            Corner::Nominal => Perturbation::nominal(),
+            Corner::High => Perturbation {
+                sigma_scale: 1.25,
+                drift: 0.5,
+                stuck_frac: 0.002,
+                ir_scale: 1.25,
+            },
+        }
+    }
+}
+
+/// A deterministic set of perturbations a robust objective scores over.
+///
+/// Construction is a pure function of the flags (seed, draw count or
+/// corner name) — no wall-clock, thread, or worker state enters — so the
+/// member list is bit-identical for any `--threads`/`--workers` count
+/// and across kill/`--resume`. Member *i* of the ensemble is addressed
+/// as perturbation id `i + 1` in the coordinator's accuracy memo (id 0
+/// is reserved for the unperturbed nominal path).
+#[derive(Clone, Debug)]
+pub struct PerturbationEnsemble {
+    pub members: Vec<Perturbation>,
+    descriptor: String,
+}
+
+impl PerturbationEnsemble {
+    /// The three corners plus `draws_per_corner` Monte-Carlo draws
+    /// jittered around each corner. Each draw gets its own RNG seeded
+    /// from `(seed, corner, draw)` alone, so members are independent of
+    /// generation order and of each other.
+    pub fn corners_and_draws(seed: u64, draws_per_corner: usize) -> PerturbationEnsemble {
+        let mut members = Vec::with_capacity(3 * (1 + draws_per_corner));
+        for c in Corner::ALL {
+            members.push(c.perturbation());
+        }
+        for (ci, c) in Corner::ALL.iter().enumerate() {
+            let base = c.perturbation();
+            for di in 0..draws_per_corner {
+                let stream = (ci * draws_per_corner + di + 1) as u64;
+                let mut rng =
+                    Rng::seed_from(seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                members.push(Perturbation {
+                    sigma_scale: (base.sigma_scale * (1.0 + 0.08 * rng.normal())).max(0.25),
+                    drift: (base.drift * (1.0 + 0.20 * rng.normal())).max(0.0),
+                    stuck_frac: (base.stuck_frac * (1.0 + 0.25 * rng.normal())).max(0.0),
+                    ir_scale: (base.ir_scale * (1.0 + 0.05 * rng.normal())).max(0.25),
+                });
+            }
+        }
+        PerturbationEnsemble {
+            members,
+            descriptor: format!("ens-s{seed}-k{draws_per_corner}"),
+        }
+    }
+
+    /// A one-member ensemble pinned to a named corner (the `--spec`
+    /// noise-sweep family: score every design at exactly this corner).
+    pub fn single_corner(c: Corner) -> PerturbationEnsemble {
+        PerturbationEnsemble {
+            members: vec![c.perturbation()],
+            descriptor: format!("corner-{}", c.name()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// A short string identifying the ensemble's construction — joined
+    /// into `JointProblem::config_key`/`acc_scope` and the checkpoint
+    /// config fingerprint so persisted memos never mix across ensembles.
+    pub fn descriptor(&self) -> &str {
+        &self.descriptor
+    }
+}
+
+/// How a robust objective aggregates per-member scores (scores are
+/// costs: lower is better, `+∞` is infeasible).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RobustMode {
+    /// Worst case over the ensemble (max cost).
+    Worst,
+    /// Conditional value-at-risk: mean of the worst `⌈q·N⌉` costs.
+    Cvar(f64),
+    /// Plain ensemble mean.
+    Mean,
+}
+
+impl RobustMode {
+    /// Parse a `--robust` flag value: `worst`, `mean`, or `cvar<q>` with
+    /// `q ∈ (0, 1]` (e.g. `cvar0.25`).
+    pub fn parse(s: &str) -> Result<RobustMode> {
+        match s {
+            "worst" => Ok(RobustMode::Worst),
+            "mean" => Ok(RobustMode::Mean),
+            _ => {
+                if let Some(qs) = s.strip_prefix("cvar") {
+                    let q: f64 = qs
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad cvar quantile '{qs}'"))?;
+                    ensure!(
+                        q > 0.0 && q <= 1.0,
+                        "cvar quantile must be in (0, 1], got {q}"
+                    );
+                    Ok(RobustMode::Cvar(q))
+                } else {
+                    bail!("unknown robust mode '{s}' (expected worst|cvar<q>|mean)")
+                }
+            }
+        }
+    }
+
+    /// Canonical flag spelling (round-trips through [`RobustMode::parse`]).
+    pub fn descriptor(&self) -> String {
+        match self {
+            RobustMode::Worst => "worst".to_string(),
+            RobustMode::Mean => "mean".to_string(),
+            RobustMode::Cvar(q) => format!("cvar{q}"),
+        }
+    }
+
+    /// Aggregate per-member costs. Sorts `scores` in place (CVaR);
+    /// non-finite member costs propagate (an ensemble with any
+    /// infeasible member is worst-case infeasible).
+    pub fn aggregate(&self, scores: &mut [f64]) -> f64 {
+        assert!(!scores.is_empty(), "robust aggregate over empty ensemble");
+        match self {
+            RobustMode::Worst => scores.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            RobustMode::Mean => scores.iter().sum::<f64>() / scores.len() as f64,
+            RobustMode::Cvar(q) => {
+                scores.sort_by(|a, b| {
+                    b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                let n = ((q * scores.len() as f64).ceil() as usize).clamp(1, scores.len());
+                scores[..n].iter().sum::<f64>() / n as f64
+            }
+        }
+    }
+}
+
+/// A fully-resolved robust-objective configuration: the aggregation mode
+/// plus the ensemble it aggregates over.
+#[derive(Clone, Debug)]
+pub struct RobustConfig {
+    pub mode: RobustMode,
+    pub ensemble: PerturbationEnsemble,
+}
+
+impl RobustConfig {
+    /// Build from the `--robust` flag value plus the run seed and draw
+    /// count (the standard corners-and-draws ensemble).
+    pub fn from_flag(mode: &str, seed: u64, draws_per_corner: usize) -> Result<RobustConfig> {
+        Ok(RobustConfig {
+            mode: RobustMode::parse(mode)?,
+            ensemble: PerturbationEnsemble::corners_and_draws(seed, draws_per_corner),
+        })
+    }
+
+    /// One-corner config (used by `--spec … :<corner>` scenario strings);
+    /// the mode is irrelevant for a single member.
+    pub fn at_corner(c: Corner) -> RobustConfig {
+        RobustConfig {
+            mode: RobustMode::Worst,
+            ensemble: PerturbationEnsemble::single_corner(c),
+        }
+    }
+
+    /// Joined into config keys / fingerprints; identifies mode + ensemble.
+    pub fn descriptor(&self) -> String {
+        format!("{}@{}", self.mode.descriptor(), self.ensemble.descriptor())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::{analytical_eps, NoiseSpec};
+    use crate::model::MemoryTech;
+
+    fn rram_spec() -> NoiseSpec {
+        NoiseSpec::from_design(
+            &[256.0, 256.0, 16.0, 8.0, 24.0, 2.0, 0.85, 2.0, 4096.0, 32.0],
+            MemoryTech::Rram,
+        )
+    }
+
+    fn sram_spec() -> NoiseSpec {
+        NoiseSpec::from_design(
+            &[256.0, 256.0, 16.0, 8.0, 24.0, 1.0, 0.85, 2.0, 4096.0, 32.0],
+            MemoryTech::Sram,
+        )
+    }
+
+    #[test]
+    fn nominal_perturbation_is_identity() {
+        let spec = rram_spec();
+        let p = Perturbation::nominal().apply(&spec);
+        assert!((p.sigma_mean - spec.sigma_mean).abs() < 1e-15);
+        assert!((p.ir_drop - spec.ir_drop).abs() < 1e-15);
+        assert_eq!(p.level_factor, spec.level_factor);
+    }
+
+    #[test]
+    fn corners_order_eps() {
+        let spec = rram_spec();
+        let eps = |c: Corner| analytical_eps(&c.perturbation().apply(&spec), 4);
+        assert!(eps(Corner::Low) < eps(Corner::Nominal));
+        assert!(eps(Corner::Nominal) < eps(Corner::High));
+    }
+
+    #[test]
+    fn eps_monotone_in_every_knob() {
+        // property sweep: increasing any single knob never decreases ε
+        let spec = rram_spec();
+        let grid = [0.0, 0.001, 0.01, 0.1, 0.5, 1.0, 2.0];
+        let eps_at = |p: Perturbation| analytical_eps(&p.apply(&spec), 4);
+        for w in grid.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let mut a = Perturbation::nominal();
+            let mut b = Perturbation::nominal();
+            a.stuck_frac = lo;
+            b.stuck_frac = hi;
+            assert!(eps_at(a) <= eps_at(b), "stuck_frac {lo} vs {hi}");
+            let mut a = Perturbation::nominal();
+            let mut b = Perturbation::nominal();
+            a.drift = lo;
+            b.drift = hi;
+            assert!(eps_at(a) <= eps_at(b), "drift {lo} vs {hi}");
+            let mut a = Perturbation::nominal();
+            let mut b = Perturbation::nominal();
+            a.sigma_scale = lo;
+            b.sigma_scale = hi;
+            assert!(eps_at(a) <= eps_at(b), "sigma_scale {lo} vs {hi}");
+            let mut a = Perturbation::nominal();
+            let mut b = Perturbation::nominal();
+            a.ir_scale = lo;
+            b.ir_scale = hi;
+            assert!(eps_at(a) <= eps_at(b), "ir_scale {lo} vs {hi}");
+        }
+    }
+
+    #[test]
+    fn sram_specs_are_perturbation_invariant() {
+        let spec = sram_spec();
+        let worst = Corner::High.perturbation().apply(&spec);
+        // level_factor = 0 nulls the (perturbed) conductance term and
+        // ir_drop = 0 scales to 0: digital designs see no device variation
+        assert_eq!(worst.weight_sigma(), 0.0);
+        assert_eq!(worst.ir_drop, 0.0);
+        assert_eq!(
+            analytical_eps(&worst, 8).to_bits(),
+            analytical_eps(&spec, 8).to_bits()
+        );
+    }
+
+    #[test]
+    fn ensemble_is_deterministic_in_seed() {
+        let a = PerturbationEnsemble::corners_and_draws(42, 4);
+        let b = PerturbationEnsemble::corners_and_draws(42, 4);
+        assert_eq!(a.len(), 3 + 3 * 4);
+        assert_eq!(a.members, b.members);
+        assert_eq!(a.descriptor(), b.descriptor());
+        let c = PerturbationEnsemble::corners_and_draws(43, 4);
+        assert_ne!(a.members, c.members);
+        // first three members are the exact corners, in order
+        assert_eq!(a.members[0], Corner::Low.perturbation());
+        assert_eq!(a.members[1], Corner::Nominal.perturbation());
+        assert_eq!(a.members[2], Corner::High.perturbation());
+    }
+
+    #[test]
+    fn single_corner_ensemble() {
+        let e = PerturbationEnsemble::single_corner(Corner::High);
+        assert_eq!(e.len(), 1);
+        assert_eq!(e.members[0], Corner::High.perturbation());
+        assert_eq!(e.descriptor(), "corner-high");
+    }
+
+    #[test]
+    fn robust_mode_parses_and_round_trips() {
+        assert_eq!(RobustMode::parse("worst").unwrap(), RobustMode::Worst);
+        assert_eq!(RobustMode::parse("mean").unwrap(), RobustMode::Mean);
+        assert_eq!(
+            RobustMode::parse("cvar0.25").unwrap(),
+            RobustMode::Cvar(0.25)
+        );
+        for mode in ["worst", "mean", "cvar0.25"] {
+            let parsed = RobustMode::parse(mode).unwrap();
+            assert_eq!(parsed.descriptor(), mode);
+        }
+        assert!(RobustMode::parse("median").is_err());
+        assert!(RobustMode::parse("cvar0").is_err());
+        assert!(RobustMode::parse("cvar1.5").is_err());
+        assert!(RobustMode::parse("cvarx").is_err());
+    }
+
+    #[test]
+    fn aggregate_semantics() {
+        let mut s = [3.0, 1.0, 4.0, 2.0];
+        assert_eq!(RobustMode::Worst.aggregate(&mut s), 4.0);
+        let mut s = [3.0, 1.0, 4.0, 2.0];
+        assert_eq!(RobustMode::Mean.aggregate(&mut s), 2.5);
+        // cvar0.5 over 4 = mean of the worst 2 = (4 + 3) / 2
+        let mut s = [3.0, 1.0, 4.0, 2.0];
+        assert_eq!(RobustMode::Cvar(0.5).aggregate(&mut s), 3.5);
+        // cvar1.0 == mean; tiny q clamps to the single worst member
+        let mut s = [3.0, 1.0, 4.0, 2.0];
+        assert_eq!(RobustMode::Cvar(1.0).aggregate(&mut s), 2.5);
+        let mut s = [3.0, 1.0, 4.0, 2.0];
+        assert_eq!(RobustMode::Cvar(1e-9).aggregate(&mut s), 4.0);
+        // an infeasible member dominates worst-case and poisons the mean
+        let mut s = [1.0, f64::INFINITY];
+        assert_eq!(RobustMode::Worst.aggregate(&mut s), f64::INFINITY);
+        let mut s = [1.0, f64::INFINITY];
+        assert_eq!(RobustMode::Mean.aggregate(&mut s), f64::INFINITY);
+    }
+
+    #[test]
+    fn config_descriptors() {
+        let rc = RobustConfig::from_flag("cvar0.25", 7, 2).unwrap();
+        assert_eq!(rc.descriptor(), "cvar0.25@ens-s7-k2");
+        assert_eq!(rc.ensemble.len(), 9);
+        assert!(RobustConfig::from_flag("nope", 7, 2).is_err());
+        let one = RobustConfig::at_corner(Corner::Low);
+        assert_eq!(one.descriptor(), "worst@corner-low");
+        assert_eq!(one.ensemble.len(), 1);
+    }
+}

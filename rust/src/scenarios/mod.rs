@@ -33,6 +33,7 @@
 
 use crate::model::MemoryTech;
 use crate::objective::{Aggregation, Objective, ObjectiveKind};
+use crate::robustness::Corner;
 use crate::space::SearchSpace;
 use crate::util::stats;
 use crate::workloads::WorkloadSet;
@@ -65,6 +66,12 @@ pub struct ScenarioSpec {
     pub mem: MemoryTech,
     /// Cross-workload aggregation of the joint objective.
     pub agg: Aggregation,
+    /// Device-variation corner the scenario is evaluated at (the
+    /// noise-sweep family: `--spec …:<low|nominal|high>`). Pinning a
+    /// corner switches the joint objective to accuracy-aware EDAP and
+    /// requires every workload to carry a Fig. 8 accuracy baseline;
+    /// `None` (all built-in specs) reproduces the paper setup exactly.
+    pub corner: Option<Corner>,
 }
 
 impl ScenarioSpec {
@@ -77,6 +84,7 @@ impl ScenarioSpec {
             space: SearchSpace::rram(),
             mem: MemoryTech::Rram,
             agg: Aggregation::Max,
+            corner: None,
         }
     }
 
@@ -90,19 +98,43 @@ impl ScenarioSpec {
             space: SearchSpace::sram(),
             mem: MemoryTech::Sram,
             agg: Aggregation::Mean,
+            corner: None,
+        }
+    }
+
+    /// The 9-workload set on weight-stationary RRAM (Max aggregation, the
+    /// RRAM convention). Not a paper scenario: GPT-2 Medium cannot fit a
+    /// weight-stationary chip, so deployments on it are infeasible by
+    /// construction — the `transfer` experiment uses this family to report
+    /// that capacity failure as an explicit infeasibility rate instead of
+    /// dropping the row.
+    pub fn all9_rram() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "all9-rram".into(),
+            set: WorkloadSet::all9(),
+            space: SearchSpace::rram(),
+            mem: MemoryTech::Rram,
+            agg: Aggregation::Max,
+            corner: None,
         }
     }
 
     /// Parse a user-defined scenario family from a `--spec` string:
-    /// `<w1>+<w2>+...:<mem>[:<agg>]`, e.g.
-    /// `resnet18+vit+gpt2-medium:sram:mean`. Workload names are the
-    /// canonical ones of [`crate::workloads::ALL_NAMES`], `mem` is
-    /// `rram` | `sram` (choosing the matching search space), and the
-    /// optional aggregation (`max` | `all` | `mean`) defaults to the
-    /// paper convention for the technology (RRAM → Max, SRAM → Mean).
-    /// The resulting spec is named `custom`; the checkpoint
-    /// configuration fingerprint pins the full `--spec` string, so
-    /// journals from different custom families never mix.
+    /// `<w1>+<w2>+...:<mem>[:<agg>][:<corner>]`, e.g.
+    /// `resnet18+vit+gpt2-medium:sram:mean` or
+    /// `resnet18+alexnet:rram:high`. Workload names are the canonical
+    /// ones of [`crate::workloads::ALL_NAMES`], `mem` is `rram` | `sram`
+    /// (choosing the matching search space), and the optional
+    /// aggregation (`max` | `all` | `mean`) defaults to the paper
+    /// convention for the technology (RRAM → Max, SRAM → Mean). An
+    /// optional device-variation corner (`low` | `nominal` | `high`, in
+    /// either trailing position) pins the accuracy model to that
+    /// operating point and switches the objective to accuracy-aware
+    /// EDAP — the noise-sweep scenario family; every workload must then
+    /// carry a Fig. 8 accuracy baseline. The resulting spec is named
+    /// `custom`; the checkpoint configuration fingerprint pins the full
+    /// `--spec` string, so journals from different custom families never
+    /// mix.
     ///
     /// ```
     /// use imcopt::scenarios::ScenarioSpec;
@@ -111,12 +143,14 @@ impl ScenarioSpec {
     /// assert_eq!(spec.name, "custom");
     /// assert_eq!(spec.set.len(), 2);
     /// assert!(ScenarioSpec::parse("resnet34:rram").is_err());
+    /// let sweep = ScenarioSpec::parse("resnet18+vgg16:rram:high").unwrap();
+    /// assert!(sweep.corner.is_some());
     /// ```
     pub fn parse(spec: &str) -> anyhow::Result<ScenarioSpec> {
         let parts: Vec<&str> = spec.split(':').collect();
         anyhow::ensure!(
-            parts.len() == 2 || parts.len() == 3,
-            "--spec wants '<w1>+<w2>+...:<mem>[:<agg>]', got '{spec}'"
+            (2..=4).contains(&parts.len()),
+            "--spec wants '<w1>+<w2>+...:<mem>[:<agg>][:<corner>]', got '{spec}'"
         );
         let names: Vec<&str> = parts[0]
             .split('+')
@@ -130,29 +164,64 @@ impl ScenarioSpec {
             "sram" => (MemoryTech::Sram, SearchSpace::sram()),
             other => anyhow::bail!("--spec memory '{other}' is not rram|sram"),
         };
-        let agg = match parts.get(2) {
-            None => match mem {
-                MemoryTech::Rram => Aggregation::Max,
-                MemoryTech::Sram => Aggregation::Mean,
-            },
-            Some(&"max") => Aggregation::Max,
-            Some(&"all") => Aggregation::All,
-            Some(&"mean") => Aggregation::Mean,
-            Some(other) => anyhow::bail!("--spec aggregation '{other}' is not max|all|mean"),
-        };
+        let mut agg: Option<Aggregation> = None;
+        let mut corner: Option<Corner> = None;
+        for token in &parts[2..] {
+            let parsed_agg = match *token {
+                "max" => Some(Aggregation::Max),
+                "all" => Some(Aggregation::All),
+                "mean" => Some(Aggregation::Mean),
+                _ => None,
+            };
+            if let Some(a) = parsed_agg {
+                anyhow::ensure!(
+                    agg.is_none(),
+                    "--spec repeats the aggregation: '{spec}'"
+                );
+                agg = Some(a);
+            } else if let Some(c) = Corner::parse(token) {
+                anyhow::ensure!(corner.is_none(), "--spec repeats the corner: '{spec}'");
+                corner = Some(c);
+            } else {
+                anyhow::bail!(
+                    "--spec token '{token}' is neither an aggregation (max|all|mean) \
+                     nor a corner (low|nominal|high)"
+                );
+            }
+        }
+        if corner.is_some() {
+            for w in &set.workloads {
+                anyhow::ensure!(
+                    crate::accuracy::has_baseline(w.name),
+                    "--spec corner scenarios score accuracy, but workload '{}' has \
+                     no accuracy baseline",
+                    w.name
+                );
+            }
+        }
+        let agg = agg.unwrap_or(match mem {
+            MemoryTech::Rram => Aggregation::Max,
+            MemoryTech::Sram => Aggregation::Mean,
+        });
         Ok(ScenarioSpec {
             name: "custom".into(),
             set,
             space,
             mem,
             agg,
+            corner,
         })
     }
 
-    /// The joint objective this scenario optimizes (EDAP under the
-    /// scenario's aggregation).
+    /// The joint objective this scenario optimizes: EDAP under the
+    /// scenario's aggregation, accuracy-aware when a corner is pinned.
     pub fn objective(&self) -> Objective {
-        Objective::new(ObjectiveKind::Edap, self.agg)
+        let kind = if self.corner.is_some() {
+            ObjectiveKind::EdapAccuracy
+        } else {
+            ObjectiveKind::Edap
+        };
+        Objective::new(kind, self.agg)
     }
 }
 
@@ -323,6 +392,19 @@ pub fn transfer_portfolios() -> Vec<Portfolio> {
         Portfolio::new("cnn4-to-all9", (0..4).collect(), (0..9).collect()),
         Portfolio::new("all9-joint", (0..9).collect(), (0..9).collect()),
     ]
+}
+
+/// The weight-stationary companion row of [`transfer_portfolios`]: the
+/// cnn4-trained design deployed on the all9 extras under
+/// [`ScenarioSpec::all9_rram`]. GPT-2 Medium is infeasible on a
+/// weight-stationary chip, so this row exercises the deploy-side
+/// infeasibility-rate reporting (`common::infeasible_rate`).
+pub fn rram_transfer_portfolios() -> Vec<Portfolio> {
+    vec![Portfolio::new(
+        "cnn4-to-extras-rram",
+        (0..4).collect(),
+        (4..9).collect(),
+    )]
 }
 
 /// The [`transfer_portfolios`] shape over an arbitrary `n`-workload set,
@@ -535,15 +617,42 @@ mod tests {
             "RRAM defaults to Max"
         );
         for bad in [
-            "alexnet",             // no memory tech
-            "alexnet:dram",        // unknown tech
-            "alexnet:rram:median", // unknown aggregation
-            ":rram",               // empty workload list
-            "resnet34:rram",       // unknown workload
-            "a:b:c:d",             // too many parts
+            "alexnet",              // no memory tech
+            "alexnet:dram",         // unknown tech
+            "alexnet:rram:median",  // unknown aggregation/corner
+            ":rram",                // empty workload list
+            "resnet34:rram",        // unknown workload
+            "a:b:c:d",              // unknown workload with full syntax
+            "a:b:c:d:e",            // too many parts
+            "alexnet:rram:max:all", // two aggregations
+            "alexnet:rram:low:high", // two corners
+            "vit:rram:high",        // corner without an accuracy baseline
         ] {
             assert!(ScenarioSpec::parse(bad).is_err(), "'{bad}' must fail");
         }
+    }
+
+    #[test]
+    fn spec_parse_handles_corners() {
+        let s = ScenarioSpec::parse("resnet18+alexnet:rram:high").unwrap();
+        assert_eq!(s.corner, Some(Corner::High));
+        assert_eq!(s.agg, Aggregation::Max, "RRAM default still applies");
+        assert_eq!(
+            s.objective().kind,
+            ObjectiveKind::EdapAccuracy,
+            "a pinned corner makes the objective accuracy-aware"
+        );
+        // corner and aggregation compose in either order
+        let a = ScenarioSpec::parse("resnet18:rram:mean:low").unwrap();
+        let b = ScenarioSpec::parse("resnet18:rram:low:mean").unwrap();
+        assert_eq!(a.corner, Some(Corner::Low));
+        assert_eq!(a.agg, Aggregation::Mean);
+        assert_eq!(a.corner, b.corner);
+        assert_eq!(a.agg, b.agg);
+        // corner-free specs keep the plain EDAP objective
+        let plain = ScenarioSpec::parse("resnet18:rram").unwrap();
+        assert!(plain.corner.is_none());
+        assert_eq!(plain.objective().kind, ObjectiveKind::Edap);
     }
 
     #[test]

@@ -57,24 +57,23 @@ pub fn median(xs: &[f64]) -> f64 {
 }
 
 /// 2-D Pareto front (minimize both axes). Returns indices of non-dominated
-/// points, sorted by x. Used by the Fig. 9 EDAP-vs-cost trade-off.
+/// points, sorted by x (ties by y, then input index), with exact duplicate
+/// points collapsed to their first occurrence. Used by the Fig. 9
+/// EDAP-vs-cost trade-off.
+///
+/// Dominance is delegated to [`crate::pareto::sort::non_dominated_sort`] so
+/// the whole repo shares a single definition of "non-dominated".
 pub fn pareto_front_2d(points: &[(f64, f64)]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..points.len()).collect();
-    idx.sort_by(|&a, &b| {
-        points[a]
-            .0
-            .partial_cmp(&points[b].0)
-            .unwrap()
-            .then(points[a].1.partial_cmp(&points[b].1).unwrap())
+    let vecs: Vec<Vec<f64>> = points.iter().map(|&(x, y)| vec![x, y]).collect();
+    let mut front = match crate::pareto::sort::non_dominated_sort(&vecs).into_iter().next() {
+        Some(f) => f,
+        None => return Vec::new(),
+    };
+    front.sort_by(|&a, &b| {
+        points[a].partial_cmp(&points[b]).unwrap().then(a.cmp(&b))
     });
-    let mut front = Vec::new();
-    let mut best_y = f64::INFINITY;
-    for i in idx {
-        if points[i].1 < best_y {
-            best_y = points[i].1;
-            front.push(i);
-        }
-    }
+    // strict dominance leaves exact duplicates in front 0; keep the first
+    front.dedup_by(|a, b| points[*a] == points[*b]);
     front
 }
 
@@ -108,6 +107,11 @@ mod tests {
         let pts = [(1.0, 10.0), (2.0, 5.0), (3.0, 6.0), (4.0, 1.0), (2.5, 4.9)];
         let front = pareto_front_2d(&pts);
         assert_eq!(front, vec![0, 1, 4, 3]);
+        // exact duplicates collapse to the first occurrence; weakly
+        // dominated points (equal on one axis, worse on the other) drop
+        let pts = [(1.0, 10.0), (1.0, 10.0), (2.0, 10.0), (0.5, 20.0)];
+        assert_eq!(pareto_front_2d(&pts), vec![3, 0]);
+        assert!(pareto_front_2d(&[]).is_empty());
     }
 
     #[test]

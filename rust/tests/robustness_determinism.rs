@@ -1,0 +1,170 @@
+//! Robust-objective determinism contracts:
+//!
+//! * robust score batches (`--robust` aggregates over a perturbation
+//!   ensemble) are bit-identical across worker-thread counts;
+//! * the `robustness` experiment, run with a robust mode, resumes after
+//!   a completed run with ZERO recomputed cells and byte-identical
+//!   artifacts;
+//! * with `--robust` unset, a non-accuracy experiment's artifacts are
+//!   byte-identical whether or not the flag is present in the context —
+//!   the robust machinery is invisible to every default loop.
+
+use imcopt::coordinator::{EvalBackend, ExpContext, JointProblem};
+use imcopt::experiments;
+use imcopt::model::MemoryTech;
+use imcopt::objective::{Aggregation, Objective, ObjectiveKind};
+use imcopt::robustness::{RobustConfig, RobustMode};
+use imcopt::search::Problem;
+use imcopt::space::{Design, SearchSpace};
+use imcopt::util::rng::Rng;
+use imcopt::workloads::WorkloadSet;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imcopt-robustness-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn robust_problem<'a>(
+    space: &'a SearchSpace,
+    set: &'a WorkloadSet,
+    threads: usize,
+    seed: u64,
+) -> JointProblem<'a> {
+    let obj = Objective::new(ObjectiveKind::EdapAccuracy, Aggregation::Max);
+    let rc = RobustConfig::from_flag("cvar0.5", seed, 3).unwrap();
+    JointProblem::with_backend(space, set, EvalBackend::native(MemoryTech::Rram), obj)
+        .with_threads(threads)
+        .with_robust(Some(rc))
+}
+
+#[test]
+fn robust_scores_are_thread_count_invariant() {
+    let space = SearchSpace::rram_reduced();
+    let set = WorkloadSet::cnn4();
+    let p1 = robust_problem(&space, &set, 1, 11);
+    let p8 = robust_problem(&space, &set, 8, 11);
+    let mut rng = Rng::seed_from(11);
+    let batch: Vec<Design> = (0..24).map(|_| space.random(&mut rng)).collect();
+    let s1 = p1.score_batch(&batch);
+    let s8 = p8.score_batch(&batch);
+    for (i, (a, b)) in s1.iter().zip(&s8).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "robust score[{i}] diverged: {a} vs {b}");
+    }
+    // the pert-id-extended accuracy memos agree entry for entry
+    let a1 = p1.acc_snapshot();
+    let a8 = p8.acc_snapshot();
+    assert_eq!(a1.len(), a8.len());
+    for ((k1, v1), (k8, v8)) in a1.iter().zip(&a8) {
+        assert_eq!(k1, k8);
+        assert_eq!(v1.to_bits(), v8.to_bits());
+    }
+}
+
+#[test]
+fn robust_mode_aggregates_match_hand_rolled() {
+    // CVaR over an ensemble of member scores matches a by-hand fold on
+    // the same members — pinned here against an independent computation
+    let mut xs = [3.0, 1.0, 4.0, 1.5, 9.0, 2.5];
+    assert_eq!(RobustMode::Worst.aggregate(&mut xs.clone()), 9.0);
+    let m = RobustMode::Mean.aggregate(&mut xs.clone());
+    assert!((m - xs.iter().sum::<f64>() / 6.0).abs() < 1e-12);
+    // q=0.5 of 6 -> mean of the worst 3 = (9 + 4 + 3) / 3
+    let c = RobustMode::Cvar(0.5).aggregate(&mut xs);
+    assert!((c - 16.0 / 3.0).abs() < 1e-12, "{c}");
+}
+
+/// Every emitted artifact below `dir`, checkpoint internals excluded.
+fn artifacts(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).expect("readable dir") {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().to_string();
+            if path.is_dir() {
+                if name == "checkpoints" {
+                    continue;
+                }
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+fn robust_ctx(seed: u64, dir: &Path, resume: bool, threads: usize) -> ExpContext {
+    let mut c = ExpContext::quick(seed);
+    c.out_dir = dir.to_path_buf();
+    c.stable = true;
+    c.resume = resume;
+    c.threads = threads;
+    c.robust = Some("worst".into());
+    c
+}
+
+#[test]
+fn robustness_experiment_resumes_with_zero_recompute() {
+    let dir = tmp("resume");
+    let first = experiments::run_selected(&["robustness"], &robust_ctx(17, &dir, false, 2))
+        .unwrap();
+    assert_eq!(first.executed, 1);
+    assert!(first.cells_computed > 0);
+    let a = artifacts(&dir);
+    assert!(
+        a.keys().any(|k| k.contains("robustness_cells/gap.json")),
+        "missing gap cell: {:?}",
+        a.keys().collect::<Vec<_>>()
+    );
+
+    // resume replays the stored report and recomputes nothing, at a
+    // different thread count
+    let second = experiments::run_selected(&["robustness"], &robust_ctx(17, &dir, true, 8))
+        .unwrap();
+    assert_eq!(second.replayed, 1, "completed report must replay");
+    assert_eq!(second.executed, 0);
+    assert_eq!(second.cells_computed, 0, "zero recompute on resume");
+    let b = artifacts(&dir);
+    assert_eq!(a.keys().collect::<Vec<_>>(), b.keys().collect::<Vec<_>>());
+    for (name, bytes) in &a {
+        assert_eq!(bytes, &b[name], "artifact {name} differs after resume");
+    }
+}
+
+#[test]
+fn robust_flag_changes_robustness_artifacts_but_not_plain_experiments() {
+    // fig9 never scores an accuracy-aware objective: its artifacts must
+    // be byte-identical with and without --robust
+    let dir_off = tmp("fig9-off");
+    let dir_on = tmp("fig9-on");
+    let mut ctx_off = ExpContext::quick(23);
+    ctx_off.out_dir = dir_off.clone();
+    ctx_off.stable = true;
+    let mut ctx_on = ExpContext::quick(23);
+    ctx_on.out_dir = dir_on.clone();
+    ctx_on.stable = true;
+    ctx_on.robust = Some("cvar0.25".into());
+    experiments::run("fig9", &ctx_off).unwrap();
+    experiments::run("fig9", &ctx_on).unwrap();
+    let a = artifacts(&dir_off);
+    let b = artifacts(&dir_on);
+    assert_eq!(a.keys().collect::<Vec<_>>(), b.keys().collect::<Vec<_>>());
+    for (name, bytes) in &a {
+        assert_eq!(bytes, &b[name], "--robust leaked into plain artifact {name}");
+    }
+
+    // the robustness experiment, by contrast, must honor the mode: its
+    // gap cell records the configured aggregate
+    let dir_r = tmp("mode-honored");
+    let mut ctx_r = robust_ctx(23, &dir_r, false, 2);
+    ctx_r.robust = Some("cvar0.25".into());
+    experiments::run_selected(&["robustness"], &ctx_r).unwrap();
+    let gap = std::fs::read_to_string(dir_r.join("robustness_cells/gap.json")).unwrap();
+    assert!(gap.contains("cvar0.25@ens-s23-k2"), "gap cell: {gap}");
+}

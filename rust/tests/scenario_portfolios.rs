@@ -202,7 +202,8 @@ fn portfolio_experiments_kill_resume_bit_identical() {
     );
     assert_eq!(
         validate_cells(&dir_a.join("transfer_cells"), &cell_schema, "transfer"),
-        3
+        4,
+        "three all9 portfolios plus the RRAM companion row"
     );
 
     // interrupted run: the simulated-kill hook stops genmatrix_k after
@@ -247,18 +248,19 @@ fn portfolio_experiments_kill_resume_bit_identical() {
 
     // focused cross-experiment shared-bound check: wipe transfer's own
     // journals (keeping checkpoints/shared_bounds.jsonl, written by the
-    // genmatrix_k leg of the straight run) and re-run transfer alone with
-    // --resume. Its 9 all9 specialist bounds must all come from the
-    // shared `bound:<set>:<w>` namespace — only the 3 portfolio joint
-    // searches may compute fresh. If sharing regressed, this computes 12.
+    // genmatrix_k leg and transfer's own straight run) and re-run
+    // transfer alone with --resume. Its 9 all9 specialist bounds and 5
+    // all9-rram bounds must all come from the shared `bound:<set>:<w>`
+    // namespace — only the 4 portfolio joint searches may compute fresh.
+    // If sharing regressed, this computes 18.
     for f in ["transfer.jsonl", "transfer.memo.jsonl", "transfer.acc.jsonl"] {
         let _ = std::fs::remove_file(dir_a.join("checkpoints").join(f));
     }
     let again = experiments::run_selected(&["transfer"], &ctx_at(29, &dir_a, true)).unwrap();
     assert_eq!(again.executed, 1, "transfer journal was deleted, so it re-runs");
     assert_eq!(
-        again.cells_computed, 3,
-        "all 9 specialist bounds must replay from the shared namespace \
+        again.cells_computed, 4,
+        "all specialist bounds must replay from the shared namespace \
          (computed {}, reused {})",
         again.cells_computed, again.cells_reused
     );
