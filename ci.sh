@@ -24,6 +24,12 @@
 #            fails. Re-bless intentional changes with
 #            `cp BENCH_<x>.json bench_baselines/`.
 #   catalog  registry JSON schema + docs/experiments.md drift
+#   ingest   workload ingestion: the valid parser corpus round-trips
+#            through `imcopt workloads --spec` and validates against
+#            schemas/workload.schema.json, every malformed corpus file
+#            is rejected, and `imcopt run population --quick` sweeps a
+#            200-net synthetic family end-to-end with a zero-recompute
+#            resume
 #   smoke    `imcopt run --all --quick` emits a well-formed artifact for
 #            every registered experiment (--require-all), and a
 #            `--resume` re-run replays without recomputing a cell; plus a
@@ -43,7 +49,7 @@ cd "$(dirname "$0")"
 FEATURES="${IMCOPT_FEATURES:-}"
 IMCOPT_BIN=./target/release/imcopt
 TREND_TOLERANCE="${IMCOPT_TREND_TOLERANCE:-15}"
-ALL_STAGES=(lint build test golden bench trend catalog smoke orch)
+ALL_STAGES=(lint build test golden bench trend catalog ingest smoke orch)
 
 usage() {
     echo "usage: ./ci.sh [--stage <name>]"
@@ -173,6 +179,48 @@ stage_catalog() {
     "$IMCOPT_BIN" list --markdown | diff - docs/experiments.md
 }
 
+stage_ingest() {
+    ensure_bin
+    echo "=== ingest: valid corpus parses and validates against the schema ==="
+    for f in rust/tests/ingest/valid/*.json; do
+        "$IMCOPT_BIN" validate --bench "$f" --schema schemas/workload.schema.json
+        "$IMCOPT_BIN" workloads --spec "$f:rram" > /dev/null
+        echo "  ok: $f"
+    done
+
+    echo "=== ingest: malformed corpus is rejected (typed errors, nonzero exit) ==="
+    for f in rust/tests/ingest/malformed/*.json; do
+        if "$IMCOPT_BIN" workloads --spec "$f:rram" > /dev/null 2>&1; then
+            echo "error: malformed corpus file $f was accepted" >&2
+            exit 1
+        fi
+        echo "  rejected: $f"
+    done
+
+    echo "=== ingest: synthetic family resolves deterministically ==="
+    "$IMCOPT_BIN" workloads --spec synth:mixed:20:7:rram > target/ci-synth-a.txt
+    "$IMCOPT_BIN" workloads --spec synth:mixed:20:7:rram > target/ci-synth-b.txt
+    diff target/ci-synth-a.txt target/ci-synth-b.txt
+
+    echo "=== ingest: population smoke over a 200-net synthetic family ==="
+    POP_OUT="$(pwd)/target/ci-population"
+    rm -rf "$POP_OUT"
+    "$IMCOPT_BIN" run population --quick --stable --seed 5 --out-dir "$POP_OUT"
+    "$IMCOPT_BIN" validate --out-dir "$POP_OUT"
+
+    echo "=== ingest: population resume replays with zero recompute ==="
+    POP_RESUME=$("$IMCOPT_BIN" run population --quick --stable --seed 5 \
+        --out-dir "$POP_OUT" --resume | tail -n 1)
+    echo "$POP_RESUME"
+    case "$POP_RESUME" in
+        *"executed=0"*"cells_computed=0"*) ;;
+        *)
+            echo "error: population --resume re-ran work on a completed out-dir" >&2
+            exit 1
+            ;;
+    esac
+}
+
 stage_smoke() {
     ensure_bin
     echo "=== registry smoke: imcopt run --all --quick ==="
@@ -180,7 +228,7 @@ stage_smoke() {
     rm -rf "$SMOKE_OUT"
     "$IMCOPT_BIN" run --all --quick --stable --seed 5 --out-dir "$SMOKE_OUT"
 
-    echo "=== validate experiment artifacts (all 18 required) ==="
+    echo "=== validate experiment artifacts (all 19 required) ==="
     "$IMCOPT_BIN" validate --out-dir "$SMOKE_OUT" --require-all
 
     echo "=== resume smoke: a completed run replays without recomputation ==="
@@ -227,7 +275,7 @@ stage_orch() {
         "$IMCOPT_BIN" run --all --quick --stable --seed 5 \
         --out-dir "$ORCH_OUT" --workers 4
 
-    echo "=== validate orchestrated artifacts (all 18 required) ==="
+    echo "=== validate orchestrated artifacts (all 19 required) ==="
     "$IMCOPT_BIN" validate --out-dir "$ORCH_OUT" --require-all
     "$IMCOPT_BIN" validate --bench "$ORCH_OUT/orchestrator_status.json" \
         --schema schemas/orchestrator_status.schema.json
@@ -271,7 +319,7 @@ case "$SELECTED" in
             run_stage "$s"
         done
         ;;
-    lint|build|test|golden|bench|trend|catalog|smoke|orch)
+    lint|build|test|golden|bench|trend|catalog|ingest|smoke|orch)
         run_stage "$SELECTED"
         ;;
     *)

@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     );
     let edaps = common::per_workload_scores(&p_acc, &r_acc.best, &edap_obj);
     for (i, w) in set.workloads.iter().enumerate() {
-        let (base, _) = accuracy::baseline(w.name);
+        let (base, _) = accuracy::baseline(&w.name);
         println!(
             "{:<14} {:>10.4} {:>11.2} {:>11.2}",
             w.name,

@@ -152,7 +152,7 @@ pub fn baseline(workload: &str) -> (f64, f64) {
 pub fn estimate_native(raw: &[f64; 10], mem: MemoryTech, workload: &crate::workloads::Workload) -> f64 {
     let spec = NoiseSpec::from_design(raw, mem);
     let eps = analytical_eps(&spec, workload.mapped_layers());
-    let (base, chance) = baseline(workload.name);
+    let (base, chance) = baseline(&workload.name);
     accuracy_from_eps(eps, base, chance)
 }
 

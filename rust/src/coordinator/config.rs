@@ -65,9 +65,13 @@ pub struct ExpContext {
     /// Pareto-archive capacity (`--pareto-cap`): the `pareto`
     /// experiment's reported fronts never exceed this many points.
     pub pareto_cap: usize,
-    /// User-defined scenario family (`--spec <w1>+<w2>+...:<mem>[:<agg>]`,
-    /// see `scenarios::ScenarioSpec::parse`), honored by `genmatrix_k`,
-    /// `transfer` and `pareto`; `None` runs the paper families.
+    /// User-defined scenario family (`--spec <w1>+<w2>+...:<mem>[:<agg>]`
+    /// with canonical names or `.json`/`.onnx` paths as workload tokens,
+    /// or `synth:<dist>:<n>:<seed>[...]` for a seeded synthetic
+    /// population; see `scenarios::ScenarioSpec::parse`), honored by
+    /// `genmatrix_k`, `transfer`, `population` and `pareto`; `None` runs
+    /// the paper families (`population`: the default 200-net synthetic
+    /// family derived from the seed).
     pub spec: Option<String>,
     /// Surrogate screening fraction for the GA/NSGA-II generation loops
     /// (`--screen-frac`, clamped to `[0.05, 1.0]`). At the default `1.0`

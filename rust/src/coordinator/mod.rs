@@ -255,7 +255,7 @@ impl<'a> JointProblem<'a> {
             .map(|&wi| {
                 let w = &self.workloads.workloads[wi];
                 let eps = per_layer_eps * (w.mapped_layers() as f64).sqrt();
-                let (base, chance) = accuracy::baseline(w.name);
+                let (base, chance) = accuracy::baseline(&w.name);
                 accuracy::accuracy_from_eps(eps, base, chance)
             })
             .collect()

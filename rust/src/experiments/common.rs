@@ -96,10 +96,12 @@ pub fn opt_shared_cell(
 }
 
 /// The scenario families an experiment should sweep: the user-defined
-/// `--spec` family when given ([`ScenarioSpec::parse`]), the two paper
-/// families otherwise. Honored by `genmatrix_k`, `transfer` and
-/// `pareto` (the `genmatrix` paper reproduction always runs the paper
-/// families).
+/// `--spec` family when given ([`ScenarioSpec::parse`] — canonical
+/// names, ingested `.json`/`.onnx` files, or a `synth:` population),
+/// the two paper families otherwise. Honored by `genmatrix_k`,
+/// `transfer` and `pareto` (the `genmatrix` paper reproduction always
+/// runs the paper families; `population` defaults to a synthetic family
+/// instead, see `experiments::population`).
 pub fn resolve_specs(ctx: &ExpContext) -> Result<Vec<ScenarioSpec>> {
     match &ctx.spec {
         Some(s) => Ok(vec![ScenarioSpec::parse(s)

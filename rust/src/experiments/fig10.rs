@@ -89,7 +89,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         }
         max_red = max_red.max(red);
         t.row(vec![
-            w.name.into(),
+            w.name.clone(),
             common::s(largest_scores[i]),
             common::s(joint_scores[i]),
             format!("{red:.1}"),

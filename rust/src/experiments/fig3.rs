@@ -83,7 +83,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
             let red = common::reduction_pct(largest_scores[i], joint_scores[i]);
             max_red = max_red.max(red);
             t.row(vec![
-                w.name.into(),
+                w.name.clone(),
                 common::s(largest_scores[i]),
                 common::s(joint_scores[i]),
                 format!("{red:.1}"),

@@ -77,10 +77,10 @@ pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
             .accuracies
             .unwrap_or_else(|| vec![f64::NAN; set.len()]);
         for (i, w) in set.workloads.iter().enumerate() {
-            let (base, _) = crate::accuracy::baseline(w.name);
+            let (base, _) = crate::accuracy::baseline(&w.name);
             t.row(vec![
                 name.into(),
-                w.name.into(),
+                w.name.clone(),
                 common::s(edaps[i]),
                 format!("{:.2} ({:.2})", accs[i] * 100.0, base * 100.0),
             ]);

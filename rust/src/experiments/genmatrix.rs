@@ -83,7 +83,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         );
         let mut gaps: Vec<f64> = Vec::new();
         for wi in 0..set.len() {
-            let held = set.workloads[wi].name;
+            let held = set.workloads[wi].name.as_str();
             let train: Vec<usize> = (0..set.len()).filter(|&j| j != wi).collect();
 
             // joint search on the N−1 training workloads, published in the
@@ -148,7 +148,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
                     Json::Arr(
                         train
                             .iter()
-                            .map(|&j| Json::Str(set.workloads[j].name.into()))
+                            .map(|&j| Json::Str(set.workloads[j].name.clone()))
                             .collect(),
                     ),
                 ),
@@ -235,7 +235,7 @@ mod tests {
                 let text = std::fs::read_to_string(&path)
                     .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
                 let v = json::parse(&text).unwrap();
-                assert_eq!(v.get("held_out").unwrap().as_str(), Some(w.name));
+                assert_eq!(v.get("held_out").unwrap().as_str(), Some(w.name.as_str()));
                 assert!(v.get("gap").unwrap().as_f64_lenient().is_some());
                 let top = v.get("top").unwrap().as_arr().unwrap();
                 assert!(!top.is_empty() && top.len() <= ctx.top_k);

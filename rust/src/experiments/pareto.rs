@@ -229,7 +229,7 @@ pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
                     .set
                     .workloads
                     .iter()
-                    .all(|w| crate::accuracy::has_baseline(w.name)) =>
+                    .all(|w| crate::accuracy::has_baseline(&w.name)) =>
             {
                 Some(f)
             }

@@ -137,7 +137,7 @@ fn min_accuracy_at_corner(
         .iter()
         .map(|w| {
             let eps = per_layer * (w.mapped_layers() as f64).sqrt();
-            let (base, chance) = accuracy::baseline(w.name);
+            let (base, chance) = accuracy::baseline(&w.name);
             accuracy::accuracy_from_eps(eps, base, chance)
         })
         .fold(f64::INFINITY, f64::min)

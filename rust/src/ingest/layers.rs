@@ -1,0 +1,219 @@
+//! Layer-list JSON codec — the native workload interchange format.
+//!
+//! Shape (pinned by `schemas/workload.schema.json`):
+//!
+//! ```json
+//! {
+//!   "name": "tiny-cnn",
+//!   "layers": [
+//!     {"name": "conv1", "kind": "conv", "k": 27, "n": 16, "passes": 12544,
+//!      "weights": 432, "in_bytes": 150528, "out_bytes": 200704}
+//!   ]
+//! }
+//! ```
+//!
+//! Layers are already in matmul view (see `workloads`): the parser
+//! validates — positive dims, [`super::MAX_DIM`] caps, weightless dynamic
+//! layers — and never derives shapes. Workload → JSON → Workload is
+//! bit-identical for every workload this crate can construct (all fields
+//! are integers below the exact-f64 window).
+
+use super::{validate_layers, IngestError};
+use crate::util::json::{self, Json};
+use crate::workloads::{Layer, LayerKind, Workload};
+
+fn kind_str(k: LayerKind) -> &'static str {
+    match k {
+        LayerKind::Conv => "conv",
+        LayerKind::DepthwiseConv => "depthwise_conv",
+        LayerKind::Fc => "fc",
+        LayerKind::Dynamic => "dynamic",
+    }
+}
+
+fn kind_from_str(s: &str) -> Result<LayerKind, IngestError> {
+    Ok(match s {
+        "conv" => LayerKind::Conv,
+        "depthwise_conv" => LayerKind::DepthwiseConv,
+        "fc" => LayerKind::Fc,
+        "dynamic" => LayerKind::Dynamic,
+        other => return Err(IngestError::UnknownKind(other.to_string())),
+    })
+}
+
+/// Read a non-negative integer field (rejects floats, strings, negatives).
+fn req_u64(obj: &Json, field: &str, idx: usize) -> Result<u64, IngestError> {
+    let at = format!("layers[{idx}].{field}");
+    let v = obj.get(field).ok_or(IngestError::Missing(at.clone()))?;
+    match v {
+        Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x <= (1u64 << 53) as f64 => {
+            Ok(*x as u64)
+        }
+        _ => Err(IngestError::WrongType {
+            at,
+            expected: "non-negative integer",
+        }),
+    }
+}
+
+fn req_str<'a>(obj: &'a Json, field: &str, at: String) -> Result<&'a str, IngestError> {
+    let v = obj.get(field).ok_or(IngestError::Missing(at.clone()))?;
+    v.as_str().ok_or(IngestError::WrongType {
+        at,
+        expected: "string",
+    })
+}
+
+/// Decode one workload from a parsed JSON document. `fallback_name` is
+/// used when the document has no `name` key (e.g. the file stem).
+pub fn workload_from_json(j: &Json, fallback_name: &str) -> Result<Workload, IngestError> {
+    if !matches!(j, Json::Obj(_)) {
+        return Err(IngestError::WrongType {
+            at: "$".into(),
+            expected: "object",
+        });
+    }
+    let name = match j.get("name") {
+        Some(v) => v
+            .as_str()
+            .ok_or(IngestError::WrongType {
+                at: "$.name".into(),
+                expected: "string",
+            })?
+            .to_string(),
+        None => fallback_name.to_string(),
+    };
+    let arr = j
+        .get("layers")
+        .ok_or(IngestError::Missing("$.layers".into()))?
+        .as_arr()
+        .ok_or(IngestError::WrongType {
+            at: "$.layers".into(),
+            expected: "array",
+        })?;
+    let mut layers = Vec::with_capacity(arr.len());
+    for (i, lj) in arr.iter().enumerate() {
+        if !matches!(lj, Json::Obj(_)) {
+            return Err(IngestError::WrongType {
+                at: format!("layers[{i}]"),
+                expected: "object",
+            });
+        }
+        let lname = req_str(lj, "name", format!("layers[{i}].name"))?.to_string();
+        let kind = kind_from_str(req_str(lj, "kind", format!("layers[{i}].kind"))?)?;
+        layers.push(Layer {
+            name: lname,
+            kind,
+            k: req_u64(lj, "k", i)?,
+            n: req_u64(lj, "n", i)?,
+            passes: req_u64(lj, "passes", i)?,
+            weights: req_u64(lj, "weights", i)?,
+            in_bytes: req_u64(lj, "in_bytes", i)?,
+            out_bytes: req_u64(lj, "out_bytes", i)?,
+        });
+    }
+    validate_layers(&layers)?;
+    Ok(Workload::new(name, layers))
+}
+
+/// Parse a layer-list JSON document from text.
+pub fn parse_workload_text(text: &str, fallback_name: &str) -> Result<Workload, IngestError> {
+    let j = json::parse(text).map_err(IngestError::Json)?;
+    workload_from_json(&j, fallback_name)
+}
+
+/// Encode a workload in the layer-list format (inverse of
+/// [`workload_from_json`], bit-identical round trip).
+pub fn workload_to_json(w: &Workload) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(w.name.clone())),
+        (
+            "layers",
+            Json::Arr(
+                w.layers
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("name", Json::Str(l.name.clone())),
+                            ("kind", Json::Str(kind_str(l.kind).into())),
+                            ("k", Json::Num(l.k as f64)),
+                            ("n", Json::Num(l.n as f64)),
+                            ("passes", Json::Num(l.passes as f64)),
+                            ("weights", Json::Num(l.weights as f64)),
+                            ("in_bytes", Json::Num(l.in_bytes as f64)),
+                            ("out_bytes", Json::Num(l.out_bytes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_nets_round_trip_bit_identically() {
+        for name in crate::workloads::ALL_NAMES {
+            let w = crate::workloads::by_name(name).unwrap();
+            let text = workload_to_json(&w).to_string();
+            let back = parse_workload_text(&text, "fallback").unwrap();
+            assert_eq!(w.name, back.name);
+            assert_eq!(w.layers.len(), back.layers.len());
+            for (a, b) in w.layers.iter().zip(&back.layers) {
+                assert_eq!(a.name, b.name, "{name}");
+                assert_eq!(a.kind, b.kind, "{name}");
+                assert_eq!(
+                    [a.k, a.n, a.passes, a.weights, a.in_bytes, a.out_bytes],
+                    [b.k, b.n, b.passes, b.weights, b.in_bytes, b.out_bytes],
+                    "{name}:{}",
+                    a.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn typed_errors_on_malformed_documents() {
+        // truncated JSON
+        let err = parse_workload_text("{\"name\": \"x\", \"layers\": [", "f").unwrap_err();
+        assert!(matches!(err, IngestError::Json(_)));
+        // wrong dtype
+        let bad = r#"{"layers": [{"name":"c","kind":"conv","k":"many","n":8,"passes":4,"weights":0,"in_bytes":0,"out_bytes":0}]}"#;
+        assert!(matches!(
+            parse_workload_text(bad, "f").unwrap_err(),
+            IngestError::WrongType { .. }
+        ));
+        // zero dim
+        let zero = r#"{"layers": [{"name":"c","kind":"conv","k":0,"n":8,"passes":4,"weights":0,"in_bytes":0,"out_bytes":0}]}"#;
+        assert!(matches!(
+            parse_workload_text(zero, "f").unwrap_err(),
+            IngestError::ZeroDim { .. }
+        ));
+        // huge dim
+        let huge = r#"{"layers": [{"name":"c","kind":"conv","k":2097152,"n":8,"passes":4,"weights":0,"in_bytes":0,"out_bytes":0}]}"#;
+        assert!(matches!(
+            parse_workload_text(huge, "f").unwrap_err(),
+            IngestError::DimTooLarge { .. }
+        ));
+        // unknown kind
+        let kind = r#"{"layers": [{"name":"c","kind":"pool","k":1,"n":8,"passes":4,"weights":0,"in_bytes":0,"out_bytes":0}]}"#;
+        assert!(matches!(
+            parse_workload_text(kind, "f").unwrap_err(),
+            IngestError::UnknownKind(_)
+        ));
+        // empty layer list
+        assert!(matches!(
+            parse_workload_text(r#"{"layers": []}"#, "f").unwrap_err(),
+            IngestError::BadLayerCount(0)
+        ));
+    }
+
+    #[test]
+    fn fallback_name_applies_only_without_name_key() {
+        let doc = r#"{"layers": [{"name":"c","kind":"fc","k":4,"n":4,"passes":1,"weights":16,"in_bytes":4,"out_bytes":4}]}"#;
+        assert_eq!(parse_workload_text(doc, "stem").unwrap().name, "stem");
+    }
+}

@@ -1,0 +1,217 @@
+//! Workload ingestion: external model files and synthetic populations.
+//!
+//! The repo's credibility at "hundreds of workloads" scale (ROADMAP
+//! direction 2) needs more than the 9 hand-coded nets of `workloads/`.
+//! This module turns three external sources into [`Workload`] values that
+//! flow through the exact same compiled-evaluator path:
+//!
+//! * **Layer-list JSON** ([`layers`]) — the repo's native interchange
+//!   format, schema-pinned under `schemas/workload.schema.json`. Every
+//!   layer is already in matmul view (`k`/`n`/`passes`/traffic), so the
+//!   parser only validates; it never guesses shapes.
+//! * **ONNX subset** ([`onnx`]) — a pragmatic reader for the protobuf
+//!   wire format covering Conv / Gemm / MatMul (weight-stationary and
+//!   activation×activation) plus the shape-plumbing ops between them,
+//!   in the spirit of ZigZag-IMC's model ingestion. No protobuf
+//!   dependency: the subset decoder is ~200 lines of varint walking.
+//! * **Seeded synthetic generator** ([`synth`]) — parameterized
+//!   [`WorkloadDistribution`]s over depth/channel/kernel/attention dims.
+//!   Sampling is a pure function of `(distribution, seed, index)`, so
+//!   populations are bit-identical across `--threads`, `--workers` and
+//!   kill/`--resume`.
+//!
+//! All parsers return typed [`IngestError`]s and never panic on
+//! malformed input (fuzz-style corpus under `rust/tests/ingest/`).
+
+pub mod layers;
+pub mod onnx;
+pub mod synth;
+
+pub use layers::{parse_workload_text, workload_from_json, workload_to_json};
+pub use onnx::workload_from_onnx;
+pub use synth::WorkloadDistribution;
+
+use crate::workloads::{Workload, L_MAX};
+use std::path::Path;
+
+/// Hard cap on the matmul dimensions (`k`, `n`, `passes`) of an ingested
+/// layer. Well below 2^53, so every derived quantity (weights ≤ `k·n` ≤
+/// 2^40, MACs per layer ≤ 2^60 summed in f64-exact buckets) survives the
+/// JSON round trip through `util::json`'s f64 numbers bit-identically.
+pub const MAX_DIM: u64 = 1 << 20;
+
+/// Cap on explicit byte/weight counts — kept under `1e15` so
+/// `util::json` prints them via its exact-integer path.
+pub const MAX_BYTES: u64 = 1 << 49;
+
+/// Typed ingestion failure. Parsers return these — they never panic on
+/// malformed input.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IngestError {
+    /// File could not be read.
+    Io(String),
+    /// Text is not valid JSON (truncation lands here).
+    Json(String),
+    /// A field exists but has the wrong JSON type.
+    WrongType {
+        at: String,
+        expected: &'static str,
+    },
+    /// A required field is missing.
+    Missing(String),
+    /// A layer kind string outside the enum.
+    UnknownKind(String),
+    /// A matmul dimension is zero.
+    ZeroDim { at: String },
+    /// A dimension exceeds [`MAX_DIM`] / [`MAX_BYTES`].
+    DimTooLarge { at: String, value: u64, max: u64 },
+    /// No layers / more than [`L_MAX`] layers.
+    BadLayerCount(usize),
+    /// A dynamic layer declaring stored weights.
+    DynamicWithWeights { at: String },
+    /// Malformed ONNX protobuf or unsupported construct.
+    Onnx(String),
+    /// Unknown synthetic distribution or bad `synth:` token.
+    Synth(String),
+    /// Path has no recognized extension.
+    UnknownFormat(String),
+}
+
+impl std::fmt::Display for IngestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IngestError::Io(m) => write!(f, "ingest: io error: {m}"),
+            IngestError::Json(m) => write!(f, "ingest: invalid JSON: {m}"),
+            IngestError::WrongType { at, expected } => {
+                write!(f, "ingest: {at}: expected {expected}")
+            }
+            IngestError::Missing(at) => write!(f, "ingest: missing required field {at}"),
+            IngestError::UnknownKind(k) => write!(
+                f,
+                "ingest: unknown layer kind '{k}' (conv|depthwise_conv|fc|dynamic)"
+            ),
+            IngestError::ZeroDim { at } => write!(f, "ingest: {at}: dimension must be >= 1"),
+            IngestError::DimTooLarge { at, value, max } => {
+                write!(f, "ingest: {at}: {value} exceeds the maximum {max}")
+            }
+            IngestError::BadLayerCount(n) => {
+                write!(f, "ingest: workload must have 1..={L_MAX} layers, got {n}")
+            }
+            IngestError::DynamicWithWeights { at } => {
+                write!(f, "ingest: {at}: dynamic layers carry no stored weights")
+            }
+            IngestError::Onnx(m) => write!(f, "ingest: onnx: {m}"),
+            IngestError::Synth(m) => write!(f, "ingest: synth: {m}"),
+            IngestError::UnknownFormat(p) => {
+                write!(f, "ingest: unrecognized workload file format: {p} (.json or .onnx)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+/// Load a workload from a file path, dispatching on extension:
+/// `.json` → layer-list format, `.onnx` → ONNX subset. The file stem is
+/// the fallback workload name (layer-list files may override it).
+pub fn load_path(path: &Path) -> Result<Workload, IngestError> {
+    let stem = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("workload")
+        .to_string();
+    let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+    match ext {
+        "json" => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| IngestError::Io(format!("{}: {e}", path.display())))?;
+            parse_workload_text(&text, &stem)
+        }
+        "onnx" => {
+            let bytes = std::fs::read(path)
+                .map_err(|e| IngestError::Io(format!("{}: {e}", path.display())))?;
+            workload_from_onnx(&bytes, &stem)
+        }
+        _ => Err(IngestError::UnknownFormat(path.display().to_string())),
+    }
+}
+
+/// Whether a `--spec` workload token names a file (vs a canonical
+/// workload): anything with a path separator or a recognized extension.
+pub fn looks_like_path(token: &str) -> bool {
+    token.contains('/') || token.ends_with(".json") || token.ends_with(".onnx")
+}
+
+/// Shared per-layer validation used by every ingestion path (and by the
+/// generator's tests): positive on-grid-cappable dims, bounded traffic,
+/// weightless dynamic layers.
+pub(crate) fn validate_layer(l: &crate::workloads::Layer, idx: usize) -> Result<(), IngestError> {
+    let at = |field: &str| format!("layers[{idx}].{field}");
+    for (field, v) in [("k", l.k), ("n", l.n), ("passes", l.passes)] {
+        if v == 0 {
+            return Err(IngestError::ZeroDim { at: at(field) });
+        }
+        if v > MAX_DIM {
+            return Err(IngestError::DimTooLarge {
+                at: at(field),
+                value: v,
+                max: MAX_DIM,
+            });
+        }
+    }
+    for (field, v) in [
+        ("weights", l.weights),
+        ("in_bytes", l.in_bytes),
+        ("out_bytes", l.out_bytes),
+    ] {
+        if v > MAX_BYTES {
+            return Err(IngestError::DimTooLarge {
+                at: at(field),
+                value: v,
+                max: MAX_BYTES,
+            });
+        }
+    }
+    if l.dynamic() && l.weights != 0 {
+        return Err(IngestError::DynamicWithWeights { at: at("weights") });
+    }
+    Ok(())
+}
+
+/// Validate a whole layer list (count + per-layer rules).
+pub(crate) fn validate_layers(layers: &[crate::workloads::Layer]) -> Result<(), IngestError> {
+    if layers.is_empty() || layers.len() > L_MAX {
+        return Err(IngestError::BadLayerCount(layers.len()));
+    }
+    for (i, l) in layers.iter().enumerate() {
+        validate_layer(l, i)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_dispatch_rejects_unknown_extensions() {
+        let err = load_path(Path::new("model.tflite")).unwrap_err();
+        assert!(matches!(err, IngestError::UnknownFormat(_)));
+        assert!(err.to_string().contains(".onnx"));
+    }
+
+    #[test]
+    fn path_detection() {
+        assert!(looks_like_path("models/net.json"));
+        assert!(looks_like_path("net.onnx"));
+        assert!(looks_like_path("./a"));
+        assert!(!looks_like_path("resnet18"));
+        assert!(!looks_like_path("synth"));
+    }
+
+    #[test]
+    fn missing_file_is_io_error_not_panic() {
+        let err = load_path(Path::new("/nonexistent/net.json")).unwrap_err();
+        assert!(matches!(err, IngestError::Io(_)));
+    }
+}

@@ -1,0 +1,657 @@
+//! Pragmatic ONNX-subset reader (no protobuf dependency).
+//!
+//! ONNX models are protobuf messages; the container has no protobuf
+//! crate, so this module hand-rolls the ~6 message types the matmul view
+//! needs from the wire format directly (varints + length-delimited
+//! fields, skipping everything unknown — the format's own
+//! forward-compatibility rule).
+//!
+//! Supported compute ops: `Conv` (incl. grouped/depthwise), `Gemm`,
+//! `MatMul` (weight-stationary when the right operand is an initializer,
+//! activation×activation → [`LayerKind::Dynamic`] otherwise — the
+//! attention score/context pattern). Shape plumbing: pooling ops,
+//! `Flatten`, `Reshape` (constant target), `Transpose`, and
+//! shape-preserving elementwise/norm ops. Anything else drops its output
+//! shapes; that only becomes an error if a later matmul op needs them.
+//!
+//! All failures are typed [`IngestError`]s; malformed bytes never panic.
+
+use super::{validate_layers, IngestError};
+use crate::workloads::{Layer, LayerKind, Workload};
+use std::collections::HashMap;
+
+fn err(msg: impl Into<String>) -> IngestError {
+    IngestError::Onnx(msg.into())
+}
+
+// ---------------------------------------------------------------- wire
+
+#[derive(Debug)]
+enum Wire<'a> {
+    Varint(u64),
+    Fixed64,
+    Len(&'a [u8]),
+    Fixed32,
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    fn varint(&mut self) -> Result<u64, IngestError> {
+        let mut out = 0u64;
+        for shift in (0..64).step_by(7) {
+            let b = *self
+                .buf
+                .get(self.pos)
+                .ok_or_else(|| err("truncated varint"))?;
+            self.pos += 1;
+            out |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(out);
+            }
+        }
+        Err(err("varint longer than 10 bytes"))
+    }
+
+    /// Next `(field_number, payload)` pair, skipping over fixed-width
+    /// payloads (we never need them; they are consumed for framing).
+    fn field(&mut self) -> Result<(u64, Wire<'a>), IngestError> {
+        let key = self.varint()?;
+        let field = key >> 3;
+        match key & 7 {
+            0 => Ok((field, Wire::Varint(self.varint()?))),
+            1 => {
+                self.take(8)?;
+                Ok((field, Wire::Fixed64))
+            }
+            2 => {
+                let len = self.varint()? as usize;
+                Ok((field, Wire::Len(self.take(len)?)))
+            }
+            5 => {
+                self.take(4)?;
+                Ok((field, Wire::Fixed32))
+            }
+            w => Err(err(format!("unsupported wire type {w}"))),
+        }
+    }
+
+    fn take(&mut self, len: usize) -> Result<&'a [u8], IngestError> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| err("truncated length-delimited field"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+}
+
+fn utf8(b: &[u8]) -> Result<String, IngestError> {
+    String::from_utf8(b.to_vec()).map_err(|_| err("invalid utf-8 string"))
+}
+
+/// Repeated int64: packed (one LEN payload) or one unpacked varint.
+fn push_i64s(out: &mut Vec<i64>, w: &Wire<'_>) -> Result<(), IngestError> {
+    match w {
+        Wire::Varint(v) => out.push(*v as i64),
+        Wire::Len(b) => {
+            let mut r = Reader::new(b);
+            while !r.done() {
+                out.push(r.varint()? as i64);
+            }
+        }
+        _ => return Err(err("bad wire type for repeated int64")),
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ messages
+
+#[derive(Default)]
+struct Attr {
+    name: String,
+    i: Option<i64>,
+    ints: Vec<i64>,
+}
+
+fn parse_attr(b: &[u8]) -> Result<Attr, IngestError> {
+    let mut r = Reader::new(b);
+    let mut a = Attr::default();
+    while !r.done() {
+        match r.field()? {
+            (1, Wire::Len(s)) => a.name = utf8(s)?,
+            (3, Wire::Varint(v)) => a.i = Some(v as i64),
+            (8, w) => push_i64s(&mut a.ints, &w)?,
+            _ => {}
+        }
+    }
+    Ok(a)
+}
+
+#[derive(Default)]
+struct Node {
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+    name: String,
+    op: String,
+    attrs: Vec<Attr>,
+}
+
+impl Node {
+    fn attr_i(&self, name: &str, default: i64) -> i64 {
+        self.attrs
+            .iter()
+            .find(|a| a.name == name)
+            .and_then(|a| a.i)
+            .unwrap_or(default)
+    }
+    fn attr_ints(&self, name: &str) -> Option<&[i64]> {
+        self.attrs
+            .iter()
+            .find(|a| a.name == name)
+            .map(|a| a.ints.as_slice())
+    }
+    fn label(&self, idx: usize) -> String {
+        if self.name.is_empty() {
+            format!("{}_{idx}", self.op.to_lowercase())
+        } else {
+            self.name.clone()
+        }
+    }
+}
+
+fn parse_node(b: &[u8]) -> Result<Node, IngestError> {
+    let mut r = Reader::new(b);
+    let mut n = Node::default();
+    while !r.done() {
+        match r.field()? {
+            (1, Wire::Len(s)) => n.inputs.push(utf8(s)?),
+            (2, Wire::Len(s)) => n.outputs.push(utf8(s)?),
+            (3, Wire::Len(s)) => n.name = utf8(s)?,
+            (4, Wire::Len(s)) => n.op = utf8(s)?,
+            (5, Wire::Len(s)) => n.attrs.push(parse_attr(s)?),
+            _ => {}
+        }
+    }
+    Ok(n)
+}
+
+struct Tensor {
+    name: String,
+    dims: Vec<i64>,
+    data_type: i64,
+    /// Constant int64 payload (only kept when small — Reshape targets).
+    i64s: Vec<i64>,
+}
+
+fn parse_tensor(b: &[u8]) -> Result<Tensor, IngestError> {
+    let mut r = Reader::new(b);
+    let mut t = Tensor {
+        name: String::new(),
+        dims: Vec::new(),
+        data_type: 0,
+        i64s: Vec::new(),
+    };
+    let mut raw: &[u8] = &[];
+    while !r.done() {
+        match r.field()? {
+            (1, w) => push_i64s(&mut t.dims, &w)?,
+            (2, Wire::Varint(v)) => t.data_type = v as i64,
+            (7, w) => push_i64s(&mut t.i64s, &w)?,
+            (8, Wire::Len(s)) => t.name = utf8(s)?,
+            (9, Wire::Len(s)) => raw = s,
+            _ => {}
+        }
+    }
+    // int64 constants may arrive as raw little-endian bytes instead
+    if t.i64s.is_empty() && t.data_type == 7 && raw.len() % 8 == 0 && raw.len() <= 128 {
+        for c in raw.chunks_exact(8) {
+            t.i64s.push(i64::from_le_bytes(c.try_into().unwrap()));
+        }
+    }
+    Ok(t)
+}
+
+/// ValueInfoProto → (name, dims); symbolic/zero dims read as 1 (batch).
+fn parse_value_info(b: &[u8]) -> Result<Option<(String, Vec<u64>)>, IngestError> {
+    let mut r = Reader::new(b);
+    let mut name = String::new();
+    let mut ty: &[u8] = &[];
+    while !r.done() {
+        match r.field()? {
+            (1, Wire::Len(s)) => name = utf8(s)?,
+            (2, Wire::Len(s)) => ty = s,
+            _ => {}
+        }
+    }
+    // TypeProto.tensor_type(1) -> Tensor.shape(2) -> TensorShapeProto.dim(1)
+    let mut r = Reader::new(ty);
+    let mut tensor: &[u8] = &[];
+    while !r.done() {
+        if let (1, Wire::Len(s)) = r.field()? {
+            tensor = s;
+        }
+    }
+    let mut r = Reader::new(tensor);
+    let mut shape: &[u8] = &[];
+    while !r.done() {
+        if let (2, Wire::Len(s)) = r.field()? {
+            shape = s;
+        }
+    }
+    let mut dims = Vec::new();
+    let mut r = Reader::new(shape);
+    while !r.done() {
+        if let (1, Wire::Len(dim)) = r.field()? {
+            let mut dr = Reader::new(dim);
+            let mut v = 1u64; // dim_param / absent → batch-like, read as 1
+            while !dr.done() {
+                if let (1, Wire::Varint(x)) = dr.field()? {
+                    v = if x == 0 { 1 } else { x };
+                }
+            }
+            dims.push(v);
+        }
+    }
+    if dims.is_empty() {
+        return Ok(None);
+    }
+    Ok(Some((name, dims)))
+}
+
+// ------------------------------------------------------------- mapping
+
+fn mul(a: u64, b: u64) -> Result<u64, IngestError> {
+    a.checked_mul(b).ok_or_else(|| err("dimension overflow"))
+}
+
+fn prod(dims: &[u64]) -> Result<u64, IngestError> {
+    dims.iter().try_fold(1u64, |acc, &d| mul(acc, d))
+}
+
+fn udims(t: &Tensor) -> Result<Vec<u64>, IngestError> {
+    t.dims
+        .iter()
+        .map(|&d| u64::try_from(d).map_err(|_| err(format!("negative dim in tensor '{}'", t.name))))
+        .collect()
+}
+
+/// Conv/pool spatial output size, floor mode.
+fn out_spatial(
+    input: u64,
+    kernel: u64,
+    stride: u64,
+    pad: u64,
+    dil: u64,
+) -> Result<u64, IngestError> {
+    let eff = mul(kernel.saturating_sub(1), dil)? + 1;
+    let padded = input + 2 * pad;
+    let span = padded
+        .checked_sub(eff)
+        .ok_or_else(|| err("kernel larger than padded input"))?;
+    Ok(span / stride.max(1) + 1)
+}
+
+struct Shapes {
+    act: HashMap<String, Vec<u64>>,
+}
+
+impl Shapes {
+    fn need(&self, name: &str, node: &str) -> Result<&Vec<u64>, IngestError> {
+        self.act
+            .get(name)
+            .ok_or_else(|| err(format!("missing shape for input '{name}' of node '{node}'")))
+    }
+}
+
+/// Decode an ONNX model into a [`Workload`] named `name`.
+pub fn workload_from_onnx(bytes: &[u8], name: &str) -> Result<Workload, IngestError> {
+    // ModelProto.graph = field 7
+    let mut r = Reader::new(bytes);
+    let mut graph: &[u8] = &[];
+    while !r.done() {
+        if let (7, Wire::Len(g)) = r.field()? {
+            graph = g;
+        }
+    }
+    if graph.is_empty() {
+        return Err(err("no graph in model"));
+    }
+
+    // GraphProto: node=1, initializer=5, input=11
+    let mut nodes = Vec::new();
+    let mut inits: HashMap<String, Tensor> = HashMap::new();
+    let mut shapes = Shapes {
+        act: HashMap::new(),
+    };
+    let mut r = Reader::new(graph);
+    while !r.done() {
+        match r.field()? {
+            (1, Wire::Len(b)) => nodes.push(parse_node(b)?),
+            (5, Wire::Len(b)) => {
+                let t = parse_tensor(b)?;
+                if t.data_type == 8 {
+                    return Err(err(format!(
+                        "unsupported string tensor dtype in initializer '{}'",
+                        t.name
+                    )));
+                }
+                inits.insert(t.name.clone(), t);
+            }
+            (11, Wire::Len(b)) => {
+                if let Some((n, dims)) = parse_value_info(b)? {
+                    shapes.act.insert(n, dims);
+                }
+            }
+            _ => {}
+        }
+    }
+    // initializers shadow graph inputs (standard ONNX layout)
+    for n in inits.keys() {
+        shapes.act.remove(n);
+    }
+
+    let mut layers = Vec::new();
+    for (idx, node) in nodes.iter().enumerate() {
+        map_node(node, idx, &inits, &mut shapes, &mut layers)?;
+    }
+    if layers.is_empty() {
+        return Err(err("no mappable Conv/Gemm/MatMul layers found"));
+    }
+    validate_layers(&layers)?;
+    Ok(Workload::new(name, layers))
+}
+
+fn map_node(
+    node: &Node,
+    idx: usize,
+    inits: &HashMap<String, Tensor>,
+    shapes: &mut Shapes,
+    layers: &mut Vec<Layer>,
+) -> Result<(), IngestError> {
+    let label = node.label(idx);
+    match node.op.as_str() {
+        "Conv" => {
+            let x = shapes.need(node.inputs.first().map_or("", |s| s), &label)?.clone();
+            let wname = node.inputs.get(1).ok_or_else(|| err(format!("{label}: Conv without weights")))?;
+            let w = inits
+                .get(wname)
+                .ok_or_else(|| err(format!("{label}: weight '{wname}' is not an initializer")))?;
+            let wd = udims(w)?;
+            if wd.len() != 4 || x.len() < 3 {
+                return Err(err(format!("{label}: expected 4-D weights and 3/4-D input")));
+            }
+            let (c, h, wi) = match x.len() {
+                3 => (x[0], x[1], x[2]),
+                _ => (x[1], x[2], x[3]),
+            };
+            let (cout, cin_g, kh, kw) = (wd[0], wd[1], wd[2], wd[3]);
+            let group = u64::try_from(node.attr_i("group", 1)).map_err(|_| err("bad group"))?.max(1);
+            let get2 = |name: &str, d: u64| -> (u64, u64) {
+                match node.attr_ints(name) {
+                    Some([a, b, ..]) => (*a as u64, *b as u64),
+                    Some([a]) => (*a as u64, *a as u64),
+                    _ => (d, d),
+                }
+            };
+            let (sh, sw) = get2("strides", 1);
+            let (dh, dw) = get2("dilations", 1);
+            let (ph, pw) = match node.attr_ints("pads") {
+                Some([a, b, _, _]) => (*a as u64, *b as u64),
+                Some([a, b]) => (*a as u64, *b as u64),
+                _ => (0, 0),
+            };
+            let oh = out_spatial(h, kh, sh, ph, dh)?;
+            let ow = out_spatial(wi, kw, sw, pw, dw)?;
+            let passes = mul(oh, ow)?;
+            let depthwise = group == c && cout == c && cin_g == 1;
+            let (kind, k, n) = if depthwise {
+                (LayerKind::DepthwiseConv, mul(kh, kw)?, c)
+            } else {
+                (LayerKind::Conv, mul(mul(kh, kw)?, cin_g)?, cout)
+            };
+            layers.push(Layer {
+                name: label,
+                kind,
+                k,
+                n,
+                passes,
+                weights: mul(mul(cout, cin_g)?, mul(kh, kw)?)?,
+                in_bytes: mul(c, mul(h, wi)?)?,
+                out_bytes: mul(cout, passes)?,
+            });
+            if let Some(out) = node.outputs.first() {
+                shapes.act.insert(out.clone(), vec![1, cout, oh, ow]);
+            }
+        }
+        "Gemm" => {
+            let x = shapes.need(node.inputs.first().map_or("", |s| s), &label)?.clone();
+            let wname = node.inputs.get(1).ok_or_else(|| err(format!("{label}: Gemm without weights")))?;
+            let w = inits
+                .get(wname)
+                .ok_or_else(|| err(format!("{label}: weight '{wname}' is not an initializer")))?;
+            let wd = udims(w)?;
+            if wd.len() != 2 {
+                return Err(err(format!("{label}: Gemm weights must be 2-D")));
+            }
+            let (k, n) = if node.attr_i("transB", 0) != 0 {
+                (wd[1], wd[0])
+            } else {
+                (wd[0], wd[1])
+            };
+            let m = prod(&x)? / k.max(1);
+            let passes = m.max(1);
+            layers.push(Layer {
+                name: label,
+                kind: LayerKind::Fc,
+                k,
+                n,
+                passes,
+                weights: mul(k, n)?,
+                in_bytes: mul(passes, k)?,
+                out_bytes: mul(passes, n)?,
+            });
+            if let Some(out) = node.outputs.first() {
+                shapes.act.insert(out.clone(), vec![passes, n]);
+            }
+        }
+        "MatMul" => {
+            let a = shapes.need(node.inputs.first().map_or("", |s| s), &label)?.clone();
+            let bname = node.inputs.get(1).ok_or_else(|| err(format!("{label}: MatMul needs 2 inputs")))?;
+            if let Some(w) = inits.get(bname) {
+                // weight-stationary: right operand is a constant matrix
+                let wd = udims(w)?;
+                if wd.len() < 2 {
+                    return Err(err(format!("{label}: MatMul weights must be >= 2-D")));
+                }
+                let (k, n) = (wd[wd.len() - 2], wd[wd.len() - 1]);
+                let passes = (prod(&a)? / k.max(1)).max(1);
+                layers.push(Layer {
+                    name: label,
+                    kind: LayerKind::Fc,
+                    k,
+                    n,
+                    passes,
+                    weights: mul(k, n)?,
+                    in_bytes: mul(passes, k)?,
+                    out_bytes: mul(passes, n)?,
+                });
+                if let Some(out) = node.outputs.first() {
+                    shapes.act.insert(out.clone(), vec![passes, n]);
+                }
+            } else {
+                // activation×activation — the attention pattern
+                let b = shapes.need(bname, &label)?.clone();
+                if a.len() < 2 || b.len() < 2 {
+                    return Err(err(format!("{label}: dynamic MatMul operands must be >= 2-D")));
+                }
+                let k = a[a.len() - 1];
+                let n = b[b.len() - 1];
+                if b[b.len() - 2] != k {
+                    return Err(err(format!("{label}: inner dims disagree")));
+                }
+                let m_total = (prod(&a)? / k.max(1)).max(1);
+                let in_bytes = prod(&a)? + prod(&b)?;
+                let mut out_shape = a[..a.len() - 1].to_vec();
+                out_shape.push(n);
+                layers.push(Layer {
+                    name: label,
+                    kind: LayerKind::Dynamic,
+                    k,
+                    n,
+                    passes: m_total,
+                    weights: 0,
+                    in_bytes,
+                    out_bytes: mul(m_total, n)?,
+                });
+                if let Some(out) = node.outputs.first() {
+                    shapes.act.insert(out.clone(), out_shape);
+                }
+            }
+        }
+        "MaxPool" | "AveragePool" => {
+            let x = shapes.need(node.inputs.first().map_or("", |s| s), &label)?.clone();
+            if x.len() == 4 {
+                let ks = node.attr_ints("kernel_shape").unwrap_or(&[1, 1]);
+                let (kh, kw) = (ks.first().copied().unwrap_or(1) as u64, ks.last().copied().unwrap_or(1) as u64);
+                let (sh, sw) = match node.attr_ints("strides") {
+                    Some([a, b, ..]) => (*a as u64, *b as u64),
+                    _ => (kh, kw),
+                };
+                let (ph, pw) = match node.attr_ints("pads") {
+                    Some([a, b, ..]) => (*a as u64, *b as u64),
+                    _ => (0, 0),
+                };
+                let oh = out_spatial(x[2], kh, sh, ph, 1)?;
+                let ow = out_spatial(x[3], kw, sw, pw, 1)?;
+                if let Some(out) = node.outputs.first() {
+                    shapes.act.insert(out.clone(), vec![x[0], x[1], oh, ow]);
+                }
+            }
+        }
+        "GlobalAveragePool" => {
+            let x = shapes.need(node.inputs.first().map_or("", |s| s), &label)?.clone();
+            if x.len() == 4 {
+                if let Some(out) = node.outputs.first() {
+                    shapes.act.insert(out.clone(), vec![x[0], x[1], 1, 1]);
+                }
+            }
+        }
+        "Flatten" => {
+            let x = shapes.need(node.inputs.first().map_or("", |s| s), &label)?.clone();
+            if let Some(out) = node.outputs.first() {
+                shapes.act.insert(out.clone(), vec![1, prod(&x)?]);
+            }
+        }
+        "Reshape" => {
+            let x = shapes.need(node.inputs.first().map_or("", |s| s), &label)?.clone();
+            let target = node
+                .inputs
+                .get(1)
+                .and_then(|n| inits.get(n))
+                .map(|t| t.i64s.clone())
+                .unwrap_or_default();
+            if !target.is_empty() {
+                let total = prod(&x)?;
+                let mut dims: Vec<u64> = Vec::new();
+                let mut infer = None;
+                for (i, &d) in target.iter().enumerate() {
+                    match d {
+                        -1 => {
+                            infer = Some(i);
+                            dims.push(1);
+                        }
+                        0 => dims.push(x.get(i).copied().unwrap_or(1)),
+                        d if d > 0 => dims.push(d as u64),
+                        _ => return Err(err(format!("{label}: bad reshape target"))),
+                    }
+                }
+                if let Some(i) = infer {
+                    let rest = prod(&dims)?;
+                    dims[i] = total / rest.max(1);
+                }
+                if let Some(out) = node.outputs.first() {
+                    shapes.act.insert(out.clone(), dims);
+                }
+            }
+        }
+        "Transpose" => {
+            let x = shapes.need(node.inputs.first().map_or("", |s| s), &label)?.clone();
+            let dims: Vec<u64> = match node.attr_ints("perm") {
+                Some(perm) if perm.len() == x.len() => perm
+                    .iter()
+                    .map(|&p| x.get(p as usize).copied().unwrap_or(1))
+                    .collect(),
+                _ => x.iter().rev().copied().collect(),
+            };
+            if let Some(out) = node.outputs.first() {
+                shapes.act.insert(out.clone(), dims);
+            }
+        }
+        // shape-preserving ops: propagate the first input's shape
+        "Relu" | "LeakyRelu" | "Sigmoid" | "Tanh" | "Softmax" | "Erf" | "Gelu" | "Clip"
+        | "BatchNormalization" | "LayerNormalization" | "InstanceNormalization" | "Dropout"
+        | "Identity" | "Add" | "Sub" | "Mul" | "Div" | "Pow" | "Sqrt" | "Cast" | "Pad" => {
+            if let (Some(inp), Some(out)) = (node.inputs.first(), node.outputs.first()) {
+                if let Some(s) = shapes.act.get(inp).cloned() {
+                    shapes.act.insert(out.clone(), s);
+                }
+            }
+        }
+        // unknown op: its outputs become shape-unknown (only an error if
+        // a downstream matmul needs them)
+        _ => {
+            for out in &node.outputs {
+                shapes.act.remove(out);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncated_bytes_are_typed_errors_not_panics() {
+        for bytes in [
+            &[0x3a][..],             // key for field 7 LEN, then nothing
+            &[0x3a, 0x05, 0x0a][..], // declared length exceeds buffer
+            &[0xff; 16][..],         // overlong varint garbage
+            &[][..],                 // empty model: no graph
+        ] {
+            let e = workload_from_onnx(bytes, "t").unwrap_err();
+            assert!(matches!(e, IngestError::Onnx(_)), "{bytes:?} -> {e}");
+        }
+    }
+
+    #[test]
+    fn spatial_arithmetic_is_checked() {
+        assert_eq!(out_spatial(224, 7, 2, 3, 1).unwrap(), 112);
+        assert_eq!(out_spatial(7, 7, 1, 0, 1).unwrap(), 1);
+        // kernel larger than padded input: error, not underflow panic
+        assert!(out_spatial(3, 7, 1, 0, 1).is_err());
+    }
+
+    #[test]
+    fn varint_roundtrip_and_bounds() {
+        let mut r = Reader::new(&[0x96, 0x01]);
+        assert_eq!(r.varint().unwrap(), 150);
+        let mut r = Reader::new(&[0x80]);
+        assert!(r.varint().is_err());
+    }
+}

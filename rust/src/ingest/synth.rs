@@ -1,0 +1,341 @@
+//! Seeded synthetic workload generator.
+//!
+//! A [`WorkloadDistribution`] describes a family of plausible networks
+//! (depth / channel / kernel / attention-dimension ranges); sampling is a
+//! **pure function of `(distribution, seed, index)`** — each population
+//! member derives its own RNG from the seed and its index, with no state
+//! threaded between members. Populations are therefore bit-identical
+//! regardless of `--threads`, `--workers`, construction order, or
+//! kill/`--resume` (the `synth:` token rides the `--spec` string, which
+//! is already part of the checkpoint config fingerprint).
+//!
+//! Every emitted layer uses the same matmul-view formulas as the
+//! hand-coded tables in `workloads/cnn.rs` / `workloads/transformer.rs`:
+//! im2col convs, per-channel depthwise convs, `passes = seq` projections
+//! and weightless dynamic attention matmuls. Generated dims stay far
+//! inside [`super::MAX_DIM`], so every sample passes ingestion
+//! validation and — like all workloads — is covered by the compiled
+//! evaluator's geometry grid (see `model::compiled`).
+
+use super::IngestError;
+use crate::util::rng::Rng;
+use crate::workloads::{Layer, LayerKind, Workload, WorkloadSet};
+
+/// Parameterized distribution over synthetic networks.
+#[derive(Clone, Debug)]
+pub struct WorkloadDistribution {
+    /// Preset name (`cnn` | `transformer` | `mixed`).
+    pub id: String,
+    /// Probability a sample is a CNN (the rest are transformers).
+    pub cnn_frac: f64,
+    /// Conv stages per CNN (inclusive range).
+    pub stages: (usize, usize),
+    /// Convs per stage (inclusive range).
+    pub convs_per_stage: (usize, usize),
+    /// Stem channel choices.
+    pub base_channels: Vec<u64>,
+    /// Conv kernel-size choices.
+    pub kernels: Vec<u64>,
+    /// Chance a stage uses depthwise-separable convs.
+    pub depthwise_frac: f64,
+    /// Classifier output classes (inclusive range).
+    pub classes: (u64, u64),
+    /// Transformer model-dimension choices.
+    pub d_model: Vec<u64>,
+    /// Attention head-count choices (must divide the sampled `d_model`).
+    pub heads: Vec<u64>,
+    /// Sequence-length choices.
+    pub seq: Vec<u64>,
+    /// Transformer blocks (inclusive range).
+    pub blocks: (usize, usize),
+    /// FFN expansion-factor choices.
+    pub ffn_mult: Vec<u64>,
+}
+
+impl WorkloadDistribution {
+    /// Look up a named preset.
+    pub fn named(id: &str) -> Result<WorkloadDistribution, IngestError> {
+        let base = WorkloadDistribution {
+            id: id.to_string(),
+            cnn_frac: 0.5,
+            stages: (3, 5),
+            convs_per_stage: (1, 3),
+            base_channels: vec![16, 24, 32, 48, 64],
+            kernels: vec![1, 3, 3, 5, 7],
+            depthwise_frac: 0.3,
+            classes: (10, 1000),
+            d_model: vec![128, 192, 256, 384, 512, 768],
+            heads: vec![2, 4, 8, 12],
+            seq: vec![64, 128, 196, 256, 384, 512],
+            blocks: (2, 12),
+            ffn_mult: vec![2, 3, 4],
+        };
+        match id {
+            "mixed" => Ok(base),
+            "cnn" => Ok(WorkloadDistribution {
+                cnn_frac: 1.0,
+                ..base
+            }),
+            "transformer" => Ok(WorkloadDistribution {
+                cnn_frac: 0.0,
+                ..base
+            }),
+            other => Err(IngestError::Synth(format!(
+                "unknown distribution '{other}' (cnn|transformer|mixed)"
+            ))),
+        }
+    }
+
+    /// Draw one network. Pure in `rng`: the same RNG state always yields
+    /// the same workload.
+    pub fn sample(&self, name: impl Into<String>, rng: &mut Rng) -> Workload {
+        if rng.chance(self.cnn_frac) {
+            self.sample_cnn(name, rng)
+        } else {
+            self.sample_transformer(name, rng)
+        }
+    }
+
+    fn sample_cnn(&self, name: impl Into<String>, rng: &mut Rng) -> Workload {
+        let mut layers = Vec::new();
+        let mut hw: u64 = *rng.choose(&[32, 64, 96, 128, 224]);
+        let mut c: u64 = 3;
+        let mut cout = *rng.choose(&self.base_channels);
+        // stem: stride-2 conv
+        let k0 = *rng.choose(&[3, 5, 7]);
+        hw = conv_out(hw, k0, 2);
+        layers.push(conv("stem", c, cout, k0, hw));
+        c = cout;
+        let stages = rng.range(self.stages.0, self.stages.1);
+        for s in 0..stages {
+            let depthwise = rng.chance(self.depthwise_frac);
+            let convs = rng.range(self.convs_per_stage.0, self.convs_per_stage.1);
+            for j in 0..convs {
+                let kk = *rng.choose(&self.kernels);
+                if depthwise {
+                    layers.push(Layer {
+                        name: format!("s{s}.dw{j}"),
+                        kind: LayerKind::DepthwiseConv,
+                        k: kk * kk,
+                        n: c,
+                        passes: hw * hw,
+                        weights: kk * kk * c,
+                        in_bytes: c * hw * hw,
+                        out_bytes: c * hw * hw,
+                    });
+                    layers.push(conv(&format!("s{s}.pw{j}"), c, cout, 1, hw));
+                } else {
+                    layers.push(conv(&format!("s{s}.conv{j}"), c, cout, kk, hw));
+                }
+                c = cout;
+            }
+            // downsample and widen between stages (cap width at 512)
+            if hw > 7 {
+                hw = conv_out(hw, 3, 2);
+            }
+            cout = (cout * 2).min(512);
+        }
+        // global average pool -> classifier
+        let classes = self.classes.0 + rng.below((self.classes.1 - self.classes.0 + 1) as usize) as u64;
+        layers.push(Layer {
+            name: "fc".into(),
+            kind: LayerKind::Fc,
+            k: c,
+            n: classes,
+            passes: 1,
+            weights: c * classes,
+            in_bytes: c,
+            out_bytes: classes,
+        });
+        Workload::new(name, layers)
+    }
+
+    fn sample_transformer(&self, name: impl Into<String>, rng: &mut Rng) -> Workload {
+        let d = *rng.choose(&self.d_model);
+        let divisors: Vec<u64> = self.heads.iter().copied().filter(|h| d % h == 0).collect();
+        let heads = *rng.choose(&divisors);
+        let hd = d / heads;
+        let seq = *rng.choose(&self.seq);
+        let blocks = rng.range(self.blocks.0, self.blocks.1);
+        let ffn = *rng.choose(&self.ffn_mult) * d;
+        let mut layers = Vec::new();
+        for b in 0..blocks {
+            layers.push(proj(&format!("blk{b}.qkv"), d, 3 * d, seq));
+            layers.push(attn(&format!("blk{b}.scores"), heads, hd, seq));
+            layers.push(attn(&format!("blk{b}.context"), heads, hd, seq));
+            layers.push(proj(&format!("blk{b}.attn_out"), d, d, seq));
+            layers.push(proj(&format!("blk{b}.ffn_up"), d, ffn, seq));
+            layers.push(proj(&format!("blk{b}.ffn_down"), ffn, d, seq));
+        }
+        let classes = self.classes.0 + rng.below((self.classes.1 - self.classes.0 + 1) as usize) as u64;
+        layers.push(proj("head", d, classes, 1));
+        Workload::new(name, layers)
+    }
+
+    /// Generate a population of `n` networks. Member `i` is a pure
+    /// function of `(self.id, seed, i)` — no RNG state crosses members,
+    /// so any subset can be regenerated independently and the set is
+    /// identical for every thread/worker/resume schedule.
+    pub fn population(&self, n: usize, seed: u64) -> WorkloadSet {
+        let workloads = (0..n)
+            .map(|i| {
+                let mut rng = self.member_rng(seed, i);
+                self.sample(format!("syn-{}-s{seed}-{i:03}", self.id), &mut rng)
+            })
+            .collect();
+        WorkloadSet { workloads }
+    }
+
+    fn member_rng(&self, seed: u64, i: usize) -> Rng {
+        // fold the distribution id in so e.g. cnn/mixed populations at the
+        // same seed differ; FNV-1a over the id bytes
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self.id.as_bytes() {
+            h = (h ^ u64::from(*b)).wrapping_mul(0x100000001b3);
+        }
+        Rng::seed_from(
+            seed ^ h ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        )
+    }
+}
+
+/// `(hw + 2·pad − k)/stride + 1` with same-ish padding `k/2`.
+fn conv_out(hw: u64, k: u64, stride: u64) -> u64 {
+    ((hw + 2 * (k / 2) - k) / stride + 1).max(1)
+}
+
+fn conv(name: &str, cin: u64, cout: u64, k: u64, out_hw: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        kind: LayerKind::Conv,
+        k: k * k * cin,
+        n: cout,
+        passes: out_hw * out_hw,
+        weights: k * k * cin * cout,
+        in_bytes: cin * out_hw * out_hw,
+        out_bytes: cout * out_hw * out_hw,
+    }
+}
+
+fn proj(name: &str, k: u64, n: u64, seq: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        kind: LayerKind::Fc,
+        k,
+        n,
+        passes: seq,
+        weights: k * n,
+        in_bytes: seq * k,
+        out_bytes: seq * n,
+    }
+}
+
+fn attn(name: &str, heads: u64, head_dim: u64, seq: u64) -> Layer {
+    Layer {
+        name: name.to_string(),
+        kind: LayerKind::Dynamic,
+        k: heads * head_dim,
+        n: seq,
+        passes: seq,
+        weights: 0,
+        in_bytes: 2 * seq * heads * head_dim,
+        out_bytes: seq * seq * heads / 8,
+    }
+}
+
+/// Parse a `synth:<dist>:<n>:<seed>` token into its population.
+/// (`ScenarioSpec::parse` recognizes the `synth:` prefix and hands the
+/// first three `:`-separated fields here.)
+pub fn parse_synth_parts(dist: &str, n: &str, seed: &str) -> Result<(WorkloadDistribution, usize, u64), IngestError> {
+    let d = WorkloadDistribution::named(dist)?;
+    let n: usize = n
+        .parse()
+        .map_err(|_| IngestError::Synth(format!("bad population size '{n}'")))?;
+    if n == 0 || n > 4096 {
+        return Err(IngestError::Synth(format!(
+            "population size {n} outside 1..=4096"
+        )));
+    }
+    let seed: u64 = seed
+        .parse()
+        .map_err(|_| IngestError::Synth(format!("bad seed '{seed}'")))?;
+    Ok((d, n, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn populations_are_pure_functions_of_seed_and_index() {
+        let d = WorkloadDistribution::named("mixed").unwrap();
+        let a = d.population(20, 7);
+        let b = d.population(20, 7);
+        for (x, y) in a.workloads.iter().zip(&b.workloads) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.layers.len(), y.layers.len());
+            for (la, lb) in x.layers.iter().zip(&y.layers) {
+                assert_eq!(
+                    [la.k, la.n, la.passes, la.weights, la.in_bytes, la.out_bytes],
+                    [lb.k, lb.n, lb.passes, lb.weights, lb.in_bytes, lb.out_bytes]
+                );
+            }
+        }
+        // member i alone matches member i of the full population
+        let mut rng = d.member_rng(7, 13);
+        let solo = d.sample("syn-mixed-s7-013".to_string(), &mut rng);
+        assert_eq!(solo.layers.len(), a.workloads[13].layers.len());
+        assert_eq!(solo.layers[0].k, a.workloads[13].layers[0].k);
+    }
+
+    #[test]
+    fn different_seeds_and_distributions_differ() {
+        let d = WorkloadDistribution::named("mixed").unwrap();
+        let a = d.population(10, 1);
+        let b = d.population(10, 2);
+        let same = a
+            .workloads
+            .iter()
+            .zip(&b.workloads)
+            .all(|(x, y)| x.layers.len() == y.layers.len() && x.layers[0].k == y.layers[0].k);
+        assert!(!same, "seed must matter");
+        let cnn = WorkloadDistribution::named("cnn").unwrap().population(10, 1);
+        assert!(cnn
+            .workloads
+            .iter()
+            .all(|w| w.layers.iter().all(|l| !l.dynamic())));
+        let tf = WorkloadDistribution::named("transformer")
+            .unwrap()
+            .population(10, 1);
+        assert!(tf
+            .workloads
+            .iter()
+            .all(|w| w.layers.iter().any(|l| l.dynamic())));
+    }
+
+    #[test]
+    fn every_sample_passes_ingestion_validation() {
+        for dist in ["cnn", "transformer", "mixed"] {
+            let d = WorkloadDistribution::named(dist).unwrap();
+            for (i, w) in d.population(50, 99).workloads.iter().enumerate() {
+                super::super::validate_layers(&w.layers)
+                    .unwrap_or_else(|e| panic!("{dist}[{i}] {}: {e}", w.name));
+                assert!(!w.layers.is_empty());
+                assert!(w.total_weights() > 0, "{dist}[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn token_parsing_rejects_bad_fields() {
+        assert!(parse_synth_parts("mixed", "200", "11").is_ok());
+        assert!(matches!(
+            parse_synth_parts("gan", "10", "1").unwrap_err(),
+            IngestError::Synth(_)
+        ));
+        assert!(parse_synth_parts("cnn", "0", "1").is_err());
+        assert!(parse_synth_parts("cnn", "9999", "1").is_err());
+        assert!(parse_synth_parts("cnn", "ten", "1").is_err());
+        assert!(parse_synth_parts("cnn", "10", "-3").is_err());
+    }
+}

@@ -10,6 +10,11 @@
 //!   architecture / system parameters) with index-coded designs.
 //! * [`workloads`] — per-layer shape models of the nine neural-network
 //!   workloads evaluated in the paper.
+//! * [`ingest`] — workload ingestion beyond the hand-coded nine: a
+//!   layer-list JSON parser (schema-pinned), a pragmatic ONNX-subset
+//!   reader, and the seeded synthetic generator behind `--spec
+//!   synth:<dist>:<n>:<seed>` scenario families and the `population`
+//!   experiment (see `docs/workloads.md`).
 //! * [`model`] — the analytical IMC hardware evaluator (energy / latency /
 //!   area for tiled RRAM- and SRAM-based crossbar architectures); the
 //!   CIMLoop substitute, mirrored 1:1 by the AOT-compiled JAX/Pallas
@@ -80,6 +85,7 @@
 pub mod accuracy;
 pub mod coordinator;
 pub mod experiments;
+pub mod ingest;
 pub mod model;
 pub mod objective;
 pub mod orchestrator;

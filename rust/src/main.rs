@@ -12,7 +12,8 @@
 //! imcopt search [--mem rram|sram] [--obj edap|edp|energy|latency|area|cost|acc]
 //!               [--agg max|all|mean] [--workloads a,b,c] [--seed N]
 //! imcopt eval --design R,C,M,T,G,B,Vstep,TC,GLB,TECH [--mem rram|sram]
-//! imcopt workloads           # list workload statistics
+//! imcopt workloads [--spec S] # list workload statistics (canonical nine,
+//!                             # or an ingested/synthetic --spec family)
 //! imcopt space               # list search-space variants and sizes
 //! imcopt artifacts           # verify AOT artifacts load and agree with native
 //! ```
@@ -30,6 +31,7 @@ use imcopt::coordinator::ExpContext;
 use imcopt::experiments;
 use imcopt::model::{MemoryTech, NativeEvaluator};
 use imcopt::objective::{Aggregation, Objective, ObjectiveKind};
+use imcopt::scenarios::ScenarioSpec;
 use imcopt::search::Optimizer;
 use imcopt::space::SearchSpace;
 use imcopt::util::cli::Args;
@@ -54,7 +56,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "validate" => cmd_validate(args),
         "search" => cmd_search(args),
         "eval" => cmd_eval(args),
-        "workloads" => cmd_workloads(),
+        "workloads" => cmd_workloads(args),
         "space" => cmd_space(),
         "artifacts" => cmd_artifacts(),
         "" | "help" => {
@@ -80,7 +82,8 @@ fn print_help() {
          \x20                baseline (the ci.sh regression gate; default 15%)\n\
          \x20 search         run one joint co-optimization\n\
          \x20 eval           evaluate a single design\n\
-         \x20 workloads      list workload statistics\n\
+         \x20 workloads      list workload statistics (--spec S: an ingested or\n\
+         \x20                synthetic family instead of the canonical nine)\n\
          \x20 space          list search-space variants\n\
          \x20 artifacts      verify AOT artifacts vs the native evaluator\n\
          \n\
@@ -92,8 +95,12 @@ fn print_help() {
          \x20 --portfolio P  restrict `transfer` to portfolio ids (comma-separated)\n\
          \x20 --moo-mode M   pareto objective mode: metric|workload (default: both)\n\
          \x20 --pareto-cap N pareto front-archive capacity (default 128)\n\
-         \x20 --spec S       user scenario family w1+w2+...:rram|sram[:agg] for\n\
-         \x20                genmatrix_k / transfer / pareto (default: paper sets)\n\
+         \x20 --spec S       user scenario family for genmatrix_k / transfer /\n\
+         \x20                population / pareto: w1+w2+...:rram|sram[:agg] with\n\
+         \x20                canonical names or .json/.onnx file paths as workload\n\
+         \x20                tokens, or a seeded synthetic population\n\
+         \x20                synth:cnn|transformer|mixed:<n>:<seed>[:mem][:agg]\n\
+         \x20                (default: paper sets; population: synth:mixed:200:seed)\n\
          \x20 --robust M     robust accuracy-aware objectives: aggregate each\n\
          \x20                design's score over a seeded device-variation\n\
          \x20                ensemble (worst|cvar<q>|mean, e.g. cvar0.25; off by\n\
@@ -376,6 +383,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
             match exp.id() {
                 "genmatrix_k" => cell_dirs.push(("genmatrix_k", "genmatrix_k_cells")),
                 "transfer" => cell_dirs.push(("transfer", "transfer_cells")),
+                "population" => cell_dirs.push(("population", "population_cells")),
                 "pareto" => pareto_present = true,
                 "robustness" => robustness_present = true,
                 _ => {}
@@ -625,7 +633,7 @@ fn cmd_search(args: &Args) -> Result<()> {
     );
     for (w, m) in set.workloads.iter().zip(&ev.metrics) {
         t.row(vec![
-            w.name.into(),
+            w.name.clone(),
             format!("{:.4}", m.energy * 1e3),
             format!("{:.4}", m.latency * 1e3),
             format!("{:.4}", m.edap()),
@@ -667,16 +675,24 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_workloads() -> Result<()> {
+fn cmd_workloads(args: &Args) -> Result<()> {
+    // `--spec` lists an ingested/synthetic family instead of the
+    // canonical nine (also the CI corpus-parsing entry point)
+    let workloads: Vec<imcopt::workloads::Workload> = match args.opt("spec") {
+        Some(s) => ScenarioSpec::parse(s)?.set.workloads,
+        None => ALL_NAMES
+            .iter()
+            .map(|n| imcopt::workloads::by_name(n))
+            .collect::<Result<_>>()?,
+    };
     let mut t = Table::new(
         "workload models (matmul view; 8-bit weights/activations)",
         &["name", "mapped layers", "dynamic", "weights", "largest layer", "MACs"],
     );
-    for name in ALL_NAMES {
-        let w = imcopt::workloads::by_name(name)?;
+    for w in &workloads {
         let dynamic = w.layers.iter().filter(|l| l.dynamic()).count();
         t.row(vec![
-            name.into(),
+            w.name.clone(),
             w.mapped_layers().to_string(),
             dynamic.to_string(),
             format!("{:.3e}", w.total_weights() as f64),

@@ -401,6 +401,35 @@ mod tests {
         }
     }
 
+    /// Ingested and synthetic geometries are covered exactly like the
+    /// hand-coded nets: bucket keys are built per grid point regardless
+    /// of layer shapes, so any workload that passes ingestion validation
+    /// rides the O(1) path for every on-grid design — the `population`
+    /// experiment's "no off-grid fallbacks at 200-net scale" guarantee.
+    #[test]
+    fn buckets_cover_ingested_and_synthetic_geometries() {
+        let spaces = [
+            (SearchSpace::rram(), MemoryTech::Rram),
+            (SearchSpace::sram(), MemoryTech::Sram),
+        ];
+        let dist = crate::ingest::WorkloadDistribution::named("mixed").unwrap();
+        let mut pop = dist.population(12, 77).workloads;
+        // an ingested workload (JSON round trip of a canonical net)
+        let text = crate::ingest::workload_to_json(&by_name("mobilenetv3").unwrap()).to_string();
+        pop.push(crate::ingest::parse_workload_text(&text, "ingested").unwrap());
+        for w in &pop {
+            let cw = w.compiled();
+            for (space, mem) in &spaces {
+                let mut rng = Rng::seed_from(11);
+                for _ in 0..20 {
+                    let raw = space.decode(&space.random(&mut rng));
+                    let view = DesignView::new(&raw, *mem);
+                    assert!(cw.covers(&view), "{}: {} off-grid", w.name, space.variant);
+                }
+            }
+        }
+    }
+
     /// Bucket keys cover every (rows, cols, bits) combination of every
     /// space variant — the compiled path must never fall back on-grid.
     #[test]

@@ -122,19 +122,29 @@ impl ScenarioSpec {
     /// Parse a user-defined scenario family from a `--spec` string:
     /// `<w1>+<w2>+...:<mem>[:<agg>][:<corner>]`, e.g.
     /// `resnet18+vit+gpt2-medium:sram:mean` or
-    /// `resnet18+alexnet:rram:high`. Workload names are the canonical
-    /// ones of [`crate::workloads::ALL_NAMES`], `mem` is `rram` | `sram`
-    /// (choosing the matching search space), and the optional
-    /// aggregation (`max` | `all` | `mean`) defaults to the paper
-    /// convention for the technology (RRAM → Max, SRAM → Mean). An
-    /// optional device-variation corner (`low` | `nominal` | `high`, in
-    /// either trailing position) pins the accuracy model to that
-    /// operating point and switches the objective to accuracy-aware
-    /// EDAP — the noise-sweep scenario family; every workload must then
-    /// carry a Fig. 8 accuracy baseline. The resulting spec is named
-    /// `custom`; the checkpoint configuration fingerprint pins the full
-    /// `--spec` string, so journals from different custom families never
-    /// mix.
+    /// `resnet18+alexnet:rram:high`. Workload tokens are the canonical
+    /// names of [`crate::workloads::ALL_NAMES`] **or file paths**
+    /// (anything with a `/` or a `.json`/`.onnx` extension, read through
+    /// [`crate::ingest::load_path`]); `mem` is `rram` | `sram` (choosing
+    /// the matching search space), and the optional aggregation
+    /// (`max` | `all` | `mean`) defaults to the paper convention for the
+    /// technology (RRAM → Max, SRAM → Mean). An optional
+    /// device-variation corner (`low` | `nominal` | `high`, in either
+    /// trailing position) pins the accuracy model to that operating
+    /// point and switches the objective to accuracy-aware EDAP — the
+    /// noise-sweep scenario family; every workload must then carry a
+    /// Fig. 8 accuracy baseline. The resulting spec is named `custom`;
+    /// the checkpoint configuration fingerprint pins the full `--spec`
+    /// string, so journals from different custom families never mix.
+    ///
+    /// The whole string may instead be a synthetic-population token,
+    /// `synth:<dist>:<n>:<seed>[:<mem>][:<agg>][:<corner>]` with `dist`
+    /// in `cnn` | `transformer` | `mixed` (mem defaults to `rram`):
+    /// member `i` is a pure function of `(dist, seed, i)` (see
+    /// [`crate::ingest::WorkloadDistribution`]), so the family is
+    /// bit-identical across threads, workers and resume. Synthetic specs
+    /// are named `synth-<dist><n>-s<seed>`, keeping shared checkpoint
+    /// namespaces from colliding across families.
     ///
     /// ```
     /// use imcopt::scenarios::ScenarioSpec;
@@ -145,28 +155,55 @@ impl ScenarioSpec {
     /// assert!(ScenarioSpec::parse("resnet34:rram").is_err());
     /// let sweep = ScenarioSpec::parse("resnet18+vgg16:rram:high").unwrap();
     /// assert!(sweep.corner.is_some());
+    /// let synth = ScenarioSpec::parse("synth:mixed:20:7:sram").unwrap();
+    /// assert_eq!(synth.name, "synth-mixed20-s7");
+    /// assert_eq!(synth.set.len(), 20);
     /// ```
     pub fn parse(spec: &str) -> anyhow::Result<ScenarioSpec> {
         let parts: Vec<&str> = spec.split(':').collect();
-        anyhow::ensure!(
-            (2..=4).contains(&parts.len()),
-            "--spec wants '<w1>+<w2>+...:<mem>[:<agg>][:<corner>]', got '{spec}'"
-        );
-        let names: Vec<&str> = parts[0]
-            .split('+')
-            .map(str::trim)
-            .filter(|s| !s.is_empty())
-            .collect();
-        anyhow::ensure!(!names.is_empty(), "--spec lists no workloads: '{spec}'");
-        let set = WorkloadSet::by_names(&names)?;
-        let (mem, space) = match parts[1] {
+        // synthetic-population token: synth:<dist>:<n>:<seed>[:...]
+        let (name, set, tail) = if parts[0] == "synth" {
+            anyhow::ensure!(
+                (4..=7).contains(&parts.len()),
+                "--spec wants 'synth:<dist>:<n>:<seed>[:<mem>][:<agg>][:<corner>]', got '{spec}'"
+            );
+            let (dist, n, seed) =
+                crate::ingest::synth::parse_synth_parts(parts[1], parts[2], parts[3])
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let name = format!("synth-{}{n}-s{seed}", dist.id);
+            (name, dist.population(n, seed), &parts[4..])
+        } else {
+            anyhow::ensure!(
+                (2..=4).contains(&parts.len()),
+                "--spec wants '<w1>+<w2>+...:<mem>[:<agg>][:<corner>]', got '{spec}'"
+            );
+            let tokens: Vec<&str> = parts[0]
+                .split('+')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .collect();
+            anyhow::ensure!(!tokens.is_empty(), "--spec lists no workloads: '{spec}'");
+            let mut workloads = Vec::new();
+            for t in tokens {
+                if crate::ingest::looks_like_path(t) {
+                    workloads.push(
+                        crate::ingest::load_path(std::path::Path::new(t))
+                            .map_err(|e| anyhow::anyhow!("{e}"))?,
+                    );
+                } else {
+                    workloads.push(crate::workloads::by_name(t)?);
+                }
+            }
+            ("custom".to_string(), WorkloadSet { workloads }, &parts[1..])
+        };
+        let (mem, space) = match tail.first().copied().unwrap_or("rram") {
             "rram" => (MemoryTech::Rram, SearchSpace::rram()),
             "sram" => (MemoryTech::Sram, SearchSpace::sram()),
             other => anyhow::bail!("--spec memory '{other}' is not rram|sram"),
         };
         let mut agg: Option<Aggregation> = None;
         let mut corner: Option<Corner> = None;
-        for token in &parts[2..] {
+        for token in tail.iter().skip(1) {
             let parsed_agg = match *token {
                 "max" => Some(Aggregation::Max),
                 "all" => Some(Aggregation::All),
@@ -192,7 +229,7 @@ impl ScenarioSpec {
         if corner.is_some() {
             for w in &set.workloads {
                 anyhow::ensure!(
-                    crate::accuracy::has_baseline(w.name),
+                    crate::accuracy::has_baseline(&w.name),
                     "--spec corner scenarios score accuracy, but workload '{}' has \
                      no accuracy baseline",
                     w.name
@@ -204,7 +241,7 @@ impl ScenarioSpec {
             MemoryTech::Sram => Aggregation::Mean,
         });
         Ok(ScenarioSpec {
-            name: "custom".into(),
+            name,
             set,
             space,
             mem,
@@ -312,7 +349,7 @@ impl Portfolio {
     /// Workload names of an index list, resolved against the scenario's
     /// set (helper for reports and artifacts).
     pub fn names<'a>(indices: &[usize], set: &'a WorkloadSet) -> Vec<&'a str> {
-        indices.iter().map(|&i| set.workloads[i].name).collect()
+        indices.iter().map(|&i| set.workloads[i].name.as_str()).collect()
     }
 }
 
@@ -630,6 +667,51 @@ mod tests {
         ] {
             assert!(ScenarioSpec::parse(bad).is_err(), "'{bad}' must fail");
         }
+    }
+
+    #[test]
+    fn spec_parse_synth_families() {
+        let s = ScenarioSpec::parse("synth:mixed:12:9").unwrap();
+        assert_eq!(s.name, "synth-mixed12-s9");
+        assert_eq!(s.set.len(), 12);
+        assert_eq!(s.mem, MemoryTech::Rram, "synth defaults to rram");
+        assert_eq!(s.agg, Aggregation::Max);
+        let t = ScenarioSpec::parse("synth:transformer:5:3:sram:mean").unwrap();
+        assert_eq!(t.name, "synth-transformer5-s3");
+        assert_eq!(t.mem, MemoryTech::Sram);
+        assert_eq!(t.agg, Aggregation::Mean);
+        // same token → bit-identical family; different seed → different name
+        let a = ScenarioSpec::parse("synth:cnn:4:1:rram").unwrap();
+        let b = ScenarioSpec::parse("synth:cnn:4:1:rram").unwrap();
+        assert_eq!(a.set.names(), b.set.names());
+        for (wa, wb) in a.set.workloads.iter().zip(&b.set.workloads) {
+            assert_eq!(wa.layers.len(), wb.layers.len());
+            assert_eq!(wa.total_weights(), wb.total_weights());
+        }
+        for bad in [
+            "synth:mixed",            // too few fields
+            "synth:gan:10:1",         // unknown distribution
+            "synth:cnn:0:1",          // empty population
+            "synth:cnn:10:1:dram",    // unknown tech
+            "synth:cnn:10:1:rram:high", // corner needs accuracy baselines
+            "synth:cnn:10:x",         // bad seed
+        ] {
+            assert!(ScenarioSpec::parse(bad).is_err(), "'{bad}' must fail");
+        }
+    }
+
+    #[test]
+    fn spec_parse_file_tokens() {
+        let dir = std::env::temp_dir().join(format!("imcopt-spec-file-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.json");
+        let w = crate::workloads::by_name("alexnet").unwrap();
+        std::fs::write(&path, crate::ingest::workload_to_json(&w).to_string()).unwrap();
+        let spec = format!("{}+resnet18:rram", path.display());
+        let s = ScenarioSpec::parse(&spec).unwrap();
+        assert_eq!(s.set.names(), vec!["alexnet", "resnet18"]);
+        assert!(ScenarioSpec::parse("missing/net.json:rram").is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -71,9 +71,13 @@ impl Layer {
 }
 
 /// A full workload: an ordered list of mapped layers.
+///
+/// Names are owned strings so workloads can come from anywhere — the
+/// hand-coded tables here, files parsed by [`crate::ingest`], or the
+/// seeded synthetic generator ([`crate::ingest::WorkloadDistribution`]).
 #[derive(Debug)]
 pub struct Workload {
-    pub name: &'static str,
+    pub name: String,
     pub layers: Vec<Layer>,
     /// Lazily-built aggregate tables for the O(1) compiled evaluator
     /// (`model::compiled`); every evaluation of this instance reads the
@@ -86,16 +90,16 @@ pub struct Workload {
 /// observe a table compiled from the pre-edit layers.
 impl Clone for Workload {
     fn clone(&self) -> Workload {
-        Workload::new(self.name, self.layers.clone())
+        Workload::new(self.name.clone(), self.layers.clone())
     }
 }
 
 impl Workload {
     /// Construct a workload (compiled tables build lazily on first
     /// evaluation).
-    pub fn new(name: &'static str, layers: Vec<Layer>) -> Workload {
+    pub fn new(name: impl Into<String>, layers: Vec<Layer>) -> Workload {
         Workload {
-            name,
+            name: name.into(),
             layers,
             compiled: OnceLock::new(),
         }
@@ -216,8 +220,8 @@ impl WorkloadSet {
         self.workloads.is_empty()
     }
 
-    pub fn names(&self) -> Vec<&'static str> {
-        self.workloads.iter().map(|w| w.name).collect()
+    pub fn names(&self) -> Vec<&str> {
+        self.workloads.iter().map(|w| w.name.as_str()).collect()
     }
 
     /// Index of the workload with the most total weights — the "largest

@@ -293,6 +293,116 @@ fn killed_surrogate_run_resumes_bit_identical() {
     assert_eq!(again.cells_computed, 0, "replay must not recompute cells");
 }
 
+/// `synth:` workload families ride the `--spec` string, so a population
+/// run must be a pure function of the seed in the token: byte-identical
+/// across `--threads 1` vs `--threads 8`, byte-identical across a
+/// kill/`--resume`, and a resume under a *different* synth spec must be
+/// rejected by the config fingerprint (its journaled cells were measured
+/// on different generated networks).
+#[test]
+fn killed_population_run_resumes_bit_identical_across_threads() {
+    const ID: [&str; 1] = ["population"];
+    const SPEC: &str = "synth:mixed:6:11:rram";
+    let dir_a = tmp("population-t1");
+    let dir_b = tmp("population-t8");
+    let dir_c = tmp("population-killed");
+    let ctx_synth = |dir: &Path, resume: bool, threads: usize, spec: &str| {
+        let mut c = ctx_at(41, dir, resume);
+        c.threads = threads;
+        c.spec = Some(spec.into());
+        c
+    };
+
+    // straight runs at 1 and 8 threads generate the same family and the
+    // same bytes
+    let summary_a =
+        experiments::run_selected(&ID, &ctx_synth(&dir_a, false, 1, SPEC)).unwrap();
+    assert_eq!(summary_a.executed, 1);
+    assert!(summary_a.quarantined.is_empty());
+    let summary_b =
+        experiments::run_selected(&ID, &ctx_synth(&dir_b, false, 8, SPEC)).unwrap();
+    assert_eq!(summary_b.executed, 1);
+    let a = artifacts(&dir_a);
+    let b = artifacts(&dir_b);
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        b.keys().collect::<Vec<_>>(),
+        "artifact sets differ across thread counts"
+    );
+    assert!(
+        a.keys().any(|k| k.contains("population_cells/")),
+        "expected portfolio cell artifacts, got {:?}",
+        a.keys().collect::<Vec<_>>()
+    );
+    for (name, bytes_a) in &a {
+        assert_eq!(
+            bytes_a, &b[name],
+            "artifact {name} differs between --threads 1 and --threads 8"
+        );
+    }
+
+    // kill after the first fresh cell, config bound as run_session does
+    {
+        let ctx = ctx_synth(&dir_c, false, 8, SPEC);
+        let mut ckpt = Checkpoint::for_experiment(&ctx.out_dir, "population", false).unwrap();
+        ckpt.bind_config(&experiments::config_fingerprint(&ctx)).unwrap();
+        ckpt.abort_after_cells = Some(1);
+        let err = experiments::run_with("population", &ctx, &mut ckpt).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("simulated kill"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(ckpt.computed(), 1);
+    }
+
+    // resuming under a different synth seed must be rejected: the journal
+    // holds measurements of a different generated family
+    {
+        let ctx = ctx_synth(&dir_c, true, 8, "synth:mixed:6:12:rram");
+        let mut ckpt = Checkpoint::for_experiment(&ctx.out_dir, "population", true).unwrap();
+        let err = ckpt
+            .bind_config(&experiments::config_fingerprint(&ctx))
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("different configuration"),
+            "expected a config-fingerprint rejection, got: {err:#}"
+        );
+    }
+
+    // resume under the original spec completes byte-identically to the
+    // single-thread straight run
+    let summary_c =
+        experiments::run_selected(&ID, &ctx_synth(&dir_c, true, 8, SPEC)).unwrap();
+    assert_eq!(summary_c.executed, 1, "the report was never stored");
+    assert!(
+        summary_c.cells_reused >= 1,
+        "the journaled pre-kill cell must be reused, not re-run"
+    );
+    assert_eq!(
+        summary_c.cells_computed + summary_c.cells_reused,
+        summary_a.cells_computed + summary_a.cells_reused,
+        "resume must account for every cell visit of a straight run"
+    );
+    let c = artifacts(&dir_c);
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        c.keys().collect::<Vec<_>>(),
+        "artifact sets differ"
+    );
+    for (name, bytes_a) in &a {
+        assert_eq!(
+            bytes_a, &c[name],
+            "artifact {name} differs between straight and resumed runs"
+        );
+    }
+
+    // a second resume replays the stored report with zero computation
+    let again = experiments::run_selected(&ID, &ctx_synth(&dir_c, true, 8, SPEC)).unwrap();
+    assert_eq!(again.replayed, 1);
+    assert_eq!(again.executed, 0);
+    assert_eq!(again.cells_computed, 0, "replay must not recompute cells");
+}
+
 #[test]
 fn completed_experiments_replay_without_recomputation() {
     let dir = tmp("replay");

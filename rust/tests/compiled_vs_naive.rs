@@ -1,7 +1,9 @@
 //! Property test pinning the compiled O(1) evaluator to the naive
 //! layer-loop oracle: ≥200 random designs per memory technology × all 9
 //! workloads × {RRAM, SRAM}, energy/latency within 1e-9 relative, area
-//! bit-identical, feasibility (capacity/timing/area) exactly equal.
+//! bit-identical, feasibility (capacity/timing/area) exactly equal —
+//! plus the same oracle over ≥100 generator-sampled synthetic workloads
+//! per technology (the `population` experiment's substrate).
 //!
 //! The compiled path reorders float summations (aggregates first, factors
 //! second), so bit-identity with the naive walk is *not* expected for
@@ -92,6 +94,59 @@ fn compiled_matches_naive_oracle_within_1e9() {
             }
         }
         assert!(designs >= 200, "per-tech design budget");
+    }
+}
+
+/// The oracle holds across the synthetic-workload generator's whole
+/// range, not just the 9 hand-coded nets: 120 seeded samples from the
+/// mixed distribution per technology, every one on-grid, energy/latency
+/// within 1e-9 of the naive walk, area bit-identical, feasibility exact.
+#[test]
+fn compiled_matches_naive_on_generator_population() {
+    let dist = imcopt::ingest::WorkloadDistribution::named("mixed").unwrap();
+    let cases = [
+        (MemoryTech::Rram, SearchSpace::rram(), 0xA11CEu64),
+        (MemoryTech::Sram, SearchSpace::sram(), 0xB0B5u64),
+    ];
+    for (mem, space, seed) in cases {
+        let pop = dist.population(120, seed);
+        assert_eq!(pop.len(), 120);
+        let ev = NativeEvaluator::new(mem);
+        let mut rng = Rng::seed_from(seed ^ 0xF00D);
+        for _ in 0..8 {
+            let raw = space.decode(&space.random(&mut rng));
+            let view = DesignView::new(&raw, mem);
+            for w in &pop.workloads {
+                assert!(
+                    w.compiled().covers(&view),
+                    "{}/{}: synthetic geometry must be on-grid",
+                    space.variant,
+                    w.name
+                );
+                let c = ev.evaluate(&raw, w);
+                let o = ev.evaluate_naive(&raw, w);
+                assert!(
+                    rel(c.energy, o.energy) <= 1e-9,
+                    "{}/{}: energy {} vs {} (rel {})",
+                    mem.name(),
+                    w.name,
+                    c.energy,
+                    o.energy,
+                    rel(c.energy, o.energy)
+                );
+                assert!(
+                    rel(c.latency, o.latency) <= 1e-9,
+                    "{}/{}: latency {} vs {} (rel {})",
+                    mem.name(),
+                    w.name,
+                    c.latency,
+                    o.latency,
+                    rel(c.latency, o.latency)
+                );
+                assert_eq!(c.area.to_bits(), o.area.to_bits(), "{}", w.name);
+                assert_eq!(c.feasible, o.feasible, "{}/{}", mem.name(), w.name);
+            }
+        }
     }
 }
 

@@ -1,0 +1,347 @@
+//! Parser corpus tests: every file under `rust/tests/ingest/valid/`
+//! parses and round-trips bit-identically; every file under
+//! `rust/tests/ingest/malformed/` yields the *expected typed*
+//! [`IngestError`] — never a panic. The ONNX leg synthesizes real
+//! protobuf wire bytes with a minimal in-test encoder (Conv / Gemm /
+//! dynamic-MatMul models, plus every truncation prefix of a valid
+//! model).
+
+use imcopt::ingest::{
+    load_path, parse_workload_text, workload_from_onnx, workload_to_json, IngestError,
+    WorkloadDistribution,
+};
+use imcopt::workloads::LayerKind;
+use std::path::{Path, PathBuf};
+
+fn corpus(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/ingest")
+        .join(sub)
+}
+
+fn corpus_files(sub: &str) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(corpus(sub))
+        .unwrap_or_else(|e| panic!("corpus dir {sub}: {e}"))
+        .map(|e| e.unwrap().path())
+        .collect();
+    files.sort();
+    assert!(!files.is_empty(), "empty corpus dir {sub}");
+    files
+}
+
+/// Valid corpus: parses via the path-dispatch entry point, and the
+/// canonical emission round-trips bit-identically (text → Workload →
+/// text → Workload → text).
+#[test]
+fn valid_corpus_parses_and_round_trips_bit_identically() {
+    for path in corpus_files("valid") {
+        let w = load_path(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(!w.layers.is_empty());
+        let text = workload_to_json(&w).to_string();
+        let back = parse_workload_text(&text, "fallback")
+            .unwrap_or_else(|e| panic!("{}: re-parse: {e}", path.display()));
+        assert_eq!(
+            text,
+            workload_to_json(&back).to_string(),
+            "{}: canonical JSON must be a fixed point",
+            path.display()
+        );
+        assert_eq!(w.name, back.name);
+        for (a, b) in w.layers.iter().zip(&back.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(
+                [a.k, a.n, a.passes, a.weights, a.in_bytes, a.out_bytes],
+                [b.k, b.n, b.passes, b.weights, b.in_bytes, b.out_bytes]
+            );
+        }
+    }
+}
+
+/// A document without a `name` key takes the file stem as its name.
+#[test]
+fn file_stem_is_the_fallback_name() {
+    let w = load_path(&corpus("valid").join("unnamed.json")).unwrap();
+    assert_eq!(w.name, "unnamed");
+}
+
+/// Malformed corpus: each file maps to its expected typed error —
+/// checked per-file by name so a new corpus entry must declare what it
+/// exercises — and none of them panic.
+#[test]
+fn malformed_corpus_yields_expected_typed_errors() {
+    let mut seen = 0;
+    for path in corpus_files("malformed") {
+        let stem = path.file_stem().unwrap().to_str().unwrap().to_string();
+        let err = load_path(&path)
+            .expect_err(&format!("{stem} must be rejected"));
+        let ok = match stem.as_str() {
+            "truncated" => matches!(err, IngestError::Json(_)),
+            "wrong_dtype" => matches!(err, IngestError::WrongType { .. }),
+            "zero_dim" => matches!(err, IngestError::ZeroDim { .. }),
+            "huge_dim" => matches!(err, IngestError::DimTooLarge { .. }),
+            "unknown_kind" => matches!(err, IngestError::UnknownKind(_)),
+            "empty_layers" => matches!(err, IngestError::BadLayerCount(0)),
+            "dynamic_with_weights" => matches!(err, IngestError::DynamicWithWeights { .. }),
+            "not_an_object" => matches!(err, IngestError::WrongType { .. }),
+            "missing_field" => matches!(err, IngestError::Missing(_)),
+            other => panic!("corpus file '{other}.json' has no expected-error entry"),
+        };
+        assert!(ok, "{stem}: unexpected error variant: {err}");
+        // Display never panics and is prefixed for log grepping
+        assert!(err.to_string().starts_with("ingest:"), "{err}");
+        seen += 1;
+    }
+    assert!(seen >= 9, "malformed corpus shrank to {seen} files");
+}
+
+/// Generator output is inside the interchange format's exact-integer
+/// window: every sampled workload survives JSON text round trip with
+/// all six dims bit-identical.
+#[test]
+fn generator_samples_round_trip_through_json() {
+    let d = WorkloadDistribution::named("mixed").unwrap();
+    for w in &d.population(50, 1234).workloads {
+        let text = workload_to_json(w).to_string();
+        let back = parse_workload_text(&text, "x").unwrap();
+        assert_eq!(w.name, back.name);
+        for (a, b) in w.layers.iter().zip(&back.layers) {
+            assert_eq!(
+                [a.k, a.n, a.passes, a.weights, a.in_bytes, a.out_bytes],
+                [b.k, b.n, b.passes, b.weights, b.in_bytes, b.out_bytes],
+                "{}:{}",
+                w.name,
+                a.name
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------ ONNX encoding
+//
+// Minimal protobuf wire encoder — just enough of ModelProto to exercise
+// the reader with byte-accurate inputs (and their truncations).
+
+fn varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn field_varint(out: &mut Vec<u8>, field: u64, v: u64) {
+    varint(out, field << 3);
+    varint(out, v);
+}
+
+fn field_len(out: &mut Vec<u8>, field: u64, payload: &[u8]) {
+    varint(out, field << 3 | 2);
+    varint(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+}
+
+fn field_str(out: &mut Vec<u8>, field: u64, s: &str) {
+    field_len(out, field, s.as_bytes());
+}
+
+/// AttributeProto with repeated ints (name=1, ints=8, unpacked).
+fn attr_ints(name: &str, ints: &[i64]) -> Vec<u8> {
+    let mut b = Vec::new();
+    field_str(&mut b, 1, name);
+    for &i in ints {
+        field_varint(&mut b, 8, i as u64);
+    }
+    b
+}
+
+/// AttributeProto with a single int (name=1, i=3).
+fn attr_i(name: &str, v: i64) -> Vec<u8> {
+    let mut b = Vec::new();
+    field_str(&mut b, 1, name);
+    field_varint(&mut b, 3, v as u64);
+    b
+}
+
+/// NodeProto: input=1, output=2, name=3, op_type=4, attribute=5.
+fn node(op: &str, name: &str, inputs: &[&str], outputs: &[&str], attrs: &[Vec<u8>]) -> Vec<u8> {
+    let mut b = Vec::new();
+    for i in inputs {
+        field_str(&mut b, 1, i);
+    }
+    for o in outputs {
+        field_str(&mut b, 2, o);
+    }
+    field_str(&mut b, 3, name);
+    field_str(&mut b, 4, op);
+    for a in attrs {
+        field_len(&mut b, 5, a);
+    }
+    b
+}
+
+/// TensorProto initializer: dims=1, data_type=2, name=8 (1 = float).
+fn tensor(name: &str, dims: &[u64]) -> Vec<u8> {
+    let mut b = Vec::new();
+    for &d in dims {
+        field_varint(&mut b, 1, d);
+    }
+    field_varint(&mut b, 2, 1);
+    field_str(&mut b, 8, name);
+    b
+}
+
+/// ValueInfoProto: name=1, type=2 → tensor_type=1 → shape=2 → dim=1 →
+/// dim_value=1.
+fn value_info(name: &str, dims: &[u64]) -> Vec<u8> {
+    let mut shape = Vec::new();
+    for &d in dims {
+        let mut dim = Vec::new();
+        field_varint(&mut dim, 1, d);
+        field_len(&mut shape, 1, &dim);
+    }
+    let mut tensor_type = Vec::new();
+    field_len(&mut tensor_type, 2, &shape);
+    let mut ty = Vec::new();
+    field_len(&mut ty, 1, &tensor_type);
+    let mut b = Vec::new();
+    field_str(&mut b, 1, name);
+    field_len(&mut b, 2, &ty);
+    b
+}
+
+/// ModelProto (graph=7) around a GraphProto (node=1, initializer=5,
+/// input=11).
+fn model(nodes: &[Vec<u8>], inits: &[Vec<u8>], inputs: &[Vec<u8>]) -> Vec<u8> {
+    let mut g = Vec::new();
+    for n in nodes {
+        field_len(&mut g, 1, n);
+    }
+    for t in inits {
+        field_len(&mut g, 5, t);
+    }
+    for i in inputs {
+        field_len(&mut g, 11, i);
+    }
+    let mut m = Vec::new();
+    field_len(&mut m, 7, &g);
+    m
+}
+
+/// Conv → Relu → Flatten → Gemm(transB): a minimal CNN. Checks the
+/// im2col matmul view (k = kh·kw·cin, passes = oh·ow) and shape
+/// plumbing through the passthrough/Flatten ops.
+#[test]
+fn onnx_conv_gemm_model_maps_to_matmul_view() {
+    let bytes = model(
+        &[
+            node(
+                "Conv",
+                "conv1",
+                &["x", "w1"],
+                &["c1"],
+                &[
+                    attr_ints("pads", &[1, 1, 1, 1]),
+                    attr_ints("strides", &[1, 1]),
+                    attr_ints("kernel_shape", &[3, 3]),
+                ],
+            ),
+            node("Relu", "relu1", &["c1"], &["r1"], &[]),
+            node("Flatten", "flat", &["r1"], &["f1"], &[]),
+            node("Gemm", "fc", &["f1", "w2"], &["y"], &[attr_i("transB", 1)]),
+        ],
+        &[tensor("w1", &[4, 3, 3, 3]), tensor("w2", &[10, 256])],
+        &[value_info("x", &[1, 3, 8, 8])],
+    );
+    let w = workload_from_onnx(&bytes, "tiny").unwrap();
+    assert_eq!(w.name, "tiny");
+    assert_eq!(w.layers.len(), 2, "only compute ops become layers");
+    let conv = &w.layers[0];
+    assert_eq!(conv.name, "conv1");
+    assert_eq!(conv.kind, LayerKind::Conv);
+    assert_eq!((conv.k, conv.n, conv.passes), (27, 4, 64));
+    assert_eq!(conv.weights, 4 * 3 * 3 * 3);
+    let fc = &w.layers[1];
+    assert_eq!(fc.kind, LayerKind::Fc);
+    assert_eq!((fc.k, fc.n, fc.passes), (256, 10, 1));
+}
+
+/// Depthwise Conv (group == channels, 1 input channel per group) maps
+/// to [`LayerKind::DepthwiseConv`] with k = kh·kw.
+#[test]
+fn onnx_grouped_conv_maps_to_depthwise() {
+    let bytes = model(
+        &[node(
+            "Conv",
+            "dw",
+            &["x", "w1"],
+            &["y"],
+            &[attr_i("group", 8), attr_ints("pads", &[1, 1, 1, 1])],
+        )],
+        &[tensor("w1", &[8, 1, 3, 3])],
+        &[value_info("x", &[1, 8, 8, 8])],
+    );
+    let w = workload_from_onnx(&bytes, "dwnet").unwrap();
+    assert_eq!(w.layers.len(), 1);
+    assert_eq!(w.layers[0].kind, LayerKind::DepthwiseConv);
+    assert_eq!((w.layers[0].k, w.layers[0].n), (9, 8));
+    assert_eq!(w.layers[0].passes, 64);
+}
+
+/// MatMul of two activations (neither an initializer) is the attention
+/// pattern: a weightless [`LayerKind::Dynamic`] layer.
+#[test]
+fn onnx_activation_matmul_is_dynamic() {
+    let bytes = model(
+        &[node("MatMul", "scores", &["a", "b"], &["s"], &[])],
+        &[],
+        &[
+            value_info("a", &[1, 4, 16, 32]),
+            value_info("b", &[1, 4, 32, 16]),
+        ],
+    );
+    let w = workload_from_onnx(&bytes, "attn").unwrap();
+    assert_eq!(w.layers.len(), 1);
+    let l = &w.layers[0];
+    assert_eq!(l.kind, LayerKind::Dynamic);
+    assert_eq!((l.k, l.n, l.passes), (32, 16, 64));
+    assert_eq!(l.weights, 0, "dynamic matmuls store no weights");
+}
+
+/// Every strict prefix of a valid model is rejected with a typed ONNX
+/// error — no prefix length panics or silently half-parses.
+#[test]
+fn onnx_truncations_never_panic() {
+    let bytes = model(
+        &[node("Gemm", "fc", &["x", "w"], &["y"], &[])],
+        &[tensor("w", &[16, 4])],
+        &[value_info("x", &[1, 16])],
+    );
+    assert!(workload_from_onnx(&bytes, "ok").is_ok());
+    for cut in 0..bytes.len() {
+        let e = workload_from_onnx(&bytes[..cut], "cut").unwrap_err();
+        assert!(
+            matches!(e, IngestError::Onnx(_)),
+            "prefix {cut}/{}: {e}",
+            bytes.len()
+        );
+    }
+}
+
+/// A Gemm whose weight tensor never appears as an initializer is a
+/// typed error naming the missing tensor, not a panic.
+#[test]
+fn onnx_missing_initializer_is_typed() {
+    let bytes = model(
+        &[node("Gemm", "fc", &["x", "ghost"], &["y"], &[])],
+        &[],
+        &[value_info("x", &[1, 16])],
+    );
+    let e = workload_from_onnx(&bytes, "t").unwrap_err();
+    assert!(matches!(e, IngestError::Onnx(_)));
+    assert!(e.to_string().contains("ghost"), "{e}");
+}

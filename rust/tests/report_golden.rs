@@ -76,3 +76,11 @@ fn fig3_quick_json_deterministic_and_golden() {
 fn table5_quick_json_deterministic_and_golden() {
     check_golden("table5");
 }
+
+/// The population experiment's default family is `synth:mixed:200:<seed>`
+/// — this doubles as the determinism gate for the synthetic generator at
+/// full portfolio scale (200 nets, twice, byte-identical).
+#[test]
+fn population_quick_json_deterministic_and_golden() {
+    check_golden("population");
+}

@@ -102,7 +102,7 @@ fn genmatrix_k1_slice_matches_genmatrix_bit_for_bit() {
             assert_eq!(gaps.len(), 1);
             assert_eq!(
                 gaps[0].get("workload").and_then(|v| v.as_str()),
-                Some(w.name),
+                Some(w.name.as_str()),
                 "{set}:{wi} held-out workload mismatch"
             );
             // same joint search: identical score; same specialist bound;
