@@ -12,12 +12,14 @@
 #   golden   cross-process golden check: bless quick-budget report
 #            goldens into a scratch dir, re-verify from a second process
 #   bench    bench smokes -> BENCH_eval/model/pareto/surrogate/
-#            robustness.json, each validated against
+#            robustness/telemetry.json, each validated against
 #            schemas/bench_*.schema.json (the model schema gates the
 #            compiled evaluator's >= 3x speedup; the surrogate schema
 #            gates screen_speedup > 1 and a deterministic ranking; the
 #            robustness bench asserts robust-scoring overhead below the
-#            naive ensemble-size multiple)
+#            naive ensemble-size multiple; the telemetry bench gates
+#            instrumentation overhead on the score_batch hot path at
+#            <= 2% with bit-identical scores)
 #   trend    bench-trend gate: every BENCH_*.json is compared against
 #            its committed floor in bench_baselines/ via `imcopt
 #            validate --trend` — a >15% throughput/speedup regression
@@ -35,6 +37,10 @@
 #            `--resume` re-run replays without recomputing a cell; plus a
 #            robust-mode leg: `imcopt run robustness --robust cvar0.25`
 #            with its own zero-recompute resume check
+#   telemetry  a quick run writes schema-valid trace/counter snapshots
+#            under <out-dir>/telemetry/, `imcopt trace` renders the
+#            analyzer over them, and an IMCOPT_TELEMETRY=0 re-run leaves
+#            every artifact byte-identical (telemetry is out-of-band)
 #   orch     orchestrator crash matrix: the same sweep at --workers 4
 #            with a deterministically killed worker must complete via
 #            restarts + lease stealing, match the smoke byte for byte,
@@ -49,7 +55,7 @@ cd "$(dirname "$0")"
 FEATURES="${IMCOPT_FEATURES:-}"
 IMCOPT_BIN=./target/release/imcopt
 TREND_TOLERANCE="${IMCOPT_TREND_TOLERANCE:-15}"
-ALL_STAGES=(lint build test golden bench trend catalog ingest smoke orch)
+ALL_STAGES=(lint build test golden bench trend catalog ingest smoke telemetry orch)
 
 usage() {
     echo "usage: ./ci.sh [--stage <name>]"
@@ -128,12 +134,13 @@ stage_golden() {
 
 stage_bench() {
     ensure_bin
-    for b in evaluator pareto surrogate robustness; do
+    for b in evaluator pareto surrogate robustness telemetry; do
         echo "=== bench smoke ($b) ==="
         # shellcheck disable=SC2086
         IMCOPT_BENCH_QUICK=1 cargo bench $FEATURES --bench "$b"
     done
-    for f in BENCH_eval BENCH_model BENCH_pareto BENCH_surrogate BENCH_robustness; do
+    for f in BENCH_eval BENCH_model BENCH_pareto BENCH_surrogate BENCH_robustness \
+             BENCH_telemetry; do
         if [ ! -f "$f.json" ]; then
             echo "error: $f.json was not produced" >&2
             exit 1
@@ -154,11 +161,14 @@ stage_bench() {
 
     echo "=== validate BENCH_robustness.json (overhead below ensemble size, deterministic) ==="
     "$IMCOPT_BIN" validate --bench BENCH_robustness.json --schema schemas/bench_robustness.schema.json
+
+    echo "=== validate BENCH_telemetry.json (<= 2% score_batch overhead, identical scores) ==="
+    "$IMCOPT_BIN" validate --bench BENCH_telemetry.json --schema schemas/bench_telemetry.schema.json
 }
 
 stage_trend() {
     ensure_bin
-    for b in eval model pareto surrogate robustness; do
+    for b in eval model pareto surrogate robustness telemetry; do
         if [ ! -f "BENCH_$b.json" ]; then
             echo "error: BENCH_$b.json missing — run './ci.sh --stage bench' first" >&2
             exit 1
@@ -263,6 +273,37 @@ stage_smoke() {
     esac
 }
 
+stage_telemetry() {
+    ensure_bin
+    echo "=== telemetry: a quick run leaves an out-of-band trace ==="
+    TELEM_OUT="$(pwd)/target/ci-telemetry"
+    rm -rf "$TELEM_OUT"
+    "$IMCOPT_BIN" run fig3 table3 --quick --stable --seed 5 --out-dir "$TELEM_OUT"
+    for f in telemetry/trace.jsonl telemetry/counters.json; do
+        if [ ! -f "$TELEM_OUT/$f" ]; then
+            echo "error: $f was not produced" >&2
+            exit 1
+        fi
+    done
+    "$IMCOPT_BIN" validate --bench "$TELEM_OUT/telemetry/counters.json" \
+        --schema schemas/telemetry_counters.schema.json
+
+    echo "=== telemetry: imcopt trace renders the analyzer ==="
+    # also schema-validates every trace event and counter snapshot
+    "$IMCOPT_BIN" trace "$TELEM_OUT"
+
+    echo "=== telemetry: IMCOPT_TELEMETRY=0 leaves artifacts byte-identical ==="
+    TELEM_OFF="$(pwd)/target/ci-telemetry-off"
+    rm -rf "$TELEM_OFF"
+    IMCOPT_TELEMETRY=0 "$IMCOPT_BIN" run fig3 table3 --quick --stable --seed 5 \
+        --out-dir "$TELEM_OFF"
+    if [ -e "$TELEM_OFF/telemetry" ]; then
+        echo "error: IMCOPT_TELEMETRY=0 still wrote a telemetry directory" >&2
+        exit 1
+    fi
+    diff -r --exclude=checkpoints --exclude=telemetry "$TELEM_OUT" "$TELEM_OFF"
+}
+
 stage_orch() {
     ensure_bin
     echo "=== orchestrator crash matrix: --workers 4 with a killed worker ==="
@@ -294,8 +335,10 @@ stage_orch() {
 
     if [ -d "$(pwd)/target/ci-smoke" ]; then
         echo "=== orchestrated artifacts are byte-identical to the single-process smoke ==="
+        # telemetry/ is out-of-band and legitimately differs between
+        # worker topologies (per-worker trace files)
         diff -r --exclude=checkpoints --exclude=orchestrator_status.json \
-            "$(pwd)/target/ci-smoke" "$ORCH_OUT"
+            --exclude=telemetry "$(pwd)/target/ci-smoke" "$ORCH_OUT"
     else
         echo "--- skipping smoke-vs-orch diff (no target/ci-smoke; run --stage smoke first) ---"
     fi
@@ -319,7 +362,7 @@ case "$SELECTED" in
             run_stage "$s"
         done
         ;;
-    lint|build|test|golden|bench|trend|catalog|ingest|smoke|orch)
+    lint|build|test|golden|bench|trend|catalog|ingest|smoke|telemetry|orch)
         run_stage "$SELECTED"
         ;;
     *)

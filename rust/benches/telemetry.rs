@@ -1,0 +1,120 @@
+//! Telemetry overhead on the `score_batch` hot path: the counters and
+//! timing spans bumped inside `JointProblem::score_batch` /
+//! `evaluate_misses` must be free relative to the work they observe.
+//!
+//! Two paths are measured with telemetry forced on and off
+//! (`telemetry::set_enabled`):
+//!
+//! * the **exact path** — a fresh problem per iteration so every design
+//!   is a cache miss and the analytical evaluator dominates. This is the
+//!   guarded number: telemetry may cost at most 2% here.
+//! * the **hit path** — re-scoring an already-cached batch, the worst
+//!   case for counter overhead (two relaxed atomics per memo lookup).
+//!   Reported for visibility, not gated: the absolute cost is a few
+//!   nanoseconds per lookup and the ratio is noise-dominated.
+//!
+//! Writes `BENCH_telemetry.json`, validated in ci.sh against
+//! `schemas/bench_telemetry.schema.json` and gated against the committed
+//! `bench_baselines/BENCH_telemetry.json` by the trend leg. The bench
+//! also asserts the determinism contract at its core: scores are
+//! bit-identical with telemetry on and off.
+
+use imcopt::coordinator::{EvalBackend, JointProblem};
+use imcopt::model::MemoryTech;
+use imcopt::objective::Objective;
+use imcopt::search::Problem;
+use imcopt::space::{Design, SearchSpace};
+use imcopt::telemetry;
+use imcopt::util::bench::Bench;
+use imcopt::util::json::Json;
+use imcopt::util::rng::Rng;
+use imcopt::workloads::WorkloadSet;
+
+fn main() {
+    let bench = Bench::new("telemetry");
+    let space = SearchSpace::rram();
+    let set = WorkloadSet::cnn4();
+    let fresh_problem = || {
+        JointProblem::with_backend(
+            &space,
+            &set,
+            EvalBackend::native(MemoryTech::Rram),
+            Objective::edap(),
+        )
+    };
+    let mut rng = Rng::seed_from(1);
+    let problem = fresh_problem();
+    let pool: Vec<Design> = (0..256).map(|_| problem.random_candidate(&mut rng)).collect();
+
+    // determinism guard first: identical scores with telemetry on and off
+    telemetry::set_enabled(true);
+    let scores_on = fresh_problem().score_batch(&pool);
+    telemetry::set_enabled(false);
+    let scores_off = fresh_problem().score_batch(&pool);
+    let scores_identical = scores_on
+        .iter()
+        .zip(&scores_off)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(scores_identical, "telemetry perturbed score_batch results");
+
+    // ---- exact path (all cache misses; the guarded number) ----------------
+    telemetry::set_enabled(false);
+    let m_off = bench.run("exact/score_batch-256/telemetry-off", pool.len(), || {
+        let p = fresh_problem();
+        std::hint::black_box(p.score_batch(&pool));
+    });
+    telemetry::set_enabled(true);
+    let m_on = bench.run("exact/score_batch-256/telemetry-on", pool.len(), || {
+        let p = fresh_problem();
+        std::hint::black_box(p.score_batch(&pool));
+    });
+
+    // ---- hit path (all memo hits; worst relative counter cost) ------------
+    let warm = fresh_problem();
+    warm.score_batch(&pool);
+    telemetry::set_enabled(false);
+    let h_off = bench.run("hits/score_batch-256/telemetry-off", pool.len(), || {
+        std::hint::black_box(warm.score_batch(&pool));
+    });
+    telemetry::set_enabled(true);
+    let h_on = bench.run("hits/score_batch-256/telemetry-on", pool.len(), || {
+        std::hint::black_box(warm.score_batch(&pool));
+    });
+
+    // medians resist scheduler spikes better than means for the gate
+    let off = m_off.median.as_secs_f64();
+    let on = m_on.median.as_secs_f64();
+    let overhead_pct = (on / off - 1.0) * 100.0;
+    let hit_overhead_pct = (h_on.median.as_secs_f64() / h_off.median.as_secs_f64() - 1.0) * 100.0;
+    println!(
+        "telemetry overhead: exact path {overhead_pct:+.2}% (gate <= 2%), \
+         hit path {hit_overhead_pct:+.2}% (informational)"
+    );
+    assert!(
+        overhead_pct <= 2.0,
+        "telemetry costs {overhead_pct:.2}% on the exact score_batch path \
+         (budget 2%)"
+    );
+
+    let on_evals_per_sec = pool.len() as f64 / m_on.mean.as_secs_f64();
+    let off_evals_per_sec = pool.len() as f64 / m_off.mean.as_secs_f64();
+    let hit_lookups_per_sec = pool.len() as f64 / h_on.mean.as_secs_f64();
+    let report = Json::obj(vec![
+        ("bench", Json::Str("telemetry_overhead".into())),
+        ("space", Json::Str("rram-32nm".into())),
+        ("workload_set", Json::Str("cnn4".into())),
+        ("batch", Json::Num(pool.len() as f64)),
+        ("telemetry_on_evals_per_sec", Json::Num(on_evals_per_sec)),
+        ("telemetry_off_evals_per_sec", Json::Num(off_evals_per_sec)),
+        ("hit_path_lookups_per_sec", Json::Num(hit_lookups_per_sec)),
+        ("overhead_pct", Json::Num(overhead_pct)),
+        ("hit_overhead_pct", Json::Num(hit_overhead_pct)),
+        ("overhead_within_budget", Json::Bool(overhead_pct <= 2.0)),
+        ("scores_identical", Json::Bool(scores_identical)),
+    ]);
+    let out = "BENCH_telemetry.json";
+    match std::fs::write(out, report.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

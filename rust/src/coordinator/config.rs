@@ -286,7 +286,11 @@ impl ExpContext {
     }
 
     /// Record a degradation notice (deduplicated) for reports to surface.
+    /// Occurrence counts live in the telemetry counters, not here: reports
+    /// keep one line per distinct notice and render an `(xN)` suffix from
+    /// [`crate::telemetry::notice_count`] when N > 1.
     pub fn record_notice(&self, notice: String) {
+        crate::telemetry::count_notice(&notice);
         let mut notices = self.backend_notices.lock().unwrap();
         if !notices.contains(&notice) {
             notices.push(notice);

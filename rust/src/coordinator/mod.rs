@@ -36,6 +36,7 @@ use crate::robustness::RobustConfig;
 use crate::runtime::Engine;
 use crate::search::Problem;
 use crate::space::{idx, Design, SearchSpace};
+use crate::telemetry;
 use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::util::shards::ShardedCache;
@@ -233,7 +234,9 @@ impl<'a> JointProblem<'a> {
     /// computation, so concurrent workers compute each key exactly once.
     fn per_layer_eps(&self, raw: &[f64; 10], d: &Design, pert: u16) -> f64 {
         let key = (d.0[idx::ROWS], d.0[idx::COLS], d.0[idx::BITS_CELL], pert);
-        self.acc_cache.get_or_insert_with(key, || {
+        let mut missed = false;
+        let eps = self.acc_cache.get_or_insert_with(key, || {
+            missed = true;
             let spec = accuracy::NoiseSpec::from_design(raw, self.backend.mem());
             let spec = match (&self.robust, pert) {
                 (Some(rc), p) if p > 0 => {
@@ -242,7 +245,9 @@ impl<'a> JointProblem<'a> {
                 _ => spec,
             };
             self.eps_for_spec(&spec)
-        })
+        });
+        telemetry::acc_memo_lookup(missed);
+        eps
     }
 
     /// Accuracy estimates per active workload for one design at one
@@ -313,6 +318,8 @@ impl<'a> JointProblem<'a> {
     /// path; results are bit-identical for any thread count.
     fn evaluate_misses(&self, designs: &[&Design], raws: &[[f64; 10]]) -> Vec<Evaluations> {
         debug_assert_eq!(designs.len(), raws.len());
+        let _span = telemetry::span(telemetry::Stage::EvaluateMisses);
+        telemetry::exact_evals(raws.len());
         self.evals.fetch_add(raws.len(), Ordering::Relaxed);
         let active = self.active_indices();
         match &self.backend {
@@ -389,8 +396,10 @@ impl<'a> JointProblem<'a> {
     pub fn evaluate_design(&self, d: &Design) -> Evaluations {
         let key = self.space.linear_index(d);
         if let Some(ev) = self.cache.get(&key) {
+            telemetry::eval_memo_hit((key % telemetry::EVAL_SHARDS as u64) as usize);
             return ev;
         }
+        telemetry::eval_memo_miss();
         let raw = self.space.decode(d);
         let ev = self
             .evaluate_misses(&[d], std::slice::from_ref(&raw))
@@ -554,6 +563,7 @@ impl Problem for JointProblem<'_> {
     }
 
     fn score_batch(&self, designs: &[Design]) -> Vec<f64> {
+        let _span = telemetry::span(telemetry::Stage::ScoreBatch);
         // one linear_index per design, computed exactly once
         let keys: Vec<u64> = designs.iter().map(|d| self.space.linear_index(d)).collect();
         // resolve cache hits, collect misses
@@ -561,8 +571,14 @@ impl Problem for JointProblem<'_> {
         let mut miss_idx: Vec<usize> = Vec::new();
         for (i, key) in keys.iter().enumerate() {
             match self.cache.map_get(key, |ev| ev.score) {
-                Some(s) => out[i] = s,
-                None => miss_idx.push(i),
+                Some(s) => {
+                    telemetry::eval_memo_hit((key % telemetry::EVAL_SHARDS as u64) as usize);
+                    out[i] = s;
+                }
+                None => {
+                    telemetry::eval_memo_miss();
+                    miss_idx.push(i);
+                }
             }
         }
         if miss_idx.is_empty() {

@@ -205,6 +205,7 @@ fn refresh_cells(
 fn run_compute(key: &str, compute: impl FnOnce() -> Result<Json>) -> Result<Json> {
     fault::point(&format!("cell:{key}"))
         .with_context(|| format!("computing cell '{key}'"))?;
+    let _span = crate::telemetry::span(crate::telemetry::Stage::CellCompute);
     match std::panic::catch_unwind(std::panic::AssertUnwindSafe(compute)) {
         Ok(r) => r.with_context(|| format!("computing cell '{key}'")),
         Err(payload) => {
@@ -439,6 +440,8 @@ impl Checkpoint {
         f.write_all((line + "\n").as_bytes())
             .context("appending journal cell")?;
         f.sync_data().context("syncing journal")?;
+        crate::telemetry::journal_appends(1);
+        crate::telemetry::journal_sync();
         Ok(())
     }
 
@@ -486,6 +489,7 @@ impl Checkpoint {
         }
         if let Some(v) = self.cells.get(key).cloned() {
             self.reused += 1;
+            crate::telemetry::cell_reused();
             if let Some(sk) = shared_key {
                 self.publish_shared(sk, &v)?;
             }
@@ -497,6 +501,7 @@ impl Checkpoint {
                     self.append_journal(key, &v)?;
                     self.cells.insert(key.to_string(), v.clone());
                     self.reused += 1;
+                    crate::telemetry::cell_reused();
                     return Ok(Some(v));
                 }
             }
@@ -546,6 +551,7 @@ impl Checkpoint {
     ) -> Result<Json> {
         if let Some(v) = self.cells.get(key).cloned() {
             self.reused += 1;
+            crate::telemetry::cell_reused();
             if let Some(sk) = shared_key {
                 // publish a replayed value too, so later experiments of a
                 // partially-resumed sweep reuse it instead of recomputing
@@ -559,6 +565,7 @@ impl Checkpoint {
                     self.append_journal(key, &v)?;
                     self.cells.insert(key.to_string(), v.clone());
                     self.reused += 1;
+                    crate::telemetry::cell_reused();
                     return Ok(v);
                 }
             }
@@ -587,6 +594,7 @@ impl Checkpoint {
                             self.publish_shared(sk, &value)?;
                         }
                         self.computed += 1;
+                        crate::telemetry::cell_computed();
                         guard.release();
                         return Ok(value);
                     }
@@ -606,6 +614,7 @@ impl Checkpoint {
             self.publish_shared(sk, &value)?;
         }
         self.computed += 1;
+        crate::telemetry::cell_computed();
         Ok(value)
     }
 
@@ -684,6 +693,8 @@ impl Checkpoint {
         f.write_all((line + "\n").as_bytes())
             .context("appending shared cell")?;
         f.sync_data().context("syncing shared journal")?;
+        crate::telemetry::journal_appends(1);
+        crate::telemetry::journal_sync();
         Ok(())
     }
 
@@ -781,6 +792,8 @@ impl Checkpoint {
                 .context("appending memo entry")?;
         }
         f.sync_data().context("syncing memo")?;
+        crate::telemetry::journal_appends(fresh.len());
+        crate::telemetry::journal_sync();
         Ok(())
     }
 
@@ -817,6 +830,8 @@ impl Checkpoint {
                 .context("appending acc memo entry")?;
         }
         f.sync_data().context("syncing acc memo")?;
+        crate::telemetry::journal_appends(fresh.len());
+        crate::telemetry::journal_sync();
         Ok(())
     }
 }

@@ -60,6 +60,7 @@ pub fn opt_cell(
     key: &str,
     compute: impl FnOnce() -> OptResult,
 ) -> Result<OptResult> {
+    crate::telemetry::set_cell_key(key, None);
     let v = ckpt.cell(key, || Ok(checkpoint::opt_result_to_json(&compute())))?;
     checkpoint::opt_result_from_json(&v)
 }
@@ -73,6 +74,7 @@ pub fn ga_cell(
     cfg: GaConfig,
     seed: u64,
 ) -> Result<OptResult> {
+    crate::telemetry::set_cell_key(key, Some(seed));
     opt_cell(ckpt, key, || run_ga(problem, cfg, seed))
 }
 
@@ -89,6 +91,7 @@ pub fn opt_shared_cell(
     shared_key: &str,
     compute: impl FnOnce() -> OptResult,
 ) -> Result<OptResult> {
+    crate::telemetry::set_cell_key(key, None);
     let v = ckpt.shared_cell(key, shared_key, || {
         Ok(checkpoint::opt_result_to_json(&compute()))
     })?;

@@ -34,14 +34,14 @@ impl super::Experiment for Fig9 {
         super::Cost::Medium
     }
     fn granularity(&self) -> super::Granularity {
-        super::Granularity::Experiment
+        super::Granularity::Cell
     }
     fn run(&self, ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
         run(ctx, ckpt)
     }
 }
 
-pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
+pub fn run(ctx: &ExpContext, ckpt: &mut Checkpoint) -> Result<Report> {
     let set = WorkloadSet::cnn4();
     let space = crate::space::SearchSpace::sram_tech();
     let objective = Objective::new(ObjectiveKind::EdapCost, Aggregation::Max);
@@ -51,10 +51,18 @@ pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
         "EDAP vs fabrication cost across CMOS nodes (SRAM, tech co-optimization)",
     );
 
-    // joint cost-aware search; its evaluation cache doubles as the cloud
-    // of explored designs
+    // joint cost-aware search as a checkpoint cell (a resumed run replays
+    // it from the journal); its evaluation cache doubles as the cloud of
+    // explored designs, persisted via the warmed eval memo
     let problem = ctx.problem(&space, &set, MemoryTech::Sram, objective);
-    let r = common::run_ga(&problem, common::four_phase(ctx), ctx.seed);
+    ckpt.warm_problem(&problem);
+    let r = common::ga_cell(
+        ckpt,
+        "fig9:cnn4:joint",
+        &problem,
+        common::four_phase(ctx),
+        ctx.seed,
+    )?;
 
     // additional random sweep so every node is represented in the cloud
     let n_sweep = if ctx.quick { 200 } else { 3000 };
@@ -62,6 +70,7 @@ pub fn run(ctx: &ExpContext, _ckpt: &mut Checkpoint) -> Result<Report> {
     let sweep: Vec<crate::space::Design> =
         (0..n_sweep).map(|_| space.random(&mut rng)).collect();
     problem.score_batch(&sweep);
+    ckpt.absorb_problem(&problem)?;
 
     // collect feasible (cost, edap) points from everything evaluated
     let mut points: Vec<(f64, f64, f64, crate::space::Design)> = Vec::new(); // cost, edap, tech

@@ -60,6 +60,13 @@
 //!   leases, a worker supervisor with restart budgets and quarantine,
 //!   and the deterministic fault-injection harness behind the
 //!   crash-matrix tests (see `docs/orchestration.md`).
+//! * [`telemetry`] — deterministic out-of-band observability: relaxed
+//!   atomic counters at the memo/screen/journal/lease hot sites, timing
+//!   spans around the hot boundaries, and a schema-pinned per-generation
+//!   search trace under `<out-dir>/telemetry/`, rendered post-mortem by
+//!   `imcopt trace` (see `docs/telemetry.md`). Strictly out of band:
+//!   reports, journals, and artifacts are byte-identical with telemetry
+//!   on or off.
 //! * [`util`] — std-only infrastructure (RNG, thread pool, sharded
 //!   striped-lock cache, JSON, stats, tables, CLI, property-testing and
 //!   bench harnesses); the offline crate registry has no
@@ -96,6 +103,7 @@ pub mod runtime;
 pub mod scenarios;
 pub mod search;
 pub mod space;
+pub mod telemetry;
 pub mod util;
 pub mod workloads;
 

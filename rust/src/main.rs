@@ -7,6 +7,8 @@
 //!            [--portfolio IDS] [--moo-mode M] [--pareto-cap N]
 //!            [--spec S] [--screen-frac F] [--native|--pjrt] [--workers N]
 //! imcopt list [--markdown|--json]   # the experiment catalog
+//! imcopt trace DIR           # analyze DIR/telemetry/ (hit rates, stage
+//!                            # timings, convergence, worker utilization)
 //! imcopt validate [--out-dir DIR [--require-all]] [--bench FILE] [--schema FILE]
 //!                 [--trend FILE --baseline FILE [--tolerance PCT]]
 //! imcopt search [--mem rram|sram] [--obj edap|edp|energy|latency|area|cost|acc]
@@ -54,6 +56,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "run" | "exp" => cmd_run(args),
         "list" => cmd_list(args),
         "validate" => cmd_validate(args),
+        "trace" => cmd_trace(args),
         "search" => cmd_search(args),
         "eval" => cmd_eval(args),
         "workloads" => cmd_workloads(args),
@@ -76,6 +79,10 @@ fn print_help() {
          \x20                 ({ids})\n\
          \x20 list           show the experiment registry (--markdown regenerates\n\
          \x20                docs/experiments.md, --json the validated listing)\n\
+         \x20 trace DIR      analyze <DIR>/telemetry/ from a previous run: cache\n\
+         \x20                hit rates, per-stage wall-clock, per-cell convergence\n\
+         \x20                and worker utilization (see docs/telemetry.md;\n\
+         \x20                disable collection with IMCOPT_TELEMETRY=0)\n\
          \x20 validate       check experiment/bench JSON artifacts against schemas;\n\
          \x20                --trend FILE --baseline FILE [--tolerance PCT] gates\n\
          \x20                bench throughput/speedup fields against a committed\n\
@@ -207,6 +214,392 @@ fn cmd_list(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.to_text());
+    Ok(())
+}
+
+/// `imcopt trace <out-dir>` — the telemetry analyzer: renders cache
+/// hit-rate, per-stage wall-clock, per-cell convergence and worker
+/// utilization tables from the out-of-band `<out-dir>/telemetry/` files
+/// a run leaves behind (counters snapshots + append-only trace JSONL).
+/// Every counters snapshot and every trace line is schema-validated on
+/// the way in, so the ci.sh telemetry leg doubles as a format gate.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let dir_arg = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or_else(|| args.opt_str("out-dir", "out"));
+    let out_dir = Path::new(dir_arg);
+    let tdir = out_dir.join("telemetry");
+    anyhow::ensure!(
+        tdir.is_dir(),
+        "no telemetry directory under {} — run `imcopt run` against this \
+         out-dir first (telemetry is on by default; IMCOPT_TELEMETRY=0 \
+         disables it)",
+        out_dir.display()
+    );
+    let counters_schema = Path::new(args.opt_str(
+        "counters-schema",
+        "schemas/telemetry_counters.schema.json",
+    ));
+    let trace_schema_path =
+        Path::new(args.opt_str("trace-schema", "schemas/telemetry_trace.schema.json"));
+    let trace_schema_doc = {
+        let text = std::fs::read_to_string(trace_schema_path)
+            .with_context(|| format!("reading {}", trace_schema_path.display()))?;
+        json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", trace_schema_path.display()))?
+    };
+
+    // ---- counters snapshots (in-process + per-worker) ---------------------
+    let mut snapshot_paths: Vec<std::path::PathBuf> = std::fs::read_dir(&tdir)
+        .with_context(|| format!("reading {}", tdir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("counters") && n.ends_with(".json"))
+        })
+        .collect();
+    snapshot_paths.sort();
+    let mut counter_sums: std::collections::BTreeMap<String, f64> = Default::default();
+    let mut span_sums: std::collections::BTreeMap<String, (f64, Option<f64>)> =
+        Default::default();
+    let mut notice_counts: std::collections::BTreeMap<String, f64> = Default::default();
+    // per-worker (or in-process, worker "-") utilization rows
+    let mut worker_rows: Vec<(String, std::collections::BTreeMap<String, f64>)> =
+        Vec::new();
+    for path in &snapshot_paths {
+        let doc = validate_file(path, counters_schema)?;
+        let mut row: std::collections::BTreeMap<String, f64> = Default::default();
+        if let Some(json::Json::Obj(counters)) = doc.get("counters") {
+            for (k, v) in counters {
+                if let Some(x) = v.as_f64() {
+                    *counter_sums.entry(k.clone()).or_insert(0.0) += x;
+                    row.insert(k.clone(), x);
+                }
+            }
+        }
+        if let Some(json::Json::Obj(spans)) = doc.get("spans") {
+            for (name, span) in spans {
+                let count = span.get("count").and_then(|c| c.as_f64()).unwrap_or(0.0);
+                let ms = span.get("total_ms").and_then(|m| m.as_f64());
+                let entry = span_sums.entry(name.clone()).or_insert((0.0, None));
+                entry.0 += count;
+                if let Some(ms) = ms {
+                    entry.1 = Some(entry.1.unwrap_or(0.0) + ms);
+                }
+            }
+        }
+        if let Some(json::Json::Obj(notices)) = doc.get("notices") {
+            for (k, v) in notices {
+                if let Some(x) = v.as_f64() {
+                    *notice_counts.entry(k.clone()).or_insert(0.0) += x;
+                }
+            }
+        }
+        let worker = match doc.get("worker").and_then(|w| w.as_usize()) {
+            Some(w) => w.to_string(),
+            None => "-".to_string(),
+        };
+        worker_rows.push((worker, row));
+    }
+
+    let pct = |num: f64, den: f64| -> String {
+        if den > 0.0 {
+            format!("{:.1}%", 100.0 * num / den)
+        } else {
+            "-".into()
+        }
+    };
+    let n0 = |k: &str| counter_sums.get(k).copied().unwrap_or(0.0);
+
+    if !snapshot_paths.is_empty() {
+        let mut t = Table::new(
+            &format!(
+                "cache & screen hit rates ({} snapshot{})",
+                snapshot_paths.len(),
+                if snapshot_paths.len() == 1 { "" } else { "s" }
+            ),
+            &["path", "hits/kept", "misses/dropped", "lookups", "rate"],
+        );
+        let (eh, em) = (n0("eval_memo_hits"), n0("eval_memo_misses"));
+        t.row(vec![
+            "eval memo".into(),
+            format!("{eh:.0}"),
+            format!("{em:.0}"),
+            format!("{:.0}", eh + em),
+            pct(eh, eh + em),
+        ]);
+        let (ac, am) = (n0("acc_memo_calls"), n0("acc_memo_misses"));
+        t.row(vec![
+            "accuracy memo".into(),
+            format!("{:.0}", ac - am),
+            format!("{am:.0}"),
+            format!("{ac:.0}"),
+            pct(ac - am, ac),
+        ]);
+        let (sa, so) = (n0("screen_accepted"), n0("screened_out"));
+        t.row(vec![
+            "surrogate screen".into(),
+            format!("{sa:.0}"),
+            format!("{so:.0}"),
+            format!("{:.0}", sa + so),
+            pct(sa, sa + so),
+        ]);
+        print!("{}", t.to_text());
+
+        let mut c = Table::new(
+            "work & durability counters",
+            &["counter", "count"],
+        );
+        for key in [
+            "exact_evals",
+            "offgrid_fallbacks",
+            "journal_appends",
+            "journal_syncs",
+            "lease_claims",
+            "lease_steals",
+            "lease_heartbeats",
+            "cells_computed",
+            "cells_reused",
+            "cell_retries",
+            "cells_quarantined",
+            "artifact_writes",
+        ] {
+            c.row(vec![key.into(), format!("{:.0}", n0(key))]);
+        }
+        print!("{}", c.to_text());
+
+        let mut st = Table::new(
+            "per-stage wall clock (nesting by indent; '-' = --stable run)",
+            &["stage", "calls", "total ms", "mean ms"],
+        );
+        for (name, depth) in imcopt::telemetry::STAGES {
+            let (count, ms) = span_sums.get(name).copied().unwrap_or((0.0, None));
+            let (total, mean) = match ms {
+                Some(ms) if count > 0.0 => {
+                    (format!("{ms:.1}"), format!("{:.3}", ms / count))
+                }
+                Some(ms) => (format!("{ms:.1}"), "-".into()),
+                None => ("-".into(), "-".into()),
+            };
+            st.row(vec![
+                format!("{}{name}", "  ".repeat(depth)),
+                format!("{count:.0}"),
+                total,
+                mean,
+            ]);
+        }
+        print!("{}", st.to_text());
+    }
+
+    // ---- trace JSONL: per-cell convergence --------------------------------
+    let mut trace_paths: Vec<std::path::PathBuf> = std::fs::read_dir(&tdir)
+        .with_context(|| format!("reading {}", tdir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("trace") && n.ends_with(".jsonl"))
+        })
+        .collect();
+    trace_paths.sort();
+    // (experiment, cell, seed) -> per-event-kind accumulators
+    #[derive(Default)]
+    struct CellTrace {
+        gens: usize,
+        first_best: Option<f64>,
+        last_best: Option<f64>,
+        last_median: Option<f64>,
+        last_accept: Option<f64>,
+        last_violation: Option<f64>,
+        fronts: usize,
+        last_front_size: Option<f64>,
+        last_hv: Option<f64>,
+        last_evals: Option<f64>,
+    }
+    let mut cells: std::collections::BTreeMap<(String, String, u64), CellTrace> =
+        Default::default();
+    let mut lines_total = 0usize;
+    let mut torn = 0usize;
+    for path in &trace_paths {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        for line in text.lines() {
+            let Ok(doc) = json::parse(line) else {
+                // at most the torn tail of a killed run; anything parseable
+                // must still conform to the schema below
+                torn += 1;
+                continue;
+            };
+            let errs = schema::validate(&trace_schema_doc, &doc);
+            if !errs.is_empty() {
+                bail!(
+                    "{}: trace line violates {}:\n  {}",
+                    path.display(),
+                    trace_schema_path.display(),
+                    errs.join("\n  ")
+                );
+            }
+            lines_total += 1;
+            let key = (
+                doc.get("experiment").and_then(|e| e.as_str()).unwrap_or("").to_string(),
+                doc.get("cell").and_then(|c| c.as_str()).unwrap_or("").to_string(),
+                doc.get("seed").and_then(|s| s.as_usize()).unwrap_or(0) as u64,
+            );
+            let ct = cells.entry(key).or_default();
+            ct.last_evals = doc.get("evals").and_then(|v| v.as_f64()).or(ct.last_evals);
+            match doc.get("event").and_then(|e| e.as_str()) {
+                Some("generation") => {
+                    ct.gens += 1;
+                    let best = doc.get("best").and_then(|b| b.as_f64_lenient());
+                    if ct.first_best.is_none() {
+                        ct.first_best = best;
+                    }
+                    ct.last_best = best.or(ct.last_best);
+                    ct.last_median = doc
+                        .get("median")
+                        .and_then(|m| m.as_f64_lenient())
+                        .or(ct.last_median);
+                    ct.last_accept = doc
+                        .get("screen_accept_rate")
+                        .and_then(|a| a.as_f64())
+                        .or(ct.last_accept);
+                    ct.last_violation = doc
+                        .get("violation_rate")
+                        .and_then(|v| v.as_f64())
+                        .or(ct.last_violation);
+                }
+                Some("front") => {
+                    ct.fronts += 1;
+                    ct.last_front_size =
+                        doc.get("front_size").and_then(|f| f.as_f64()).or(ct.last_front_size);
+                    ct.last_hv = doc
+                        .get("hypervolume")
+                        .and_then(|h| h.as_f64_lenient())
+                        .or(ct.last_hv);
+                }
+                _ => {}
+            }
+        }
+    }
+    let s = |x: Option<f64>| x.map(imcopt::experiments::common::s).unwrap_or_else(|| "-".into());
+    if cells.values().any(|c| c.gens > 0) {
+        let mut t = Table::new(
+            &format!("convergence per search cell ({lines_total} trace events)"),
+            &["experiment", "cell", "seed", "gens", "evals", "best g0", "best end",
+              "median end", "viol", "screen"],
+        );
+        for ((exp, cell, seed), ct) in &cells {
+            if ct.gens == 0 {
+                continue;
+            }
+            t.row(vec![
+                exp.clone(),
+                cell.clone(),
+                seed.to_string(),
+                ct.gens.to_string(),
+                s(ct.last_evals),
+                s(ct.first_best),
+                s(ct.last_best),
+                s(ct.last_median),
+                s(ct.last_violation),
+                ct.last_accept
+                    .map(|a| pct(a, 1.0))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        print!("{}", t.to_text());
+    }
+    if cells.values().any(|c| c.fronts > 0) {
+        let mut t = Table::new(
+            "Pareto front evolution per cell",
+            &["experiment", "cell", "seed", "gens", "evals", "front size", "hypervolume"],
+        );
+        for ((exp, cell, seed), ct) in &cells {
+            if ct.fronts == 0 {
+                continue;
+            }
+            t.row(vec![
+                exp.clone(),
+                cell.clone(),
+                seed.to_string(),
+                ct.fronts.to_string(),
+                s(ct.last_evals),
+                s(ct.last_front_size),
+                s(ct.last_hv),
+            ]);
+        }
+        print!("{}", t.to_text());
+    }
+
+    // ---- worker utilization ----------------------------------------------
+    if worker_rows.iter().any(|(w, _)| w != "-") {
+        // heartbeat ages come from the supervisor's aggregation, when it ran
+        let status_doc = std::fs::read_to_string(out_dir.join("orchestrator_status.json"))
+            .ok()
+            .and_then(|text| json::parse(&text).ok());
+        let age_of = |w: &str| -> String {
+            status_doc
+                .as_ref()
+                .and_then(|d| d.get("worker_status"))
+                .and_then(|ws| ws.as_arr())
+                .and_then(|ws| {
+                    ws.iter().find(|e| {
+                        e.get("worker").and_then(|x| x.as_usize())
+                            == w.parse::<usize>().ok()
+                    })
+                })
+                .and_then(|e| e.get("heartbeat_age_ms"))
+                .and_then(|a| a.as_f64())
+                .map(|a| format!("{a:.0}"))
+                .unwrap_or_else(|| "-".into())
+        };
+        let mut t = Table::new(
+            "worker utilization (counters-w<i>.json + orchestrator status)",
+            &["worker", "computed", "reused", "exact evals", "claims", "steals",
+              "heartbeats", "hb age ms"],
+        );
+        for (w, row) in &worker_rows {
+            let g = |k: &str| row.get(k).copied().unwrap_or(0.0);
+            t.row(vec![
+                w.clone(),
+                format!("{:.0}", g("cells_computed")),
+                format!("{:.0}", g("cells_reused")),
+                format!("{:.0}", g("exact_evals")),
+                format!("{:.0}", g("lease_claims")),
+                format!("{:.0}", g("lease_steals")),
+                format!("{:.0}", g("lease_heartbeats")),
+                age_of(w),
+            ]);
+        }
+        print!("{}", t.to_text());
+    }
+
+    if !notice_counts.is_empty() {
+        let mut t = Table::new("degradation notices", &["notice", "count"]);
+        for (k, v) in &notice_counts {
+            t.row(vec![k.clone(), format!("{v:.0}")]);
+        }
+        print!("{}", t.to_text());
+    }
+
+    anyhow::ensure!(
+        !snapshot_paths.is_empty() || lines_total > 0,
+        "telemetry directory {} holds no counters snapshots or trace events",
+        tdir.display()
+    );
+    if torn > 0 {
+        eprintln!("[trace] skipped {torn} unparseable line(s) (torn tail of a killed run)");
+    }
+    println!(
+        "trace ok: {} snapshot(s), {} trace event(s), {} search cell(s) under {}",
+        snapshot_paths.len(),
+        lines_total,
+        cells.len(),
+        tdir.display()
+    );
     Ok(())
 }
 

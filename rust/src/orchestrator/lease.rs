@@ -171,6 +171,7 @@ impl CellClaims {
                 std::fs::rename(&tmp, &path)
                     .with_context(|| format!("stealing lease {}", path.display()))?;
                 self.steals.fetch_add(1, Ordering::Relaxed);
+                crate::telemetry::lease_steal();
                 self.acquired(&path);
                 Ok(Some(ClaimGuard::new(self, path)))
             }
@@ -182,6 +183,7 @@ impl CellClaims {
 
     fn acquired(self: &Arc<Self>, path: &Path) {
         self.claims.fetch_add(1, Ordering::Relaxed);
+        crate::telemetry::lease_claim();
         self.state
             .lock()
             .expect("heartbeat state lock")
@@ -212,6 +214,7 @@ impl CellClaims {
                     // the journal, not the lease, carries the value)
                     if let Ok(body) = std::fs::read(&path) {
                         let _ = std::fs::write(&path, body);
+                        crate::telemetry::lease_heartbeat();
                     }
                 }
             }

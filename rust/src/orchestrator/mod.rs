@@ -113,6 +113,9 @@ pub fn worker_log_path(out_dir: &Path, worker: usize) -> std::path::PathBuf {
 
 /// Serialize a worker's run outcome for the supervisor.
 pub fn summary_to_json(worker: usize, summary: &RunSummary, claims: &CellClaims) -> Json {
+    let heartbeats = crate::telemetry::counters()
+        .lease_heartbeats
+        .load(std::sync::atomic::Ordering::Relaxed);
     Json::obj(vec![
         ("worker", Json::Num(worker as f64)),
         ("pid", Json::Num(std::process::id() as f64)),
@@ -120,8 +123,13 @@ pub fn summary_to_json(worker: usize, summary: &RunSummary, claims: &CellClaims)
         ("replayed", Json::Num(summary.replayed as f64)),
         ("cells_reused", Json::Num(summary.cells_reused as f64)),
         ("cells_computed", Json::Num(summary.cells_computed as f64)),
+        (
+            "cells_completed",
+            Json::Num((summary.cells_computed + summary.cells_reused) as f64),
+        ),
         ("claims", Json::Num(claims.claim_count() as f64)),
         ("steals", Json::Num(claims.steal_count() as f64)),
+        ("heartbeats", Json::Num(heartbeats as f64)),
         (
             "quarantined",
             Json::Arr(

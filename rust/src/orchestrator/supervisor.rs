@@ -28,7 +28,7 @@ use crate::util::json::{self, Json};
 use anyhow::{Context, Result};
 use std::path::Path;
 use std::process::{Child, Command, Stdio};
-use std::time::Duration;
+use std::time::{Duration, SystemTime};
 
 /// Reconstruct the `imcopt run` argument vector a worker needs to execute
 /// the same sweep as the supervisor's own invocation (minus `--workers`,
@@ -145,6 +145,79 @@ fn read_worker_summary(out_dir: &Path, worker: usize) -> Option<(RunSummary, Jso
         }
     }
     Some((summary, doc))
+}
+
+/// Age in milliseconds of the last observable sign of life from `worker`:
+/// the newest mtime among its status file and any lease files it still
+/// holds. `None` when neither exists (a worker that died before writing
+/// either). An abandoned-but-leased worker shows a growing age here,
+/// which is what makes a hung worker visible in `orchestrator_status.json`.
+fn last_heartbeat_age_ms(out_dir: &Path, worker: usize) -> Option<u64> {
+    let mut newest: Option<SystemTime> = None;
+    let mut consider = |t: SystemTime| {
+        newest = Some(match newest {
+            Some(n) if n >= t => n,
+            _ => t,
+        });
+    };
+    if let Ok(modified) =
+        std::fs::metadata(worker_status_path(out_dir, worker)).and_then(|m| m.modified())
+    {
+        consider(modified);
+    }
+    let claims_dir = out_dir.join("checkpoints").join("claims");
+    if let Ok(entries) = std::fs::read_dir(&claims_dir) {
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|x| x.to_str()) != Some("lease") {
+                continue;
+            }
+            let owner = std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|text| json::parse(text.trim()).ok())
+                .and_then(|doc| doc.get("worker").and_then(|w| w.as_usize()));
+            if owner == Some(worker) {
+                if let Ok(modified) = entry.metadata().and_then(|m| m.modified()) {
+                    consider(modified);
+                }
+            }
+        }
+    }
+    let newest = newest?;
+    Some(
+        SystemTime::now()
+            .duration_since(newest)
+            .unwrap_or_default()
+            .as_millis() as u64,
+    )
+}
+
+/// Sum the numeric telemetry counters across all per-worker snapshot
+/// files (`<out_dir>/telemetry/counters-w<i>.json`) into one object, or
+/// `None` when no worker wrote one (telemetry disabled).
+fn aggregate_worker_counters(out_dir: &Path, workers: usize) -> Option<Json> {
+    let mut sums: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
+    let mut found = false;
+    for w in 0..workers {
+        let path = out_dir
+            .join("telemetry")
+            .join(format!("counters-w{w}.json"));
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            continue;
+        };
+        let Ok(doc) = json::parse(&text) else {
+            continue;
+        };
+        if let Some(Json::Obj(counters)) = doc.get("counters") {
+            found = true;
+            for (k, v) in counters {
+                if let Json::Num(x) = v {
+                    *sums.entry(k.clone()).or_insert(0.0) += x;
+                }
+            }
+        }
+    }
+    found.then(|| Json::Obj(sums.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()))
 }
 
 /// Run `ids` across `ctx.workers` worker processes sharing `ctx.out_dir`.
@@ -272,12 +345,26 @@ pub fn supervise(ids: &[&str], ctx: &ExpContext) -> Result<RunSummary> {
         ];
         if let Some((ws, doc)) = read_worker_summary(&ctx.out_dir, slot.worker) {
             summary.merge(&ws);
-            for k in ["claims", "steals", "cells_computed", "cells_reused"] {
+            for k in [
+                "claims",
+                "steals",
+                "cells_computed",
+                "cells_reused",
+                "cells_completed",
+                "heartbeats",
+            ] {
                 if let Some(v) = doc.get(k) {
                     entry.push((k, v.clone()));
                 }
             }
         }
+        entry.push((
+            "heartbeat_age_ms",
+            match last_heartbeat_age_ms(&ctx.out_dir, slot.worker) {
+                Some(ms) => Json::Num(ms as f64),
+                None => Json::Null,
+            },
+        ));
         worker_status.push(Json::Obj(
             entry
                 .into_iter()
@@ -304,6 +391,10 @@ pub fn supervise(ids: &[&str], ctx: &ExpContext) -> Result<RunSummary> {
     let status = Json::obj(vec![
         ("workers", Json::Num(workers as f64)),
         ("resume", Json::Bool(ctx.resume)),
+        (
+            "telemetry",
+            aggregate_worker_counters(&ctx.out_dir, workers).unwrap_or(Json::Null),
+        ),
         (
             "worker_status",
             Json::Arr(worker_status),

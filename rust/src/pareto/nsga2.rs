@@ -193,6 +193,17 @@ fn rank_population<P: MultiObjective>(
     keys
 }
 
+/// Emit a per-generation Pareto trace event (front size + normalized
+/// hypervolume). The hypervolume is computed only when a telemetry sink
+/// is active — it feeds nothing but the trace, so skipping it is free.
+fn trace_front(gen: usize, evals: usize, archive: &ParetoArchive) {
+    if !crate::telemetry::active() {
+        return;
+    }
+    let hv = super::indicators::normalized_hypervolume(&archive.objective_vectors());
+    crate::telemetry::emit_front(gen, evals, archive.len(), hv);
+}
+
 /// Constrained binary tournament over a ranked population.
 fn tournament<'a>(pop: &'a [Design], keys: &[SelKey], rng: &mut Rng) -> &'a Design {
     let a = rng.below(pop.len());
@@ -252,6 +263,7 @@ impl MultiObjectiveOptimizer for Nsga2 {
         evals += pop.len();
         archive.offer_batch(&pop, &pop_objs);
         front_sizes.push(archive.len());
+        trace_front(0, evals, &archive);
         if let Some(s) = screen.as_mut() {
             s.observe_vec(space, &pop, &pop_objs);
         }
@@ -314,6 +326,7 @@ impl MultiObjectiveOptimizer for Nsga2 {
                 pop = survivors.iter().map(|&i| pool[i].clone()).collect();
                 pop_objs = survivors.iter().map(|&i| pool_objs[i].clone()).collect();
                 front_sizes.push(archive.len());
+                trace_front(front_sizes.len() - 1, evals, &archive);
             }
         }
 

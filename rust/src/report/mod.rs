@@ -159,6 +159,7 @@ impl Report {
     /// Print to stdout and persist `<out_dir>/<id>.md`, `<id>.json` and
     /// one CSV per table.
     pub fn emit(&self, out_dir: &Path) -> Result<()> {
+        let _span = crate::telemetry::span(crate::telemetry::Stage::ArtifactWrite);
         print!("{}", self.to_text());
         std::fs::create_dir_all(out_dir)?;
         // temp-file + rename per artifact: concurrent orchestrator workers
@@ -168,10 +169,12 @@ impl Report {
             &out_dir.join(format!("{}.md", self.id)),
             &self.to_markdown(),
         )?;
+        crate::telemetry::artifact_write();
         crate::util::write_atomic(
             &out_dir.join(format!("{}.json", self.id)),
             &(self.to_json().to_string() + "\n"),
         )?;
+        crate::telemetry::artifact_write();
         for (i, t) in self.tables.iter().enumerate() {
             let name = if self.tables.len() == 1 {
                 format!("{}.csv", self.id)
@@ -179,6 +182,7 @@ impl Report {
                 format!("{}_{}.csv", self.id, i)
             };
             crate::util::write_atomic(&out_dir.join(name), &t.to_csv())?;
+            crate::telemetry::artifact_write();
         }
         Ok(())
     }

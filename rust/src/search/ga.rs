@@ -286,6 +286,12 @@ impl Optimizer for GeneticAlgorithm {
         let phases = &cfg.phases;
         let gens_per_phase = (cfg.budget.gens / phases.len()).max(1);
 
+        // trace bookkeeping (out of band): generation index and the
+        // surrogate-screen (accepted, pool) sizes that produced the
+        // population being scored — the initial population is unscreened
+        let mut gen_idx = 0usize;
+        let mut last_accept = (pop_size, pop_size);
+
         for ph in phases {
             let mut stall = 0usize;
             let mut phase_best = f64::INFINITY;
@@ -297,6 +303,15 @@ impl Optimizer for GeneticAlgorithm {
                 if let Some(s) = screen.as_mut() {
                     s.observe(space, &pop, &scores);
                 }
+                crate::telemetry::emit_generation(
+                    gen_idx,
+                    evals,
+                    tracker.best_score(),
+                    &scores,
+                    last_accept.0,
+                    last_accept.1,
+                );
+                gen_idx += 1;
 
                 // §V-D early stopping: cut the phase short once the best
                 // score plateaus
@@ -352,6 +367,7 @@ impl Optimizer for GeneticAlgorithm {
                                 pool.push(c2);
                             }
                         }
+                        last_accept = (lambda, pool.len());
                         next.extend(s.select(space, pool, lambda));
                     }
                 }
@@ -364,6 +380,14 @@ impl Optimizer for GeneticAlgorithm {
         evals += pop.len();
         tracker.observe(&pop, &scores);
         tracker.end_generation();
+        crate::telemetry::emit_generation(
+            gen_idx,
+            evals,
+            tracker.best_score(),
+            &scores,
+            last_accept.0,
+            last_accept.1,
+        );
 
         tracker.into_result_k(self.name(), evals, t0.elapsed(), cfg.top_k)
     }

@@ -334,11 +334,18 @@ impl ScreenState {
     pub fn select(&mut self, space: &SearchSpace, pool: Vec<Design>, keep: usize) -> Vec<Design> {
         if pool.len() <= keep {
             self.carry.clear();
+            crate::telemetry::screen_selected(pool.len(), 0);
             return pool;
         }
+        crate::telemetry::screen_selected(keep, pool.len() - keep);
         let mut chosen = vec![false; pool.len()];
-        match RidgeModel::fit(&self.xs, &self.ys, SCREEN_LAMBDA) {
+        let fitted = {
+            let _span = crate::telemetry::span(crate::telemetry::Stage::SurrogateFit);
+            RidgeModel::fit(&self.xs, &self.ys, SCREEN_LAMBDA)
+        };
+        match fitted {
             Some(model) => {
+                let _span = crate::telemetry::span(crate::telemetry::Stage::SurrogateRank);
                 let mut ranked: Vec<(f64, usize)> = pool
                     .iter()
                     .enumerate()

@@ -1,0 +1,785 @@
+//! Deterministic, out-of-band observability: process-wide counters,
+//! hierarchical timing spans, and a per-generation search trace.
+//!
+//! The search/cache/orchestrator stack computes rich internal signals
+//! (memo hit rates, surrogate accept rates, per-generation bests, lease
+//! steals) and — before this module — threw them away. Telemetry makes
+//! them visible without perturbing anything the determinism contract
+//! pins:
+//!
+//! * **Counters** are relaxed [`AtomicU64`]s bumped at the existing hot
+//!   sites (eval-memo lookups per shard, accuracy-memo lookups, exact
+//!   evaluations, surrogate screen accept/reject, journal appends +
+//!   fsyncs, lease claims/steals/heartbeats, cell retries/quarantines,
+//!   artifact writes). They never feed back into scores, RNG streams,
+//!   or control flow.
+//! * **Spans** accumulate wall-clock per fixed [`Stage`] (count +
+//!   total nanoseconds) via a drop guard; rendering happens only in
+//!   `imcopt trace` and the counters snapshot, where wall fields are
+//!   masked under `--stable` exactly like report timings.
+//! * **Trace events** (per-generation best/median/violation/accept rate,
+//!   Pareto front size + hypervolume) append schema-pinned JSONL lines
+//!   under `<out-dir>/telemetry/` — `trace.jsonl` in-process,
+//!   `trace-w<i>.jsonl` per orchestrator worker. Trace files are
+//!   append-only and excluded from resume byte-diff checks.
+//!
+//! Enablement: telemetry is **on by default**; the `IMCOPT_TELEMETRY=0`
+//! environment variable (or [`set_enabled`]) disables it. Because the
+//! toggle is an env var it propagates to spawned orchestrator workers
+//! without widening the worker argv, and it is deliberately **not** part
+//! of [`config_fingerprint`](crate::experiments::config_fingerprint):
+//! a run checkpointed with telemetry on resumes cleanly with it off and
+//! vice versa. The whole layer is strictly out of band — reports,
+//! journals, and artifacts are byte-identical with telemetry on or off,
+//! at any `--threads`/`--workers` count (see
+//! `tests/telemetry_determinism.rs` and the ≤2% `score_batch` overhead
+//! gate in `benches/telemetry.rs`).
+
+use crate::util::json::Json;
+use crate::util::write_atomic;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Eval-memo shard count mirrored from
+/// [`ShardedCache`](crate::util::shards::ShardedCache); per-shard hit
+/// counters index modulo this.
+pub const EVAL_SHARDS: usize = 16;
+
+// ---------------------------------------------------------------------------
+// enablement
+// ---------------------------------------------------------------------------
+
+/// 0 = uninitialised (consult `IMCOPT_TELEMETRY`), 1 = on, 2 = off.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+/// Is telemetry collection active? Defaults to `true`; the first call
+/// latches `IMCOPT_TELEMETRY` (`0` disables) unless [`set_enabled`] ran
+/// first.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let on = std::env::var("IMCOPT_TELEMETRY")
+                .map(|v| v != "0")
+                .unwrap_or(true);
+            STATE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Force telemetry on/off for this process (tests and benches; the env
+/// var is the user-facing switch).
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// counters
+// ---------------------------------------------------------------------------
+
+macro_rules! scalar_counters {
+    ($($name:ident),* $(,)?) => {
+        /// Process-wide event counters (all relaxed; order between
+        /// counters is never inspected).
+        #[derive(Debug)]
+        pub struct Counters {
+            /// Eval-memo hits, striped by cache shard.
+            pub eval_memo_hits: [AtomicU64; EVAL_SHARDS],
+            $(pub $name: AtomicU64,)*
+        }
+
+        impl Counters {
+            const fn new() -> Counters {
+                #[allow(clippy::declare_interior_mutable_const)]
+                const Z: AtomicU64 = AtomicU64::new(0);
+                Counters { eval_memo_hits: [Z; EVAL_SHARDS], $($name: Z,)* }
+            }
+
+            fn reset(&self) {
+                for s in &self.eval_memo_hits {
+                    s.store(0, Ordering::Relaxed);
+                }
+                $(self.$name.store(0, Ordering::Relaxed);)*
+            }
+
+            fn scalars(&self) -> Vec<(&'static str, u64)> {
+                vec![$((stringify!($name), self.$name.load(Ordering::Relaxed)),)*]
+            }
+        }
+    };
+}
+
+scalar_counters!(
+    eval_memo_misses,
+    acc_memo_calls,
+    acc_memo_misses,
+    exact_evals,
+    screen_accepted,
+    screened_out,
+    journal_appends,
+    journal_syncs,
+    lease_claims,
+    lease_steals,
+    lease_heartbeats,
+    cell_retries,
+    cells_quarantined,
+    cells_computed,
+    cells_reused,
+    artifact_writes,
+);
+
+static COUNTERS: Counters = Counters::new();
+
+/// The live counter block (read-only access for tests and `trace`).
+pub fn counters() -> &'static Counters {
+    &COUNTERS
+}
+
+#[inline]
+fn bump(c: &AtomicU64, n: u64) {
+    if enabled() {
+        c.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// An eval-memo lookup was served from the cache (`shard` = the striped
+/// cache's stripe index for the key).
+#[inline]
+pub fn eval_memo_hit(shard: usize) {
+    if enabled() {
+        COUNTERS.eval_memo_hits[shard % EVAL_SHARDS].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// An eval-memo lookup missed.
+#[inline]
+pub fn eval_memo_miss() {
+    bump(&COUNTERS.eval_memo_misses, 1);
+}
+
+/// An accuracy-memo lookup ran (`miss` = the closure actually computed).
+#[inline]
+pub fn acc_memo_lookup(miss: bool) {
+    bump(&COUNTERS.acc_memo_calls, 1);
+    if miss {
+        bump(&COUNTERS.acc_memo_misses, 1);
+    }
+}
+
+/// `n` designs reached the exact evaluator.
+#[inline]
+pub fn exact_evals(n: usize) {
+    bump(&COUNTERS.exact_evals, n as u64);
+}
+
+/// A surrogate screen pass kept `accepted` of `accepted + rejected`
+/// candidates for exact evaluation.
+#[inline]
+pub fn screen_selected(accepted: usize, rejected: usize) {
+    bump(&COUNTERS.screen_accepted, accepted as u64);
+    bump(&COUNTERS.screened_out, rejected as u64);
+}
+
+/// `n` journal lines were appended (cell journal, shared namespace, or
+/// memo snapshot files).
+#[inline]
+pub fn journal_appends(n: usize) {
+    bump(&COUNTERS.journal_appends, n as u64);
+}
+
+/// A journal append batch was fsynced.
+#[inline]
+pub fn journal_sync() {
+    bump(&COUNTERS.journal_syncs, 1);
+}
+
+#[inline]
+pub fn lease_claim() {
+    bump(&COUNTERS.lease_claims, 1);
+}
+
+#[inline]
+pub fn lease_steal() {
+    bump(&COUNTERS.lease_steals, 1);
+}
+
+#[inline]
+pub fn lease_heartbeat() {
+    bump(&COUNTERS.lease_heartbeats, 1);
+}
+
+/// A cell failed and is being retried.
+#[inline]
+pub fn cell_retry() {
+    bump(&COUNTERS.cell_retries, 1);
+}
+
+/// A cell exhausted its retries and was quarantined.
+#[inline]
+pub fn cell_quarantined() {
+    bump(&COUNTERS.cells_quarantined, 1);
+}
+
+/// A checkpoint cell was computed fresh.
+#[inline]
+pub fn cell_computed() {
+    bump(&COUNTERS.cells_computed, 1);
+}
+
+/// A checkpoint cell was replayed from the journal.
+#[inline]
+pub fn cell_reused() {
+    bump(&COUNTERS.cells_reused, 1);
+}
+
+/// One report artifact file landed on disk.
+#[inline]
+pub fn artifact_write() {
+    bump(&COUNTERS.artifact_writes, 1);
+}
+
+// ---------------------------------------------------------------------------
+// notice occurrence counts (satellite: `notice (xN)` rendering)
+// ---------------------------------------------------------------------------
+
+static NOTICES: Mutex<BTreeMap<String, u64>> = Mutex::new(BTreeMap::new());
+
+/// Count one occurrence of a deduplicated report notice. Called by
+/// [`ExpContext::record_notice`](crate::coordinator::config::ExpContext::record_notice)
+/// *before* its dedup check, so repeat recordings keep their count even
+/// though `notices()` holds each string once.
+///
+/// Deliberately NOT gated on [`enabled`]: the count feeds the
+/// `notice (xN)` suffix in report notes, and reports must stay
+/// byte-identical whether telemetry is on or off. Unlike the hot-path
+/// counters this fires only on rare degradation events, so the
+/// unconditional map touch costs nothing.
+pub fn count_notice(notice: &str) {
+    let mut map = NOTICES.lock().unwrap();
+    *map.entry(notice.to_string()).or_insert(0) += 1;
+}
+
+/// How many times `notice` was recorded.
+pub fn notice_count(notice: &str) -> u64 {
+    NOTICES.lock().unwrap().get(notice).copied().unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// timing spans
+// ---------------------------------------------------------------------------
+
+/// The fixed set of instrumented stages. `depth` encodes the static
+/// nesting used by `imcopt trace` rendering (evaluate_misses runs inside
+/// score_batch, which runs inside a checkpoint cell compute).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    CellCompute = 0,
+    ScoreBatch = 1,
+    EvaluateMisses = 2,
+    SurrogateFit = 3,
+    SurrogateRank = 4,
+    ArtifactWrite = 5,
+}
+
+/// (name, nesting depth) per stage, in render order.
+pub const STAGES: [(&str, usize); 6] = [
+    ("cell_compute", 0),
+    ("score_batch", 1),
+    ("evaluate_misses", 2),
+    ("surrogate_fit", 1),
+    ("surrogate_rank", 1),
+    ("artifact_write", 0),
+];
+
+struct SpanCell {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+}
+
+impl SpanCell {
+    const fn new() -> SpanCell {
+        SpanCell {
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+static SPANS: [SpanCell; 6] = [
+    SpanCell::new(),
+    SpanCell::new(),
+    SpanCell::new(),
+    SpanCell::new(),
+    SpanCell::new(),
+    SpanCell::new(),
+];
+
+/// RAII timing guard; records (count += 1, total_ns += elapsed) for its
+/// stage on drop. A guard taken while telemetry is disabled is a no-op
+/// (no clock read on either end).
+pub struct SpanGuard {
+    stage: Option<(usize, Instant)>,
+}
+
+/// Open a timing span for `stage`.
+#[inline]
+pub fn span(stage: Stage) -> SpanGuard {
+    SpanGuard {
+        stage: enabled().then(|| (stage as usize, Instant::now())),
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((idx, start)) = self.stage {
+            let ns = start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            SPANS[idx].count.fetch_add(1, Ordering::Relaxed);
+            SPANS[idx].total_ns.fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+}
+
+/// (stage name, call count, total nanoseconds) per stage, render order.
+pub fn span_totals() -> Vec<(&'static str, u64, u64)> {
+    STAGES
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| {
+            (
+                *name,
+                SPANS[i].count.load(Ordering::Relaxed),
+                SPANS[i].total_ns.load(Ordering::Relaxed),
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// trace sink
+// ---------------------------------------------------------------------------
+
+struct Sink {
+    /// `<out-dir>/telemetry/` — snapshots land here too.
+    dir: PathBuf,
+    /// `trace.jsonl` or `trace-w<i>.jsonl` inside `dir`.
+    trace_path: PathBuf,
+    stable: bool,
+    worker: Option<usize>,
+    t0: Instant,
+    /// Current (experiment, cell key, seed) context for trace events.
+    experiment: String,
+    cell: String,
+    seed: u64,
+}
+
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+/// Install the process-wide trace sink: creates `<out-dir>/telemetry/`
+/// and routes subsequent trace events to `trace.jsonl` (or
+/// `trace-w<i>.jsonl` for orchestrator workers). Replaces any previous
+/// sink. No-op (and no directory creation) when telemetry is disabled.
+pub fn install_sink(out_dir: &Path, stable: bool, worker: Option<usize>) {
+    if !enabled() {
+        return;
+    }
+    let dir = out_dir.join("telemetry");
+    let _ = std::fs::create_dir_all(&dir);
+    let trace_path = dir.join(match worker {
+        Some(w) => format!("trace-w{w}.jsonl"),
+        None => "trace.jsonl".to_string(),
+    });
+    *SINK.lock().unwrap() = Some(Sink {
+        dir,
+        trace_path,
+        stable,
+        worker,
+        t0: Instant::now(),
+        experiment: String::new(),
+        cell: String::new(),
+        seed: 0,
+    });
+}
+
+/// Drop the trace sink (tests).
+pub fn uninstall_sink() {
+    *SINK.lock().unwrap() = None;
+}
+
+/// Is a sink installed and telemetry on? Callers computing trace-only
+/// values (e.g. per-generation hypervolume) gate on this.
+pub fn active() -> bool {
+    enabled() && SINK.lock().unwrap().is_some()
+}
+
+/// Set the (experiment, cell, seed) context stamped on trace events.
+/// Called by `run_session` at experiment granularity and refined by
+/// `common::opt_cell` per checkpoint cell.
+pub fn set_cell(experiment: &str, cell: &str, seed: u64) {
+    if !enabled() {
+        return;
+    }
+    if let Some(sink) = SINK.lock().unwrap().as_mut() {
+        sink.experiment = experiment.to_string();
+        sink.cell = cell.to_string();
+        sink.seed = seed;
+    }
+}
+
+/// Refine just the cell key — and, when known, the derived seed — of the
+/// trace context, keeping the experiment set by `run_session`. Called by
+/// the checkpoint cell wrappers (`common::opt_cell` / `ga_cell`) so
+/// generation events carry the `<exp>:<scenario>:<unit>` key of the cell
+/// that produced them.
+pub fn set_cell_key(cell: &str, seed: Option<u64>) {
+    if !enabled() {
+        return;
+    }
+    if let Some(sink) = SINK.lock().unwrap().as_mut() {
+        sink.cell = cell.to_string();
+        if let Some(s) = seed {
+            sink.seed = s;
+        }
+    }
+}
+
+/// Append one event line; `extra` is spliced after the common envelope.
+fn emit(event: &str, extra: Vec<(&str, Json)>) {
+    let mut guard = SINK.lock().unwrap();
+    let Some(sink) = guard.as_mut() else {
+        return;
+    };
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("event", Json::Str(event.to_string())),
+        ("experiment", Json::Str(sink.experiment.clone())),
+        ("cell", Json::Str(sink.cell.clone())),
+        ("seed", Json::Num(sink.seed as f64)),
+    ];
+    fields.extend(extra);
+    if !sink.stable {
+        // wall-clock is masked under --stable, like report timings
+        let ms = sink.t0.elapsed().as_secs_f64() * 1e3;
+        fields.push(("wall_ms", Json::Num(ms)));
+    }
+    let line = Json::obj(fields).to_string();
+    // append-only + fsync, mirroring the checkpoint journal discipline:
+    // a torn tail is at worst one partial line `imcopt trace` skips
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&sink.trace_path)
+    {
+        if f.write_all(format!("{line}\n").as_bytes()).is_ok() {
+            let _ = f.sync_data();
+        }
+    }
+}
+
+/// Emit a per-generation scalar-search trace event. `scores` is the
+/// generation's raw score vector (median and violation rate derive from
+/// it); `accepted`/`pool` describe the surrogate screen (equal when no
+/// screening ran). Cheap no-op without an active sink.
+pub fn emit_generation(
+    gen: usize,
+    evals: usize,
+    best: f64,
+    scores: &[f64],
+    accepted: usize,
+    pool: usize,
+) {
+    if !active() {
+        return;
+    }
+    let mut sorted: Vec<f64> = scores.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let median = if sorted.is_empty() {
+        f64::NAN
+    } else {
+        sorted[sorted.len() / 2]
+    };
+    let violations = scores.iter().filter(|s| !s.is_finite()).count();
+    let violation_rate = if scores.is_empty() {
+        0.0
+    } else {
+        violations as f64 / scores.len() as f64
+    };
+    let accept_rate = if pool == 0 {
+        1.0
+    } else {
+        accepted as f64 / pool as f64
+    };
+    emit(
+        "generation",
+        vec![
+            ("gen", Json::Num(gen as f64)),
+            ("evals", Json::Num(evals as f64)),
+            ("best", Json::f64(best)),
+            ("median", Json::f64(median)),
+            ("violation_rate", Json::Num(violation_rate)),
+            ("screen_accept_rate", Json::Num(accept_rate)),
+        ],
+    );
+}
+
+/// Emit a per-generation Pareto front trace event (NSGA-II mode).
+pub fn emit_front(gen: usize, evals: usize, front_size: usize, hypervolume: f64) {
+    if !active() {
+        return;
+    }
+    emit(
+        "front",
+        vec![
+            ("gen", Json::Num(gen as f64)),
+            ("evals", Json::Num(evals as f64)),
+            ("front_size", Json::Num(front_size as f64)),
+            ("hypervolume", Json::f64(hypervolume)),
+        ],
+    );
+}
+
+// ---------------------------------------------------------------------------
+// snapshots
+// ---------------------------------------------------------------------------
+
+/// The full counter/span/notice state as JSON (the payload of
+/// `telemetry/counters[-w<i>].json`). `stable` masks span wall-clock.
+pub fn counters_json(stable: bool) -> Json {
+    let mut counters: Vec<(&str, Json)> = Vec::new();
+    let shard_hits: Vec<u64> = COUNTERS
+        .eval_memo_hits
+        .iter()
+        .map(|s| s.load(Ordering::Relaxed))
+        .collect();
+    counters.push((
+        "eval_memo_hits",
+        Json::Num(shard_hits.iter().sum::<u64>() as f64),
+    ));
+    counters.push((
+        "eval_memo_hits_by_shard",
+        Json::Arr(shard_hits.iter().map(|&h| Json::Num(h as f64)).collect()),
+    ));
+    for (name, v) in COUNTERS.scalars() {
+        counters.push((name, Json::Num(v as f64)));
+    }
+    counters.push((
+        "offgrid_fallbacks",
+        Json::Num(crate::model::offgrid_fallbacks() as f64),
+    ));
+
+    let spans = Json::Obj(
+        span_totals()
+            .into_iter()
+            .map(|(name, count, ns)| {
+                let mut fields = vec![("count", Json::Num(count as f64))];
+                if !stable {
+                    fields.push(("total_ms", Json::Num(ns as f64 / 1e6)));
+                }
+                (name.to_string(), Json::obj(fields))
+            })
+            .collect(),
+    );
+
+    let notices = Json::Obj(
+        NOTICES
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect(),
+    );
+
+    Json::obj(vec![
+        ("schema", Json::Str("imcopt.telemetry.counters.v1".into())),
+        ("counters", Json::obj(counters)),
+        ("spans", spans),
+        ("notices", notices),
+    ])
+}
+
+/// Write the counters snapshot next to the trace file
+/// (`counters.json` / `counters-w<i>.json`), atomically. No-op without
+/// an active sink.
+pub fn write_snapshot() {
+    if !enabled() {
+        return;
+    }
+    let (dir, stable, worker) = {
+        let guard = SINK.lock().unwrap();
+        let Some(sink) = guard.as_ref() else {
+            return;
+        };
+        (sink.dir.clone(), sink.stable, sink.worker)
+    };
+    let mut doc = counters_json(stable);
+    if let Json::Obj(m) = &mut doc {
+        m.insert(
+            "worker".into(),
+            match worker {
+                Some(w) => Json::Num(w as f64),
+                None => Json::Null,
+            },
+        );
+    }
+    let name = match worker {
+        Some(w) => format!("counters-w{w}.json"),
+        None => "counters.json".to_string(),
+    };
+    let _ = write_atomic(&dir.join(name), &format!("{doc}\n"));
+}
+
+/// Zero all counters, spans, and notice counts (tests and benches).
+pub fn reset() {
+    COUNTERS.reset();
+    for s in &SPANS {
+        s.count.store(0, Ordering::Relaxed);
+        s.total_ns.store(0, Ordering::Relaxed);
+    }
+    NOTICES.lock().unwrap().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes this module's tests: they flip the process-wide
+    /// enabled flag and the sink, which must not interleave.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    /// Other lib tests share these process-wide statics, so assertions
+    /// here are delta-based (>=) rather than exact.
+    #[test]
+    fn counters_and_spans_accumulate() {
+        let _l = LOCK.lock().unwrap();
+        set_enabled(true);
+        let hits0: u64 = counters()
+            .eval_memo_hits
+            .iter()
+            .map(|s| s.load(Ordering::Relaxed))
+            .sum();
+        let miss0 = counters().eval_memo_misses.load(Ordering::Relaxed);
+        eval_memo_hit(3);
+        eval_memo_hit(3 + EVAL_SHARDS); // same stripe, wraps
+        eval_memo_miss();
+        let hits1: u64 = counters()
+            .eval_memo_hits
+            .iter()
+            .map(|s| s.load(Ordering::Relaxed))
+            .sum();
+        assert!(hits1 >= hits0 + 2);
+        assert!(counters().eval_memo_misses.load(Ordering::Relaxed) >= miss0 + 1);
+
+        let (_, c0, _) = span_totals()[1]; // score_batch
+        {
+            let _g = span(Stage::ScoreBatch);
+        }
+        let (name, c1, _) = span_totals()[1];
+        assert_eq!(name, "score_batch");
+        assert!(c1 >= c0 + 1);
+    }
+
+    #[test]
+    fn disabled_telemetry_is_a_no_op() {
+        let _l = LOCK.lock().unwrap();
+        set_enabled(false);
+        // cells_quarantined is only bumped by the run_session quarantine
+        // path, which no lib unit test exercises concurrently
+        let before = counters().cells_quarantined.load(Ordering::Relaxed);
+        cell_quarantined();
+        {
+            let g = span(Stage::ArtifactWrite);
+            assert!(g.stage.is_none());
+        }
+        assert_eq!(counters().cells_quarantined.load(Ordering::Relaxed), before);
+        // notice counts feed the `(xN)` suffix in report notes, so they
+        // deliberately keep counting while disabled — reports must not
+        // change bytes when telemetry is switched off
+        count_notice("telemetry-test: counted even while disabled");
+        assert_eq!(notice_count("telemetry-test: counted even while disabled"), 1);
+        set_enabled(true);
+    }
+
+    #[test]
+    fn notice_counts_survive_dedup() {
+        let _l = LOCK.lock().unwrap();
+        set_enabled(true);
+        let key = "telemetry-test: repeated notice";
+        let n0 = notice_count(key);
+        count_notice(key);
+        count_notice(key);
+        assert_eq!(notice_count(key), n0 + 2);
+    }
+
+    #[test]
+    fn counters_json_shape_and_stable_masking() {
+        let _l = LOCK.lock().unwrap();
+        set_enabled(true);
+        let doc = counters_json(false);
+        assert_eq!(
+            doc.get("schema").and_then(|s| s.as_str()),
+            Some("imcopt.telemetry.counters.v1")
+        );
+        let c = doc.get("counters").unwrap();
+        assert!(c.get("eval_memo_hits").is_some());
+        assert_eq!(
+            c.get("eval_memo_hits_by_shard").unwrap().as_arr().unwrap().len(),
+            EVAL_SHARDS
+        );
+        assert!(c.get("exact_evals").is_some());
+        assert!(c.get("offgrid_fallbacks").is_some());
+        let spans = doc.get("spans").unwrap();
+        assert!(spans.get("score_batch").unwrap().get("total_ms").is_some());
+        // --stable masks wall-clock but keeps call counts
+        let masked = counters_json(true);
+        let sb = masked.get("spans").unwrap().get("score_batch").unwrap();
+        assert!(sb.get("total_ms").is_none());
+        assert!(sb.get("count").is_some());
+        // document round-trips through the writer
+        let text = doc.to_string();
+        crate::util::json::parse(&text).expect("snapshot JSON parses");
+    }
+
+    #[test]
+    fn emit_without_sink_is_cheap_and_silent() {
+        let _l = LOCK.lock().unwrap();
+        set_enabled(true);
+        uninstall_sink();
+        assert!(!active());
+        emit_generation(0, 16, 1.0, &[1.0, 2.0, f64::INFINITY], 16, 16);
+        emit_front(0, 16, 4, 0.5);
+    }
+
+    #[test]
+    fn sink_writes_schema_shaped_trace_lines() {
+        let _l = LOCK.lock().unwrap();
+        set_enabled(true);
+        let dir = std::env::temp_dir().join(format!("imcopt-telem-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        install_sink(&dir, true, None);
+        set_cell("figX", "figX:scn:unit", 42);
+        emit_generation(1, 32, 3.5, &[3.5, 4.0, f64::INFINITY, 5.0], 8, 32);
+        emit_front(2, 64, 7, 0.25);
+        uninstall_sink();
+        let text =
+            std::fs::read_to_string(dir.join("telemetry").join("trace.jsonl")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let g = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(g.get("event").and_then(|e| e.as_str()), Some("generation"));
+        assert_eq!(g.get("experiment").and_then(|e| e.as_str()), Some("figX"));
+        assert_eq!(g.get("seed").and_then(|s| s.as_usize()), Some(42));
+        assert_eq!(g.get("violation_rate").and_then(|v| v.as_f64()), Some(0.25));
+        assert_eq!(g.get("screen_accept_rate").and_then(|v| v.as_f64()), Some(0.25));
+        assert!(g.get("wall_ms").is_none(), "stable masks wall_ms");
+        let f = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(f.get("event").and_then(|e| e.as_str()), Some("front"));
+        assert_eq!(f.get("front_size").and_then(|s| s.as_usize()), Some(7));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

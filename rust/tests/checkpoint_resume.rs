@@ -40,7 +40,9 @@ fn artifacts(dir: &Path) -> BTreeMap<String, Vec<u8>> {
             let path = entry.path();
             let name = entry.file_name().to_string_lossy().to_string();
             if path.is_dir() {
-                if name == "checkpoints" {
+                // telemetry is out-of-band: its append-only trace files
+                // legitimately differ between straight and resumed runs
+                if name == "checkpoints" || name == "telemetry" {
                     continue;
                 }
                 walk(root, &path, out);

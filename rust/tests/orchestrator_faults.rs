@@ -71,7 +71,8 @@ fn artifacts(dir: &Path) -> BTreeMap<String, Vec<u8>> {
             let path = entry.unwrap().path();
             let name = path.file_name().unwrap().to_string_lossy().to_string();
             if path.is_dir() {
-                if name == "checkpoints" {
+                // out-of-band telemetry differs between worker topologies
+                if name == "checkpoints" || name == "telemetry" {
                     continue;
                 }
                 walk(root, &path, out);

@@ -180,7 +180,8 @@ fn artifacts(dir: &Path) -> BTreeMap<String, Vec<u8>> {
             let path = entry.path();
             let name = entry.file_name().to_string_lossy().to_string();
             if path.is_dir() {
-                if name == "checkpoints" {
+                // out-of-band telemetry differs between straight/resumed runs
+                if name == "checkpoints" || name == "telemetry" {
                     continue;
                 }
                 walk(root, &path, out);

@@ -1,0 +1,292 @@
+//! Telemetry determinism contracts (the tentpole guarantee):
+//!
+//! * every report/journal/artifact is **byte-identical** with telemetry
+//!   on vs off, and across `--threads 1` vs `--threads 8` — the
+//!   subsystem is strictly out-of-band;
+//! * trace JSONL and counter snapshots conform to their checked-in
+//!   schemas, with wall-clock fields masked under `--stable`;
+//! * counter totals are *exact* on a hand-sized run: a second identical
+//!   `score_batch` is 100% memo hits, and the surrogate screen accounts
+//!   for every pooled candidate (accepted = λ, rejected = pool − λ);
+//! * a notice recorded twice renders once in report notes, with an
+//!   `(x2)` occurrence suffix — identically whether telemetry is on.
+//!
+//! The counters, the enabled flag, and the trace sink are process-wide
+//! statics shared by every test in this binary, so all tests serialize
+//! on one mutex and assert deltas from a fresh `telemetry::reset()`.
+
+use imcopt::coordinator::{EvalBackend, ExpContext, JointProblem};
+use imcopt::experiments;
+use imcopt::model::MemoryTech;
+use imcopt::objective::{Aggregation, Objective, ObjectiveKind};
+use imcopt::search::{Problem, ScreenState};
+use imcopt::space::{Design, SearchSpace};
+use imcopt::telemetry;
+use imcopt::util::rng::Rng;
+use imcopt::util::{json, schema};
+use imcopt::workloads::WorkloadSet;
+use std::collections::{BTreeMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::{Mutex, MutexGuard};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Poison-tolerant serialization: a failed test must not wedge the rest.
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imcopt-telemetry-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn read_json(path: &Path) -> json::Json {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    json::parse(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+/// Quick, stable context over `dir` — the same shape every determinism
+/// suite in this repo uses.
+fn ctx_at(seed: u64, dir: &Path, threads: usize) -> ExpContext {
+    let mut c = ExpContext::quick(seed);
+    c.out_dir = dir.to_path_buf();
+    c.stable = true;
+    c.threads = threads;
+    c
+}
+
+/// Every emitted artifact below `dir`, keyed by relative path —
+/// checkpoint internals and the out-of-band `telemetry/` directory
+/// excluded (the latter legitimately differs: it does not exist at all
+/// when telemetry is off).
+fn artifacts(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).expect("readable dir") {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().to_string();
+            if path.is_dir() {
+                if name == "checkpoints" || name == "telemetry" {
+                    continue;
+                }
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+fn assert_identical(a: &BTreeMap<String, Vec<u8>>, b: &BTreeMap<String, Vec<u8>>, what: &str) {
+    let names_a: Vec<&String> = a.keys().collect();
+    let names_b: Vec<&String> = b.keys().collect();
+    assert_eq!(names_a, names_b, "{what}: artifact sets differ");
+    for (name, bytes) in a {
+        assert_eq!(bytes, &b[name], "{what}: artifact {name} differs");
+    }
+}
+
+// ---- out-of-band: byte-identity on/off and across thread counts -----------
+
+#[test]
+fn artifacts_byte_identical_with_telemetry_on_and_off() {
+    let _g = lock();
+    let dir_on = tmp("on");
+    let dir_off = tmp("off");
+
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    let s_on = experiments::run_selected(&["fig3"], &ctx_at(13, &dir_on, 2)).unwrap();
+    assert_eq!(s_on.executed, 1);
+
+    telemetry::reset();
+    telemetry::set_enabled(false);
+    let off = experiments::run_selected(&["fig3"], &ctx_at(13, &dir_off, 2));
+    telemetry::set_enabled(true);
+    assert_eq!(off.unwrap().executed, 1);
+
+    // enabled: the run leaves an out-of-band trace and a counter snapshot
+    assert!(
+        dir_on.join("telemetry").join("trace.jsonl").is_file(),
+        "enabled run must write telemetry/trace.jsonl"
+    );
+    assert!(dir_on.join("telemetry").join("counters.json").is_file());
+    // disabled: nothing — not even the directory
+    assert!(
+        !dir_off.join("telemetry").exists(),
+        "IMCOPT_TELEMETRY=0 must not create the telemetry directory"
+    );
+
+    assert_identical(&artifacts(&dir_on), &artifacts(&dir_off), "telemetry on vs off");
+}
+
+#[test]
+fn artifacts_and_trace_byte_identical_across_thread_counts() {
+    let _g = lock();
+    let dir_t1 = tmp("t1");
+    let dir_t8 = tmp("t8");
+
+    telemetry::set_enabled(true);
+    telemetry::reset();
+    experiments::run_selected(&["fig3"], &ctx_at(19, &dir_t1, 1)).unwrap();
+    telemetry::reset();
+    experiments::run_selected(&["fig3"], &ctx_at(19, &dir_t8, 8)).unwrap();
+
+    assert_identical(&artifacts(&dir_t1), &artifacts(&dir_t8), "threads 1 vs 8");
+
+    // the trace itself is thread-count invariant under --stable: wall
+    // clock is masked and every traced quantity derives from seeded state
+    let t1 = std::fs::read(dir_t1.join("telemetry").join("trace.jsonl")).unwrap();
+    let t8 = std::fs::read(dir_t8.join("telemetry").join("trace.jsonl")).unwrap();
+    assert!(!t1.is_empty(), "a GA run must emit trace events");
+    assert_eq!(t1, t8, "trace events must not depend on the thread count");
+}
+
+// ---- schema conformance ---------------------------------------------------
+
+#[test]
+fn trace_and_counter_snapshots_conform_to_their_schemas() {
+    let _g = lock();
+    let dir = tmp("schema");
+    telemetry::set_enabled(true);
+    telemetry::reset();
+    experiments::run_selected(&["fig3"], &ctx_at(23, &dir, 2)).unwrap();
+
+    let trace_schema = read_json(&repo_path("schemas/telemetry_trace.schema.json"));
+    let text = std::fs::read_to_string(dir.join("telemetry").join("trace.jsonl")).unwrap();
+    let mut generations = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let doc = json::parse(line).unwrap_or_else(|e| panic!("trace line {i}: {e}"));
+        let errs = schema::validate(&trace_schema, &doc);
+        assert!(errs.is_empty(), "trace line {i}: {errs:?}");
+        assert!(
+            doc.get("wall_ms").is_none(),
+            "--stable must mask wall_ms (trace line {i})"
+        );
+        if doc.get("event").and_then(|e| e.as_str()) == Some("generation") {
+            generations += 1;
+        }
+    }
+    assert!(generations > 0, "a GA experiment must emit generation events");
+
+    let counters_schema = read_json(&repo_path("schemas/telemetry_counters.schema.json"));
+    let doc = read_json(&dir.join("telemetry").join("counters.json"));
+    let errs = schema::validate(&counters_schema, &doc);
+    assert!(errs.is_empty(), "counters.json: {errs:?}");
+    // a cell-checkpointed GA run exercises the eval and journal paths
+    let c = doc.get("counters").expect("counters object");
+    for key in ["exact_evals", "journal_appends", "cells_computed"] {
+        let v = c.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        assert!(v > 0.0, "counter {key} stayed zero over a full experiment");
+    }
+}
+
+// ---- exact counter totals on a hand-sized run -----------------------------
+
+#[test]
+fn counter_totals_are_exact_on_a_hand_sized_run() {
+    let _g = lock();
+    telemetry::set_enabled(true);
+    telemetry::uninstall_sink();
+    telemetry::reset();
+
+    let space = SearchSpace::rram_reduced();
+    let set = WorkloadSet::cnn4();
+    let obj = Objective::new(ObjectiveKind::Edap, Aggregation::Max);
+    let problem =
+        JointProblem::with_backend(&space, &set, EvalBackend::native(MemoryTech::Rram), obj)
+            .with_threads(2);
+
+    // 12 pairwise-distinct designs: every memo key misses exactly once,
+    // then hits exactly once
+    let mut rng = Rng::seed_from(7);
+    let mut seen: HashSet<Design> = HashSet::new();
+    let mut batch: Vec<Design> = Vec::new();
+    while batch.len() < 12 {
+        let d = space.random(&mut rng);
+        if seen.insert(d.clone()) {
+            batch.push(d);
+        }
+    }
+
+    let c = telemetry::counters();
+    let hits =
+        || c.eval_memo_hits.iter().map(|s| s.load(Ordering::Relaxed)).sum::<u64>();
+
+    let h0 = hits();
+    let m0 = c.eval_memo_misses.load(Ordering::Relaxed);
+    let e0 = c.exact_evals.load(Ordering::Relaxed);
+    let s1 = problem.score_batch(&batch);
+    assert_eq!(hits(), h0, "a cold memo cannot hit");
+    assert_eq!(c.eval_memo_misses.load(Ordering::Relaxed), m0 + 12);
+    assert_eq!(c.exact_evals.load(Ordering::Relaxed), e0 + 12);
+
+    let h1 = hits();
+    let s2 = problem.score_batch(&batch);
+    assert_eq!(hits(), h1 + 12, "a second identical batch must be 100% memo hits");
+    assert_eq!(c.eval_memo_misses.load(Ordering::Relaxed), m0 + 12, "no new misses");
+    assert_eq!(c.exact_evals.load(Ordering::Relaxed), e0 + 12, "no re-evaluation");
+    for (i, (a, b)) in s1.iter().zip(&s2).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "memoized score[{i}] diverged");
+    }
+
+    // the surrogate screen accounts for every pooled candidate:
+    // exactly λ accepted, exactly pool − λ screened out
+    let mut screen = ScreenState::new(0.25).expect("frac < 1 enables screening");
+    screen.observe(&space, &batch, &s1);
+    let a0 = c.screen_accepted.load(Ordering::Relaxed);
+    let r0 = c.screened_out.load(Ordering::Relaxed);
+    let mut rng2 = Rng::seed_from(11);
+    let pool: Vec<Design> = (0..16).map(|_| space.random(&mut rng2)).collect();
+    let lambda = 4usize;
+    let kept = screen.select(&space, pool, lambda);
+    assert_eq!(kept.len(), lambda);
+    assert_eq!(c.screen_accepted.load(Ordering::Relaxed), a0 + lambda as u64);
+    assert_eq!(c.screened_out.load(Ordering::Relaxed), r0 + (16 - lambda) as u64);
+}
+
+// ---- notice occurrence rendering ------------------------------------------
+
+#[test]
+fn repeated_notices_render_once_with_an_occurrence_suffix() {
+    let _g = lock();
+    let dir = tmp("notices");
+    telemetry::set_enabled(true);
+    telemetry::reset();
+
+    let ctx = ctx_at(31, &dir, 2);
+    let probe = "telemetry-test: synthetic degradation notice";
+    ctx.record_notice(probe.to_string());
+    ctx.record_notice(probe.to_string());
+    // the context stores the notice once...
+    assert_eq!(ctx.notices().iter().filter(|n| n.as_str() == probe).count(), 1);
+
+    experiments::run_selected(&["fig3"], &ctx).unwrap();
+
+    // ...and the report renders it once, carrying the occurrence count
+    let arts = artifacts(&dir);
+    let (name, bytes) = arts
+        .iter()
+        .find(|(k, _)| k.ends_with("fig3.json"))
+        .expect("fig3 report emitted");
+    let report = String::from_utf8_lossy(bytes);
+    let suffixed = format!("{probe} (x2)");
+    assert!(report.contains(&suffixed), "{name} missing `{suffixed}`: {report}");
+    assert_eq!(
+        report.matches(probe).count(),
+        1,
+        "{name} must carry the notice exactly once"
+    );
+}
